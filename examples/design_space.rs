@@ -1,0 +1,94 @@
+//! Design-space exploration: sweep the T-SAR ISA parameterization and
+//! kernel dataflows across layer shapes and platforms — the study behind
+//! §III-D's adaptive selection and the c ∈ {2,4} configuration choice.
+//!
+//!   cargo run --release --example design_space [model]
+
+use tsar::config::platforms::{Platform, ALL_PLATFORMS};
+use tsar::config::IsaConfig;
+use tsar::coordinator::select_plan;
+use tsar::kernels::{Dataflow, TernaryKernel, TsarKernel};
+use tsar::model::zoo;
+use tsar::model::Workload;
+use tsar::sim::simulate;
+use tsar::util::table::Table;
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "BitNet-2B-4T".into());
+    let spec = zoo::by_name(&model).unwrap_or_else(|| {
+        eprintln!("unknown model {model}; use `tsar-cli models`");
+        std::process::exit(2)
+    });
+
+    println!("== design space for {} ==", spec.name);
+
+    // 1. Per-shape kernel landscape (decode + prefill on workstation).
+    let plat = Platform::workstation();
+    for n in [1usize, 128] {
+        let wl = Workload::new(spec, n);
+        println!("\n-- N={n} ({}) --", if n == 1 { "decode" } else { "prefill" });
+        let mut t = Table::new(vec![
+            "site", "shape", "AP-min c2", "AP-max c2", "OP c2", "AP-max c4", "OP c4", "winner",
+        ]);
+        for op in &wl.ops {
+            let mut cells = vec![
+                op.site.to_string(),
+                format!("{}x{}x{}", op.shape.n, op.shape.k, op.shape.m),
+            ];
+            let variants = [
+                TsarKernel::new(IsaConfig::C2, Dataflow::ApMin),
+                TsarKernel::new(IsaConfig::C2, Dataflow::ApMax),
+                TsarKernel::new(IsaConfig::C2, Dataflow::Op),
+                TsarKernel::new(IsaConfig::C4, Dataflow::ApMax),
+                TsarKernel::new(IsaConfig::C4, Dataflow::Op),
+            ];
+            let times: Vec<f64> = variants
+                .iter()
+                .map(|k| {
+                    simulate(&k.profile(op.shape, &plat, plat.threads), &plat, plat.threads)
+                        .seconds
+                })
+                .collect();
+            let best = times
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            for (i, s) in times.iter().enumerate() {
+                let mark = if i == best { "*" } else { " " };
+                cells.push(format!("{:.3}ms{mark}", s * 1e3));
+            }
+            cells.push(variants[best].name());
+            t.row(cells);
+        }
+        t.print();
+    }
+
+    // 2. The adaptive plan per platform (what the coordinator loads).
+    println!("\n-- adaptive plans (decode) --");
+    for kind in ALL_PLATFORMS {
+        let plat = Platform::by_kind(kind);
+        let plan = select_plan(spec, &plat, 1, plat.threads);
+        println!(
+            "{:<12} {:>8.2} tok/s | plan:",
+            plat.kind.name(),
+            1.0 / plan.pass_seconds()
+        );
+        for l in &plan.layers {
+            println!("    {}", l.describe());
+        }
+    }
+
+    // 3. Register-budget view of the ISA configs (why c=2 and c=4).
+    println!("\n-- ISA configuration register budgets --");
+    for cfg in [IsaConfig::C2, IsaConfig::C4] {
+        println!(
+            "{:<24} LUT pair entries/block {:>3}, result {:>4} bits = {} YMM regs",
+            cfg.name(),
+            cfg.lut_entries_per_block(),
+            cfg.tlut_result_bits(),
+            cfg.tlut_result_regs()
+        );
+    }
+}

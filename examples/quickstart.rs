@@ -1,0 +1,72 @@
+//! Quickstart: the T-SAR public API in one file.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Walks the whole stack bottom-up: quantize a float matrix to ternary,
+//! encode it for the T-SAR ISA, run a bit-exact LUT GEMV through the
+//! modeled TLUT/TGEMV instructions, then ask the simulator what the same
+//! operation costs on the paper's three platforms and how that compares
+//! to the BitNet.cpp TL-2 baseline.
+
+use tsar::config::platforms::{Platform, ALL_PLATFORMS};
+use tsar::config::IsaConfig;
+use tsar::kernels::{scalar_gemm, Dataflow, TernaryKernel, Tl2Kernel, TsarKernel};
+use tsar::quant::{absmax_quantize, absmean_ternarize};
+use tsar::sim::{simulate, GemmShape};
+use tsar::util::rng::Rng;
+
+fn main() {
+    // 1. A "layer": float weights (M x K) and one activation vector.
+    let (k, m) = (256usize, 128usize);
+    let mut rng = Rng::new(42);
+    let w_f32: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.05).collect();
+    let x_f32: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+
+    // 2. Quantize: absmean ternary weights, absmax int8 activations.
+    let (w_t, w_scale) = absmean_ternarize(&w_f32);
+    let (x_q, x_scale) = absmax_quantize(&x_f32);
+    let zeros = w_t.iter().filter(|&&v| v == 0).count();
+    println!(
+        "ternarized {}x{} weights: scale {:.4}, {:.0}% zeros",
+        m,
+        k,
+        w_scale,
+        100.0 * zeros as f64 / w_t.len() as f64
+    );
+
+    // 3. Run the T-SAR LUT GEMV through the modeled ISA (bit-exact).
+    let shape = GemmShape::new(1, k, m);
+    let kernel = TsarKernel::new(IsaConfig::C2, Dataflow::Op);
+    let y_int = kernel.run(&x_q, &w_t, shape);
+    assert_eq!(y_int, scalar_gemm(&x_q, &w_t, shape), "bit-exact vs scalar");
+    // Dequantize the first few outputs.
+    let y: Vec<f32> = y_int
+        .iter()
+        .take(4)
+        .map(|&v| v as f32 * w_scale / x_scale)
+        .collect();
+    println!("first outputs (dequantized): {y:?}");
+
+    // 4. What does this cost on real platforms, and what would TL-2 pay?
+    println!("\nsimulated cost of a 1x{k}x{m} BitLinear GEMV:");
+    for kind in ALL_PLATFORMS {
+        let plat = Platform::by_kind(kind);
+        let t = plat.threads;
+        let r_tsar = simulate(&kernel.profile(shape, &plat, t), &plat, t);
+        let tl2 = Tl2Kernel::new();
+        let r_tl2 = simulate(&tl2.profile(shape, &plat, t), &plat, t);
+        println!(
+            "  {:<12} T-SAR {:>8.2} us | TL-2 {:>8.2} us | speedup {:>5.1}x | request volume {:>6.0} KB vs {:>6.0} KB",
+            plat.kind.name(),
+            r_tsar.seconds * 1e6,
+            r_tl2.seconds * 1e6,
+            r_tl2.seconds / r_tsar.seconds,
+            r_tsar.request_bytes / 1e3,
+            r_tl2.request_bytes / 1e3,
+        );
+    }
+
+    println!("\nnext steps:");
+    println!("  tsar-cli report all        # regenerate every paper table/figure");
+    println!("  cargo run --release --example serve_bitnet   # end-to-end serving");
+}

@@ -1,0 +1,105 @@
+//! End-to-end serving driver (DESIGN.md §6): load the AOT-compiled
+//! BitNet-style model (built by `make artifacts`: JAX + Pallas LUT-GEMV
+//! kernel lowered to HLO text), serve a Poisson stream of batched
+//! requests through the coordinator, and report latency/throughput.
+//!
+//!   make artifacts && cargo run --release --example serve_bitnet
+//!
+//! This is the proof that all three layers compose: the Pallas kernel
+//! (L1) inside the JAX transformer (L2) executed by the Rust
+//! coordinator (L3) over PJRT, with Python nowhere on the request path.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use tsar::coordinator::{Request, Server, ServerConfig};
+use tsar::runtime::ModelRuntime;
+use tsar::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let variant = std::env::var("TSAR_VARIANT").unwrap_or_else(|_| "tsar".into());
+    let n_requests: usize = std::env::var("TSAR_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let max_new: usize = std::env::var("TSAR_MAX_NEW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+
+    println!("== T-SAR end-to-end serving (variant: {variant}) ==");
+    let t0 = Instant::now();
+    let rt = ModelRuntime::load(&dir, &variant)?;
+    println!(
+        "loaded {} ({} params tensors, d={}, L={}, vocab={}) in {:.2}s",
+        rt.manifest.config_name,
+        rt.manifest.params.len(),
+        rt.manifest.config.d_model,
+        rt.manifest.config.n_layers,
+        rt.manifest.config.vocab,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Sanity: the runtime must reproduce the Python golden (ref variant
+    // exactly; tsar variant is bit-identical by construction).
+    let g = rt.manifest.golden.clone();
+    let check = rt.generate(&g.prompt, 4.min(g.tokens.len()))?;
+    assert_eq!(
+        check,
+        g.tokens[..check.len()].to_vec(),
+        "runtime does not reproduce the AOT golden"
+    );
+    println!("golden check passed: first {} tokens match Python", check.len());
+
+    let vocab = rt.manifest.config.vocab as u64;
+    let window = rt.manifest.config.prefill_len;
+    let server = Server::new(rt, ServerConfig { max_batch: 4, kv_slots: 4 });
+
+    // Poisson arrivals (open-loop) with mixed prompt lengths.
+    let mut rng = Rng::new(123);
+    let lambda_per_s = 4.0;
+    let (req_tx, req_rx) = channel::<Request>();
+    let (res_tx, res_rx) = channel::<tsar::coordinator::RequestResult>();
+
+    let producer = std::thread::spawn(move || {
+        let mut rng_p = Rng::new(7);
+        for id in 0..n_requests as u64 {
+            let wait = rng_p.exp(lambda_per_s);
+            std::thread::sleep(Duration::from_secs_f64(wait.min(0.5)));
+            let plen = 3 + rng_p.below(window as u64 / 2) as usize;
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng_p.below(vocab) as i32).collect();
+            if req_tx.send(Request::new(id, prompt, max_new)).is_err() {
+                break;
+            }
+        }
+    });
+
+    let collector = std::thread::spawn(move || {
+        let mut done = 0usize;
+        while let Ok(res) = res_rx.recv() {
+            done += 1;
+            println!(
+                "  req {:>2}: {:>2} tokens | queue {:>6.1} ms | prefill {:>6.1} ms | decode {:>6.1} tok/s",
+                res.id,
+                res.tokens.len(),
+                res.queue_s * 1e3,
+                res.prefill_s * 1e3,
+                res.decode_tokens_per_s()
+            );
+        }
+        done
+    });
+
+    let report = server.run(req_rx, res_tx)?;
+    producer.join().unwrap();
+    let done = collector.join().unwrap();
+    assert_eq!(done, n_requests);
+
+    println!("\n== serve report ==");
+    report.print();
+    let _ = rng.next_u64();
+    println!("\nrecorded in EXPERIMENTS.md §End-to-end.");
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT pipeline: lower the BitNet model to HLO text artifacts for Rust.
+
+Emits, per matmul variant ("tsar" = Pallas LUT kernel, "ref" = direct
+integer ternary matmul):
+
+  artifacts/prefill_<variant>.hlo.txt   (tokens, prompt_len, *params) ->
+                                        (next_token, k_cache, v_cache)
+  artifacts/decode_<variant>.hlo.txt    (token, pos, k, v, *params) ->
+                                        (next_token, k_cache, v_cache)
+
+plus variant-independent:
+
+  artifacts/weights.bin     all parameter tensors, little-endian, packed
+  artifacts/manifest.json   config + per-entrypoint argument order +
+                            byte offsets into weights.bin + goldens
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the Rust `xla` crate) rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly.  Lowering goes
+stablehlo -> XlaComputation with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple``.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening (deterministic transport order)
+# ---------------------------------------------------------------------------
+
+LINEAR_ORDER = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+def _param_entries(cfg: M.ModelConfig, variant: str) -> List[str]:
+    """Dotted parameter paths in the exact order the artifact consumes them."""
+    if variant == "tsar":
+        lin = ["wd", "ws", "scale"]
+    elif variant == "ref":
+        lin = ["wt", "scale"]
+    else:
+        raise ValueError(variant)
+
+    names = ["embed", "final_norm"]
+    names += [f"lm_head.{f}" for f in lin]
+    for l in range(cfg.n_layers):
+        names += [f"layer_{l}.attn_norm", f"layer_{l}.ffn_norm"]
+        for w in LINEAR_ORDER:
+            names += [f"layer_{l}.{w}.{f}" for f in lin]
+    return names
+
+
+def _lookup(qparams: Dict[str, Any], path: str) -> jnp.ndarray:
+    node: Any = qparams
+    for part in path.split("."):
+        node = node[part]
+    return node
+
+
+def _transport(x: jnp.ndarray) -> np.ndarray:
+    """Convert a param tensor to a PJRT-friendly dtype (f32 or i32)."""
+    a = np.asarray(x)
+    if a.dtype == np.int8:
+        return a.astype(np.int32)
+    if a.dtype in (np.float32, np.int32):
+        return a
+    if a.dtype == np.float64:
+        return a.astype(np.float32)
+    raise TypeError(f"unsupported param dtype {a.dtype}")
+
+
+def flatten_params(
+    qparams: Dict[str, Any], cfg: M.ModelConfig, variant: str
+) -> Tuple[List[np.ndarray], List[str]]:
+    names = _param_entries(cfg, variant)
+    return [_transport(_lookup(qparams, n)) for n in names], names
+
+
+def unflatten_params(
+    flat: List[jnp.ndarray], cfg: M.ModelConfig, variant: str
+) -> Dict[str, Any]:
+    """Rebuild the qparams tree from transport-ordered tensors."""
+    names = _param_entries(cfg, variant)
+    assert len(flat) == len(names)
+    tree: Dict[str, Any] = {}
+    for name, val in zip(names, flat):
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Entrypoint builders
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(cfg: M.ModelConfig, variant: str):
+    def fn(tokens, prompt_len, *flat):
+        qp = unflatten_params(list(flat), cfg, variant)
+        return M.prefill(qp, tokens, prompt_len, cfg, variant)
+
+    return fn
+
+
+def make_decode_fn(cfg: M.ModelConfig, variant: str):
+    def fn(token, pos, k_cache, v_cache, *flat):
+        qp = unflatten_params(list(flat), cfg, variant)
+        return M.decode_step(qp, token, pos, k_cache, v_cache, cfg, variant)
+
+    return fn
+
+
+def _spec(x) -> jax.ShapeDtypeStruct:
+    a = np.asarray(x)
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def _arg_meta(args) -> List[Dict[str, Any]]:
+    return [
+        {"shape": list(a.shape), "dtype": DTYPE_NAMES[np.dtype(a.dtype)]}
+        for a in args
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Main build
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, config_name: str, variants: List[str], seed: int,
+          golden_new_tokens: int) -> None:
+    cfg = {"tiny": M.TINY, "micro": M.MICRO}[config_name].validate()
+    os.makedirs(out_dir, exist_ok=True)
+
+    print(f"[aot] config={config_name} {cfg}")
+    params = M.init_params(cfg, seed=seed)
+    qparams = M.quantize_params(params, cfg)
+
+    l, s, h, dh = cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim
+    kv_spec = jax.ShapeDtypeStruct((l, s, h, dh), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.prefill_len,), jnp.int32)
+
+    # ---- weights.bin: the union of all variants' tensors, deduplicated ----
+    blobs: Dict[str, np.ndarray] = {}
+    for variant in variants:
+        flat, names = flatten_params(qparams, cfg, variant)
+        for n, a in zip(names, flat):
+            blobs.setdefault(n, a)
+
+    param_meta: List[Dict[str, Any]] = []
+    offset = 0
+    bin_path = os.path.join(out_dir, "weights.bin")
+    with open(bin_path, "wb") as f:
+        for name in sorted(blobs):
+            a = np.ascontiguousarray(blobs[name])
+            raw = a.tobytes()
+            param_meta.append(
+                {
+                    "name": name,
+                    "shape": list(a.shape),
+                    "dtype": DTYPE_NAMES[a.dtype],
+                    "offset": offset,
+                    "nbytes": len(raw),
+                }
+            )
+            f.write(raw)
+            offset += len(raw)
+    print(f"[aot] wrote {bin_path} ({offset/1e6:.1f} MB, {len(blobs)} tensors)")
+
+    entrypoints: Dict[str, Any] = {}
+    for variant in variants:
+        flat, names = flatten_params(qparams, cfg, variant)
+        flat_specs = [_spec(a) for a in flat]
+
+        for phase, fn_builder, dyn_specs, dyn_names in [
+            ("prefill", make_prefill_fn, [tok_spec, i32], ["tokens", "prompt_len"]),
+            ("decode", make_decode_fn, [i32, i32, kv_spec, kv_spec],
+             ["token", "pos", "k_cache", "v_cache"]),
+        ]:
+            fn = fn_builder(cfg, variant)
+            print(f"[aot] lowering {phase}_{variant} ...")
+            lowered = jax.jit(fn).lower(*dyn_specs, *flat_specs)
+            text = to_hlo_text(lowered)
+            fname = f"{phase}_{variant}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            print(f"[aot]   -> {fname} ({len(text)/1e6:.2f} MB)")
+            entrypoints[f"{phase}_{variant}"] = {
+                "hlo": fname,
+                "dynamic_args": [
+                    dict(m, name=n)
+                    for n, m in zip(dyn_names, _arg_meta(dyn_specs))
+                ],
+                "param_args": names,
+                "outputs": (
+                    ["next_token", "k_cache", "v_cache"]
+                ),
+            }
+
+    # ---- goldens: greedy generation on the ref path ----
+    print("[aot] generating goldens ...")
+    prompt = np.asarray(
+        [1 + (i * 7) % (cfg.vocab - 1) for i in range(cfg.prefill_len // 2)],
+        np.int32,
+    )
+    golden = _run_golden(qparams, cfg, prompt, golden_new_tokens)
+
+    manifest = {
+        "config_name": config_name,
+        "config": dataclasses.asdict(cfg),
+        "seed": seed,
+        "weights_bin": "weights.bin",
+        "params": param_meta,
+        "entrypoints": entrypoints,
+        "golden": golden,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json; done")
+
+
+def _run_golden(qparams, cfg, prompt: np.ndarray, n_new: int) -> Dict[str, Any]:
+    """Greedy generation through jitted ref-path prefill/decode."""
+    prefill_j = jax.jit(
+        functools.partial(M.prefill, cfg=cfg, matmul="ref"),
+        static_argnames=(),
+    )
+    decode_j = jax.jit(functools.partial(M.decode_step, cfg=cfg, matmul="ref"))
+
+    toks = np.zeros((cfg.prefill_len,), np.int32)
+    toks[: len(prompt)] = prompt
+    nxt, kc, vc = prefill_j(qparams, jnp.asarray(toks), jnp.int32(len(prompt)))
+    out = [int(nxt)]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        nxt, kc, vc = decode_j(qparams, jnp.int32(out[-1]), jnp.int32(pos), kc, vc)
+        out.append(int(nxt))
+        pos += 1
+    return {
+        "prompt": prompt.tolist(),
+        "prompt_len": int(len(prompt)),
+        "padded_prompt": toks.tolist(),
+        "tokens": out,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=["tiny", "micro"])
+    ap.add_argument(
+        "--variants", default="tsar,ref",
+        help="comma list of matmul paths to lower",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--golden-new-tokens", type=int, default=16)
+    args = ap.parse_args()
+    build(
+        args.out_dir,
+        args.config,
+        [v.strip() for v in args.variants.split(",") if v.strip()],
+        args.seed,
+        args.golden_new_tokens,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Pure-jnp correctness oracle for the T-SAR LUT-GEMV algorithm (paper §III-A).
+
+This module is the single source of truth for the *algorithmic* layer of
+T-SAR:
+
+  * absmean ternary weight quantization  (BitNet b1.58 recipe)
+  * absmax int8 activation quantization  (per-token)
+  * the ternary -> binary decomposition   w = w_D - w_S
+  * binary-LUT construction (dense {-1,+1} LUT and sparse {0,1} LUT,
+    each with 2**c entries per block of c inputs)
+  * the LUT-indexed GEMV/GEMM itself
+
+Everything here is written in plain jnp with no Pallas, no tiling and no
+cleverness, so it can serve as the oracle that the Pallas kernel
+(`tsar_lut_gemv.py`) and the Rust functional kernels are tested against.
+
+The integer pipeline is kept faithful to the paper: activations are int8,
+LUT entries are 16-bit-representable partial sums (c <= 4 guarantees
+|entry| <= 4*127 < 2**15), accumulation is int32, and dequantization
+multiplies by ``w_scale / act_scale`` at the very end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+
+def absmean_ternarize(w: jnp.ndarray, eps: float = 1e-6):
+    """BitNet-b1.58 absmean ternarization.
+
+    ``scale = mean(|W|)``; ``W_t = clip(round(W / scale), -1, 1)``.
+
+    Returns ``(w_ternary int8 in {-1,0,1}, scale f32 scalar)``.
+    """
+    scale = jnp.maximum(jnp.mean(jnp.abs(w)), eps)
+    w_t = jnp.clip(jnp.round(w / scale), -1, 1).astype(jnp.int8)
+    return w_t, scale.astype(jnp.float32)
+
+
+def absmax_quantize_act(x: jnp.ndarray, eps: float = 1e-6):
+    """Per-token absmax int8 activation quantization (paper Fig. 2(b)).
+
+    ``x`` has shape (..., K); the scale is computed over the last axis.
+    Returns ``(x_q int8, s f32 with shape (..., 1))`` such that
+    ``x ~= x_q / s``.
+    """
+    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), eps)
+    s = 127.0 / absmax
+    x_q = jnp.clip(jnp.round(x * s), -127, 127).astype(jnp.int8)
+    return x_q, s.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Ternary -> binary decomposition (paper §III-A)
+# ---------------------------------------------------------------------------
+
+
+def decompose(w_t: jnp.ndarray):
+    """Split ternary weights into dense {-1,+1} and sparse {0,1} parts.
+
+    ``w_D[i] = w[i] if w[i] != 0 else +1`` and ``w_S[i] = 1 iff w[i] == 0``
+    so that ``w = w_D - w_S`` element-wise and therefore
+    ``sum(w*a) == sum(w_D*a) - sum(w_S*a)``.
+    """
+    w_t = w_t.astype(jnp.int8)
+    w_d = jnp.where(w_t == 0, jnp.int8(1), w_t)
+    w_s = (w_t == 0).astype(jnp.int8)
+    return w_d, w_s
+
+
+def encode_indices(w_t: jnp.ndarray, c: int):
+    """Pack ternary weights into per-block dense/sparse LUT indices.
+
+    ``w_t`` has shape (M, K) with K divisible by ``c``.  For block ``b`` of
+    output channel ``m`` the dense index has bit ``i`` set iff
+    ``w[m, b*c+i] == +1`` *after* densification (zeros map to +1), and the
+    sparse index has bit ``i`` set iff ``w[m, b*c+i] == 0``.
+
+    Returns ``(wd_idx, ws_idx)`` of shape (M, K//c) int32, values in
+    [0, 2**c).
+    """
+    m, k = w_t.shape
+    assert k % c == 0, f"K={k} not divisible by block size c={c}"
+    w_d, w_s = decompose(w_t)
+    bits = 2 ** jnp.arange(c, dtype=jnp.int32)  # (c,)
+    wd_bits = (w_d.reshape(m, k // c, c) == 1).astype(jnp.int32)
+    ws_bits = (w_s.reshape(m, k // c, c) == 1).astype(jnp.int32)
+    wd_idx = jnp.sum(wd_bits * bits, axis=-1)
+    ws_idx = jnp.sum(ws_bits * bits, axis=-1)
+    return wd_idx.astype(jnp.int32), ws_idx.astype(jnp.int32)
+
+
+def dense_patterns(c: int) -> jnp.ndarray:
+    """(2**c, c) int32 matrix of {-1,+1} sign patterns.
+
+    Row ``p`` column ``i`` is ``+1`` if bit ``i`` of ``p`` is set else ``-1``
+    — the table the TLUT instruction's subtract lanes realize in hardware.
+    """
+    p = np.arange(2**c)[:, None]
+    i = np.arange(c)[None, :]
+    return jnp.asarray(np.where((p >> i) & 1, 1, -1), dtype=jnp.int32)
+
+
+def sparse_patterns(c: int) -> jnp.ndarray:
+    """(2**c, c) int32 matrix of {0,1} subset patterns."""
+    p = np.arange(2**c)[:, None]
+    i = np.arange(c)[None, :]
+    return jnp.asarray((p >> i) & 1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# LUT construction + LUT-indexed GEMV/GEMM (the oracle)
+# ---------------------------------------------------------------------------
+
+
+def build_luts(a_q: jnp.ndarray, c: int):
+    """Build the dense and sparse binary LUTs for quantized activations.
+
+    ``a_q`` has shape (..., K).  Returns ``(lut_d, lut_s)`` each of shape
+    (..., 2**c, K//c) int32: entry ``[p, b]`` is the dot product of sign /
+    subset pattern ``p`` with activation block ``b`` — exactly what
+    ``TLUT_cxs`` materializes into SIMD registers, 16 bits per entry.
+    """
+    k = a_q.shape[-1]
+    assert k % c == 0
+    blocks = a_q.astype(jnp.int32).reshape(*a_q.shape[:-1], k // c, c)
+    lut_d = jnp.einsum("pc,...bc->...pb", dense_patterns(c), blocks)
+    lut_s = jnp.einsum("pc,...bc->...pb", sparse_patterns(c), blocks)
+    return lut_d, lut_s
+
+
+def lut_gemv(a_q: jnp.ndarray, wd_idx: jnp.ndarray, ws_idx: jnp.ndarray, c: int):
+    """LUT-based ternary GEMV: (K,) int8 x (M, K) ternary -> (M,) int32.
+
+    Implements the paper's two-phase flow: build LUTs from activations,
+    then for every output channel gather ``lut_d[wd_idx] - lut_s[ws_idx]``
+    per block and accumulate (the TGEMV adder tree).
+    """
+    lut_d, lut_s = build_luts(a_q, c)  # (2**c, nb)
+    nb = lut_d.shape[-1]
+    b = jnp.arange(nb)
+    d = lut_d[wd_idx, b[None, :]]  # (M, nb)
+    s = lut_s[ws_idx, b[None, :]]
+    return jnp.sum(d - s, axis=-1).astype(jnp.int32)
+
+
+def lut_gemm(a_q: jnp.ndarray, wd_idx: jnp.ndarray, ws_idx: jnp.ndarray, c: int):
+    """LUT-based ternary GEMM: (N, K) int8 x (M, K) ternary -> (N, M) int32."""
+    lut_d, lut_s = build_luts(a_q, c)  # (N, 2**c, nb)
+    nb = lut_d.shape[-1]
+    b = jnp.arange(nb)
+    # (N, M, nb) gathers
+    d = lut_d[:, wd_idx, b[None, :]]
+    s = lut_s[:, ws_idx, b[None, :]]
+    return jnp.sum(d - s, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Direct (non-LUT) references
+# ---------------------------------------------------------------------------
+
+
+def ternary_gemm_int(a_q: jnp.ndarray, w_t: jnp.ndarray):
+    """Direct integer ternary GEMM: (N, K) int8 x (M, K) -> (N, M) int32."""
+    return jnp.matmul(a_q.astype(jnp.int32), w_t.astype(jnp.int32).T).astype(
+        jnp.int32
+    )
+
+
+def bitlinear_ref(x: jnp.ndarray, w_t: jnp.ndarray, w_scale: jnp.ndarray):
+    """Full BitLinear forward in the quantized-integer domain (Fig. 2(b)).
+
+    quantize activations -> integer ternary matmul -> dequantize.  The
+    Pallas path must match this bit-exactly in the int32 domain and to
+    float round-off after dequantization.
+    """
+    x_q, s = absmax_quantize_act(x)
+    y_int = ternary_gemm_int(x_q, w_t)
+    return y_int.astype(jnp.float32) * (w_scale / s)

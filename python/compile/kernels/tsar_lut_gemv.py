@@ -1,0 +1,263 @@
+"""Layer-1 Pallas kernel: T-SAR in-register LUT GEMV/GEMM.
+
+This is the TPU-idiom re-expression of the paper's AVX2 TLUT/TGEMV
+instruction pair (paper §III-B/C, Fig. 6).  The paper's core insight —
+*keep the lookup tables in the fastest, widest on-core storage and index
+them with pre-packed binary weights* — maps onto TPU hardware as follows
+(DESIGN.md §Hardware-Adaptation):
+
+===========================  =============================================
+AVX2 (paper)                 Pallas / TPU (this kernel)
+===========================  =============================================
+YMM register file as the     VMEM-resident LUT tile: the LUT lives in the
+LUT store                    kernel's local block, never round-trips HBM.
+TLUT u-ops (2 x 256b/cyc)    LUT built as ONE small matmul
+                             ``patterns(2^c, c) @ act_blocks(c, s)`` — an
+                             MXU-shaped op instead of shuffle lanes.
+TGEMV gather + 4:1 adder     one-hot matmul over the 2^c axis + row
+tree                         reduction — gathers lower to MXU work, which
+                             is how TPUs do small-table lookups.
+threadblock-free dataflow    ``pl.BlockSpec`` grid over (N-tile, M-tile):
+                             the HBM<->VMEM schedule the paper expressed
+                             with u-op sequences.
+===========================  =============================================
+
+Two dataflows mirror the paper's §III-D kernels:
+
+  * ``lut_gemm``  — *activation-persistent* (AP): the grid iterates M tiles
+    in the inner dimension, so the activation block (and its LUTs) is
+    reused across every M tile before moving to the next N tile.
+  * ``lut_gemm_op`` — *output-persistent* (OP): the grid iterates K tiles
+    innermost and accumulates into the output block, minimizing write-back
+    traffic at the cost of rebuilding LUTs per K tile.
+
+Both must produce bit-identical int32 results to ``ref.lut_gemm`` (and the
+direct ternary matmul); pytest + hypothesis enforce this.
+
+Pallas runs with ``interpret=True`` throughout: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime executes.  Real-TPU efficiency is *estimated* from the
+VMEM footprint / MXU-utilization model in ``python/compile/kernels/
+vmem_model.py`` and reported in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes.  8 sublanes x 128 lanes is the native TPU tile for
+# 32-bit data; M tiles of 128 keep the one-hot matmul MXU-shaped, N tiles
+# of 8 bound the LUT VMEM footprint (see vmem_model.py).
+DEFAULT_TM = 128
+DEFAULT_TN = 8
+DEFAULT_TK = 512
+
+
+def _check_args(a_q, wd_idx, ws_idx, c):
+    if a_q.ndim != 2:
+        raise ValueError(f"a_q must be (N, K), got {a_q.shape}")
+    n, k = a_q.shape
+    m, nb = wd_idx.shape
+    if ws_idx.shape != (m, nb):
+        raise ValueError(f"ws_idx {ws_idx.shape} != wd_idx {wd_idx.shape}")
+    if k % c != 0 or nb != k // c:
+        raise ValueError(f"K={k}, c={c}, blocks={nb} inconsistent")
+    if c not in (2, 4):
+        raise ValueError(f"c must be 2 or 4 (paper configs), got {c}")
+    return n, k, m, nb
+
+
+def _lut_build(a_blk: jnp.ndarray, c: int):
+    """TLUT_cxs in Pallas form: build dense+sparse LUTs for one act tile.
+
+    ``a_blk``: (TN, K_tile) int32.  Returns (lut_d, lut_s), each
+    (TN, 2**c, K_tile//c) int32 — the VMEM-resident analogue of the YMM
+    register pair TLUT writes.
+    """
+    tn, kt = a_blk.shape
+    blocks = a_blk.reshape(tn, kt // c, c)
+    # Pattern tables computed in-kernel from iota (Pallas kernels cannot
+    # capture array constants); XLA folds these to constants anyway.
+    p_idx = jax.lax.broadcasted_iota(jnp.int32, (2**c, c), 0)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (2**c, c), 1)
+    bits = jax.lax.shift_right_logical(p_idx, i_idx) & 1
+    pat_d = 2 * bits - 1  # {-1,+1} sign patterns (== ref.dense_patterns)
+    pat_s = bits  # {0,1} subset patterns (== ref.sparse_patterns)
+    # One small matmul per pattern table == the TLUT u-op pair.
+    lut_d = jax.lax.dot_general(
+        blocks, pat_d.T.astype(jnp.int32),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (TN, nb, P)
+    lut_s = jax.lax.dot_general(
+        blocks, pat_s.T.astype(jnp.int32),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return lut_d, lut_s  # (TN, nb, P)
+
+
+def _lut_lookup_accumulate(lut_d, lut_s, wd_blk, ws_blk, c: int):
+    """TGEMV_kxm in Pallas form: gather LUT entries and adder-tree reduce.
+
+    ``lut_*``: (TN, nb, P); ``w*_blk``: (TM, nb) int32 indices.
+    Returns (TN, TM) int32 partial outputs.
+
+    The gather is realized as a one-hot contraction over the 2**c axis:
+    on TPU, small-table lookups lower to exactly this MXU pattern, and it
+    is also what the paper's mux-based lane selection computes.
+    """
+    p = 2**c
+    oh_d = jax.nn.one_hot(wd_blk, p, dtype=jnp.int32)  # (TM, nb, P)
+    oh_s = jax.nn.one_hot(ws_blk, p, dtype=jnp.int32)
+    # (TN, nb*P) x (nb*P, TM) -> (TN, TM): contract blocks and the 2**c
+    # pattern axis at once.  Two contractions (dense, sparse) followed by
+    # the fused subtraction — the TGEMV u-op sequence's subtract lanes +
+    # s-to-1 adder tree.
+    acc_d = jax.lax.dot_general(
+        lut_d.reshape(lut_d.shape[0], -1),
+        oh_d.reshape(oh_d.shape[0], -1).T,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc_s = jax.lax.dot_general(
+        lut_s.reshape(lut_s.shape[0], -1),
+        oh_s.reshape(oh_s.shape[0], -1).T,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc_d - acc_s
+
+
+def _gemm_kernel_ap(a_ref, wd_ref, ws_ref, o_ref, *, c: int):
+    """Activation-persistent micro-kernel body.
+
+    Grid = (N_tiles, M_tiles) with M innermost: Pallas revisits the same
+    ``a`` block for every M tile (pipelined load stays resident), so the
+    LUT build cost is amortized across all output tiles — the AP dataflow
+    of Fig. 7(a).
+    """
+    a_blk = a_ref[...].astype(jnp.int32)  # (TN, K)
+    lut_d, lut_s = _lut_build(a_blk, c)
+    o_ref[...] = _lut_lookup_accumulate(
+        lut_d, lut_s, wd_ref[...], ws_ref[...], c
+    )
+
+
+def _gemm_kernel_op(a_ref, wd_ref, ws_ref, o_ref, *, c: int, nk: int):
+    """Output-persistent micro-kernel body.
+
+    Grid = (N_tiles, M_tiles, K_tiles) with K innermost: the output block
+    stays resident in VMEM while partial sums accumulate across K tiles —
+    the OP dataflow of Fig. 7(b).  LUTs are rebuilt per K tile (cheap),
+    write-back happens once.
+    """
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...].astype(jnp.int32)  # (TN, TK)
+    lut_d, lut_s = _lut_build(a_blk, c)
+    o_ref[...] += _lut_lookup_accumulate(
+        lut_d, lut_s, wd_ref[...], ws_ref[...], c
+    )
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "tm", "tn", "tk", "dataflow", "interpret")
+)
+def lut_gemm(
+    a_q: jnp.ndarray,
+    wd_idx: jnp.ndarray,
+    ws_idx: jnp.ndarray,
+    *,
+    c: int = 2,
+    tm: int = DEFAULT_TM,
+    tn: int = DEFAULT_TN,
+    tk: int = DEFAULT_TK,
+    dataflow: str = "ap",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """T-SAR LUT GEMM: (N, K) int8 activations x (M, K//c) weight indices
+    -> (N, M) int32, computed with in-VMEM LUTs.
+
+    ``dataflow`` selects the paper's AP ("ap") or OP ("op") schedule.
+    Shapes are padded to tile multiples internally; zero-padded activation
+    blocks contribute zero to every LUT entry, and padded M rows are
+    sliced away, so padding never changes the result.
+    """
+    n, k, m, nb = _check_args(a_q, wd_idx, ws_idx, c)
+
+    a_p, _ = _pad_to(a_q, 0, tn)
+    wd_p, _ = _pad_to(wd_idx, 0, tm)
+    ws_p, _ = _pad_to(ws_idx, 0, tm)
+    np_, mp = a_p.shape[0], wd_p.shape[0]
+
+    if dataflow == "ap":
+        grid = (np_ // tn, mp // tm)
+        out = pl.pallas_call(
+            functools.partial(_gemm_kernel_ap, c=c),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((tm, nb), lambda i, j: (j, 0)),
+                pl.BlockSpec((tm, nb), lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.int32),
+            interpret=interpret,
+        )(a_p, wd_p, ws_p)
+    elif dataflow == "op":
+        tk_eff = min(tk, k)
+        if k % tk_eff != 0 or tk_eff % c != 0:
+            # Fall back to a K tile that divides evenly; correctness first.
+            tk_eff = k
+        nk = k // tk_eff
+        nbt = tk_eff // c
+        grid = (np_ // tn, mp // tm, nk)
+        out = pl.pallas_call(
+            functools.partial(_gemm_kernel_op, c=c, nk=nk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, tk_eff), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((tm, nbt), lambda i, j, kk: (j, kk)),
+                pl.BlockSpec((tm, nbt), lambda i, j, kk: (j, kk)),
+            ],
+            out_specs=pl.BlockSpec((tn, tm), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.int32),
+            interpret=interpret,
+        )(a_p, wd_p, ws_p)
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    return out[:n, :m]
+
+
+def lut_gemv(
+    a_q: jnp.ndarray,
+    wd_idx: jnp.ndarray,
+    ws_idx: jnp.ndarray,
+    *,
+    c: int = 2,
+    **kw,
+) -> jnp.ndarray:
+    """GEMV wrapper: (K,) int8 x encoded (M, K//c) -> (M,) int32."""
+    return lut_gemm(a_q[None, :], wd_idx, ws_idx, c=c, **kw)[0]

@@ -1,0 +1,148 @@
+"""L1 performance model: VMEM footprint + MXU-utilization estimates.
+
+Pallas runs under ``interpret=True`` on CPU in this repo, so wall-clock
+timings say nothing about TPU behaviour.  Per DESIGN.md §Perf, real-TPU
+efficiency is *estimated structurally* from the kernel's block shapes:
+
+  * VMEM footprint per grid step (must fit the ~16 MiB/core budget with
+    double buffering),
+  * MXU utilization of the two contraction shapes the kernel issues
+    (the TLUT build matmul and the one-hot lookup contraction),
+  * arithmetic intensity (int ops per HBM byte) vs the TLUT-in-HBM
+    baseline, which is the paper's Fig. 3 argument transplanted to TPU.
+
+The estimates drive the block-shape choices in ``tsar_lut_gemv`` and are
+reported by ``python -m compile.kernels.vmem_model`` (recorded in
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM budget (v4/v5-class)
+MXU_DIM = 128  # systolic array is 128x128
+HBM_GBPS = 1200.0  # nominal HBM bandwidth
+MXU_INT_OPS = 2 * MXU_DIM * MXU_DIM  # MACs/cycle at full occupancy
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Structural estimate for one (tiling, shape) choice."""
+
+    tm: int
+    tn: int
+    tk: int
+    c: int
+    n: int
+    k: int
+    m: int
+    dataflow: str
+
+    # -- VMEM footprint per grid step (bytes) ------------------------------
+    @property
+    def act_bytes(self) -> int:
+        kt = self.tk if self.dataflow == "op" else self.k
+        return self.tn * kt * 4  # int32 inside the kernel
+
+    @property
+    def lut_bytes(self) -> int:
+        kt = self.tk if self.dataflow == "op" else self.k
+        nb = kt // self.c
+        return 2 * self.tn * nb * (2**self.c) * 4  # dense + sparse, int32
+
+    @property
+    def idx_bytes(self) -> int:
+        kt = self.tk if self.dataflow == "op" else self.k
+        return 2 * self.tm * (kt // self.c) * 4
+
+    @property
+    def out_bytes(self) -> int:
+        return self.tn * self.tm * 4
+
+    @property
+    def vmem_bytes(self) -> int:
+        # x2: Pallas double-buffers input blocks for the HBM pipeline.
+        return 2 * (self.act_bytes + self.idx_bytes) + self.lut_bytes + self.out_bytes
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    # -- MXU utilization ----------------------------------------------------
+    @property
+    def mxu_util_lut_build(self) -> float:
+        """TLUT matmul: (tn*nb, c) x (c, 2**c) — tiny contraction dim."""
+        rows = min(self.tn * ((self.tk if self.dataflow == "op" else self.k) // self.c), MXU_DIM)
+        cols = min(2**self.c, MXU_DIM)
+        depth = min(self.c, MXU_DIM)
+        return (rows * cols * depth) / (MXU_DIM * MXU_DIM * MXU_DIM)
+
+    @property
+    def mxu_util_lookup(self) -> float:
+        """Lookup contraction: (tn, nb*2**c) x (nb*2**c, tm)."""
+        kt = self.tk if self.dataflow == "op" else self.k
+        inner = (kt // self.c) * (2**self.c)
+        rows = min(self.tn, MXU_DIM)
+        cols = min(self.tm, MXU_DIM)
+        depth = min(inner, MXU_DIM)
+        return (rows * cols * depth) / (MXU_DIM * MXU_DIM * MXU_DIM)
+
+    # -- Arithmetic intensity (the Fig. 3 argument) --------------------------
+    @property
+    def hbm_bytes_total(self) -> float:
+        """HBM traffic for the whole GEMM: activations once per reuse
+        window, weight indices once, outputs once.  LUTs never touch HBM —
+        that is T-SAR's point."""
+        nb = self.k // self.c
+        idx = 2 * self.m * nb * 4
+        if self.dataflow == "ap":
+            acts = self.n * self.k * 4 * max(1, self.m // self.tm) / max(1, self.m // self.tm)
+            acts = self.n * self.k * 4  # revisited from VMEM, loaded once
+        else:
+            acts = self.n * self.k * 4 * max(1, self.m // self.tm)
+        out = self.n * self.m * 4
+        return idx + acts + out
+
+    @property
+    def int_ops_total(self) -> float:
+        nb = self.k // self.c
+        build = 2 * self.n * nb * (2**self.c) * self.c
+        lookup = 2 * self.n * self.m * nb * (2**self.c)
+        return build + lookup
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.int_ops_total / self.hbm_bytes_total
+
+    def report(self) -> str:
+        return (
+            f"{self.dataflow:>3} tm={self.tm:<4} tn={self.tn:<3} tk={self.tk:<5} "
+            f"c={self.c} | VMEM {self.vmem_bytes/2**20:6.2f} MiB "
+            f"({'fits' if self.fits_vmem else 'OVER'}) | "
+            f"MXU build {self.mxu_util_lut_build:5.1%} "
+            f"lookup {self.mxu_util_lookup:5.1%} | "
+            f"AI {self.arithmetic_intensity:7.1f} ops/B"
+        )
+
+
+def sweep(n=128, k=2560, m=6912, c=2):
+    """Print the block-shape sweep used to pick the kernel defaults."""
+    ests = []
+    for dataflow in ("ap", "op"):
+        for tm in (64, 128, 256, 512):
+            for tn in (1, 8, 16):
+                for tk in ((512, 1024, 2560) if dataflow == "op" else (k,)):
+                    e = KernelEstimate(tm, tn, tk, c, n, k, m, dataflow)
+                    ests.append(e)
+    ests.sort(key=lambda e: (-e.fits_vmem, -e.mxu_util_lookup))
+    return ests
+
+
+if __name__ == "__main__":
+    print("== T-SAR Pallas kernel structural sweep (shape 128x2560x6912) ==")
+    for e in sweep()[:12]:
+        print(e.report())
+    print("\n== decode shape (1x2560x6912) ==")
+    for e in sweep(n=1)[:8]:
+        print(e.report())

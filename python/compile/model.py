@@ -1,0 +1,345 @@
+"""Layer-2 JAX model: BitNet-b1.58-style ternary transformer.
+
+The paper (Fig. 2(a,b)) runs ternary LLMs built from *BitLinear* layers:
+every linear projection quantizes activations to int8 (per-token absmax),
+multiplies by ternary weights via the LUT-GEMM kernel, and dequantizes by
+``w_scale / act_scale``.  This module implements that transformer:
+
+  RMSNorm -> BitLinear QKV -> RoPE attention -> BitLinear O
+  RMSNorm -> BitLinear gate/up -> SiLU(gate)*up -> BitLinear down
+
+Two weight-path variants are built from the same float master weights:
+
+  * ``matmul="tsar"`` — BitLinears call the Layer-1 Pallas kernel
+    (``kernels.tsar_lut_gemv``) with pre-encoded dense/sparse LUT indices.
+  * ``matmul="ref"``  — BitLinears use the direct integer ternary matmul
+    oracle.  Bit-identical to the tsar path in the int32 domain.
+
+Both are AOT-lowered by ``aot.py`` into self-contained HLO text artifacts
+(prefill + single decode step with KV cache) that the Rust runtime loads;
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.tsar_lut_gemv import lut_gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for a BitNet-style model."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn_dim: int = 768
+    max_seq: int = 160
+    prefill_len: int = 32  # fixed padded prompt length for the AOT artifact
+    rope_theta: float = 10000.0
+    c: int = 2  # T-SAR LUT block size used by the tsar matmul path
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def validate(self) -> "ModelConfig":
+        assert self.d_model % self.c == 0
+        assert self.ffn_dim % self.c == 0
+        assert self.prefill_len <= self.max_seq
+        return self
+
+
+TINY = ModelConfig()  # the end-to-end serving example's model
+MICRO = ModelConfig(
+    vocab=128, d_model=64, n_layers=2, n_heads=2, ffn_dim=128, max_seq=48,
+    prefill_len=8,
+)  # for fast tests
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction & ternary encoding
+# ---------------------------------------------------------------------------
+
+# Names of the BitLinear projections inside each block, with (out, in) shapes.
+def _block_linears(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.ffn_dim
+    return {
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "w_gate": (f, d),
+        "w_up": (f, d),
+        "w_down": (d, f),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Deterministic float master weights (the 'checkpoint' we ternarize).
+
+    Weights are drawn from a scaled normal so that absmean ternarization
+    yields a BitNet-like ternary distribution (~1/3 zeros).
+    """
+    rng = np.random.default_rng(seed)
+
+    def dense(shape, scale):
+        return jnp.asarray(rng.normal(0.0, scale, size=shape).astype(np.float32))
+
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": dense((cfg.vocab, d), d**-0.5),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense((cfg.vocab, d), d**-0.5),
+    }
+    for l in range(cfg.n_layers):
+        blk: Dict[str, Any] = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+        }
+        for name, shape in _block_linears(cfg).items():
+            blk[name] = dense(shape, shape[1] ** -0.5)
+        params[f"layer_{l}"] = blk
+    return params
+
+
+def quantize_params(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    """Ternarize every BitLinear weight and pre-encode LUT indices.
+
+    Each float matrix ``W`` becomes ``{"wd": wd_idx, "ws": ws_idx,
+    "wt": w_ternary, "scale": w_scale}`` — the tsar path consumes wd/ws,
+    the ref path consumes wt; both share the scale.  Non-BitLinear params
+    (norm gains, embedding) pass through as float.
+    """
+    out: Dict[str, Any] = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "lm_head": _encode_linear(params["lm_head"], cfg),
+    }
+    for l in range(cfg.n_layers):
+        blk = params[f"layer_{l}"]
+        qblk: Dict[str, Any] = {
+            "attn_norm": blk["attn_norm"],
+            "ffn_norm": blk["ffn_norm"],
+        }
+        for name in _block_linears(cfg):
+            qblk[name] = _encode_linear(blk[name], cfg)
+        out[f"layer_{l}"] = qblk
+    return out
+
+
+def _encode_linear(w: jnp.ndarray, cfg: ModelConfig) -> Dict[str, Any]:
+    w_t, scale = ref.absmean_ternarize(w)
+    wd, ws = ref.encode_indices(w_t, cfg.c)
+    return {"wd": wd, "ws": ws, "wt": w_t, "scale": scale}
+
+
+# ---------------------------------------------------------------------------
+# BitLinear
+# ---------------------------------------------------------------------------
+
+
+def bit_linear(
+    x: jnp.ndarray, wq: Dict[str, Any], cfg: ModelConfig, matmul: str
+) -> jnp.ndarray:
+    """BitLinear forward (paper Fig. 2(b)).
+
+    ``x``: (N, K) float.  Quantize activations per token, run the ternary
+    GEMM on the selected path, dequantize.
+    """
+    x_q, s = ref.absmax_quantize_act(x)
+    if matmul == "tsar":
+        y_int = lut_gemm(x_q, wq["wd"], wq["ws"], c=cfg.c)
+    elif matmul == "ref":
+        y_int = ref.ternary_gemm_int(x_q, wq["wt"])
+    else:
+        raise ValueError(f"unknown matmul path {matmul!r}")
+    return y_int.astype(jnp.float32) * (wq["scale"] / s)
+
+
+# ---------------------------------------------------------------------------
+# Transformer pieces
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (T, H, Dh); positions: (T,) int32."""
+    t, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attention(
+    q: jnp.ndarray,  # (Tq, H, Dh)
+    k: jnp.ndarray,  # (Tk, H, Dh)
+    v: jnp.ndarray,  # (Tk, H, Dh)
+    mask: jnp.ndarray,  # (Tq, Tk) bool, True = attend
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", probs, v)
+    return out.reshape(q.shape[0], -1)
+
+
+def _block(
+    x: jnp.ndarray,  # (T, D)
+    blk: Dict[str, Any],
+    cfg: ModelConfig,
+    matmul: str,
+    positions: jnp.ndarray,  # (T,) int32
+    mask: jnp.ndarray,  # (T, T) bool
+):
+    """One prefill transformer block; returns (x_out, k (T,H,Dh), v)."""
+    h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+    t = x.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    q = bit_linear(h, blk["wq"], cfg, matmul).reshape(t, nh, dh)
+    k = bit_linear(h, blk["wk"], cfg, matmul).reshape(t, nh, dh)
+    v = bit_linear(h, blk["wv"], cfg, matmul).reshape(t, nh, dh)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    attn = _attention(q, k, v, mask)
+    x = x + bit_linear(attn, blk["wo"], cfg, matmul)
+
+    h = rms_norm(x, blk["ffn_norm"], cfg.norm_eps)
+    gate = bit_linear(h, blk["w_gate"], cfg, matmul)
+    up = bit_linear(h, blk["w_up"], cfg, matmul)
+    x = x + bit_linear(jax.nn.silu(gate) * up, blk["w_down"], cfg, matmul)
+    return x, k, v
+
+
+# ---------------------------------------------------------------------------
+# Prefill & decode entrypoints (the two AOT artifacts)
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    qparams: Dict[str, Any],
+    tokens: jnp.ndarray,  # (P,) int32, padded prompt
+    prompt_len: jnp.ndarray,  # () int32, actual length <= P
+    cfg: ModelConfig,
+    matmul: str,
+):
+    """Process a padded prompt, fill the KV cache, emit the first token.
+
+    Returns ``(next_token () i32, k_cache (L, S, H, Dh) f32, v_cache)``.
+    Cache slots beyond the real prompt are zeroed; decode's position mask
+    never exposes them before they are overwritten.
+    """
+    p = cfg.prefill_len
+    assert tokens.shape == (p,)
+    x = qparams["embed"][tokens]  # (P, D)
+    positions = jnp.arange(p, dtype=jnp.int32)
+    causal = positions[:, None] >= positions[None, :]  # (P, P)
+
+    l, s = cfg.n_layers, cfg.max_seq
+    k_cache = jnp.zeros((l, s, cfg.n_heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for li in range(l):
+        x, k, v = _block(
+            x, qparams[f"layer_{li}"], cfg, matmul, positions, causal
+        )
+        # Only the first prompt_len slots hold real tokens; zero the rest
+        # so stale prefill K/V can never leak into decode attention.
+        valid = (positions < prompt_len)[:, None, None]
+        k_cache = k_cache.at[li, :p].set(jnp.where(valid, k, 0.0))
+        v_cache = v_cache.at[li, :p].set(jnp.where(valid, v, 0.0))
+
+    x = rms_norm(x, qparams["final_norm"], cfg.norm_eps)
+    last = x[prompt_len - 1]  # (D,)
+    logits = bit_linear(last[None, :], qparams["lm_head"], cfg, matmul)[0]
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return next_token, k_cache, v_cache
+
+
+def decode_step(
+    qparams: Dict[str, Any],
+    token: jnp.ndarray,  # () int32
+    pos: jnp.ndarray,  # () int32 — cache slot this token is written at
+    k_cache: jnp.ndarray,  # (L, S, H, Dh)
+    v_cache: jnp.ndarray,
+    cfg: ModelConfig,
+    matmul: str,
+):
+    """One autoregressive step with KV cache.
+
+    Returns ``(next_token, k_cache', v_cache')``.
+    """
+    s = cfg.max_seq
+    x = qparams["embed"][token][None, :]  # (1, D)
+    positions = pos[None]  # (1,)
+    slot_ids = jnp.arange(s, dtype=jnp.int32)
+
+    for li in range(cfg.n_layers):
+        blk = qparams[f"layer_{li}"]
+        mask = (slot_ids <= pos)[None, :]  # (1, S): all written slots
+        h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+        nh, dh = cfg.n_heads, cfg.head_dim
+        q = bit_linear(h, blk["wq"], cfg, matmul).reshape(1, nh, dh)
+        k = bit_linear(h, blk["wk"], cfg, matmul).reshape(1, nh, dh)
+        v = bit_linear(h, blk["wv"], cfg, matmul).reshape(1, nh, dh)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None], (li, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None], (li, pos, 0, 0)
+        )
+        attn = _attention(q, k_cache[li], v_cache[li], mask)
+        x = x + bit_linear(attn, blk["wo"], cfg, matmul)
+        h = rms_norm(x, blk["ffn_norm"], cfg.norm_eps)
+        gate = bit_linear(h, blk["w_gate"], cfg, matmul)
+        up = bit_linear(h, blk["w_up"], cfg, matmul)
+        x = x + bit_linear(jax.nn.silu(gate) * up, blk["w_down"], cfg, matmul)
+
+    x = rms_norm(x, qparams["final_norm"], cfg.norm_eps)
+    logits = bit_linear(x, qparams["lm_head"], cfg, matmul)[0]
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return next_token, k_cache, v_cache
+
+
+def generate(
+    qparams: Dict[str, Any],
+    prompt: np.ndarray,
+    n_new: int,
+    cfg: ModelConfig,
+    matmul: str = "ref",
+) -> np.ndarray:
+    """Pure-Python greedy generation loop (testing / golden generation)."""
+    p = cfg.prefill_len
+    toks = np.zeros((p,), np.int32)
+    toks[: len(prompt)] = prompt
+    nxt, kc, vc = prefill(
+        qparams, jnp.asarray(toks), jnp.int32(len(prompt)), cfg, matmul
+    )
+    out = [int(nxt)]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        nxt, kc, vc = decode_step(
+            qparams, jnp.int32(out[-1]), jnp.int32(pos), kc, vc, cfg, matmul
+        )
+        out.append(int(nxt))
+        pos += 1
+    return np.asarray(out, np.int32)

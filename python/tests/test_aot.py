@@ -1,0 +1,126 @@
+# pytest: AOT pipeline — flatten/unflatten round-trip, manifest integrity,
+# HLO text validity, golden self-consistency (micro config; fast).
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+CFG = M.MICRO.validate()
+
+
+@pytest.fixture(scope="module")
+def qparams():
+    return M.quantize_params(M.init_params(CFG, seed=0), CFG)
+
+
+@pytest.mark.parametrize("variant", ["tsar", "ref"])
+def test_flatten_unflatten_roundtrip(qparams, variant):
+    flat, names = aot.flatten_params(qparams, CFG, variant)
+    assert len(flat) == len(names)
+    tree = aot.unflatten_params(flat, CFG, variant)
+    if variant == "tsar":
+        np.testing.assert_array_equal(
+            np.asarray(tree["layer_0"]["wq"]["wd"]),
+            np.asarray(qparams["layer_0"]["wq"]["wd"]),
+        )
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(tree["layer_0"]["wq"]["wt"], np.int32),
+            np.asarray(qparams["layer_0"]["wq"]["wt"], np.int32),
+        )
+
+
+def test_param_order_deterministic():
+    n1 = aot._param_entries(CFG, "tsar")
+    n2 = aot._param_entries(CFG, "tsar")
+    assert n1 == n2
+    assert n1[0] == "embed"
+    assert f"layer_{CFG.n_layers-1}.w_down.scale" in n1
+
+
+def test_transport_dtypes(qparams):
+    flat, _ = aot.flatten_params(qparams, CFG, "ref")
+    for a in flat:
+        assert a.dtype in (np.float32, np.int32)
+
+
+def test_unflattened_params_run(qparams):
+    # The transported (int8 -> int32) tree must still run the model and
+    # agree with the original.
+    flat, _ = aot.flatten_params(qparams, CFG, "ref")
+    tree = aot.unflatten_params([jnp.asarray(a) for a in flat], CFG, "ref")
+    toks = np.zeros((CFG.prefill_len,), np.int32)
+    toks[:3] = [7, 8, 9]
+    n1, _, _ = M.prefill(qparams, jnp.asarray(toks), jnp.int32(3), CFG, "ref")
+    n2, _, _ = M.prefill(tree, jnp.asarray(toks), jnp.int32(3), CFG, "ref")
+    assert int(n1) == int(n2)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_micro")
+    aot.build(str(out), "micro", ["tsar", "ref"], seed=0, golden_new_tokens=5)
+    return str(out)
+
+
+def test_manifest_contents(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["config"]["d_model"] == CFG.d_model
+    assert set(man["entrypoints"]) == {
+        "prefill_tsar", "decode_tsar", "prefill_ref", "decode_ref"
+    }
+    ep = man["entrypoints"]["decode_ref"]
+    assert [a["name"] for a in ep["dynamic_args"]] == [
+        "token", "pos", "k_cache", "v_cache"
+    ]
+    # Every param arg must exist in the weights index.
+    names = {p["name"] for p in man["params"]}
+    for ref_name in ep["param_args"]:
+        assert ref_name in names
+
+
+def test_weights_bin_offsets(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    size = os.path.getsize(os.path.join(built, "weights.bin"))
+    end = 0
+    for p in man["params"]:
+        assert p["offset"] == end, "params must be densely packed"
+        end = p["offset"] + p["nbytes"]
+        expect = int(np.prod(p["shape"]) if p["shape"] else 1) * 4
+        assert p["nbytes"] == expect
+    assert end == size
+
+
+def test_hlo_text_parseable(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    for ep in man["entrypoints"].values():
+        path = os.path.join(built, ep["hlo"])
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{path} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_golden_tokens_valid(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    g = man["golden"]
+    assert len(g["tokens"]) == 5
+    assert all(0 <= t < CFG.vocab for t in g["tokens"])
+    # Recompute the first golden token independently.
+    params = M.quantize_params(M.init_params(CFG, seed=man["seed"]), CFG)
+    toks = np.asarray(g["padded_prompt"], np.int32)
+    nxt, _, _ = M.prefill(
+        params, jnp.asarray(toks), jnp.int32(g["prompt_len"]), CFG, "ref"
+    )
+    assert int(nxt) == g["tokens"][0]

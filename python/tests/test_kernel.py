@@ -1,0 +1,194 @@
+# pytest: Pallas LUT-GEMV kernel vs pure-jnp oracle — the CORE correctness
+# signal for Layer 1.  Every test asserts bit-exact int32 equality: the
+# LUT path computes the same integer dot products as the direct ternary
+# matmul, just via table lookups.
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.tsar_lut_gemv import lut_gemm, lut_gemv
+
+
+def make_case(rng, n, k, m):
+    w = rng.integers(-1, 2, size=(m, k)).astype(np.int8)
+    a = rng.integers(-127, 128, size=(n, k)).astype(np.int8)
+    return jnp.asarray(a), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency: LUT reference == direct ternary matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c", [2, 4])
+@pytest.mark.parametrize("n,k,m", [(1, 16, 8), (3, 64, 32), (2, 128, 100)])
+def test_ref_lut_equals_direct(c, n, k, m):
+    rng = np.random.default_rng(c * 1000 + n)
+    a, w = make_case(rng, n, k, m)
+    wd, ws = ref.encode_indices(w, c)
+    want = ref.ternary_gemm_int(a, w)
+    got = ref.lut_gemm(a, wd, ws, c)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_decompose_identity():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.integers(-1, 2, size=(50, 40)).astype(np.int8))
+    wd, ws = ref.decompose(w)
+    np.testing.assert_array_equal(
+        np.asarray(w, np.int32),
+        np.asarray(wd, np.int32) - np.asarray(ws, np.int32),
+    )
+    assert set(np.unique(np.asarray(wd))) <= {-1, 1}
+    assert set(np.unique(np.asarray(ws))) <= {0, 1}
+
+
+@pytest.mark.parametrize("c", [2, 4])
+def test_encode_indices_range(c):
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.integers(-1, 2, size=(8, 4 * c)).astype(np.int8))
+    wd, ws = ref.encode_indices(w, c)
+    assert wd.shape == (8, 4)
+    assert np.all(np.asarray(wd) >= 0) and np.all(np.asarray(wd) < 2**c)
+    assert np.all(np.asarray(ws) >= 0) and np.all(np.asarray(ws) < 2**c)
+    # Dense and sparse bits are mutually exclusive per position only in the
+    # sense that ws bit set forces wd bit set (zero -> densified +1).
+    assert np.all((np.asarray(ws) & ~np.asarray(wd)) == 0)
+
+
+def test_patterns():
+    pd = np.asarray(ref.dense_patterns(2))
+    ps = np.asarray(ref.sparse_patterns(2))
+    np.testing.assert_array_equal(
+        pd, [[-1, -1], [1, -1], [-1, 1], [1, 1]]
+    )
+    np.testing.assert_array_equal(ps, [[0, 0], [1, 0], [0, 1], [1, 1]])
+
+
+def test_lut_entries_fit_16_bits():
+    # Paper stores LUT entries as 16-bit words: |entry| <= c * 127 < 2**15
+    # for both c=2 and c=4 with int8 activations.
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(
+        np.full((1, 16), 127, np.int8)
+    )  # worst case activations
+    for c in (2, 4):
+        lut_d, lut_s = ref.build_luts(a, c)
+        assert int(jnp.max(jnp.abs(lut_d))) <= c * 127 < 2**15
+        assert int(jnp.max(jnp.abs(lut_s))) <= c * 127 < 2**15
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dataflow", ["ap", "op"])
+@pytest.mark.parametrize("c", [2, 4])
+@pytest.mark.parametrize(
+    "n,k,m",
+    [(1, 64, 48), (1, 256, 33), (4, 128, 128), (5, 64, 200), (2, 512, 96)],
+)
+def test_pallas_matches_oracle(dataflow, c, n, k, m):
+    rng = np.random.default_rng(hash((dataflow, c, n, k, m)) % 2**32)
+    a, w = make_case(rng, n, k, m)
+    wd, ws = ref.encode_indices(w, c)
+    want = ref.ternary_gemm_int(a, w)
+    got = lut_gemm(a, wd, ws, c=c, dataflow=dataflow, tm=64, tn=4, tk=128)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_pallas_gemv_wrapper():
+    rng = np.random.default_rng(9)
+    a, w = make_case(rng, 1, 64, 40)
+    wd, ws = ref.encode_indices(w, 2)
+    got = lut_gemv(a[0], wd, ws, c=2, tm=32, tn=1)
+    want = ref.ternary_gemm_int(a, w)[0]
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("dataflow", ["ap", "op"])
+def test_pallas_weights_all_zero(dataflow):
+    a = jnp.asarray(np.arange(-32, 32, dtype=np.int8)[None, :])
+    w = jnp.zeros((16, 64), jnp.int8)
+    wd, ws = ref.encode_indices(w, 2)
+    got = lut_gemm(a, wd, ws, c=2, dataflow=dataflow, tm=16, tn=1)
+    np.testing.assert_array_equal(np.zeros((1, 16), np.int32), np.asarray(got))
+
+
+@pytest.mark.parametrize("dataflow", ["ap", "op"])
+def test_pallas_extreme_activations(dataflow):
+    # +/-127 activations with all-ones weights: max-magnitude accumulation.
+    k, m = 256, 32
+    a = jnp.asarray(np.where(np.arange(k) % 2, 127, -127)[None, :].astype(np.int8))
+    w = jnp.ones((m, k), jnp.int8)
+    wd, ws = ref.encode_indices(w, 4)
+    got = lut_gemm(a, wd, ws, c=4, dataflow=dataflow, tm=32, tn=1)
+    want = ref.ternary_gemm_int(a, w)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, tilings, weight/activation distributions
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    kb=st.integers(1, 16),
+    m=st.integers(1, 80),
+    c=st.sampled_from([2, 4]),
+    dataflow=st.sampled_from(["ap", "op"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_hypothesis_shapes(n, kb, m, c, dataflow, seed):
+    k = kb * c * 4  # keep K a multiple of both block sizes
+    rng = np.random.default_rng(seed)
+    a, w = make_case(rng, n, k, m)
+    wd, ws = ref.encode_indices(w, c)
+    want = ref.ternary_gemm_int(a, w)
+    got = lut_gemm(a, wd, ws, c=c, dataflow=dataflow, tm=32, tn=2, tk=c * 8)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    zero_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_hypothesis_sparsity(zero_frac, seed):
+    # Sweep the ternary zero fraction from fully dense to all-zero: the
+    # decomposition must be exact at every sparsity level.
+    rng = np.random.default_rng(seed)
+    n, k, m, c = 2, 64, 24, 2
+    w = rng.integers(-1, 2, size=(m, k)).astype(np.int8)
+    mask = rng.random(size=w.shape) < zero_frac
+    w = np.where(mask, 0, np.where(w == 0, 1, w)).astype(np.int8)
+    a = rng.integers(-127, 128, size=(n, k)).astype(np.int8)
+    a, w = jnp.asarray(a), jnp.asarray(w)
+    wd, ws = ref.encode_indices(w, c)
+    want = ref.ternary_gemm_int(a, w)
+    got = lut_gemm(a, wd, ws, c=c, tm=16, tn=2)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tm=st.sampled_from([8, 16, 64, 128]),
+    tn=st.sampled_from([1, 2, 8]),
+    tk=st.sampled_from([8, 32, 64]),
+    dataflow=st.sampled_from(["ap", "op"]),
+)
+def test_pallas_hypothesis_tilings(tm, tn, tk, dataflow):
+    # Result must be invariant to the tiling / dataflow choice.
+    rng = np.random.default_rng(tm * 100 + tn * 10 + tk)
+    a, w = make_case(rng, 3, 64, 72)
+    wd, ws = ref.encode_indices(w, 2)
+    want = ref.ternary_gemm_int(a, w)
+    got = lut_gemm(a, wd, ws, c=2, tm=tm, tn=tn, tk=tk, dataflow=dataflow)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))

@@ -1,0 +1,128 @@
+# pytest: Layer-2 model — shapes, tsar-vs-ref path equivalence, KV-cache
+# semantics, prefill/decode consistency.
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.MICRO.validate()
+
+
+@pytest.fixture(scope="module")
+def qparams():
+    return M.quantize_params(M.init_params(CFG, seed=1), CFG)
+
+
+def test_param_shapes(qparams):
+    assert qparams["embed"].shape == (CFG.vocab, CFG.d_model)
+    blk = qparams["layer_0"]
+    assert blk["wq"]["wt"].shape == (CFG.d_model, CFG.d_model)
+    assert blk["wq"]["wd"].shape == (CFG.d_model, CFG.d_model // CFG.c)
+    assert blk["w_gate"]["wt"].shape == (CFG.ffn_dim, CFG.d_model)
+    assert blk["w_down"]["wt"].shape == (CFG.d_model, CFG.ffn_dim)
+
+
+def test_ternary_distribution(qparams):
+    # absmean ternarization of gaussian weights leaves a healthy mix of
+    # -1/0/+1 (BitNet-like); all three symbols must be present.
+    wt = np.asarray(qparams["layer_0"]["wq"]["wt"])
+    counts = {v: int((wt == v).sum()) for v in (-1, 0, 1)}
+    assert all(c > 0 for c in counts.values())
+    zero_frac = counts[0] / wt.size
+    assert 0.1 < zero_frac < 0.8
+
+
+def test_bitlinear_tsar_equals_ref(qparams):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, CFG.d_model)).astype(np.float32))
+    wq = qparams["layer_0"]["wq"]
+    y_ref = M.bit_linear(x, wq, CFG, "ref")
+    y_tsar = M.bit_linear(x, wq, CFG, "tsar")
+    np.testing.assert_allclose(
+        np.asarray(y_ref), np.asarray(y_tsar), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_prefill_shapes(qparams):
+    toks = jnp.zeros((CFG.prefill_len,), jnp.int32)
+    nxt, kc, vc = M.prefill(qparams, toks, jnp.int32(4), CFG, "ref")
+    assert nxt.shape == ()
+    assert kc.shape == (CFG.n_layers, CFG.max_seq, CFG.n_heads, CFG.head_dim)
+    assert vc.shape == kc.shape
+
+
+def test_prefill_zeroes_padding(qparams):
+    toks = jnp.asarray(np.arange(CFG.prefill_len, dtype=np.int32) % CFG.vocab)
+    plen = 3
+    _, kc, _ = M.prefill(qparams, toks, jnp.int32(plen), CFG, "ref")
+    kc = np.asarray(kc)
+    # Slots [plen, prefill_len) and beyond must be exactly zero.
+    assert np.all(kc[:, plen:] == 0.0)
+    assert np.any(kc[:, :plen] != 0.0)
+
+
+def test_prefill_padding_invariance(qparams):
+    # The same prompt with different padding garbage must give the same
+    # next token and caches (causal mask + zeroing => padding-invariant).
+    prompt = [5, 9, 17]
+    t1 = np.zeros((CFG.prefill_len,), np.int32)
+    t2 = np.full((CFG.prefill_len,), 99, np.int32)
+    t1[:3] = t2[:3] = prompt
+    n1, k1, v1 = M.prefill(qparams, jnp.asarray(t1), jnp.int32(3), CFG, "ref")
+    n2, k2, v2 = M.prefill(qparams, jnp.asarray(t2), jnp.int32(3), CFG, "ref")
+    assert int(n1) == int(n2)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+
+
+def test_tsar_and_ref_paths_agree_end_to_end(qparams):
+    toks = np.zeros((CFG.prefill_len,), np.int32)
+    toks[:4] = [1, 2, 3, 4]
+    n_r, k_r, v_r = M.prefill(qparams, jnp.asarray(toks), jnp.int32(4), CFG, "ref")
+    n_t, k_t, v_t = M.prefill(qparams, jnp.asarray(toks), jnp.int32(4), CFG, "tsar")
+    assert int(n_r) == int(n_t)
+    np.testing.assert_allclose(np.asarray(k_r), np.asarray(k_t), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_appends_to_cache(qparams):
+    toks = np.zeros((CFG.prefill_len,), np.int32)
+    toks[:4] = [1, 2, 3, 4]
+    nxt, kc, vc = M.prefill(qparams, jnp.asarray(toks), jnp.int32(4), CFG, "ref")
+    n2, kc2, vc2 = M.decode_step(
+        qparams, nxt, jnp.int32(4), kc, vc, CFG, "ref"
+    )
+    kc, kc2 = np.asarray(kc), np.asarray(kc2)
+    # Slot 4 must change, earlier slots must not.
+    assert np.any(kc2[:, 4] != kc[:, 4])
+    np.testing.assert_array_equal(kc2[:, :4], kc[:, :4])
+    assert np.all(kc2[:, 5:] == 0.0)
+    assert 0 <= int(n2) < CFG.vocab
+
+
+def test_generate_deterministic(qparams):
+    prompt = np.asarray([3, 1, 4], np.int32)
+    out1 = M.generate(qparams, prompt, 4, CFG, "ref")
+    out2 = M.generate(qparams, prompt, 4, CFG, "ref")
+    np.testing.assert_array_equal(out1, out2)
+    assert np.all(out1 >= 0) and np.all(out1 < CFG.vocab)
+
+
+def test_rope_position_dependence():
+    x = jnp.ones((2, 2, 8), jnp.float32)
+    r0 = M._rope(x, jnp.asarray([0, 0], jnp.int32), 10000.0)
+    r1 = M._rope(x, jnp.asarray([0, 5], jnp.int32), 10000.0)
+    # Position 0 is the identity rotation.
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(x), atol=1e-6)
+    assert np.abs(np.asarray(r1)[1] - np.asarray(x)[1]).max() > 0.01
+
+
+def test_rms_norm():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32) * 8)
+    y = np.asarray(M.rms_norm(x, jnp.ones((16,)), 1e-5))
+    rms = np.sqrt(np.mean(y**2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

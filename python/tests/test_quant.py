@@ -1,0 +1,92 @@
+# pytest: quantization primitives (absmean ternarization, absmax int8
+# activation quantization) — the algorithmic substrate of §III-A.
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def test_absmean_ternarize_values():
+    w = jnp.asarray([[0.9, -0.8, 0.01, 0.0], [2.0, -2.0, 0.4, -0.4]])
+    w_t, scale = ref.absmean_ternarize(w)
+    assert set(np.unique(np.asarray(w_t))) <= {-1, 0, 1}
+    assert float(scale) == np.mean(np.abs(np.asarray(w)))
+
+
+def test_absmean_ternarize_zeros():
+    w = jnp.zeros((4, 4))
+    w_t, scale = ref.absmean_ternarize(w)
+    np.testing.assert_array_equal(np.zeros((4, 4), np.int8), np.asarray(w_t))
+    assert float(scale) > 0  # eps floor, no div-by-zero
+
+
+def test_absmax_act_range():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    x_q, s = ref.absmax_quantize_act(x)
+    q = np.asarray(x_q)
+    assert q.dtype == np.int8
+    assert q.min() >= -127 and q.max() <= 127
+    # The per-token max must quantize to +/-127 exactly.
+    for i in range(5):
+        assert np.abs(q[i]).max() == 127
+
+
+def test_absmax_act_reconstruction():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    x_q, s = ref.absmax_quantize_act(x)
+    recon = np.asarray(x_q, np.float32) / np.asarray(s)
+    err = np.abs(recon - np.asarray(x)).max()
+    # Quantization step is absmax/127; round-off is at most half a step.
+    step = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 127.0
+    assert err <= step.max() * 0.5 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_ternarize_hypothesis(m, k, seed, scale):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.normal(size=(m, k)) * scale).astype(np.float32))
+    w_t, s = ref.absmean_ternarize(w)
+    vals = set(np.unique(np.asarray(w_t)))
+    assert vals <= {-1, 0, 1}
+    assert float(s) > 0
+    # Sign preservation: where |w| is large relative to the scale, the
+    # ternary value has the same sign as w.
+    big = np.abs(np.asarray(w)) > 1.5 * float(s)
+    if big.any():
+        assert np.all(
+            np.sign(np.asarray(w))[big] == np.asarray(w_t, np.float32)[big]
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 8), k=st.integers(1, 128), seed=st.integers(0, 2**31 - 1))
+def test_act_quant_hypothesis(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 10)
+    x_q, s = ref.absmax_quantize_act(x)
+    assert np.asarray(x_q).dtype == np.int8
+    assert np.all(np.asarray(s) > 0)
+    assert np.abs(np.asarray(x_q)).max() <= 127
+
+
+def test_bitlinear_ref_matches_float_within_quant_error():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    w_t, scale = ref.absmean_ternarize(w)
+    y = ref.bitlinear_ref(x, w_t, scale)
+    # Against the float ternary matmul (only activation-quant error left).
+    y_f = np.asarray(x) @ (np.asarray(w_t, np.float32) * float(scale)).T
+    rel = np.abs(np.asarray(y) - y_f) / (np.abs(y_f).max() + 1e-6)
+    assert rel.max() < 0.02

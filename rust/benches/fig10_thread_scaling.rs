@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 10 (multi-thread scaling of the BitNet-2B-4T
+//! GEMM/GEMV shapes, T-SAR vs TL-2, all platforms).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let pts = tsar::bench::fig10();
+
+    // Summarize the paper's claims: GEMM scales to 8–16T, GEMV plateaus.
+    for platform in ["Workstation", "Laptop", "Mobile"] {
+        for shape in tsar::bench::fig10_shapes() {
+            let series: Vec<&tsar::bench::Fig10Point> = pts
+                .iter()
+                .filter(|p| p.platform == platform && p.shape == shape)
+                .collect();
+            if series.len() < 2 {
+                continue;
+            }
+            let t1 = series.first().unwrap().tsar_s;
+            let tbest = series.iter().map(|p| p.tsar_s).fold(f64::INFINITY, f64::min);
+            let speedup_vs_tl2: Vec<f64> =
+                series.iter().map(|p| p.tl2_s / p.tsar_s).collect();
+            println!(
+                "[fig10] {platform:<12} {}x{}x{}: T-SAR scales {:.1}x across threads; vs TL-2 {:.1}–{:.1}x",
+                shape.n,
+                shape.k,
+                shape.m,
+                t1 / tbest,
+                speedup_vs_tl2.iter().cloned().fold(f64::INFINITY, f64::min),
+                speedup_vs_tl2.iter().cloned().fold(0.0f64, f64::max),
+            );
+        }
+    }
+    println!("[fig10] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

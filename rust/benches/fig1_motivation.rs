@@ -1,0 +1,28 @@
+//! Bench: regenerate the Fig. 1/2 motivation panels — size reduction
+//! (1a), TLUT request share across model sizes (1c), footprint-vs-share
+//! contrast (2c) and the baseline GEMV time breakdown (2d).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    tsar::bench::fig1a();
+    println!();
+    let shares = tsar::bench::fig1c();
+    println!();
+    let (fp_share, req_share) = tsar::bench::fig2c();
+    println!();
+    let mem_frac = tsar::bench::fig2d();
+
+    println!();
+    println!(
+        "[fig1c] TLUT share range {:.1}%–{:.1}% (paper: >75% across 125M–100B)",
+        shares.iter().map(|(_, s)| s * 100.0).fold(f64::INFINITY, f64::min),
+        shares.iter().map(|(_, s)| s * 100.0).fold(0.0f64, f64::max)
+    );
+    println!(
+        "[fig2c] footprint {:.3}% of RAM vs {:.1}% of requests (paper: <0.01% vs 87.6%)",
+        fp_share * 100.0,
+        req_share * 100.0
+    );
+    println!("[fig2d] memory share {:.1}% (paper: 91.6%)", mem_frac * 100.0);
+    println!("[fig1]  harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

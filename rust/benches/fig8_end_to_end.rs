@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig. 8 (end-to-end prefill latency + decode
+//! throughput, T-SAR vs TL-2, three platforms × BitNet 125M–100B) and
+//! time the harness itself.  `cargo bench --bench fig8_end_to_end`.
+
+use tsar::util::stats::{geomean, time_it};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = tsar::bench::fig8();
+    println!("\n[fig8] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // Aggregate the paper's headline numbers.
+    for platform in ["Workstation", "Laptop", "Mobile"] {
+        let pre: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.platform == platform)
+            .map(|r| r.prefill_tl2_s / r.prefill_tsar_s)
+            .collect();
+        let dec: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.platform == platform)
+            .map(|r| r.decode_tsar_tps / r.decode_tl2_tps)
+            .collect();
+        println!(
+            "[fig8] {platform:<12} geomean prefill speedup {:.2}x (paper: 8.8/8.4/12.4), decode {:.2}x",
+            geomean(&pre),
+            geomean(&dec)
+        );
+    }
+
+    // Micro-benchmark the full-model simulation hot path (coordinator
+    // planning cost — §Perf L3).
+    let spec = tsar::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let plat = tsar::config::platforms::Platform::workstation();
+    let (mean_s, min_s, runs) = time_it(
+        || {
+            std::hint::black_box(tsar::bench::pass_seconds(spec, &plat, 1, true));
+        },
+        20,
+        0.5,
+    );
+    println!(
+        "[fig8] whole-model decode simulation: mean {:.3} ms, min {:.3} ms ({} runs)",
+        mean_s * 1e3,
+        min_s * 1e3,
+        runs
+    );
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 9 (memory request volume, T-SAR vs TL-2, GEMM
+//! N=128 and GEMV N=1, on BitNet 125M / 2B-4T / 100B).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = tsar::bench::fig9();
+    for phase in ["GEMM(N=128)", "GEMV(N=1)"] {
+        let red: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.phase == phase)
+            .map(|r| r.tl2_mb / r.tsar_mb)
+            .collect();
+        let lo = red.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = red.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "[fig9] {phase}: request-volume reduction {lo:.1}x – {hi:.1}x (paper band: 8.7–13.8x, GEMV > GEMM)"
+        );
+    }
+    println!("[fig9] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,97 @@
+//! Bench: the L3 hot paths themselves (§Perf) — functional kernel
+//! throughput, simulator throughput, and coordinator planning cost.
+//! These are the paths profiled and optimized in EXPERIMENTS.md §Perf.
+
+use tsar::config::platforms::Platform;
+use tsar::config::IsaConfig;
+use tsar::kernels::{Dataflow, TernaryKernel, Tl2Kernel, TsarKernel};
+use tsar::sim::{simulate, GemmShape};
+use tsar::util::rng::Rng;
+use tsar::util::stats::time_it;
+
+fn main() {
+    let mut rng = Rng::new(2025);
+
+    // ---- functional kernel throughput (bit-exact ISA emulation) ----------
+    let shape = GemmShape::new(1, 512, 512);
+    let acts = rng.int8_acts(shape.n * shape.k);
+    let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+    for kern in [
+        Box::new(TsarKernel::new(IsaConfig::C2, Dataflow::Op)) as Box<dyn TernaryKernel>,
+        Box::new(TsarKernel::new(IsaConfig::C4, Dataflow::Op)),
+        Box::new(Tl2Kernel::new()),
+    ] {
+        let (mean_s, min_s, runs) = time_it(
+            || {
+                std::hint::black_box(kern.run(&acts, &w, shape));
+            },
+            10,
+            0.5,
+        );
+        let macs = shape.macs();
+        println!(
+            "[hot] functional {:<34} mean {:>8.3} ms  min {:>8.3} ms  {:>6.1} M MAC/s  ({} runs)",
+            kern.name(),
+            mean_s * 1e3,
+            min_s * 1e3,
+            macs / min_s / 1e6,
+            runs
+        );
+    }
+
+    // ---- simulator throughput ---------------------------------------------
+    let plat = Platform::workstation();
+    let kern = TsarKernel::new(IsaConfig::C2, Dataflow::Op);
+    let big = GemmShape::new(128, 8192, 45568);
+    let (mean_s, min_s, runs) = time_it(
+        || {
+            let p = kern.profile(big, &plat, 16);
+            std::hint::black_box(simulate(&p, &plat, 16));
+        },
+        100,
+        0.5,
+    );
+    println!(
+        "[hot] simulate(100B-layer GEMM)            mean {:>8.3} us  min {:>8.3} us  ({} runs)",
+        mean_s * 1e6,
+        min_s * 1e6,
+        runs
+    );
+
+    // ---- adaptive planning cost (model load path) --------------------------
+    let spec = tsar::model::zoo::by_name("BitNet-100B").unwrap();
+    let (mean_s, min_s, runs) = time_it(
+        || {
+            std::hint::black_box(tsar::coordinator::select_plan(spec, &plat, 1, 16));
+        },
+        20,
+        0.5,
+    );
+    println!(
+        "[hot] select_plan(BitNet-100B decode)      mean {:>8.3} ms  min {:>8.3} ms  ({} runs)",
+        mean_s * 1e3,
+        min_s * 1e3,
+        runs
+    );
+
+    // ---- trace-driven cache simulator -------------------------------------
+    let mut h = tsar::sim::cache::Hierarchy::new(plat.l1d, plat.l2, plat.l3);
+    let (mean_s, min_s, runs) = time_it(
+        || {
+            for pass in 0..4u64 {
+                h.stream(pass * 1024, 2 * 1024 * 1024, tsar::sim::cache::Access::Read);
+            }
+            std::hint::black_box(h.l1.hits);
+        },
+        5,
+        0.5,
+    );
+    let accesses = 4.0 * (2.0 * 1024.0 * 1024.0 / 64.0);
+    println!(
+        "[hot] cache sim (8 MiB streamed)           mean {:>8.3} ms  min {:>8.3} ms  {:>6.1} M acc/s  ({} runs)",
+        mean_s * 1e3,
+        min_s * 1e3,
+        accesses / min_s / 1e6,
+        runs
+    );
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Table II (SIMD slice area/power overheads) and the
+//! §IV-C LLC hit-rate shifts.
+
+fn main() {
+    tsar::bench::table2();
+    println!();
+    tsar::bench::llc_report();
+    println!();
+    println!(
+        "[table2] headline: area {:+.2}% (paper +1.4%), power {:+.2}% (paper +3.2%)",
+        tsar::hw::area_overhead_frac() * 100.0,
+        tsar::hw::power_overhead_frac() * 100.0
+    );
+}

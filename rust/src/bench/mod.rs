@@ -1,0 +1,501 @@
+//! Report harnesses: regenerate every table and figure of the paper's
+//! evaluation section (DESIGN.md §5 experiment index).
+//!
+//! Each `fig*` / `table*` function prints the same rows/series the paper
+//! reports and returns the numbers for tests/benches to assert on.
+//! Absolute values come from our simulator substrate, so the claim being
+//! reproduced is the *shape*: who wins, by roughly what factor, where
+//! crossovers fall (see EXPERIMENTS.md for paper-vs-measured).
+
+pub mod ablations;
+
+use crate::config::platforms::{Platform, ALL_PLATFORMS};
+use crate::energy;
+use crate::hw;
+use crate::kernels::{select_tsar_kernel, TernaryKernel, Tl2Kernel};
+use crate::model::zoo::{fig9_models, ModelSpec, MODEL_ZOO};
+use crate::model::Workload;
+use crate::sim::{simulate, GemmShape, SimResult};
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::util::fmt_bytes;
+
+/// Simulated seconds for a full forward pass (T-SAR adaptive kernels or
+/// the TL-2 baseline).
+pub fn pass_seconds(spec: &'static ModelSpec, plat: &Platform, n: usize, tsar: bool) -> f64 {
+    let wl = Workload::new(spec, n);
+    let mut total = 0.0;
+    for op in &wl.ops {
+        let r = run_op(op.shape, plat, tsar);
+        total += r.seconds * op.count as f64;
+    }
+    total * 1.05 // attention / norms / sampling residue
+}
+
+fn run_op(shape: GemmShape, plat: &Platform, tsar: bool) -> SimResult {
+    if tsar {
+        select_tsar_kernel(shape, plat, plat.threads).1
+    } else {
+        let k = Tl2Kernel::new();
+        simulate(&k.profile(shape, plat, plat.threads), plat, plat.threads)
+    }
+}
+
+/// Request volume (bytes) of a full forward pass.
+pub fn pass_request_bytes(spec: &'static ModelSpec, plat: &Platform, n: usize, tsar: bool) -> f64 {
+    let wl = Workload::new(spec, n);
+    wl.ops
+        .iter()
+        .map(|op| run_op(op.shape, plat, tsar).request_bytes * op.count as f64)
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1(a): model size, ternary vs FP16
+// ---------------------------------------------------------------------------
+
+pub fn fig1a() -> Vec<(String, f64, f64)> {
+    println!("== Fig. 1(a): ternary 8x size reduction ==");
+    let mut t = Table::new(vec!["model", "FP16", "ternary (2b)", "reduction"]);
+    let mut rows = Vec::new();
+    for m in MODEL_ZOO.iter().filter(|m| m.name.starts_with("BitNet")) {
+        t.row(vec![
+            m.name.to_string(),
+            fmt_bytes(m.fp16_bytes()),
+            fmt_bytes(m.ternary_bytes()),
+            format!("{:.1}x", m.fp16_bytes() / m.ternary_bytes()),
+        ]);
+        rows.push((m.name.to_string(), m.fp16_bytes(), m.ternary_bytes()));
+    }
+    t.print();
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1(c) / Fig. 2(c): TLUT share of memory requests (baseline decode)
+// ---------------------------------------------------------------------------
+
+pub fn fig1c() -> Vec<(String, f64)> {
+    println!("== Fig. 1(c): TLUT share of baseline memory requests (decode) ==");
+    let plat = Platform::workstation();
+    let mut t = Table::new(vec!["model", "TLUT MB", "total MB", "TLUT share"]);
+    let mut out = Vec::new();
+    for spec in MODEL_ZOO.iter().filter(|m| m.name.starts_with("BitNet")) {
+        let wl = Workload::decode(spec);
+        let kernel = Tl2Kernel::new();
+        let mut lut = 0.0;
+        let mut total = 0.0;
+        for op in &wl.ops {
+            let p = kernel.profile(op.shape, &plat, plat.threads);
+            lut += p.request_bytes_matching("tlut") * op.count as f64;
+            total += p.request_bytes() * op.count as f64;
+        }
+        let share = lut / total;
+        t.row(vec![
+            spec.name.to_string(),
+            format!("{:.1}", lut / 1e6),
+            format!("{:.1}", total / 1e6),
+            format!("{:.1}%", share * 100.0),
+        ]);
+        out.push((spec.name.to_string(), share));
+    }
+    t.print();
+    out
+}
+
+/// Fig. 2(c): footprint-vs-accesses contrast for BitNet-2B-4T.
+pub fn fig2c() -> (f64, f64) {
+    println!("== Fig. 2(c): BitNet-2B-4T TLUT footprint vs access share ==");
+    let plat = Platform::workstation();
+    let spec = crate::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let wl = Workload::decode(spec);
+    let kernel = Tl2Kernel::new();
+    let (mut lut_req, mut total_req, mut lut_fp) = (0.0, 0.0, 0.0f64);
+    for op in &wl.ops {
+        let p = kernel.profile(op.shape, &plat, plat.threads);
+        lut_req += p.request_bytes_matching("tlut") * op.count as f64;
+        total_req += p.request_bytes() * op.count as f64;
+        // The table array is a transient buffer reused across layers:
+        // resident footprint = the largest layer's tables, not the sum.
+        lut_fp = lut_fp.max(p.stream("tlut-read").map(|s| s.footprint).unwrap_or(0.0));
+    }
+    let ram = spec.ternary_bytes();
+    let fp_share = lut_fp / ram;
+    let req_share = lut_req / total_req;
+    println!(
+        "TLUT footprint {} = {:.3}% of ternary weight RAM {}",
+        fmt_bytes(lut_fp),
+        fp_share * 100.0,
+        fmt_bytes(ram)
+    );
+    println!("TLUT share of memory requests: {:.1}%", req_share * 100.0);
+    (fp_share, req_share)
+}
+
+/// Fig. 2(d): baseline GEMV execution-time breakdown (memory vs compute).
+pub fn fig2d() -> f64 {
+    println!("== Fig. 2(d): TL-2 BitLinear GEMV time breakdown ==");
+    let plat = Platform::workstation();
+    let spec = crate::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let wl = Workload::decode(spec);
+    let kernel = Tl2Kernel::new();
+    let mut mem_weighted = 0.0;
+    let mut total = 0.0;
+    for op in &wl.ops {
+        let r = simulate(&kernel.profile(op.shape, &plat, plat.threads), &plat, plat.threads);
+        mem_weighted += r.mem_bound_frac * r.seconds * op.count as f64;
+        total += r.seconds * op.count as f64;
+    }
+    let frac = mem_weighted / total;
+    println!("memory R/W share of execution: {:.1}%", frac * 100.0);
+    frac
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8: end-to-end prefill latency + decode throughput
+// ---------------------------------------------------------------------------
+
+pub struct Fig8Row {
+    pub model: String,
+    pub platform: &'static str,
+    pub prefill_tsar_s: f64,
+    pub prefill_tl2_s: f64,
+    pub decode_tsar_tps: f64,
+    pub decode_tl2_tps: f64,
+}
+
+pub fn fig8() -> Vec<Fig8Row> {
+    println!("== Fig. 8: end-to-end performance across platforms ==");
+    let mut rows = Vec::new();
+    for kind in ALL_PLATFORMS {
+        let plat = Platform::by_kind(kind);
+        let mut t = Table::new(vec![
+            "model",
+            "prefill TL-2 (s)",
+            "prefill T-SAR (s)",
+            "speedup",
+            "decode TL-2 (tok/s)",
+            "decode T-SAR (tok/s)",
+            "speedup",
+        ]);
+        let mut prefill_speedups = Vec::new();
+        let mut decode_speedups = Vec::new();
+        for spec in MODEL_ZOO.iter().filter(|m| m.name.starts_with("BitNet")) {
+            let pre_tsar = pass_seconds(spec, &plat, 128, true);
+            let pre_tl2 = pass_seconds(spec, &plat, 128, false);
+            let dec_tsar = 1.0 / pass_seconds(spec, &plat, 1, true);
+            let dec_tl2 = 1.0 / pass_seconds(spec, &plat, 1, false);
+            prefill_speedups.push(pre_tl2 / pre_tsar);
+            decode_speedups.push(dec_tsar / dec_tl2);
+            t.row(vec![
+                spec.name.to_string(),
+                format!("{:.3}", pre_tl2),
+                format!("{:.3}", pre_tsar),
+                format!("{:.1}x", pre_tl2 / pre_tsar),
+                format!("{:.2}", dec_tl2),
+                format!("{:.2}", dec_tsar),
+                format!("{:.1}x", dec_tsar / dec_tl2),
+            ]);
+            rows.push(Fig8Row {
+                model: spec.name.to_string(),
+                platform: plat.kind.name(),
+                prefill_tsar_s: pre_tsar,
+                prefill_tl2_s: pre_tl2,
+                decode_tsar_tps: dec_tsar,
+                decode_tl2_tps: dec_tl2,
+            });
+        }
+        println!("-- {} ({} threads) --", plat.kind.name(), plat.threads);
+        t.print();
+        println!(
+            "geomean prefill speedup {:.1}x | geomean decode speedup {:.1}x\n",
+            geomean(&prefill_speedups),
+            geomean(&decode_speedups)
+        );
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9: memory request volume, T-SAR vs TL-2
+// ---------------------------------------------------------------------------
+
+pub struct Fig9Row {
+    pub model: String,
+    pub phase: &'static str,
+    pub tsar_mb: f64,
+    pub tl2_mb: f64,
+}
+
+pub fn fig9() -> Vec<Fig9Row> {
+    println!("== Fig. 9: kernel memory request volume (MB) ==");
+    let plat = Platform::workstation();
+    let mut rows = Vec::new();
+    for (phase, n) in [("GEMM(N=128)", 128usize), ("GEMV(N=1)", 1)] {
+        let mut t = Table::new(vec!["model", "TL-2 MB", "T-SAR MB", "reduction"]);
+        for spec in fig9_models() {
+            let tsar = pass_request_bytes(spec, &plat, n, true) / 1e6;
+            let tl2 = pass_request_bytes(spec, &plat, n, false) / 1e6;
+            t.row(vec![
+                spec.name.to_string(),
+                format!("{:.0}", tl2),
+                format!("{:.0}", tsar),
+                format!("{:.1}x", tl2 / tsar),
+            ]);
+            rows.push(Fig9Row {
+                model: spec.name.to_string(),
+                phase,
+                tsar_mb: tsar,
+                tl2_mb: tl2,
+            });
+        }
+        println!("-- {phase} --");
+        t.print();
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10: multi-thread scaling on BitNet-2B-4T shapes
+// ---------------------------------------------------------------------------
+
+pub struct Fig10Point {
+    pub platform: &'static str,
+    pub shape: GemmShape,
+    pub threads: usize,
+    pub tsar_s: f64,
+    pub tl2_s: f64,
+}
+
+pub fn fig10_shapes() -> [GemmShape; 4] {
+    [
+        GemmShape::new(128, 2560, 6912),
+        GemmShape::new(128, 6912, 2560),
+        GemmShape::new(1, 2560, 6912),
+        GemmShape::new(1, 6912, 2560),
+    ]
+}
+
+pub fn fig10() -> Vec<Fig10Point> {
+    println!("== Fig. 10: multi-thread scaling (BitNet-2B-4T shapes) ==");
+    let mut out = Vec::new();
+    for kind in ALL_PLATFORMS {
+        let plat = Platform::by_kind(kind);
+        for shape in fig10_shapes() {
+            let mut t = Table::new(vec![
+                "threads",
+                "TL-2 (ms)",
+                "T-SAR (ms)",
+                "speedup",
+                "T-SAR scaling",
+            ]);
+            let mut base_tsar = 0.0;
+            for tn in [1usize, 2, 4, 8, 16] {
+                if tn > plat.cores {
+                    continue;
+                }
+                let tsar = {
+                    let (k, _) = select_tsar_kernel(shape, &plat, tn);
+                    simulate(&k.profile(shape, &plat, tn), &plat, tn)
+                };
+                let tl2 = {
+                    let k = Tl2Kernel::new();
+                    simulate(&k.profile(shape, &plat, tn), &plat, tn)
+                };
+                if tn == 1 {
+                    base_tsar = tsar.seconds;
+                }
+                t.row(vec![
+                    tn.to_string(),
+                    format!("{:.3}", tl2.seconds * 1e3),
+                    format!("{:.3}", tsar.seconds * 1e3),
+                    format!("{:.1}x", tl2.seconds / tsar.seconds),
+                    format!("{:.2}x", base_tsar / tsar.seconds),
+                ]);
+                out.push(Fig10Point {
+                    platform: plat.kind.name(),
+                    shape,
+                    threads: tn,
+                    tsar_s: tsar.seconds,
+                    tl2_s: tl2.seconds,
+                });
+            }
+            println!(
+                "-- {} {}x{}x{} --",
+                plat.kind.name(),
+                shape.n,
+                shape.k,
+                shape.m
+            );
+            t.print();
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tables I–III
+// ---------------------------------------------------------------------------
+
+pub fn table1() {
+    println!("== Table I: gem5-substitute platform configurations ==");
+    let mut t = Table::new(vec![
+        "System", "CPU", "Cores", "Freq", "L1D", "L2", "L3", "DRAM BW",
+    ]);
+    for kind in ALL_PLATFORMS {
+        let p = Platform::by_kind(kind);
+        t.row(vec![
+            p.kind.name().to_string(),
+            p.cpu_model.to_string(),
+            p.cores.to_string(),
+            format!("{:.1} GHz", p.freq_ghz),
+            fmt_bytes(p.l1d.size_bytes as f64),
+            fmt_bytes(p.l2.size_bytes as f64),
+            fmt_bytes(p.l3.size_bytes as f64),
+            format!("{:.1} GB/s", p.dram_bw_gbps),
+        ]);
+    }
+    t.print();
+}
+
+pub fn table2() {
+    println!("== Table II: 256-bit SIMD slice synthesis (28nm model) ==");
+    let (rows, total) = hw::table2();
+    let mut t = Table::new(vec![
+        "Block", "Area base", "Area T-SAR", "dA", "Pwr base", "Pwr T-SAR", "dP",
+    ]);
+    let (ba, bp) = (rows[0].base_area, rows[0].base_power);
+    for r in rows.iter().chain(std::iter::once(&total)) {
+        t.row(vec![
+            r.name.to_string(),
+            format!("{:.0}", r.base_area),
+            format!("{:.0}", r.tsar_area),
+            format!("{:+.1}%", (r.tsar_area - r.base_area) / ba * 100.0),
+            format!("{:.0}", r.base_power),
+            format!("{:.0}", r.tsar_power),
+            format!("{:+.1}%", (r.tsar_power - r.base_power) / bp * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "headline: area {:+.1}%, power {:+.1}%",
+        hw::area_overhead_frac() * 100.0,
+        hw::power_overhead_frac() * 100.0
+    );
+}
+
+pub fn table3() {
+    println!("== Table III: cross-platform decode throughput & energy ==");
+    for name in ["Llama-b1.58-8B", "Falcon3-b1.58-10B"] {
+        let spec = crate::model::zoo::by_name(name).unwrap();
+        println!("-- {name} --");
+        let rows = energy::table3_rows(spec);
+        let mut t = Table::new(vec!["Platform", "node", "tokens/s", "J/token"]);
+        for r in &rows {
+            t.row(vec![
+                r.platform.clone(),
+                r.node.to_string(),
+                format!("{:.2}", r.tokens_per_s),
+                format!("{:.3}", r.joules_per_token),
+            ]);
+        }
+        t.print();
+        let jetson = rows.last().unwrap();
+        for r in &rows[..3] {
+            println!(
+                "{:<14} vs Jetson: {:.1}x tokens/s, {:.1}x energy efficiency",
+                r.platform.split(' ').next().unwrap(),
+                r.tokens_per_s / jetson.tokens_per_s,
+                jetson.joules_per_token / r.joules_per_token
+            );
+        }
+    }
+}
+
+/// §IV-C LLC hit-rate shifts.
+pub fn llc_report() {
+    println!("== §IV-C: LLC hit-rate shifts (TL-2 -> T-SAR) ==");
+    let mut t = Table::new(vec![
+        "platform", "shape", "TL-2 LLC hit", "T-SAR LLC hit",
+    ]);
+    for (kind, shape) in [
+        (crate::config::PlatformKind::Mobile, GemmShape::new(1, 8192, 45568)),
+        (crate::config::PlatformKind::Workstation, GemmShape::new(128, 2560, 6912)),
+    ] {
+        let plat = Platform::by_kind(kind);
+        let tl2 = simulate(
+            &Tl2Kernel::new().profile(shape, &plat, plat.threads),
+            &plat,
+            plat.threads,
+        );
+        let (k, _) = select_tsar_kernel(shape, &plat, plat.threads);
+        let tsar = simulate(&k.profile(shape, &plat, plat.threads), &plat, plat.threads);
+        t.row(vec![
+            plat.kind.name().to_string(),
+            format!("{}x{}x{}", shape.n, shape.k, shape.m),
+            format!("{:.0}%", tl2.llc_hit_rate * 100.0),
+            format!("{:.0}%", tsar.llc_hit_rate * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+/// Everything, in paper order.
+pub fn report_all() {
+    fig1a();
+    println!();
+    fig1c();
+    println!();
+    fig2c();
+    println!();
+    fig2d();
+    println!();
+    fig8();
+    println!();
+    fig9();
+    println!();
+    fig10();
+    println!();
+    table1();
+    println!();
+    table2();
+    println!();
+    table3();
+    println!();
+    llc_report();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_tsar_always_wins() {
+        let rows = fig9();
+        for r in &rows {
+            assert!(
+                r.tl2_mb > r.tsar_mb,
+                "{} {}: TL-2 {} <= T-SAR {}",
+                r.model,
+                r.phase,
+                r.tl2_mb,
+                r.tsar_mb
+            );
+        }
+    }
+
+    #[test]
+    fn fig1c_share_exceeds_75_percent() {
+        let shares = fig1c();
+        for (model, share) in &shares {
+            assert!(share > &0.70, "{model}: TLUT share {share:.2}");
+        }
+    }
+
+    #[test]
+    fn fig2d_memory_dominates_baseline() {
+        // Paper: 91.6%.  Our model is charitable to the baseline's
+        // compute overlap; require a clear memory-dominated majority.
+        assert!(fig2d() > 0.65);
+    }
+}

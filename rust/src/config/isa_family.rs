@@ -1,0 +1,146 @@
+//! SIMD ISA families beyond AVX2 (paper footnote 1 + §V): retargeting
+//! T-SAR to ARM NEON and RISC-V Vector "only requires c,s,k,m tuning due
+//! to the different SIMD lane width but extant dot product extensions".
+//!
+//! This module captures each family's register-file geometry and the
+//! retuned T-SAR instruction parameterizations, and provides the
+//! family-scaled register budgets the kernel dataflows need.  The paper
+//! names the NEON realization explicitly: the 128-bit datapath with
+//! SDOT/UDOT support realizes `TLUT_2×4 + TGEMV_8×8`.
+
+use super::IsaConfig;
+
+/// A SIMD register-file family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IsaFamily {
+    /// x86 AVX2: 16 × 256-bit YMM registers, vpmaddwd-class dot path.
+    Avx2,
+    /// ARMv8.2-A NEON: 32 × 128-bit V registers, SDOT/UDOT (4:1 ADTs).
+    Neon,
+    /// RISC-V Vector (Zve64x-class, VLEN=256, LMUL=1): 32 × 256-bit.
+    Rvv256,
+}
+
+impl IsaFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsaFamily::Avx2 => "AVX2",
+            IsaFamily::Neon => "NEON",
+            IsaFamily::Rvv256 => "RVV(VLEN=256)",
+        }
+    }
+
+    /// Architectural vector registers.
+    pub fn num_regs(&self) -> usize {
+        match self {
+            IsaFamily::Avx2 => 16,
+            IsaFamily::Neon => 32,
+            IsaFamily::Rvv256 => 32,
+        }
+    }
+
+    /// Register width in bits.
+    pub fn reg_bits(&self) -> usize {
+        match self {
+            IsaFamily::Avx2 => 256,
+            IsaFamily::Neon => 128,
+            IsaFamily::Rvv256 => 256,
+        }
+    }
+
+    /// 16-bit ALU lanes per register (the TLUT/TGEMV datapath width).
+    pub fn lanes16(&self) -> usize {
+        self.reg_bits() / 16
+    }
+
+    /// Total register-file bits available for LUT residency.
+    pub fn regfile_bits(&self) -> usize {
+        self.num_regs() * self.reg_bits()
+    }
+
+    /// The retuned T-SAR configurations for this family (paper fn. 1).
+    ///
+    /// The rule: `m` is sized so one TGEMV's output tile matches the
+    /// family's accumulation width (lanes16 outputs), and `s` keeps one
+    /// TLUT result within a small register group.
+    pub fn configs(&self) -> Vec<IsaConfig> {
+        match self {
+            IsaFamily::Avx2 => vec![IsaConfig::C2, IsaConfig::C4],
+            // Paper: "ARM NEON's 128-bit datapath with SDOT/UDOT ...
+            // realizes the TLUT_2×4 + TGEMV_8×8".
+            IsaFamily::Neon => vec![
+                IsaConfig::new(2, 4, 8, 8),
+                IsaConfig::new(4, 2, 8, 8),
+            ],
+            IsaFamily::Rvv256 => vec![
+                IsaConfig::new(2, 4, 8, 16),
+                IsaConfig::new(4, 4, 16, 16),
+            ],
+        }
+    }
+
+    /// YMM-equivalent registers a TLUT result occupies in this family.
+    pub fn tlut_result_regs(&self, cfg: &IsaConfig) -> usize {
+        (cfg.s * cfg.lut_entries_per_block() * 16).div_ceil(self.reg_bits())
+    }
+
+    /// Register budget for the AP dataflow's LUT groups: spare registers
+    /// after staging (2) and one accumulator pair.
+    pub fn lut_group_budget(&self, cfg: &IsaConfig) -> usize {
+        let spare = self.num_regs().saturating_sub(4);
+        (spare / self.tlut_result_regs(cfg)).max(1)
+    }
+
+    /// Relative per-core SIMD throughput scaling vs AVX2 for the timing
+    /// model: issue width × datapath width.
+    pub fn throughput_scale(&self) -> f64 {
+        match self {
+            IsaFamily::Avx2 => 1.0,
+            IsaFamily::Neon => 0.5,   // 128-bit × 2 pipes vs 256-bit × 2
+            IsaFamily::Rvv256 => 1.0, // 256-bit, dual-issue vector unit
+        }
+    }
+}
+
+pub const ALL_FAMILIES: [IsaFamily; 3] =
+    [IsaFamily::Avx2, IsaFamily::Neon, IsaFamily::Rvv256];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neon_realizes_paper_footnote_config() {
+        let neon = IsaFamily::Neon;
+        let cfgs = neon.configs();
+        // TLUT_2×4 + TGEMV_8×8, per footnote 1.
+        assert_eq!((cfgs[0].c, cfgs[0].s, cfgs[0].k, cfgs[0].m), (2, 4, 8, 8));
+        cfgs[0].validate().unwrap();
+        // One TLUT_2×4 result (512 b) spans four 128-bit V registers.
+        assert_eq!(neon.tlut_result_regs(&cfgs[0]), 4);
+    }
+
+    #[test]
+    fn rvv_configs_valid() {
+        for cfg in IsaFamily::Rvv256.configs() {
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn avx2_matches_base_definitions() {
+        let a = IsaFamily::Avx2;
+        assert_eq!(a.lanes16(), 16);
+        assert_eq!(a.tlut_result_regs(&IsaConfig::C2), 2);
+        assert_eq!(a.lut_group_budget(&IsaConfig::C2), 6);
+    }
+
+    #[test]
+    fn wider_regfiles_hold_more_luts() {
+        // NEON has 2× the registers; despite narrower lanes its total
+        // LUT residency (bits) matches AVX2's register file.
+        assert_eq!(IsaFamily::Neon.regfile_bits(), 32 * 128);
+        assert_eq!(IsaFamily::Avx2.regfile_bits(), 16 * 256);
+        assert!(IsaFamily::Rvv256.regfile_bits() > IsaFamily::Avx2.regfile_bits());
+    }
+}

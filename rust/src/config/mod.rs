@@ -1,0 +1,101 @@
+//! Evaluation configuration: the paper's Table I platforms and the T-SAR
+//! ISA parameterization (c, s, k, m).
+
+pub mod isa_family;
+pub mod platforms;
+
+pub use isa_family::{IsaFamily, ALL_FAMILIES};
+pub use platforms::{CacheLevel, Platform, PlatformKind, ALL_PLATFORMS};
+
+/// Parameterization of the T-SAR instruction pair (paper §III-B):
+/// `TLUT_c×s` builds `s` LUT pairs over blocks of `c` activations;
+/// `TGEMV_k×m` computes a (1,k)×(k,m) GEMV with k = c·s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IsaConfig {
+    /// Block size: activations per LUT (paper evaluates c ∈ {2, 4}).
+    pub c: usize,
+    /// Blocks per TLUT instruction.
+    pub s: usize,
+    /// Input channels per TGEMV (k = c·s).
+    pub k: usize,
+    /// Output channels per TGEMV.
+    pub m: usize,
+}
+
+impl IsaConfig {
+    pub const fn new(c: usize, s: usize, k: usize, m: usize) -> Self {
+        IsaConfig { c, s, k, m }
+    }
+
+    /// `TLUT_2×4 + TGEMV_8×16` — the paper's worked AVX2 example
+    /// (Fig. 6): 4 LUT pairs of 2^3 = 8 16-bit entries in two YMM regs.
+    pub const C2: IsaConfig = IsaConfig::new(2, 4, 8, 16);
+
+    /// `TLUT_4×4 + TGEMV_16×16` — the paper's second kernel config.
+    pub const C4: IsaConfig = IsaConfig::new(4, 4, 16, 16);
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.k == self.c * self.s, "k must equal c*s");
+        anyhow::ensure!(
+            self.c == 2 || self.c == 4,
+            "paper configs use c in {{2,4}}"
+        );
+        Ok(())
+    }
+
+    /// LUT entries per block pair: dense + sparse, each 2^c entries.
+    pub fn lut_entries_per_block(&self) -> usize {
+        2 * (1 << self.c)
+    }
+
+    /// Bits of SIMD register file one TLUT result occupies
+    /// (s blocks × 2^(c+1) entries × 16 bits).
+    pub fn tlut_result_bits(&self) -> usize {
+        self.s * self.lut_entries_per_block() * 16
+    }
+
+    /// YMM (256-bit) registers needed to hold one TLUT result.
+    pub fn tlut_result_regs(&self) -> usize {
+        self.tlut_result_bits().div_ceil(256)
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "TLUT_{}x{}+TGEMV_{}x{}",
+            self.c, self.s, self.k, self.m
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_valid() {
+        IsaConfig::C2.validate().unwrap();
+        IsaConfig::C4.validate().unwrap();
+    }
+
+    #[test]
+    fn c2_register_budget_matches_paper() {
+        // Paper §III-C: TLUT_2x4 produces 4 LUT pairs x 8 entries x 16 bit
+        // = 512 bits = two YMM registers.
+        assert_eq!(IsaConfig::C2.lut_entries_per_block(), 8);
+        assert_eq!(IsaConfig::C2.tlut_result_bits(), 512);
+        assert_eq!(IsaConfig::C2.tlut_result_regs(), 2);
+    }
+
+    #[test]
+    fn c4_register_budget() {
+        // c=4: 4 blocks x 32 entries x 16b = 2048 bits = 8 YMM registers.
+        assert_eq!(IsaConfig::C4.lut_entries_per_block(), 32);
+        assert_eq!(IsaConfig::C4.tlut_result_regs(), 8);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(IsaConfig::new(3, 4, 12, 16).validate().is_err());
+        assert!(IsaConfig::new(2, 4, 9, 16).validate().is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! KV-cache slot pool: fixed-capacity allocator of per-sequence cache
+//! slots.  Invariants (enforced here, property-tested in
+//! `rust/tests/proptests.rs`):
+//!
+//! * a slot is never handed to two live sequences,
+//! * free/allocate round-trips restore capacity,
+//! * double-free and foreign-slot free are rejected.
+
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SlotId(pub usize);
+
+#[derive(Debug)]
+pub struct KvSlotPool {
+    capacity: usize,
+    free: Vec<SlotId>,
+    live: BTreeSet<usize>,
+}
+
+impl KvSlotPool {
+    pub fn new(capacity: usize) -> KvSlotPool {
+        KvSlotPool {
+            capacity,
+            free: (0..capacity).rev().map(SlotId).collect(),
+            live: BTreeSet::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Allocate a slot, or None if the pool is exhausted.
+    pub fn allocate(&mut self) -> Option<SlotId> {
+        let slot = self.free.pop()?;
+        let fresh = self.live.insert(slot.0);
+        debug_assert!(fresh, "slot {slot:?} was already live");
+        Some(slot)
+    }
+
+    /// Release a slot back to the pool.
+    pub fn release(&mut self, slot: SlotId) -> anyhow::Result<()> {
+        anyhow::ensure!(slot.0 < self.capacity, "foreign slot {slot:?}");
+        anyhow::ensure!(self.live.remove(&slot.0), "double free of {slot:?}");
+        self.free.push(slot);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhausts_and_recovers() {
+        let mut p = KvSlotPool::new(2);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        assert_ne!(a, b);
+        assert!(p.allocate().is_none());
+        p.release(a).unwrap();
+        assert_eq!(p.available(), 1);
+        let c = p.allocate().unwrap();
+        assert_eq!(c, a); // LIFO reuse
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut p = KvSlotPool::new(1);
+        let a = p.allocate().unwrap();
+        p.release(a).unwrap();
+        assert!(p.release(a).is_err());
+    }
+
+    #[test]
+    fn foreign_slot_rejected() {
+        let mut p = KvSlotPool::new(1);
+        assert!(p.release(SlotId(7)).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Serving metrics: latency percentiles and throughput aggregation.
+
+use crate::util::stats::{geomean, max, mean, percentile};
+
+use super::request::RequestResult;
+
+/// Latency summary over a set of samples (seconds).
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from(samples: &[f64]) -> Option<LatencyStats> {
+        if samples.is_empty() {
+            return None;
+        }
+        Some(LatencyStats {
+            mean: mean(samples),
+            p50: percentile(samples, 50.0),
+            p95: percentile(samples, 95.0),
+            max: max(samples),
+        })
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+            self.mean * 1e3,
+            self.p50 * 1e3,
+            self.p95 * 1e3,
+            self.max * 1e3
+        )
+    }
+}
+
+/// Aggregate report over a completed serve run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub wall_s: f64,
+    pub prefill: LatencyStats,
+    pub e2e: LatencyStats,
+    pub queue: LatencyStats,
+    /// Aggregate decode throughput (generated tokens / wall time).
+    pub tokens_per_s: f64,
+    /// Geomean of per-request decode throughputs.
+    pub per_request_tps_geomean: f64,
+}
+
+impl ServeReport {
+    pub fn from(results: &[RequestResult], wall_s: f64) -> Option<ServeReport> {
+        if results.is_empty() {
+            return None;
+        }
+        let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        let prefill: Vec<f64> = results.iter().map(|r| r.prefill_s).collect();
+        let e2e: Vec<f64> = results.iter().map(|r| r.total_s).collect();
+        let queue: Vec<f64> = results.iter().map(|r| r.queue_s).collect();
+        let tps: Vec<f64> = results
+            .iter()
+            .map(|r| r.decode_tokens_per_s())
+            .filter(|&t| t > 0.0)
+            .collect();
+        Some(ServeReport {
+            requests: results.len(),
+            total_tokens,
+            wall_s,
+            prefill: LatencyStats::from(&prefill)?,
+            e2e: LatencyStats::from(&e2e)?,
+            queue: LatencyStats::from(&queue)?,
+            tokens_per_s: total_tokens as f64 / wall_s,
+            per_request_tps_geomean: if tps.is_empty() { 0.0 } else { geomean(&tps) },
+        })
+    }
+
+    pub fn print(&self) {
+        println!("requests        : {}", self.requests);
+        println!("generated tokens: {}", self.total_tokens);
+        println!("wall time       : {:.2} s", self.wall_s);
+        println!("throughput      : {:.1} tok/s aggregate", self.tokens_per_s);
+        println!(
+            "per-req decode  : {:.1} tok/s (geomean)",
+            self.per_request_tps_geomean
+        );
+        println!("queue   latency : {}", self.queue.fmt_ms());
+        println!("prefill latency : {}", self.prefill.fmt_ms());
+        println!("e2e     latency : {}", self.e2e.fmt_ms());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(prefill: f64, decode: f64, n: usize) -> RequestResult {
+        RequestResult {
+            id: 0,
+            tokens: vec![1; n],
+            queue_s: 0.01,
+            prefill_s: prefill,
+            decode_s: decode,
+            total_s: prefill + decode + 0.01,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let rs = vec![result(0.1, 1.0, 11), result(0.2, 2.0, 21)];
+        let rep = ServeReport::from(&rs, 4.0).unwrap();
+        assert_eq!(rep.requests, 2);
+        assert_eq!(rep.total_tokens, 32);
+        assert!((rep.tokens_per_s - 8.0).abs() < 1e-12);
+        assert!((rep.per_request_tps_geomean - 10.0).abs() < 1e-9);
+        assert!((rep.prefill.p50 - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(ServeReport::from(&[], 1.0).is_none());
+        assert!(LatencyStats::from(&[]).is_none());
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 serving coordinator.
+//!
+//! The paper's system contribution is the kernel/ISA layer, so the
+//! coordinator is the serving harness a deployment wraps around it
+//! (DESIGN.md §3): a request queue feeding a continuous batcher, a
+//! prefill/decode scheduler driving the PJRT runtime, a KV-slot pool,
+//! and the paper's §III-D *adaptive kernel selector* that picks the
+//! AP/OP dataflow per layer at compile (model-load) time.
+//!
+//! Threading: std::thread + mpsc channels (tokio is not in the offline
+//! crate cache).  One engine thread owns the PJRT executables; client
+//! threads submit requests and await results over channels — the same
+//! topology a tokio implementation would have, with the async reactor
+//! replaced by blocking queues.
+
+pub mod batcher;
+pub mod kvpool;
+pub mod metrics;
+pub mod request;
+pub mod selector;
+pub mod serve;
+
+pub use batcher::Batcher;
+pub use kvpool::KvSlotPool;
+pub use metrics::{LatencyStats, ServeReport};
+pub use request::{Request, RequestId, RequestResult};
+pub use selector::{select_plan, LayerPlan, ModelPlan};
+pub use serve::{Server, ServerConfig};

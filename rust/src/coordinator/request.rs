@@ -1,0 +1,71 @@
+//! Request/response types of the serving API.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// One inference request: a prompt and a generation budget.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens >= 1);
+        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+/// Completed request with per-phase latency accounting.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// Queue wait before prefill started.
+    pub queue_s: f64,
+    /// Prefill execution time.
+    pub prefill_s: f64,
+    /// Total decode time (all tokens after the first).
+    pub decode_s: f64,
+    /// End-to-end latency (arrival → completion).
+    pub total_s: f64,
+}
+
+impl RequestResult {
+    /// Steady-state decode throughput for this request.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.tokens.len() <= 1 || self.decode_s <= 0.0 {
+            return 0.0;
+        }
+        (self.tokens.len() - 1) as f64 / self.decode_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_throughput() {
+        let r = RequestResult {
+            id: 1,
+            tokens: vec![1, 2, 3, 4, 5],
+            queue_s: 0.0,
+            prefill_s: 0.1,
+            decode_s: 2.0,
+            total_s: 2.1,
+        };
+        assert!((r.decode_tokens_per_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 4);
+    }
+}

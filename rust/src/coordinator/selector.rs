@@ -1,0 +1,120 @@
+//! Adaptive kernel selection (paper §III-D): "At compile-time, T-SAR's
+//! inference framework empirically selects the fastest kernel for each
+//! layer."
+//!
+//! At model-load time every BitLinear site's GEMV/GEMM shape is swept
+//! through all six T-SAR kernels on the target platform model; the
+//! fastest (dataflow, ISA-config) pair is recorded in the [`ModelPlan`]
+//! the serving loop consults.
+
+use crate::config::platforms::Platform;
+use crate::kernels::{select_tsar_kernel, TernaryKernel, TsarKernel};
+use crate::model::zoo::ModelSpec;
+use crate::model::Workload;
+use crate::sim::GemmShape;
+
+/// The chosen kernel for one BitLinear site.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub site: &'static str,
+    pub shape: GemmShape,
+    pub kernel: TsarKernel,
+    /// Simulated execution seconds for one invocation.
+    pub seconds: f64,
+    /// Invocations per forward pass (layer count, 1 for the LM head).
+    pub count_hint: usize,
+}
+
+/// The per-layer kernel plan for one (model, platform, phase).
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub model: &'static str,
+    pub n: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ModelPlan {
+    /// Simulated seconds for one full forward pass.
+    pub fn pass_seconds(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.seconds * l.count_hint as f64)
+            .sum::<f64>()
+    }
+}
+
+impl LayerPlan {
+    pub fn describe(&self) -> String {
+        format!(
+            "{:<12} {:>4}x{:>5}x{:>5} -> {} ({:.3} ms)",
+            self.site,
+            self.shape.n,
+            self.shape.k,
+            self.shape.m,
+            self.kernel.name(),
+            self.seconds * 1e3
+        )
+    }
+}
+
+/// Select kernels for every BitLinear site of a forward pass.
+pub fn select_plan(
+    spec: &'static ModelSpec,
+    plat: &Platform,
+    n: usize,
+    threads: usize,
+) -> ModelPlan {
+    let wl = Workload::new(spec, n);
+    let layers = wl
+        .ops
+        .iter()
+        .map(|op| {
+            let (kernel, res) = select_tsar_kernel(op.shape, plat, threads);
+            LayerPlan {
+                site: op.site,
+                shape: op.shape,
+                kernel,
+                seconds: res.seconds,
+                count_hint: op.count,
+            }
+        })
+        .collect();
+    ModelPlan { model: spec.name, n, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Dataflow;
+    use crate::model::zoo::by_name;
+
+    #[test]
+    fn decode_plan_prefers_op() {
+        // §III-D: OP suits the high-M GEMV layers that dominate decode.
+        let spec = by_name("BitNet-2B-4T").unwrap();
+        let plat = Platform::workstation();
+        let decode = select_plan(spec, &plat, 1, plat.threads);
+        let op_share = decode
+            .layers
+            .iter()
+            .filter(|l| l.kernel.dataflow == Dataflow::Op)
+            .count() as f64
+            / decode.layers.len() as f64;
+        assert!(op_share >= 0.5, "decode OP share {op_share}");
+        // Prefill gets a valid plan with positive cost.
+        let prefill = select_plan(spec, &plat, 128, plat.threads);
+        assert!(prefill.pass_seconds() > 0.0);
+        assert!(prefill.pass_seconds() > decode.pass_seconds());
+    }
+
+    #[test]
+    fn plan_covers_all_sites() {
+        let spec = by_name("BitNet-125M").unwrap();
+        let plat = Platform::mobile();
+        let plan = select_plan(spec, &plat, 1, 4);
+        let sites: Vec<&str> = plan.layers.iter().map(|l| l.site).collect();
+        for want in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
+            assert!(sites.contains(&want), "{want} missing");
+        }
+    }
+}

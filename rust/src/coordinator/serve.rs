@@ -1,0 +1,192 @@
+//! The serving engine: one thread owns the PJRT runtime and drives
+//! continuous batching; clients submit requests over a channel.
+//!
+//! Scheduling policy per engine iteration:
+//!   1. admit pending requests into free batch + KV slots (prefill),
+//!   2. run one decode step for each active sequence (round-robin),
+//!   3. retire sequences that hit EOS-budget, freeing slots immediately.
+//!
+//! The AOT artifact is a batch-1 executable, so "continuous batching"
+//! interleaves sequences at step granularity — the same policy a
+//! multi-batch executable would follow, with the batch dimension
+//! serialized (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{KvCache, ModelRuntime};
+
+use super::batcher::Batcher;
+use super::kvpool::KvSlotPool;
+use super::metrics::ServeReport;
+use super::request::{Request, RequestId, RequestResult};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max sequences decoded concurrently (continuous-batch width).
+    pub max_batch: usize,
+    /// KV slots (>= max_batch; extra slots admit prefills early).
+    pub kv_slots: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 4, kv_slots: 4 }
+    }
+}
+
+/// An active sequence's decode state.
+struct Active {
+    req: Request,
+    tokens: Vec<i32>,
+    cache: KvCache,
+    pos: i32,
+    queue_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+}
+
+/// The serving engine. Owns the runtime; `run` drains a request stream.
+pub struct Server {
+    runtime: ModelRuntime,
+    cfg: ServerConfig,
+}
+
+impl Server {
+    pub fn new(runtime: ModelRuntime, cfg: ServerConfig) -> Server {
+        assert!(cfg.kv_slots >= cfg.max_batch);
+        Server { runtime, cfg }
+    }
+
+    /// Serve every request from `rx` until the channel closes and all
+    /// work drains; completed results go out through `tx`.
+    pub fn run(
+        &self,
+        rx: Receiver<Request>,
+        tx: Sender<RequestResult>,
+    ) -> Result<ServeReport> {
+        let start = Instant::now();
+        let mut batcher = Batcher::new(self.cfg.max_batch);
+        let mut pool = KvSlotPool::new(self.cfg.kv_slots);
+        let mut active: HashMap<RequestId, (Active, super::kvpool::SlotId)> =
+            HashMap::new();
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut open = true;
+
+        while open || batcher.has_work() {
+            // Pull newly arrived requests (non-blocking unless idle).
+            loop {
+                if !open {
+                    break;
+                }
+                let msg = if batcher.has_work() {
+                    match rx.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else {
+                    // Idle: block for the next request or shutdown.
+                    match rx.recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => {
+                            open = false;
+                            None
+                        }
+                    }
+                };
+                match msg {
+                    Some(r) => batcher.submit(r),
+                    None => break,
+                }
+            }
+
+            // 1. Admission + prefill.
+            while pool.available() > 0 {
+                let Some(req) = batcher.admit() else { break };
+                let slot = pool.allocate().expect("available() said so");
+                let queue_s = req.arrival.elapsed().as_secs_f64();
+                let p = self.runtime.manifest.config.prefill_len;
+                let mut padded = vec![0i32; p];
+                let plen = req.prompt.len().min(p);
+                padded[..plen].copy_from_slice(&req.prompt[..plen]);
+                let t0 = Instant::now();
+                let out = self.runtime.prefill(&padded, plen as i32)?;
+                let prefill_s = t0.elapsed().as_secs_f64();
+                active.insert(
+                    req.id,
+                    (
+                        Active {
+                            pos: plen as i32,
+                            tokens: vec![out.next_token],
+                            cache: out.cache,
+                            req,
+                            queue_s,
+                            prefill_s,
+                            decode_s: 0.0,
+                        },
+                        slot,
+                    ),
+                );
+            }
+
+            // 2. One decode step per active sequence this round.
+            let round: Vec<RequestId> = (0..batcher.active_len())
+                .filter_map(|_| batcher.next_decode())
+                .collect();
+            for id in round {
+                let Some((seq, _slot)) = active.get_mut(&id) else { continue };
+                let done = seq.tokens.len() >= seq.req.max_new_tokens
+                    || (seq.pos as usize) >= self.runtime.manifest.config.max_seq - 1;
+                if !done {
+                    let t0 = Instant::now();
+                    let out =
+                        self.runtime.decode(*seq.tokens.last().unwrap(), seq.pos, &seq.cache)?;
+                    seq.decode_s += t0.elapsed().as_secs_f64();
+                    seq.tokens.push(out.next_token);
+                    seq.cache = out.cache;
+                    seq.pos += 1;
+                }
+                let done = seq.tokens.len() >= seq.req.max_new_tokens
+                    || (seq.pos as usize) >= self.runtime.manifest.config.max_seq - 1;
+                if done {
+                    // 3. Retire.
+                    let (seq, slot) = active.remove(&id).unwrap();
+                    batcher.finish(id)?;
+                    pool.release(slot)?;
+                    let res = RequestResult {
+                        id,
+                        total_s: seq.req.arrival.elapsed().as_secs_f64(),
+                        tokens: seq.tokens,
+                        queue_s: seq.queue_s,
+                        prefill_s: seq.prefill_s,
+                        decode_s: seq.decode_s,
+                    };
+                    let _ = tx.send(res.clone());
+                    results.push(res);
+                }
+            }
+        }
+
+        ServeReport::from(&results, start.elapsed().as_secs_f64())
+            .ok_or_else(|| anyhow::anyhow!("no requests served"))
+    }
+}
+
+/// Convenience: serve a fixed list of requests synchronously (used by
+/// the examples and integration tests).
+pub fn serve_all(server: &Server, requests: Vec<Request>) -> Result<ServeReport> {
+    let (req_tx, req_rx) = channel();
+    let (res_tx, _res_rx) = channel();
+    for r in requests {
+        req_tx.send(r).unwrap();
+    }
+    drop(req_tx);
+    server.run(req_rx, res_tx)
+}

@@ -1,0 +1,182 @@
+//! Cross-platform energy model — Table III (paper §IV-F).
+//!
+//! CPU side: the paper estimates T-SAR package power by scaling measured
+//! TL-2 package power with the synthesis overhead
+//! (`P_TSAR = 1.032 · P_TL2`); we apply the identical rule to the
+//! TDP-class package powers in [`crate::config::platforms`].  Energy per
+//! token is `P / (tokens/s)` with throughput from the simulator.
+//!
+//! GPU side: no Jetson AGX Orin exists here, so it is modeled as a
+//! bandwidth-limited decoder (Ampere iGPU, 204.8 GB/s LPDDR5) running
+//! llama.cpp *without ternary kernels* (weights at 4-bit quantization —
+//! llama.cpp's densest viable format for these checkpoints), with an
+//! effective-bandwidth efficiency calibrated to the paper's measured
+//! 16.78 tok/s / 1.839 J/token anchor for Llama-b1.58-8B.  The anchor
+//! calibration and its implications are recorded in EXPERIMENTS.md.
+
+use crate::config::platforms::Platform;
+use crate::hw;
+use crate::kernels::{select_tsar_kernel, TernaryKernel, Tl2Kernel};
+use crate::model::zoo::ModelSpec;
+use crate::model::Workload;
+use crate::sim::simulate;
+
+/// Jetson AGX Orin module model.
+#[derive(Debug, Clone)]
+pub struct JetsonModel {
+    /// LPDDR5 peak bandwidth, GB/s.
+    pub bw_gbps: f64,
+    /// Effective fraction of peak bandwidth llama.cpp decode sustains
+    /// (calibrated on the paper's measured throughput).
+    pub bw_efficiency: f64,
+    /// Weight storage bits/weight (llama.cpp 4-bit quant).
+    pub bits_per_weight: f64,
+    /// Module power under decode load, W (measured boundary: module).
+    pub module_power_w: f64,
+}
+
+impl Default for JetsonModel {
+    fn default() -> Self {
+        JetsonModel {
+            bw_gbps: 204.8,
+            // Calibrated: 16.78 tok/s on Llama-8B @ 4 b/w needs
+            // 16.78 · 8e9 · 0.5 B = 67 GB/s effective = 0.33 of peak.
+            bw_efficiency: 0.33,
+            bits_per_weight: 4.0,
+            module_power_w: 30.9, // 16.78 tok/s × 1.839 J/token
+        }
+    }
+}
+
+impl JetsonModel {
+    /// Decode throughput: bandwidth-limited weight streaming.
+    pub fn tokens_per_second(&self, spec: &ModelSpec) -> f64 {
+        let bytes_per_token = spec.param_count() * self.bits_per_weight / 8.0;
+        self.bw_gbps * 1e9 * self.bw_efficiency / bytes_per_token
+    }
+
+    pub fn joules_per_token(&self, spec: &ModelSpec) -> f64 {
+        self.module_power_w / self.tokens_per_second(spec)
+    }
+}
+
+/// Simulated decode throughput of the whole model on a platform using
+/// the given kernel-selection strategy (tokens/s, steady-state decode).
+pub fn cpu_decode_tokens_per_second(
+    spec: &'static ModelSpec,
+    plat: &Platform,
+    use_tsar: bool,
+) -> f64 {
+    let wl = Workload::decode(spec);
+    let mut token_seconds = 0.0;
+    for op in &wl.ops {
+        let r = if use_tsar {
+            let (_, r) = select_tsar_kernel(op.shape, plat, plat.threads);
+            r
+        } else {
+            let k = Tl2Kernel::new();
+            simulate(&k.profile(op.shape, plat, plat.threads), plat, plat.threads)
+        };
+        token_seconds += r.seconds * op.count as f64;
+    }
+    // Attention + norms + sampling: small non-BitLinear residue, taken
+    // as 5% of BitLinear time for the big models (KV cache reads are
+    // covered by the wv/wo shapes' bandwidth in this granularity).
+    token_seconds *= 1.05;
+    1.0 / token_seconds
+}
+
+/// One Table III row.
+#[derive(Debug, Clone)]
+pub struct CrossPlatformRow {
+    pub platform: String,
+    pub node: &'static str,
+    pub tokens_per_s: f64,
+    pub joules_per_token: f64,
+}
+
+/// Compute Table III for one model across the three CPU platforms plus
+/// the Jetson comparator.
+pub fn table3_rows(spec: &'static ModelSpec) -> Vec<CrossPlatformRow> {
+    let mut rows = Vec::new();
+    for kind in crate::config::ALL_PLATFORMS {
+        let plat = Platform::by_kind(kind);
+        let tps = cpu_decode_tokens_per_second(spec, &plat, true);
+        // P_TSAR = 1.032 · P_TL2 (package boundary).
+        let p = plat.pkg_power_w * hw::tsar_power_scale();
+        rows.push(CrossPlatformRow {
+            platform: format!("{} CPU ({}, T-SAR)", plat.kind.name(), plat.cpu_model),
+            node: plat.node,
+            tokens_per_s: tps,
+            joules_per_token: p / tps,
+        });
+    }
+    let jetson = JetsonModel::default();
+    rows.push(CrossPlatformRow {
+        platform: "Jetson AGX Orin GPU (llama.cpp)".into(),
+        node: "8nm",
+        tokens_per_s: jetson.tokens_per_second(spec),
+        joules_per_token: jetson.joules_per_token(spec),
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::by_name;
+
+    #[test]
+    fn jetson_anchor_reproduces_paper() {
+        let j = JetsonModel::default();
+        let llama = by_name("Llama-b1.58-8B").unwrap();
+        let tps = j.tokens_per_second(llama);
+        // Paper measured 16.78 tok/s; the calibrated model must be close
+        // (shape-level agreement, ±15% for the param-count difference).
+        assert!((tps / 16.78 - 1.0).abs() < 0.15, "jetson tok/s {tps:.2}");
+        let jpt = j.joules_per_token(llama);
+        assert!((jpt / 1.839 - 1.0).abs() < 0.2, "jetson J/token {jpt:.3}");
+    }
+
+    #[test]
+    fn workstation_beats_jetson_in_throughput() {
+        // Table III's headline: Workstation/Laptop CPUs with T-SAR beat
+        // the Jetson GPU in decode throughput on Llama-8B.
+        let llama = by_name("Llama-b1.58-8B").unwrap();
+        let rows = table3_rows(llama);
+        let ws = &rows[0];
+        let jetson = rows.last().unwrap();
+        assert!(
+            ws.tokens_per_s > jetson.tokens_per_s,
+            "workstation {:.1} <= jetson {:.1}",
+            ws.tokens_per_s,
+            jetson.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn energy_efficiency_beats_jetson() {
+        // Paper: 2.5–4.9× lower J/token than Jetson on all platforms.
+        // Our simulator enforces the physical DRAM floor the paper's
+        // workstation numbers exceed (EXPERIMENTS.md §Table III), so we
+        // require: laptop & mobile clearly beat Jetson; workstation at
+        // worst parity (within 10%).
+        let llama = by_name("Llama-b1.58-8B").unwrap();
+        let rows = table3_rows(llama);
+        let jetson_jpt = rows.last().unwrap().joules_per_token;
+        assert!(rows[1].joules_per_token < jetson_jpt / 1.5, "laptop");
+        assert!(rows[2].joules_per_token < jetson_jpt / 2.0, "mobile");
+        assert!(rows[0].joules_per_token < jetson_jpt * 1.10, "workstation");
+    }
+
+    #[test]
+    fn mobile_throughput_below_jetson() {
+        // Paper: Mobile is 0.31–0.32× Jetson's throughput (but wins on
+        // energy).  Require the ordering, not the exact ratio.
+        let llama = by_name("Llama-b1.58-8B").unwrap();
+        let rows = table3_rows(llama);
+        let mobile = &rows[2];
+        let jetson = rows.last().unwrap();
+        assert!(mobile.tokens_per_s < jetson.tokens_per_s);
+    }
+}

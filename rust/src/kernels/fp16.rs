@@ -1,0 +1,112 @@
+//! FP16 dense baseline: the conventional llama.cpp-class kernel the LUT
+//! methods are measured against (paper §I cites 2.4–6.2× for TL-2 over
+//! FP16).  Weights are stored as 16-bit floats (2 B/w) and the compute is
+//! FMA over converted f32 lanes.
+//!
+//! The functional path dequantizes the ternary weights to f16-exact
+//! floats and computes in f32, then requantizes the accumulator to the
+//! same int32 the integer kernels produce (ternary values are exactly
+//! representable, so results stay bit-identical to the scalar reference).
+
+use crate::config::platforms::Platform;
+use crate::sim::{GemmShape, KernelProfile, Stream};
+
+use super::{quant_dequant_streams, quant_dequant_uops, TernaryKernel};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fp16Kernel;
+
+impl Fp16Kernel {
+    pub fn new() -> Fp16Kernel {
+        Fp16Kernel
+    }
+}
+
+impl TernaryKernel for Fp16Kernel {
+    fn name(&self) -> String {
+        "FP16".into()
+    }
+
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+        let GemmShape { n, k, m } = shape;
+        let mut out = vec![0i32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                let mut acc = 0f32;
+                for x in 0..k {
+                    // Ternary weights and int8 activations are exact in
+                    // f16/f32; K ≤ 2^24 keeps the f32 sum exact as well
+                    // for the magnitudes involved in tests.
+                    acc += acts[i * k + x] as f32 * w_t[j * k + x] as f32;
+                }
+                out[i * m + j] = acc as i32;
+            }
+        }
+        out
+    }
+
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile {
+        let (nf, kf, mf) = (shape.n as f64, shape.k as f64, shape.m as f64);
+        let mut streams = quant_dequant_streams(shape);
+        let mut simd_uops = quant_dequant_uops(shape);
+
+        // f16 weights: 2 B/w — 8× the ternary-packed footprint.
+        let wbytes = kf * mf * 2.0;
+        streams.push(Stream::read_once("weights-cold", wbytes));
+        if nf > 1.0 {
+            streams.push(Stream {
+                name: "weights-tile",
+                footprint: (kf * 2.0 * 64.0).min(wbytes),
+                bytes_accessed: (nf - 1.0) * wbytes,
+                passes: nf - 1.0,
+                write_frac: 0.0,
+                dependent: false,
+            });
+        }
+        streams.push(Stream::read_once("acts", nf * kf * 2.0));
+        streams.push(Stream::write_once("out", nf * mf * 4.0));
+
+        // FMA over 8 f32 lanes after f16→f32 conversion (2 µ-ops per 8
+        // MACs on AVX2 without native f16 arithmetic).
+        simd_uops += nf * kf * mf / 8.0 * 2.0;
+
+        let _ = (plat, threads);
+        KernelProfile {
+            kernel: self.name(),
+            shape,
+            streams,
+            simd_uops,
+            scalar_uops: simd_uops * 0.15,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::scalar_gemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_matches_scalar() {
+        let mut rng = Rng::new(51);
+        let shape = GemmShape::new(2, 128, 16);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+        assert_eq!(
+            Fp16Kernel::new().run(&acts, &w, shape),
+            scalar_gemm(&acts, &w, shape)
+        );
+    }
+
+    #[test]
+    fn weight_footprint_is_8x_ternary() {
+        let plat = Platform::workstation();
+        let shape = GemmShape::new(1, 1024, 1024);
+        let p = Fp16Kernel::new().profile(shape, &plat, 1);
+        let w = p.stream("weights-cold").unwrap().footprint;
+        // 2 B/w vs 0.25 B/w (2 bit) = 8x — Fig. 1(a)'s size reduction.
+        assert_eq!(w, 1024.0 * 1024.0 * 2.0);
+        assert!((w / (1024.0 * 1024.0 / 4.0) - 8.0).abs() < 1e-9);
+    }
+}

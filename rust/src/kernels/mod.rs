@@ -1,0 +1,186 @@
+//! Ternary GEMM/GEMV kernels: the six T-SAR variants (§III-D / §IV-A) and
+//! the baselines (BitNet.cpp TL-2, T-MAC, FP16).
+//!
+//! Every kernel exposes two faces:
+//!
+//! * **functional** — [`TernaryKernel::run`] computes the int32 GEMM
+//!   result bit-exactly (cross-checked against the scalar reference and,
+//!   transitively, the Python oracle).  The T-SAR kernels execute through
+//!   the modeled ISA ([`crate::tsar::exec`]) on the modeled register file.
+//! * **profile** — [`TernaryKernel::profile`] describes the execution to
+//!   the timing engine: per-structure memory streams + µ-op counts,
+//!   derived from the kernel's loop nest and register allocation.
+//!
+//! The baseline models' calibration constants live in [`params`] with the
+//! justification for each (DESIGN.md §2's substitution table).
+
+pub mod fp16;
+pub mod params;
+pub mod tl2;
+pub mod tmac;
+pub mod trace;
+pub mod tsar;
+
+use crate::config::platforms::Platform;
+use crate::sim::{GemmShape, KernelProfile};
+
+pub use tsar::{Dataflow, TsarKernel};
+pub use tl2::Tl2Kernel;
+pub use tmac::TmacKernel;
+pub use fp16::Fp16Kernel;
+
+/// A ternary matmul kernel: `(N×K) int8 · (M×K) ternary → (N×M) int32`.
+pub trait TernaryKernel {
+    fn name(&self) -> String;
+
+    /// Bit-exact functional execution (row-major operands).
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32>;
+
+    /// Memory/compute description for the timing engine.  `threads` is
+    /// needed because blocking choices adapt to per-thread cache shares.
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile;
+}
+
+/// Scalar reference: the ground truth every kernel must match.
+pub fn scalar_gemm(acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+    let GemmShape { n, k, m } = shape;
+    assert_eq!(acts.len(), n * k);
+    assert_eq!(w_t.len(), m * k);
+    let mut out = vec![0i32; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut acc = 0i32;
+            for x in 0..k {
+                acc += acts[i * k + x] as i32 * w_t[j * k + x] as i32;
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    out
+}
+
+/// Input-quantization + output-dequantization streams shared by every
+/// kernel profile (the paper includes both stages for fairness, §IV-A).
+pub(crate) fn quant_dequant_streams(shape: GemmShape) -> Vec<crate::sim::Stream> {
+    use crate::sim::Stream;
+    let (n, k, m) = (shape.n as f64, shape.k as f64, shape.m as f64);
+    vec![
+        // absmax quantization: read f32 activations, write int8.
+        Stream::read_once("quant-in-f32", n * k * 4.0),
+        Stream::write_once("quant-out-i8", n * k),
+        // dequantization: read int32 accumulators, write f32 outputs.
+        Stream::read_once("dequant-in-i32", n * m * 4.0),
+        Stream::write_once("dequant-out-f32", n * m * 4.0),
+    ]
+}
+
+/// SIMD µ-ops for the quant/dequant stages (vectorized over 8 f32 lanes).
+pub(crate) fn quant_dequant_uops(shape: GemmShape) -> f64 {
+    let (n, k, m) = (shape.n as f64, shape.k as f64, shape.m as f64);
+    // quant: ~3 ops per 8 lanes (max-reduce amortized, scale, pack);
+    // dequant: ~2 ops per 8 lanes (convert, scale).
+    n * k / 8.0 * 3.0 + n * m / 8.0 * 2.0
+}
+
+/// Every kernel under test, in the paper's comparison order.
+pub fn all_kernels() -> Vec<Box<dyn TernaryKernel>> {
+    let mut v: Vec<Box<dyn TernaryKernel>> = Vec::new();
+    for cfg in [crate::config::IsaConfig::C2, crate::config::IsaConfig::C4] {
+        for df in [Dataflow::ApMin, Dataflow::ApMax, Dataflow::Op] {
+            v.push(Box::new(TsarKernel::new(cfg, df)));
+        }
+    }
+    v.push(Box::new(Tl2Kernel::new()));
+    v.push(Box::new(TmacKernel::new()));
+    v.push(Box::new(Fp16Kernel::new()));
+    v
+}
+
+/// The best T-SAR kernel for a shape on a platform — the paper's
+/// compile-time adaptive selection (§III-D): simulate every variant and
+/// keep the fastest.
+pub fn select_tsar_kernel(
+    shape: GemmShape,
+    plat: &Platform,
+    threads: usize,
+) -> (TsarKernel, crate::sim::SimResult) {
+    let mut best: Option<(TsarKernel, crate::sim::SimResult)> = None;
+    for cfg in [crate::config::IsaConfig::C2, crate::config::IsaConfig::C4] {
+        for df in [Dataflow::ApMin, Dataflow::ApMax, Dataflow::Op] {
+            let k = TsarKernel::new(cfg, df);
+            let r = crate::sim::simulate(&k.profile(shape, plat, threads), plat, threads);
+            if best.as_ref().map(|(_, b)| r.seconds < b.seconds).unwrap_or(true) {
+                best = Some((k, r));
+            }
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_reference_known_values() {
+        // [1 2; 3 4] acts (n=2,k=2) x weights [[1,-1],[0,1]] (m=2)
+        let acts = [1i8, 2, 3, 4];
+        let w = [1i8, -1, 0, 1];
+        let out = scalar_gemm(&acts, &w, GemmShape::new(2, 2, 2));
+        assert_eq!(out, vec![1 - 2, 2, 3 - 4, 4]);
+    }
+
+    #[test]
+    fn every_kernel_matches_scalar() {
+        let mut rng = Rng::new(42);
+        for shape in [
+            GemmShape::new(1, 48, 32),
+            GemmShape::new(4, 96, 64),
+            GemmShape::new(2, 240, 33),
+        ] {
+            let acts = rng.int8_acts(shape.n * shape.k);
+            let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+            let want = scalar_gemm(&acts, &w, shape);
+            for kern in all_kernels() {
+                let got = kern.run(&acts, &w, shape);
+                assert_eq!(got, want, "kernel {} shape {shape:?}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_selection_prefers_op_for_gemv() {
+        // §III-D: OP minimizes write-back for high-M GEMV — the selector
+        // must reproduce that preference.
+        let plat = Platform::workstation();
+        let (k_gemv, _) = select_tsar_kernel(GemmShape::new(1, 2560, 6912), &plat, 1);
+        assert_eq!(k_gemv.dataflow, Dataflow::Op, "GEMV should pick OP");
+    }
+
+    #[test]
+    fn adaptive_selection_beats_every_fixed_variant() {
+        // The selected kernel must be at least as fast as every fixed
+        // (config, dataflow) choice — the point of §III-D's compile-time
+        // empirical selection.
+        let plat = Platform::workstation();
+        for shape in [GemmShape::new(1, 2560, 6912), GemmShape::new(128, 2560, 6912)] {
+            let (_, best) = select_tsar_kernel(shape, &plat, plat.threads);
+            for cfg in [crate::config::IsaConfig::C2, crate::config::IsaConfig::C4] {
+                for df in [Dataflow::ApMin, Dataflow::ApMax, Dataflow::Op] {
+                    let k = TsarKernel::new(cfg, df);
+                    let r = crate::sim::simulate(
+                        &k.profile(shape, &plat, plat.threads),
+                        &plat,
+                        plat.threads,
+                    );
+                    assert!(
+                        best.seconds <= r.seconds * 1.0001,
+                        "{} beat the selection on {shape:?}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Calibration constants of the baseline kernel models.
+//!
+//! We cannot run bitnet.cpp / T-MAC binaries inside this environment, so
+//! their memory behaviour is modeled structurally from their published
+//! kernel designs, with the residency constants below calibrated so the
+//! TL-2 figures land in the bands the paper *measured* (Fig. 9's
+//! 8.7–13.8× request-volume reduction, Fig. 2(c)'s ~87% TLUT share).
+//! Every constant has a microarchitectural justification; see DESIGN.md
+//! §2 (substitution table) and EXPERIMENTS.md for the sensitivity check.
+
+/// TL-2 groups 3 ternary weights into one 5-bit code (1.67 b/w).
+pub const TL2_GROUP: usize = 3;
+
+/// Bytes of one TL-2 lookup table: 3^3 = 27 16-bit partial sums padded to
+/// 32 entries (bitnet.cpp stores sign-expanded int16 entries).
+pub const TL2_TABLE_BYTES: f64 = 64.0;
+
+/// GEMV: outputs processed per table residency.  AVX2 has 16 YMM regs;
+/// the TL-2 GEMV microkernel keeps accumulators, weight codes and scales
+/// resident, leaving room to keep one int16 table (2 regs, hi/lo pshufb
+/// halves) live for ~8 outputs before it is evicted and re-fetched.
+pub const TL2_GEMV_M_RESIDENCY: f64 = 8.0;
+
+/// GEMM: with the N-loop providing register-level reuse of accumulators,
+/// the microkernel affords a wider M tile per table fetch (~32 outputs).
+pub const TL2_GEMM_M_RESIDENCY: f64 = 32.0;
+
+/// T-MAC groups 4 weights per 4-bit LUT index.
+pub const TMAC_GROUP: usize = 4;
+
+/// One T-MAC table: 2^4 = 16 int8 entries for the pshufb low half plus
+/// the mirrored high half = 32 B.
+pub const TMAC_TABLE_BYTES: f64 = 32.0;
+
+/// T-MAC keeps int8 tables in fewer registers: ~8 outputs per residency
+/// for GEMV, ~32 for GEMM (same reasoning as TL-2).
+pub const TMAC_GEMV_M_RESIDENCY: f64 = 8.0;
+pub const TMAC_GEMM_M_RESIDENCY: f64 = 32.0;
+
+/// Lookup µ-ops per 8 table lookups for the pshufb-based baselines
+/// (2 pshufb + unpack + add per 8 entries of int16 result).
+pub const BASELINE_UOPS_PER_8_LOOKUPS: f64 = 4.0;
+
+/// T-SAR GEMM: rows of LUTs held register-resident simultaneously in the
+/// AP-max dataflow is bounded by the register file (16 YMM): see
+/// `TsarKernel::lut_groups`.
+pub const TSAR_STAGING_REGS: usize = 2; // activation + weight staging
+pub const TSAR_ACC_REGS: usize = 2; // one 32-bit accumulator pair
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tl2_density() {
+        // 5 bits / 3 weights = 1.67 b/w, the paper's quoted density.
+        assert!((5.0 / TL2_GROUP as f64 - 1.667).abs() < 0.01);
+    }
+
+    #[test]
+    fn residency_ordering() {
+        // GEMM affords wider residency than GEMV for both baselines.
+        assert!(TL2_GEMM_M_RESIDENCY > TL2_GEMV_M_RESIDENCY);
+        assert!(TMAC_GEMM_M_RESIDENCY > TMAC_GEMV_M_RESIDENCY);
+    }
+}

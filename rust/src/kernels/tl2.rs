@@ -1,0 +1,218 @@
+//! BitNet.cpp **TL-2** baseline model (paper §IV-A; Wang et al. 2025).
+//!
+//! TL-2 packs 3 ternary weights into a 5-bit code (1.67 b/w) and
+//! precomputes, per 3-activation block, a table of all 27 partial sums
+//! stored **in memory** (Fig. 3(a)).  At run time every (output, block)
+//! pair fetches its table (register residency permitting) and looks up
+//! one 16-bit entry per weight code.  That table traffic is the memory
+//! bottleneck T-SAR removes — Fig. 2(c)/(d) and Fig. 9.
+//!
+//! The functional path executes exactly this algorithm (table build +
+//! indexed lookups over the packed codes); the profile charges the table
+//! build, the table re-fetches (with the calibrated register-residency
+//! constants in [`super::params`]) and TL-2's denser weight stream.
+
+use crate::config::platforms::Platform;
+use crate::quant::pack::Tl2Packed;
+use crate::sim::{GemmShape, KernelProfile, Stream};
+
+use super::params::{
+    BASELINE_UOPS_PER_8_LOOKUPS, TL2_GEMM_M_RESIDENCY, TL2_GEMV_M_RESIDENCY,
+    TL2_GROUP, TL2_TABLE_BYTES,
+};
+use super::{quant_dequant_streams, quant_dequant_uops, TernaryKernel};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tl2Kernel;
+
+impl Tl2Kernel {
+    pub fn new() -> Tl2Kernel {
+        Tl2Kernel
+    }
+
+    /// Build the 27-entry table for one 3-activation block: entry `code`
+    /// holds Σ_i digit_i(code)·a_i with digits in {-1,0,1} (msb-first,
+    /// matching `Tl2Packed`'s base-3 encoding).
+    fn build_table(block: &[i8]) -> [i32; 27] {
+        assert_eq!(block.len(), TL2_GROUP);
+        let mut t = [0i32; 27];
+        for code in 0..27usize {
+            let mut c = code;
+            let mut digits = [0i32; 3];
+            for i in (0..3).rev() {
+                digits[i] = (c % 3) as i32 - 1;
+                c /= 3;
+            }
+            t[code] = digits
+                .iter()
+                .zip(block)
+                .map(|(&d, &a)| d * a as i32)
+                .sum();
+        }
+        t
+    }
+}
+
+impl TernaryKernel for Tl2Kernel {
+    fn name(&self) -> String {
+        "TL-2".into()
+    }
+
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+        let GemmShape { n, k, m } = shape;
+        assert_eq!(acts.len(), n * k);
+        assert_eq!(w_t.len(), m * k);
+        let packed = Tl2Packed::pack(w_t, m, k);
+        let groups = packed.groups_per_row;
+        let mut out = vec![0i32; n * m];
+        for row in 0..n {
+            let a = &acts[row * k..(row + 1) * k];
+            // Phase 1: table precompute for every block (stored in the
+            // "memory-resident TLUT" — a plain Vec here).
+            let mut tables = Vec::with_capacity(groups);
+            for g in 0..groups {
+                let mut block = [0i8; TL2_GROUP];
+                for i in 0..TL2_GROUP {
+                    let col = g * TL2_GROUP + i;
+                    block[i] = if col < k { a[col] } else { 0 };
+                }
+                tables.push(Self::build_table(&block));
+            }
+            // Phase 2: indexed lookups per (output, block).
+            for j in 0..m {
+                let mut acc = 0i32;
+                for g in 0..groups {
+                    let code = packed.codes[j * groups + g] as usize;
+                    acc += tables[g][code];
+                }
+                out[row * m + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile {
+        let (nf, kf, mf) = (shape.n as f64, shape.k as f64, shape.m as f64);
+        let blocks = (kf / TL2_GROUP as f64).ceil();
+        let m_res = if shape.is_gemv() {
+            TL2_GEMV_M_RESIDENCY
+        } else {
+            TL2_GEMM_M_RESIDENCY
+        };
+
+        let mut streams = quant_dequant_streams(shape);
+        let mut simd_uops = quant_dequant_uops(shape);
+
+        // Weight codes: 1.67 b/w, cold pass + per-row re-reads (GEMM).
+        let wbytes = mf * blocks * 5.0 / 8.0;
+        streams.push(Stream::read_once("weights-cold", wbytes));
+        if nf > 1.0 {
+            streams.push(Stream {
+                name: "weights-tile",
+                footprint: (blocks * 5.0 / 8.0 * m_res * 64.0).min(wbytes),
+                bytes_accessed: (nf - 1.0) * wbytes,
+                passes: nf - 1.0,
+                write_frac: 0.0,
+                dependent: false,
+            });
+        }
+
+        // Activations feed the table build.
+        streams.push(Stream::read_once("acts", nf * kf));
+
+        // TLUT build: one table per (row, block) written to memory.
+        let table_fp = blocks * TL2_TABLE_BYTES; // per-row table array
+        streams.push(Stream {
+            name: "tlut-build",
+            footprint: table_fp,
+            bytes_accessed: nf * table_fp,
+            passes: nf,
+            write_frac: 1.0,
+            dependent: false,
+        });
+        simd_uops += nf * blocks * (TL2_TABLE_BYTES / 2.0) / 16.0 * 2.0;
+
+        // TLUT fetch: every (row, m-residency group, block) re-fetches
+        // the block's table — the dominant request stream (Fig. 2(c)).
+        let lut_read = nf * (mf / m_res).ceil() * blocks * TL2_TABLE_BYTES;
+        streams.push(Stream {
+            name: "tlut-read",
+            footprint: table_fp,
+            bytes_accessed: lut_read,
+            passes: nf * (mf / m_res).ceil(),
+            write_frac: 0.0,
+            // Table addresses depend on just-loaded weight codes: these
+            // gathers cannot be prefetched (Fig. 2(d)'s latency wall).
+            dependent: true,
+        });
+
+        // Lookup compute: pshufb-class µ-ops.
+        let lookups = nf * mf * blocks;
+        simd_uops += lookups / 8.0 * BASELINE_UOPS_PER_8_LOOKUPS;
+
+        streams.push(Stream::write_once("out", nf * mf * 4.0));
+
+        let _ = (plat, threads);
+        KernelProfile {
+            kernel: self.name(),
+            shape,
+            streams,
+            simd_uops,
+            scalar_uops: simd_uops * 0.25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::scalar_gemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_matches_scalar() {
+        let mut rng = Rng::new(31);
+        for shape in [GemmShape::new(1, 48, 20), GemmShape::new(3, 50, 17)] {
+            let acts = rng.int8_acts(shape.n * shape.k);
+            let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+            assert_eq!(
+                Tl2Kernel::new().run(&acts, &w, shape),
+                scalar_gemm(&acts, &w, shape),
+                "{shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_entries_cover_all_codes() {
+        let t = Tl2Kernel::build_table(&[1, -2, 3]);
+        // code of (w0,w1,w2)=(1,1,1) -> digits (0,0,0)+1 each -> base-3 26.
+        assert_eq!(t[26], 1 - 2 + 3);
+        // all-zero weights -> code 13 (digits 1,1,1 -> w=0).
+        assert_eq!(t[13], 0);
+        // (-1,-1,-1) -> code 0.
+        assert_eq!(t[0], -(1 - 2 + 3));
+    }
+
+    #[test]
+    fn profile_is_tlut_dominated_for_gemv() {
+        // Fig. 2(c): TLUT accesses dominate the baseline's request volume.
+        let plat = Platform::workstation();
+        let p = Tl2Kernel::new().profile(GemmShape::new(1, 2560, 6912), &plat, 1);
+        let lut = p.request_bytes_matching("tlut");
+        let share = lut / p.request_bytes();
+        assert!(share > 0.75, "TLUT share {share:.2} should exceed 75%");
+    }
+
+    #[test]
+    fn tlut_footprint_tiny_but_traffic_huge() {
+        // Fig. 2(c)'s contrast: table footprint is tiny relative to
+        // weights, but its requested bytes dwarf everything else.
+        let plat = Platform::workstation();
+        let p = Tl2Kernel::new().profile(GemmShape::new(1, 2560, 6912), &plat, 1);
+        let lut = p.stream("tlut-read").unwrap();
+        let w = p.stream("weights-cold").unwrap();
+        assert!(lut.footprint < 0.02 * w.footprint);
+        assert!(lut.bytes_accessed > 5.0 * w.bytes_accessed);
+    }
+}

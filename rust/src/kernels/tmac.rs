@@ -1,0 +1,212 @@
+//! **T-MAC** baseline model (paper §IV-A; Wei et al., EuroSys 2025).
+//!
+//! T-MAC decomposes low-bit weights into bit-planes and groups g = 4
+//! weights per 4-bit LUT index; per 4-activation block it precomputes a
+//! 16-entry table in memory and accumulates one lookup per plane.  For
+//! ternary weights two planes are needed (sign and zero), so relative to
+//! TL-2 its tables are smaller (16 × int8-pair ≈ 32 B) but it performs
+//! two lookup passes.  Storage density is 2 b/w.
+
+use crate::config::platforms::Platform;
+use crate::quant::pack::TmacPacked;
+use crate::sim::{GemmShape, KernelProfile, Stream};
+
+use super::params::{
+    BASELINE_UOPS_PER_8_LOOKUPS, TMAC_GEMM_M_RESIDENCY, TMAC_GEMV_M_RESIDENCY,
+    TMAC_GROUP, TMAC_TABLE_BYTES,
+};
+use super::{quant_dequant_streams, quant_dequant_uops, TernaryKernel};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TmacKernel;
+
+impl TmacKernel {
+    pub fn new() -> TmacKernel {
+        TmacKernel
+    }
+
+    /// 16-entry subset-sum table for one 4-activation block:
+    /// entry p = Σ_i bit_i(p)·a_i.
+    fn build_table(block: &[i8]) -> [i32; 16] {
+        assert_eq!(block.len(), TMAC_GROUP);
+        let mut t = [0i32; 16];
+        for p in 0..16usize {
+            t[p] = block
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| if p >> i & 1 == 1 { a as i32 } else { 0 })
+                .sum();
+        }
+        t
+    }
+}
+
+impl TernaryKernel for TmacKernel {
+    fn name(&self) -> String {
+        "T-MAC".into()
+    }
+
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+        let GemmShape { n, k, m } = shape;
+        assert_eq!(acts.len(), n * k);
+        assert_eq!(w_t.len(), m * k);
+        // Pad K to the group size.
+        let kp = k.div_ceil(TMAC_GROUP) * TMAC_GROUP;
+        let mut wp = vec![0i8; m * kp];
+        for j in 0..m {
+            wp[j * kp..j * kp + k].copy_from_slice(&w_t[j * k..(j + 1) * k]);
+        }
+        let packed = TmacPacked::pack(&wp, m, kp, TMAC_GROUP);
+        let groups = kp / TMAC_GROUP;
+
+        let mut out = vec![0i32; n * m];
+        for row in 0..n {
+            let mut a = acts[row * k..(row + 1) * k].to_vec();
+            a.resize(kp, 0);
+            let tables: Vec<[i32; 16]> = (0..groups)
+                .map(|g| Self::build_table(&a[g * TMAC_GROUP..(g + 1) * TMAC_GROUP]))
+                .collect();
+            for j in 0..m {
+                let mut acc = 0i32;
+                for g in 0..groups {
+                    let s = packed.sign_idx[j * groups + g] as usize;
+                    let z = packed.zero_idx[j * groups + g] as usize;
+                    // w = (+1 where sign bit) - (+1 where neither sign
+                    //     nor zero bit) ... expressed via two plane
+                    // lookups: Σ w·a = T[s] - T[!s & !z] per block.
+                    let neg = !s & !z & 0xF;
+                    acc += tables[g][s] - tables[g][neg];
+                }
+                out[row * m + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile {
+        let (nf, kf, mf) = (shape.n as f64, shape.k as f64, shape.m as f64);
+        let blocks = (kf / TMAC_GROUP as f64).ceil();
+        let m_res = if shape.is_gemv() {
+            TMAC_GEMV_M_RESIDENCY
+        } else {
+            TMAC_GEMM_M_RESIDENCY
+        };
+
+        let mut streams = quant_dequant_streams(shape);
+        let mut simd_uops = quant_dequant_uops(shape);
+
+        // Packed weights: 2 b/w (two planes).
+        let wbytes = mf * kf / 4.0;
+        streams.push(Stream::read_once("weights-cold", wbytes));
+        if nf > 1.0 {
+            streams.push(Stream {
+                name: "weights-tile",
+                footprint: (kf / 4.0 * m_res * 16.0).min(wbytes),
+                bytes_accessed: (nf - 1.0) * wbytes,
+                passes: nf - 1.0,
+                write_frac: 0.0,
+                dependent: false,
+            });
+        }
+
+        streams.push(Stream::read_once("acts", nf * kf));
+
+        // Table build (written to memory, per row).
+        let table_fp = blocks * TMAC_TABLE_BYTES;
+        streams.push(Stream {
+            name: "tlut-build",
+            footprint: table_fp,
+            bytes_accessed: nf * table_fp,
+            passes: nf,
+            write_frac: 1.0,
+            dependent: false,
+        });
+        simd_uops += nf * blocks * 2.0;
+
+        // Table fetches: two plane lookups per (row, residency group,
+        // block) — T-MAC's bit-serial cost for ternary.
+        let lut_read = 2.0 * nf * (mf / m_res).ceil() * blocks * TMAC_TABLE_BYTES;
+        streams.push(Stream {
+            name: "tlut-read",
+            footprint: table_fp,
+            bytes_accessed: lut_read,
+            passes: 2.0 * nf * (mf / m_res).ceil(),
+            write_frac: 0.0,
+            dependent: true, // code-indexed gathers, not prefetchable
+        });
+
+        let lookups = 2.0 * nf * mf * blocks;
+        simd_uops += lookups / 8.0 * BASELINE_UOPS_PER_8_LOOKUPS;
+
+        streams.push(Stream::write_once("out", nf * mf * 4.0));
+
+        let _ = (plat, threads);
+        KernelProfile {
+            kernel: self.name(),
+            shape,
+            streams,
+            simd_uops,
+            scalar_uops: simd_uops * 0.25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::scalar_gemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_matches_scalar() {
+        let mut rng = Rng::new(41);
+        for shape in [
+            GemmShape::new(1, 64, 24),
+            GemmShape::new(2, 50, 10), // K not divisible by 4: padding path
+        ] {
+            let acts = rng.int8_acts(shape.n * shape.k);
+            let w = rng.ternary_matrix(shape.m, shape.k, 0.4);
+            assert_eq!(
+                TmacKernel::new().run(&acts, &w, shape),
+                scalar_gemm(&acts, &w, shape),
+                "{shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_subset_sums() {
+        let t = TmacKernel::build_table(&[1, 2, 4, 8]);
+        assert_eq!(t[0], 0);
+        assert_eq!(t[0b1111], 15);
+        assert_eq!(t[0b0101], 5);
+    }
+
+    #[test]
+    fn two_plane_identity() {
+        // For w in {-1,0,1}: Σ w·a == T[sign] - T[~sign & ~zero].
+        let block = [3i8, -5, 7, 2];
+        let t = TmacKernel::build_table(&block);
+        let w = [1i8, -1, 0, 1];
+        let mut s = 0usize;
+        let mut z = 0usize;
+        for i in 0..4 {
+            if w[i] > 0 {
+                s |= 1 << i;
+            }
+            if w[i] == 0 {
+                z |= 1 << i;
+            }
+        }
+        let neg = !s & !z & 0xF;
+        let want: i32 = w.iter().zip(&block).map(|(&w, &a)| w as i32 * a as i32).sum();
+        assert_eq!(t[s] - t[neg], want);
+    }
+
+    #[test]
+    fn profile_has_lut_traffic() {
+        let plat = Platform::laptop();
+        let p = TmacKernel::new().profile(GemmShape::new(1, 2560, 6912), &plat, 1);
+        assert!(p.request_bytes_matching("tlut") > 0.0);
+    }
+}

@@ -1,0 +1,365 @@
+//! The six T-SAR software kernels (paper §III-D, §IV-A): dataflows
+//! {AP-min, AP-max, OP} × ISA configs {TLUT_2×4+TGEMV_8×16,
+//! TLUT_4×4+TGEMV_16×16}.
+//!
+//! Loop nests (shared by the functional path and the profile):
+//!
+//! **AP (activation-persistent, Fig. 7(a))** — outer loop over K-chunks
+//! of `G·k` inputs whose LUTs stay register-resident; per chunk, per row,
+//! the full M sweep runs before the LUTs are replaced.  TLUT invocations
+//! are minimal (`N·K/k`), weight slices get row-to-row reuse, but partial
+//! output sums spill to memory between chunks.  `G` (LUT register
+//! groups) distinguishes AP-min (G=1, minimal register use) from AP-max
+//! (all spare registers hold LUTs).
+//!
+//! **OP (output-persistent, Fig. 7(b))** — outer loop over accumulator
+//! tiles of `m_acc` outputs held in registers; the K loop streams past
+//! them, rebuilding LUTs per (tile, k-slice).  No partial-sum traffic at
+//! the cost of `M/m_acc ×` more TLUT work — the trade the paper's
+//! adaptive selector exploits per layer.
+
+use crate::config::IsaConfig;
+use crate::config::platforms::Platform;
+use crate::quant::encode_indices;
+use crate::sim::{GemmShape, KernelProfile, Stream};
+use crate::simd::RegFile;
+use crate::tsar::exec::{tgemv_slices, tlut};
+use crate::tsar::uops::{tgemv_uops, tlut_uops};
+
+use super::params::{TSAR_ACC_REGS, TSAR_STAGING_REGS};
+use super::{quant_dequant_streams, quant_dequant_uops, TernaryKernel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Activation-persistent, one LUT register group.
+    ApMin,
+    /// Activation-persistent, all spare registers hold LUT groups.
+    ApMax,
+    /// Output-persistent.
+    Op,
+}
+
+impl Dataflow {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::ApMin => "AP-min",
+            Dataflow::ApMax => "AP-max",
+            Dataflow::Op => "OP",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TsarKernel {
+    pub isa: IsaConfig,
+    pub dataflow: Dataflow,
+}
+
+impl TsarKernel {
+    pub fn new(isa: IsaConfig, dataflow: Dataflow) -> TsarKernel {
+        isa.validate().expect("invalid ISA config");
+        TsarKernel { isa, dataflow }
+    }
+
+    /// LUT register groups held resident (the AP `G` parameter).
+    pub fn lut_groups(&self) -> usize {
+        let spare = 16 - TSAR_STAGING_REGS - TSAR_ACC_REGS;
+        match self.dataflow {
+            Dataflow::ApMin => 1,
+            Dataflow::ApMax | Dataflow::Op => {
+                (spare / self.isa.tlut_result_regs()).max(1)
+            }
+        }
+    }
+
+    /// OP: output accumulators held register-resident (multiple of the
+    /// TGEMV m), from the registers not holding one LUT group + staging.
+    pub fn m_acc(&self) -> usize {
+        let spare = 16 - TSAR_STAGING_REGS - self.isa.tlut_result_regs();
+        // Each YMM holds 8 × 32-bit accumulators.
+        let outs = (spare * 8 / self.isa.m).max(1) * self.isa.m;
+        outs
+    }
+
+    // -- functional helpers --------------------------------------------------
+
+    /// Pre-encode the padded weight matrix once per `run` call (the
+    /// paper's compile-time encoding, Fig. 5): per (m-tile, k-slice) the
+    /// TGEMV weight operand slices straight out of this buffer — no
+    /// per-tile allocation or re-encoding on the hot path (§Perf L3).
+    fn encode_weights(&self, w_t: &[i8], k: usize, m: usize) -> (Vec<u8>, Vec<u8>, usize) {
+        let cfg = &self.isa;
+        let k_pad = k.div_ceil(cfg.k) * cfg.k;
+        let m_pad = m.div_ceil(cfg.m) * cfg.m;
+        let mut w = vec![0i8; m_pad * k_pad];
+        for j in 0..m {
+            w[j * k_pad..j * k_pad + k].copy_from_slice(&w_t[j * k..(j + 1) * k]);
+        }
+        let enc = encode_indices(&w, m_pad, k_pad, cfg.c);
+        (enc.wd, enc.ws, k_pad)
+    }
+
+    /// One row's GEMV through the modeled ISA over pre-encoded weights.
+    fn run_row(
+        &self,
+        acts: &[i8],
+        wd: &[u8],
+        ws: &[u8],
+        k_pad: usize,
+        m_pad: usize,
+        out: &mut [i32],
+    ) {
+        let cfg = &self.isa;
+        let m = out.len();
+        let mut a = acts.to_vec();
+        a.resize(k_pad, 0);
+        let nb_row = k_pad / cfg.c; // encoded blocks per weight row
+        let s = cfg.s;
+
+        let mut acc = vec![0i32; m_pad];
+        let mut rf = RegFile::new();
+        for ks in 0..k_pad / cfg.k {
+            // The LUT group register base: AP variants rotate over G
+            // groups; the functional result is identical, so base 0 is
+            // used (timing differences live in the profile).
+            tlut(&mut rf, cfg, 0, &a[ks * cfg.k..(ks + 1) * cfg.k]);
+            let blk0 = ks * s; // first encoded block of this k-slice
+            for mt in 0..m_pad / cfg.m {
+                // Weight operands stream straight from the pre-encoded
+                // buffer (row stride = blocks/row), zero copies.
+                let start = (mt * cfg.m) * nb_row + blk0;
+                let end = (mt * cfg.m + cfg.m - 1) * nb_row + blk0 + s;
+                tgemv_slices(
+                    &rf,
+                    cfg,
+                    0,
+                    &wd[start..end],
+                    &ws[start..end],
+                    nb_row,
+                    &mut acc[mt * cfg.m..(mt + 1) * cfg.m],
+                );
+            }
+        }
+        out.copy_from_slice(&acc[..m]);
+    }
+}
+
+impl TernaryKernel for TsarKernel {
+    fn name(&self) -> String {
+        format!("T-SAR/{}/{}", self.isa.name(), self.dataflow.name())
+    }
+
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+        let GemmShape { n, k, m } = shape;
+        assert_eq!(acts.len(), n * k);
+        assert_eq!(w_t.len(), m * k);
+        let (wd, ws, k_pad) = self.encode_weights(w_t, k, m);
+        let m_pad = m.div_ceil(self.isa.m) * self.isa.m;
+        let mut out = vec![0i32; n * m];
+        for i in 0..n {
+            self.run_row(
+                &acts[i * k..(i + 1) * k],
+                &wd,
+                &ws,
+                k_pad,
+                m_pad,
+                &mut out[i * m..(i + 1) * m],
+            );
+        }
+        out
+    }
+
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile {
+        let cfg = &self.isa;
+        let (nf, kf, mf) = (shape.n as f64, shape.k as f64, shape.m as f64);
+        let k_slices = (kf / cfg.k as f64).ceil();
+        let m_tiles = (mf / cfg.m as f64).ceil();
+
+        let mut streams = quant_dequant_streams(shape);
+        let mut simd_uops = quant_dequant_uops(shape);
+
+        // Encoded weights: 2 bits/weight (1+1 split), streamed from DRAM
+        // once (cold) and re-read per row group with tile-level reuse.
+        let wbytes = kf * mf / 4.0;
+        streams.push(Stream::read_once("weights-cold", wbytes));
+
+        // Quantized activations.
+        let abytes = nf * kf;
+
+        match self.dataflow {
+            Dataflow::ApMin | Dataflow::ApMax => {
+                let g = self.lut_groups() as f64;
+                // For GEMM, the G register-resident LUT groups hold G
+                // *rows'* LUTs for one k-slice: a weight operand loaded
+                // once feeds G TGEMVs — register-level weight reuse (the
+                // paper's "increasing weight cache hits").  For GEMV the
+                // G groups extend the K-chunk instead.
+                let (rows_resident, chunk_inputs) = if shape.is_gemv() {
+                    (1.0, g * cfg.k as f64)
+                } else {
+                    (g.min(nf), cfg.k as f64)
+                };
+                let chunks = (kf / chunk_inputs).ceil();
+                // TLUT once per (row, k-slice): minimal recomputation.
+                simd_uops += nf * k_slices * tlut_uops(cfg) as f64;
+                simd_uops += nf * k_slices * m_tiles * tgemv_uops(cfg) as f64;
+
+                // Weight requests: once per row *group* after the cold
+                // pass (register reuse divides the request volume by G).
+                let group_passes = (nf / rows_resident).ceil();
+                if group_passes > 1.0 {
+                    let slice = chunk_inputs * mf / 4.0;
+                    streams.push(Stream {
+                        name: "weights-tile",
+                        footprint: slice.min(wbytes),
+                        bytes_accessed: (group_passes - 1.0) * wbytes,
+                        passes: (group_passes - 1.0) * chunks.max(1.0),
+                        write_frac: 0.0,
+                        dependent: false,
+                    });
+                }
+                streams.push(Stream::read_once("acts", abytes));
+                // Partial sums spill between chunks (the AP cost): one
+                // read+write of the panel per chunk boundary.  Spills are
+                // 16-bit (the datapath's native accumulator width;
+                // widening happens once at the end).
+                if chunks > 1.0 {
+                    let panel = nf * mf * 2.0;
+                    streams.push(Stream {
+                        name: "partials",
+                        footprint: panel,
+                        bytes_accessed: 2.0 * (chunks - 1.0) * panel,
+                        passes: 2.0 * (chunks - 1.0),
+                        write_frac: 0.5,
+                        dependent: false,
+                    });
+                }
+            }
+            Dataflow::Op => {
+                let m_acc = self.m_acc() as f64;
+                let acc_tiles = (mf / m_acc).ceil();
+                // LUTs rebuilt per (row, acc tile, k-slice).
+                simd_uops += nf * acc_tiles * k_slices * tlut_uops(cfg) as f64;
+                simd_uops += nf * k_slices * m_tiles * tgemv_uops(cfg) as f64;
+
+                // m-outer / n-inner: the K×m_acc weight slice stays
+                // resident across the N rows.
+                if nf > 1.0 {
+                    let slice = kf * m_acc / 4.0;
+                    streams.push(Stream {
+                        name: "weights-tile",
+                        footprint: slice.min(wbytes),
+                        bytes_accessed: (nf - 1.0) * wbytes,
+                        passes: (nf - 1.0) * acc_tiles.max(1.0),
+                        write_frac: 0.0,
+                        dependent: false,
+                    });
+                }
+                // Activations swept once per accumulator tile.
+                streams.push(Stream {
+                    name: "acts",
+                    footprint: abytes,
+                    bytes_accessed: abytes * acc_tiles,
+                    passes: acc_tiles,
+                    write_frac: 0.0,
+                    dependent: false,
+                });
+                // No partial-sum traffic: that is OP's point.
+            }
+        }
+
+        // Outputs written once (int32 accumulator panel).
+        streams.push(Stream::write_once("out", nf * mf * 4.0));
+
+        let _ = (plat, threads); // blocking is register-file driven for T-SAR
+        KernelProfile {
+            kernel: self.name(),
+            shape,
+            streams,
+            simd_uops,
+            scalar_uops: simd_uops * 0.25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::scalar_gemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_matches_scalar_all_variants() {
+        let mut rng = Rng::new(21);
+        let shape = GemmShape::new(3, 72, 40);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+        let want = scalar_gemm(&acts, &w, shape);
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            for df in [Dataflow::ApMin, Dataflow::ApMax, Dataflow::Op] {
+                let kern = TsarKernel::new(isa, df);
+                assert_eq!(kern.run(&acts, &w, shape), want, "{}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn unpadded_shapes() {
+        // K and M not multiples of (k, m): padding must not change results.
+        let mut rng = Rng::new(22);
+        let shape = GemmShape::new(1, 37, 19);
+        let acts = rng.int8_acts(shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.5);
+        let want = scalar_gemm(&acts, &w, shape);
+        let kern = TsarKernel::new(IsaConfig::C2, Dataflow::Op);
+        assert_eq!(kern.run(&acts, &w, shape), want);
+    }
+
+    #[test]
+    fn register_budgets() {
+        let ap_max_c2 = TsarKernel::new(IsaConfig::C2, Dataflow::ApMax);
+        assert_eq!(ap_max_c2.lut_groups(), 6); // (16-4)/2
+        let ap_min = TsarKernel::new(IsaConfig::C2, Dataflow::ApMin);
+        assert_eq!(ap_min.lut_groups(), 1);
+        let op_c2 = TsarKernel::new(IsaConfig::C2, Dataflow::Op);
+        assert_eq!(op_c2.m_acc(), 96); // (16-2-2)*8 = 96 outputs
+        let op_c4 = TsarKernel::new(IsaConfig::C4, Dataflow::Op);
+        assert_eq!(op_c4.m_acc(), 48); // (16-2-8)*8 = 48
+    }
+
+    #[test]
+    fn no_lut_streams_in_profile() {
+        // The whole point: T-SAR's profile must contain NO memory stream
+        // for LUTs — they live in registers.
+        let plat = Platform::workstation();
+        let kern = TsarKernel::new(IsaConfig::C2, Dataflow::Op);
+        let p = kern.profile(GemmShape::new(1, 2560, 6912), &plat, 1);
+        assert!(p.streams.iter().all(|s| !s.name.contains("lut")));
+        assert_eq!(p.request_bytes_matching("lut"), 0.0);
+    }
+
+    #[test]
+    fn ap_min_has_more_partial_traffic_than_ap_max() {
+        let plat = Platform::workstation();
+        let shape = GemmShape::new(1, 4096, 4096);
+        let pmin = TsarKernel::new(IsaConfig::C2, Dataflow::ApMin)
+            .profile(shape, &plat, 1);
+        let pmax = TsarKernel::new(IsaConfig::C2, Dataflow::ApMax)
+            .profile(shape, &plat, 1);
+        let part = |p: &KernelProfile| {
+            p.stream("partials").map(|s| s.bytes_accessed).unwrap_or(0.0)
+        };
+        assert!(part(&pmin) > 4.0 * part(&pmax));
+    }
+
+    #[test]
+    fn op_trades_tlut_uops_for_no_partials() {
+        let plat = Platform::workstation();
+        let shape = GemmShape::new(1, 4096, 8192);
+        let ap = TsarKernel::new(IsaConfig::C2, Dataflow::ApMin).profile(shape, &plat, 1);
+        let op = TsarKernel::new(IsaConfig::C2, Dataflow::Op).profile(shape, &plat, 1);
+        assert!(op.stream("partials").is_none());
+        assert!(ap.stream("partials").is_some());
+        assert!(op.simd_uops > ap.simd_uops, "OP rebuilds LUTs");
+    }
+}

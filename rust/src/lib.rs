@@ -1,0 +1,50 @@
+//! # T-SAR — CPU-only ternary LLM inference via SIMD ALU reorganization
+//!
+//! Reproduction of *T-SAR: A Full-Stack Co-design for CPU-Only Ternary LLM
+//! Inference via In-Place SIMD ALU Reorganization* (Oh et al., 2025).
+//!
+//! The crate contains every subsystem the paper's evaluation depends on
+//! (see `DESIGN.md` for the inventory):
+//!
+//! * [`quant`] — ternary quantization, the ternary→binary decomposition
+//!   and the packing formats of T-SAR, BitNet.cpp TL-2 and T-MAC.
+//! * [`simd`] — a functional model of an AVX2-class SIMD register file
+//!   and its 16×16-bit ALU lanes / 4:1 adder trees.
+//! * [`tsar`] — the paper's ISA extension: `TLUT_c×s` / `TGEMV_k×m`
+//!   semantics, VEX3 encodings and µ-op sequencing (paper §III-B/C).
+//! * [`kernels`] — the six T-SAR software kernels (AP-min / AP-max / OP ×
+//!   two ISA configs) plus the TL-2, T-MAC and FP16 baselines, each with
+//!   a functional path (bit-exact vs the Python oracle) and a workload
+//!   descriptor path feeding the simulator.
+//! * [`sim`] — the gem5 substitute: set-associative cache hierarchy,
+//!   DRAM bandwidth/latency, per-core issue model and the multi-thread
+//!   contention engine (paper §IV-A Table I platforms).
+//! * [`model`] — BitNet-b1.58 / Llama-b1.58 / Falcon3-b1.58 architecture
+//!   shape tables (125M…100B) and per-phase workload extraction.
+//! * [`hw`] — the Table II area/power overhead model of the 256-bit SIMD
+//!   slice (TSMC 28 nm analytical gate model).
+//! * [`energy`] — CPU package power + Jetson AGX Orin comparison model
+//!   (Table III).
+//! * [`runtime`] — PJRT CPU client: loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them.
+//! * [`coordinator`] — the serving layer: request queue, continuous
+//!   batcher, prefill/decode scheduler, KV-slot manager and the paper's
+//!   adaptive AP/OP kernel selector (§III-D).
+//! * [`bench`] — harnesses that regenerate every table and figure of the
+//!   paper's evaluation section.
+//! * [`util`] — in-tree JSON, PRNG, statistics (offline environment: no
+//!   serde/rand/criterion available).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod hw;
+pub mod kernels;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod simd;
+pub mod tsar;
+pub mod util;

@@ -1,0 +1,210 @@
+//! `tsar-cli` — the leader entrypoint: report harnesses, the simulator,
+//! kernel planning and the PJRT serving loop, behind a hand-rolled CLI
+//! (clap is not in the offline crate cache).
+
+use std::sync::mpsc::channel;
+
+use anyhow::{Context, Result};
+
+use tsar::bench;
+use tsar::config::platforms::{Platform, PlatformKind};
+use tsar::coordinator::{select_plan, Request, Server, ServerConfig};
+use tsar::kernels::all_kernels;
+use tsar::model::zoo;
+use tsar::runtime::ModelRuntime;
+use tsar::sim::{simulate, GemmShape};
+use tsar::util::rng::Rng;
+
+const USAGE: &str = "\
+tsar-cli — T-SAR reproduction driver
+
+USAGE:
+  tsar-cli report <fig1a|fig1c|fig2c|fig2d|fig8|fig9|fig10|table1|table2|table3|llc|ablations|all>
+  tsar-cli simulate --shape NxKxM [--platform workstation|laptop|mobile] [--threads T]
+  tsar-cli plan --model <name> [--platform P] [--n N]
+  tsar-cli serve [--artifacts DIR] [--variant tsar|ref] [--requests R] [--max-new T] [--batch B]
+  tsar-cli models
+  tsar-cli help
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("report") => report(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("simulate") => simulate_cmd(&args[1..]),
+        Some("plan") => plan_cmd(&args[1..]),
+        Some("serve") => serve_cmd(&args[1..]),
+        Some("models") => {
+            for m in zoo::MODEL_ZOO {
+                println!(
+                    "{:<22} L={:<4} d={:<6} ffn={:<6} heads={}/{} vocab={} ({:.2}B params)",
+                    m.name,
+                    m.layers,
+                    m.d_model,
+                    m.ffn_dim,
+                    m.n_heads,
+                    m.n_kv_heads,
+                    m.vocab,
+                    m.param_count() / 1e9
+                );
+            }
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn report(which: &str) -> Result<()> {
+    match which {
+        "fig1a" => {
+            bench::fig1a();
+        }
+        "fig1c" => {
+            bench::fig1c();
+        }
+        "fig2c" => {
+            bench::fig2c();
+        }
+        "fig2d" => {
+            bench::fig2d();
+        }
+        "fig8" => {
+            bench::fig8();
+        }
+        "fig9" => {
+            bench::fig9();
+        }
+        "fig10" => {
+            bench::fig10();
+        }
+        "table1" => bench::table1(),
+        "table2" => bench::table2(),
+        "table3" => bench::table3(),
+        "llc" => bench::llc_report(),
+        "ablations" => bench::ablations::all(),
+        "all" => {
+            bench::report_all();
+            println!();
+            bench::ablations::all();
+        }
+        other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn parse_platform(args: &[String]) -> Platform {
+    match flag(args, "--platform").as_deref() {
+        Some("laptop") => Platform::by_kind(PlatformKind::Laptop),
+        Some("mobile") => Platform::by_kind(PlatformKind::Mobile),
+        _ => Platform::by_kind(PlatformKind::Workstation),
+    }
+}
+
+fn simulate_cmd(args: &[String]) -> Result<()> {
+    let shape_s = flag(args, "--shape").context("--shape NxKxM required")?;
+    let dims: Vec<usize> = shape_s
+        .split('x')
+        .map(|p| p.parse::<usize>().context("bad shape"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(dims.len() == 3, "--shape must be NxKxM");
+    let shape = GemmShape::new(dims[0], dims[1], dims[2]);
+    let plat = parse_platform(args);
+    let threads = flag(args, "--threads")
+        .map(|t| t.parse::<usize>().unwrap_or(plat.threads))
+        .unwrap_or(plat.threads);
+
+    println!(
+        "simulating {}x{}x{} on {} with {} threads",
+        shape.n, shape.k, shape.m, plat.kind.name(), threads
+    );
+    let mut t = tsar::util::table::Table::new(vec![
+        "kernel", "time (ms)", "req vol (MB)", "DRAM (MB)", "LLC hit", "mem-bound",
+    ]);
+    for kern in all_kernels() {
+        let r = simulate(&kern.profile(shape, &plat, threads), &plat, threads);
+        t.row(vec![
+            kern.name(),
+            format!("{:.3}", r.seconds * 1e3),
+            format!("{:.2}", r.request_bytes / 1e6),
+            format!("{:.2}", r.traffic.bytes[3] / 1e6),
+            format!("{:.0}%", r.llc_hit_rate * 100.0),
+            format!("{:.0}%", r.mem_bound_frac * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn plan_cmd(args: &[String]) -> Result<()> {
+    let model = flag(args, "--model").unwrap_or_else(|| "BitNet-2B-4T".into());
+    let spec = zoo::by_name(&model)
+        .with_context(|| format!("unknown model {model:?} (see `tsar-cli models`)"))?;
+    let plat = parse_platform(args);
+    let n = flag(args, "--n").map(|v| v.parse().unwrap_or(1)).unwrap_or(1);
+    println!(
+        "adaptive kernel plan: {} on {} (N={}, {} threads)",
+        spec.name, plat.kind.name(), n, plat.threads
+    );
+    let plan = select_plan(spec, &plat, n, plat.threads);
+    for l in &plan.layers {
+        println!("  {}", l.describe());
+    }
+    println!(
+        "forward pass: {:.3} ms  ({:.2} tok/s at N=1)",
+        plan.pass_seconds() * 1e3,
+        1.0 / plan.pass_seconds()
+    );
+    Ok(())
+}
+
+fn serve_cmd(args: &[String]) -> Result<()> {
+    let dir = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let variant = flag(args, "--variant").unwrap_or_else(|| "tsar".into());
+    let n_req: usize = flag(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let max_new: usize = flag(args, "--max-new").map(|v| v.parse().unwrap()).unwrap_or(16);
+    let batch: usize = flag(args, "--batch").map(|v| v.parse().unwrap()).unwrap_or(4);
+
+    println!("loading artifacts from {dir} (variant {variant}) ...");
+    let rt = ModelRuntime::load(&dir, &variant)?;
+    let cfg = rt.manifest.config.clone();
+    println!(
+        "model: {} (d={}, L={}, vocab={}), prefill window {}",
+        rt.manifest.config_name, cfg.d_model, cfg.n_layers, cfg.vocab, cfg.prefill_len
+    );
+
+    let server = Server::new(rt, ServerConfig { max_batch: batch, kv_slots: batch });
+    let mut rng = Rng::new(7);
+    let requests: Vec<Request> = (0..n_req as u64)
+        .map(|id| {
+            let plen = rng.range_i64(3, cfg.prefill_len as i64 - 1) as usize;
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+            Request::new(id, prompt, max_new)
+        })
+        .collect();
+
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in requests {
+        req_tx.send(r).unwrap();
+    }
+    drop(req_tx);
+    let report = server.run(req_rx, res_tx)?;
+    drop(res_rx);
+    report.print();
+    Ok(())
+}

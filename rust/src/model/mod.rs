@@ -1,0 +1,30 @@
+//! Ternary-LLM architecture descriptions and per-phase workload
+//! extraction (paper §IV-A: BitNet models 125M–100B, Llama-b1.58-8B,
+//! Falcon3-b1.58-10B).
+
+pub mod workload;
+pub mod zoo;
+
+pub use workload::{LayerOp, Workload};
+pub use zoo::{ModelSpec, MODEL_ZOO};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_ordered_by_size() {
+        let sizes: Vec<f64> = MODEL_ZOO.iter().map(|m| m.param_count()).collect();
+        // The BitNet family (everything before the two named models) is
+        // monotonically increasing.
+        let bitnet: Vec<f64> = MODEL_ZOO
+            .iter()
+            .filter(|m| m.name.starts_with("BitNet"))
+            .map(|m| m.param_count())
+            .collect();
+        for w in bitnet.windows(2) {
+            assert!(w[0] < w[1], "zoo must grow monotonically");
+        }
+        assert!(sizes.len() >= 8);
+    }
+}

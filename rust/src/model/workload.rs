@@ -1,0 +1,131 @@
+//! Per-phase workload extraction: the GEMM/GEMV shapes one token (decode)
+//! or one N-token prefill executes, per the BitLinear layout of Fig. 2(a).
+
+use crate::sim::GemmShape;
+
+use super::zoo::ModelSpec;
+
+/// One BitLinear operation instance within a forward pass.
+#[derive(Debug, Clone)]
+pub struct LayerOp {
+    /// Human-readable site, e.g. "wqkv", "wo", "ffn-gate-up", "ffn-down".
+    pub site: &'static str,
+    pub shape: GemmShape,
+    /// How many times the whole model runs this op per forward pass
+    /// (= layer count for per-layer ops, 1 for the LM head).
+    pub count: usize,
+}
+
+/// The BitLinear workload of one forward pass.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: &'static str,
+    /// Batch/sequence dimension (1 = decode, 128 = paper's prefill).
+    pub n: usize,
+    pub ops: Vec<LayerOp>,
+}
+
+impl Workload {
+    /// Build the workload for `spec` with batch-rows `n`.
+    ///
+    /// Projections are fused the way optimized ternary runtimes execute
+    /// them: Q/K/V as one (d → d + 2·kv) GEMM, FFN gate/up as one
+    /// (d → 2·ffn) GEMM (this fusion is what makes the paper's
+    /// 1×8192×45568 example shape appear).
+    pub fn new(spec: &'static ModelSpec, n: usize) -> Workload {
+        let d = spec.d_model;
+        let kv = spec.kv_dim();
+        let f = spec.ffn_dim;
+        let ops = vec![
+            LayerOp {
+                site: "wqkv",
+                shape: GemmShape::new(n, d, d + 2 * kv),
+                count: spec.layers,
+            },
+            LayerOp {
+                site: "wo",
+                shape: GemmShape::new(n, d, d),
+                count: spec.layers,
+            },
+            LayerOp {
+                site: "ffn-gate-up",
+                shape: GemmShape::new(n, d, 2 * f),
+                count: spec.layers,
+            },
+            LayerOp {
+                site: "ffn-down",
+                shape: GemmShape::new(n, f, d),
+                count: spec.layers,
+            },
+            LayerOp {
+                site: "lm-head",
+                shape: GemmShape::new(n, d, spec.vocab),
+                count: 1,
+            },
+        ];
+        Workload { model: spec.name, n, ops }
+    }
+
+    pub fn decode(spec: &'static ModelSpec) -> Workload {
+        Workload::new(spec, 1)
+    }
+
+    pub fn prefill(spec: &'static ModelSpec, n: usize) -> Workload {
+        Workload::new(spec, n)
+    }
+
+    /// Total dense-equivalent MACs of the pass.
+    pub fn total_macs(&self) -> f64 {
+        self.ops
+            .iter()
+            .map(|op| op.shape.macs() * op.count as f64)
+            .sum()
+    }
+
+    /// Total BitLinear weight bytes touched per pass (2 b/w packing).
+    pub fn weight_bytes(&self) -> f64 {
+        self.ops
+            .iter()
+            .map(|op| op.shape.k as f64 * op.shape.m as f64 / 4.0 * op.count as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::by_name;
+
+    #[test]
+    fn decode_workload_of_2b() {
+        let w = Workload::decode(by_name("BitNet-2B-4T").unwrap());
+        assert!(w.ops.iter().all(|op| op.shape.n == 1));
+        let gate_up = w.ops.iter().find(|o| o.site == "ffn-gate-up").unwrap();
+        assert_eq!(gate_up.shape, GemmShape::new(1, 2560, 2 * 6912));
+        assert_eq!(gate_up.count, 30);
+    }
+
+    #[test]
+    fn hundred_b_fused_ffn_shape() {
+        let w = Workload::decode(by_name("BitNet-100B").unwrap());
+        let gate_up = w.ops.iter().find(|o| o.site == "ffn-gate-up").unwrap();
+        assert_eq!(gate_up.shape, GemmShape::new(1, 8192, 45568));
+    }
+
+    #[test]
+    fn macs_track_param_count() {
+        // One decode pass ≈ params MACs (embedding excluded, GQA slack).
+        let spec = by_name("BitNet-7B").unwrap();
+        let w = Workload::decode(spec);
+        let ratio = w.total_macs() / spec.param_count();
+        assert!((0.8..1.1).contains(&ratio), "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn prefill_scales_n() {
+        let spec = by_name("BitNet-125M").unwrap();
+        let d = Workload::decode(spec);
+        let p = Workload::prefill(spec, 128);
+        assert!((p.total_macs() / d.total_macs() - 128.0).abs() < 1e-9);
+    }
+}

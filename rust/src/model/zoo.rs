@@ -1,0 +1,139 @@
+//! Architecture shape tables for the evaluated checkpoints.
+//!
+//! Weight *values* are synthesized (seeded ternary; see `util::rng`) —
+//! end-to-end latency and memory behaviour depend only on the layer
+//! shapes, which come from the public model cards.  BitNet-b1.58-2B-4T
+//! is the paper's representative model: its (2560 × 6912) projections are
+//! exactly the Fig. 10 microbenchmark shapes, and the 100B-class config
+//! reproduces the paper's 1×8192×45568 fused-FFN GEMV example (§IV-C).
+
+/// One ternary transformer architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Grouped-query KV heads.
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Total parameter count (BitLinear weights + embeddings).
+    pub fn param_count(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.ffn_dim as f64;
+        let kv = self.kv_dim() as f64;
+        let per_layer = d * d // wq
+            + 2.0 * d * kv // wk, wv
+            + d * d // wo
+            + 3.0 * d * f; // gate, up, down
+        self.layers as f64 * per_layer + 2.0 * d * self.vocab as f64
+    }
+
+    /// Ternary (2 b/w packed) model bytes — Fig. 1(a)'s size axis.
+    pub fn ternary_bytes(&self) -> f64 {
+        self.param_count() / 4.0
+    }
+
+    /// FP16 model bytes.
+    pub fn fp16_bytes(&self) -> f64 {
+        self.param_count() * 2.0
+    }
+}
+
+/// The BitNet scaling family (125M → 100B) followed by the two named
+/// cross-platform models (Table III).
+pub const MODEL_ZOO: &[ModelSpec] = &[
+    ModelSpec { name: "BitNet-125M", layers: 12, d_model: 768, n_heads: 12, n_kv_heads: 12, ffn_dim: 2048, vocab: 32000 },
+    ModelSpec { name: "BitNet-350M", layers: 24, d_model: 1024, n_heads: 16, n_kv_heads: 16, ffn_dim: 2816, vocab: 32000 },
+    ModelSpec { name: "BitNet-700M", layers: 24, d_model: 1536, n_heads: 24, n_kv_heads: 24, ffn_dim: 4096, vocab: 32000 },
+    ModelSpec { name: "BitNet-1.5B", layers: 24, d_model: 2048, n_heads: 32, n_kv_heads: 32, ffn_dim: 5504, vocab: 32000 },
+    ModelSpec { name: "BitNet-2B-4T", layers: 30, d_model: 2560, n_heads: 20, n_kv_heads: 5, ffn_dim: 6912, vocab: 128256 },
+    ModelSpec { name: "BitNet-3B", layers: 26, d_model: 3200, n_heads: 32, n_kv_heads: 32, ffn_dim: 8640, vocab: 32000 },
+    ModelSpec { name: "BitNet-7B", layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32, ffn_dim: 11008, vocab: 32000 },
+    ModelSpec { name: "BitNet-13B", layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40, ffn_dim: 13824, vocab: 32000 },
+    ModelSpec { name: "BitNet-30B", layers: 60, d_model: 6656, n_heads: 52, n_kv_heads: 52, ffn_dim: 17920, vocab: 32000 },
+    ModelSpec { name: "BitNet-70B", layers: 80, d_model: 8192, n_heads: 64, n_kv_heads: 8, ffn_dim: 28672, vocab: 32000 },
+    ModelSpec { name: "BitNet-100B", layers: 105, d_model: 8192, n_heads: 64, n_kv_heads: 8, ffn_dim: 22784, vocab: 128256 },
+    ModelSpec { name: "Llama-b1.58-8B", layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8, ffn_dim: 14336, vocab: 128256 },
+    ModelSpec { name: "Falcon3-b1.58-10B", layers: 40, d_model: 3072, n_heads: 12, n_kv_heads: 4, ffn_dim: 23040, vocab: 131072 },
+];
+
+pub fn by_name(name: &str) -> Option<&'static ModelSpec> {
+    MODEL_ZOO.iter().find(|m| m.name == name)
+}
+
+/// The three representative models of Fig. 9.
+pub fn fig9_models() -> [&'static ModelSpec; 3] {
+    [
+        by_name("BitNet-125M").unwrap(),
+        by_name("BitNet-2B-4T").unwrap(),
+        by_name("BitNet-100B").unwrap(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_models_exist() {
+        for n in ["BitNet-2B-4T", "Llama-b1.58-8B", "Falcon3-b1.58-10B"] {
+            assert!(by_name(n).is_some(), "{n} missing from zoo");
+        }
+    }
+
+    #[test]
+    fn param_counts_are_in_class() {
+        // Each model's parameter count must be within ~35% of its name.
+        let cases = [
+            ("BitNet-125M", 125e6),
+            ("BitNet-2B-4T", 2.4e9),
+            ("BitNet-7B", 7e9),
+            ("BitNet-70B", 70e9),
+            ("BitNet-100B", 100e9),
+            ("Llama-b1.58-8B", 8e9),
+            ("Falcon3-b1.58-10B", 10e9),
+        ];
+        for (name, want) in cases {
+            let got = by_name(name).unwrap().param_count();
+            let ratio = got / want;
+            assert!(
+                (0.65..1.35).contains(&ratio),
+                "{name}: {got:.3e} params vs class {want:.0e} (ratio {ratio:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_shapes_come_from_2b4t() {
+        let m = by_name("BitNet-2B-4T").unwrap();
+        assert_eq!(m.d_model, 2560);
+        assert_eq!(m.ffn_dim, 6912);
+    }
+
+    #[test]
+    fn mobile_gemv_example_comes_from_100b() {
+        // §IV-C quotes a 1×8192×45568 GEMV: 100B's fused gate+up.
+        let m = by_name("BitNet-100B").unwrap();
+        assert_eq!(m.d_model, 8192);
+        assert_eq!(2 * m.ffn_dim, 45568);
+    }
+
+    #[test]
+    fn size_reduction_is_8x() {
+        let m = by_name("BitNet-2B-4T").unwrap();
+        assert!((m.fp16_bytes() / m.ternary_bytes() - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,164 @@
+//! Quantization & packing substrate (paper §II, §III-A).
+//!
+//! * absmean ternarization / absmax int8 activation quantization —
+//!   mirrors `python/compile/kernels/ref.py` exactly.
+//! * The T-SAR ternary→binary decomposition and dense/sparse index
+//!   encoding (1+1 bit per weight).
+//! * Baseline packings: BitNet.cpp **TL-2** (three ternary weights in
+//!   five bits ≈ 1.67 b/w) and **T-MAC** (4-bit grouped LUT indices).
+
+pub mod pack;
+
+pub use pack::{Tl2Packed, TmacPacked, TsarEncoded};
+
+/// Absmean ternarization: `scale = mean(|w|)`,
+/// `w_t = clip(round(w/scale), -1, 1)` (BitNet b1.58).
+pub fn absmean_ternarize(w: &[f32]) -> (Vec<i8>, f32) {
+    assert!(!w.is_empty());
+    let scale = (w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64)
+        .max(1e-6) as f32;
+    let t = w
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-1.0, 1.0) as i8)
+        .collect();
+    (t, scale)
+}
+
+/// Per-token absmax int8 quantization. Returns (q, s) with x ≈ q / s.
+pub fn absmax_quantize(x: &[f32]) -> (Vec<i8>, f32) {
+    assert!(!x.is_empty());
+    let absmax = x.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
+    let s = 127.0 / absmax;
+    let q = x
+        .iter()
+        .map(|&v| (v * s).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, s)
+}
+
+/// The ternary→binary decomposition (paper §III-A):
+/// `w_D[i] = w[i] if w[i] != 0 else +1`; `w_S[i] = (w[i] == 0) as int`.
+/// Invariant: `w = w_D - w_S` elementwise.
+pub fn decompose(w_t: &[i8]) -> (Vec<i8>, Vec<i8>) {
+    let w_d = w_t.iter().map(|&w| if w == 0 { 1 } else { w }).collect();
+    let w_s = w_t.iter().map(|&w| (w == 0) as i8).collect();
+    (w_d, w_s)
+}
+
+/// Pack a ternary (M × K) row-major matrix into per-block dense/sparse
+/// LUT indices for block size `c` (the compile-time weight encoding of
+/// Fig. 5). Bit `i` of `wd[m][b]` is set iff the densified weight at
+/// column `b*c+i` is +1; bit `i` of `ws` iff the original weight is 0.
+pub fn encode_indices(w_t: &[i8], m: usize, k: usize, c: usize) -> TsarEncoded {
+    assert_eq!(w_t.len(), m * k);
+    assert_eq!(k % c, 0, "K={k} must be divisible by c={c}");
+    assert!(c <= 8, "index must fit a byte");
+    let nb = k / c;
+    let mut wd = vec![0u8; m * nb];
+    let mut ws = vec![0u8; m * nb];
+    for row in 0..m {
+        for b in 0..nb {
+            let mut d = 0u8;
+            let mut s = 0u8;
+            for i in 0..c {
+                let w = w_t[row * k + b * c + i];
+                debug_assert!((-1..=1).contains(&w));
+                if w != -1 {
+                    d |= 1 << i; // +1 or densified zero
+                }
+                if w == 0 {
+                    s |= 1 << i;
+                }
+            }
+            wd[row * nb + b] = d;
+            ws[row * nb + b] = s;
+        }
+    }
+    TsarEncoded { m, k, c, wd, ws }
+}
+
+/// Dequantize helper for tests: reconstruct ternary weights from indices.
+pub fn decode_indices(enc: &TsarEncoded) -> Vec<i8> {
+    let nb = enc.k / enc.c;
+    let mut w = vec![0i8; enc.m * enc.k];
+    for row in 0..enc.m {
+        for b in 0..nb {
+            let d = enc.wd[row * nb + b];
+            let s = enc.ws[row * nb + b];
+            for i in 0..enc.c {
+                let dense = if d >> i & 1 == 1 { 1i8 } else { -1 };
+                let sparse = (s >> i & 1) as i8;
+                // w = w_D - w_S
+                w[row * enc.k + b * enc.c + i] = dense - sparse;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ternarize_matches_python_semantics() {
+        let w = [0.9f32, -0.8, 0.01, 0.0, 2.0, -2.0, 0.4, -0.4];
+        let (t, scale) = absmean_ternarize(&w);
+        let want_scale: f32 =
+            w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        assert!((scale - want_scale).abs() < 1e-6);
+        for (&orig, &tv) in w.iter().zip(&t) {
+            assert!((-1..=1).contains(&tv));
+            let expect = (orig / scale).round().clamp(-1.0, 1.0) as i8;
+            assert_eq!(tv, expect);
+        }
+    }
+
+    #[test]
+    fn absmax_clamps_and_scales() {
+        let (q, s) = absmax_quantize(&[1.0, -2.0, 0.5]);
+        assert_eq!(q[1], -127);
+        assert!((s - 63.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn decompose_identity() {
+        let mut rng = Rng::new(1);
+        let w = rng.ternary_matrix(10, 10, 0.33);
+        let (d, s) = decompose(&w);
+        for i in 0..w.len() {
+            assert_eq!(w[i], d[i] - s[i]);
+            assert!(d[i] == 1 || d[i] == -1);
+            assert!(s[i] == 0 || s[i] == 1);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(2);
+        for &(m, k, c) in &[(4, 8, 2), (3, 12, 4), (16, 64, 2), (7, 32, 4)] {
+            let w = rng.ternary_matrix(m, k, 0.3);
+            let enc = encode_indices(&w, m, k, c);
+            assert_eq!(decode_indices(&enc), w, "m={m} k={k} c={c}");
+        }
+    }
+
+    #[test]
+    fn encoded_index_ranges() {
+        let mut rng = Rng::new(3);
+        let w = rng.ternary_matrix(8, 16, 0.5);
+        let enc = encode_indices(&w, 8, 16, 2);
+        for (&d, &s) in enc.wd.iter().zip(&enc.ws) {
+            assert!(d < 4 && s < 4);
+            // sparse bit set implies dense bit set (zero densifies to +1)
+            assert_eq!(s & !d, 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn encode_rejects_bad_k() {
+        encode_indices(&[0i8; 6], 2, 3, 2);
+    }
+}

@@ -1,0 +1,300 @@
+//! Typed view of `artifacts/manifest.json` (produced by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One packed parameter tensor in weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl ParamMeta {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One dynamic (non-parameter) argument of an entrypoint.
+#[derive(Debug, Clone)]
+pub struct DynArg {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub hlo: String,
+    pub dynamic_args: Vec<DynArg>,
+    pub param_args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The model architecture the artifacts were built for.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+}
+
+/// Golden generation recorded by aot.py (ref path, greedy).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    pub padded_prompt: Vec<i32>,
+    pub tokens: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config_name: String,
+    pub config: ModelConfig,
+    pub seed: u64,
+    pub weights_bin: String,
+    pub params: Vec<ParamMeta>,
+    pub entrypoints: BTreeMap<String, EntryPoint>,
+    pub golden: Golden,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let cfg = j.req("config")?;
+        let usize_of = |node: &Json, key: &str| -> Result<usize> {
+            node.req(key)?
+                .as_usize()
+                .with_context(|| format!("{key} not a number"))
+        };
+        let config = ModelConfig {
+            vocab: usize_of(cfg, "vocab")?,
+            d_model: usize_of(cfg, "d_model")?,
+            n_layers: usize_of(cfg, "n_layers")?,
+            n_heads: usize_of(cfg, "n_heads")?,
+            ffn_dim: usize_of(cfg, "ffn_dim")?,
+            max_seq: usize_of(cfg, "max_seq")?,
+            prefill_len: usize_of(cfg, "prefill_len")?,
+        };
+
+        let mut params = Vec::new();
+        for p in j.req("params")?.as_arr().context("params not array")? {
+            params.push(ParamMeta {
+                name: p.req("name")?.as_str().context("name")?.to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(p.req("dtype")?.as_str().context("dtype")?)?,
+                offset: usize_of(p, "offset")?,
+                nbytes: usize_of(p, "nbytes")?,
+            });
+        }
+        let by_name = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), i))
+            .collect();
+
+        let mut entrypoints = BTreeMap::new();
+        for (name, ep) in j.req("entrypoints")?.as_obj().context("entrypoints")? {
+            let mut dynamic_args = Vec::new();
+            for a in ep.req("dynamic_args")?.as_arr().context("dynamic_args")? {
+                dynamic_args.push(DynArg {
+                    name: a.req("name")?.as_str().context("name")?.to_string(),
+                    shape: a
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: DType::parse(a.req("dtype")?.as_str().context("dtype")?)?,
+                });
+            }
+            let str_list = |key: &str| -> Result<Vec<String>> {
+                Ok(ep
+                    .req(key)?
+                    .as_arr()
+                    .with_context(|| format!("{key} not array"))?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect())
+            };
+            entrypoints.insert(
+                name.clone(),
+                EntryPoint {
+                    hlo: ep.req("hlo")?.as_str().context("hlo")?.to_string(),
+                    dynamic_args,
+                    param_args: str_list("param_args")?,
+                    outputs: str_list("outputs")?,
+                },
+            );
+        }
+
+        let g = j.req("golden")?;
+        let i32_list = |key: &str| -> Result<Vec<i32>> {
+            Ok(g.req(key)?
+                .as_arr()
+                .with_context(|| format!("{key} not array"))?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|v| v as i32))
+                .collect())
+        };
+        let golden = Golden {
+            prompt: i32_list("prompt")?,
+            prompt_len: usize_of(g, "prompt_len")?,
+            padded_prompt: i32_list("padded_prompt")?,
+            tokens: i32_list("tokens")?,
+        };
+
+        Ok(Manifest {
+            config_name: j
+                .req("config_name")?
+                .as_str()
+                .context("config_name")?
+                .to_string(),
+            config,
+            seed: j.req("seed")?.as_f64().context("seed")? as u64,
+            weights_bin: j
+                .req("weights_bin")?
+                .as_str()
+                .context("weights_bin")?
+                .to_string(),
+            params,
+            entrypoints,
+            golden,
+            by_name,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamMeta> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.params[i])
+            .with_context(|| format!("unknown param {name:?}"))
+    }
+
+    pub fn entrypoint(&self, name: &str) -> Result<&EntryPoint> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("unknown entrypoint {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config_name": "micro",
+      "config": {"vocab": 128, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                 "ffn_dim": 128, "max_seq": 48, "prefill_len": 8,
+                 "rope_theta": 10000.0, "c": 2, "norm_eps": 1e-5},
+      "seed": 0,
+      "weights_bin": "weights.bin",
+      "params": [
+        {"name": "embed", "shape": [128, 64], "dtype": "f32",
+         "offset": 0, "nbytes": 32768}
+      ],
+      "entrypoints": {
+        "decode_ref": {
+          "hlo": "decode_ref.hlo.txt",
+          "dynamic_args": [
+            {"name": "token", "shape": [], "dtype": "i32"},
+            {"name": "pos", "shape": [], "dtype": "i32"}
+          ],
+          "param_args": ["embed"],
+          "outputs": ["next_token", "k_cache", "v_cache"]
+        }
+      },
+      "golden": {"prompt": [1, 8], "prompt_len": 2,
+                 "padded_prompt": [1, 8, 0, 0, 0, 0, 0, 0],
+                 "tokens": [5, 9, 3]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.param("embed").unwrap().elem_count(), 128 * 64);
+        let ep = m.entrypoint("decode_ref").unwrap();
+        assert_eq!(ep.dynamic_args.len(), 2);
+        assert_eq!(ep.param_args, vec!["embed"]);
+        assert_eq!(m.golden.tokens, vec![5, 9, 3]);
+    }
+
+    #[test]
+    fn unknown_lookups_fail() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.param("nope").is_err());
+        assert!(m.entrypoint("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_param_elem_count() {
+        let p = ParamMeta {
+            name: "s".into(),
+            shape: vec![],
+            dtype: DType::F32,
+            offset: 0,
+            nbytes: 4,
+        };
+        assert_eq!(p.elem_count(), 1);
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.entrypoints.contains_key("prefill_tsar"));
+            assert!(!m.params.is_empty());
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Set-associative cache simulator with LRU replacement — the detailed
+//! half of the gem5 substitute (DESIGN.md §2).  Used directly on small /
+//! representative access traces and to cross-validate the analytic
+//! engine's working-set reasoning (`sim::engine`).
+
+use crate::config::platforms::CacheLevel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Hit,
+    Miss,
+}
+
+/// One cache level: set-associative, LRU, write-allocate, write-back.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    pub level: CacheLevel,
+    sets: usize,
+    line_shift: u32,
+    /// tags[set * assoc + way]; u64::MAX = invalid.
+    tags: Vec<u64>,
+    /// LRU stamps, larger = more recent.
+    stamps: Vec<u64>,
+    dirty: Vec<bool>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    pub fn new(level: CacheLevel) -> Cache {
+        let sets = level.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!(level.line_bytes.is_power_of_two());
+        Cache {
+            level,
+            sets,
+            line_shift: level.line_bytes.trailing_zeros(),
+            tags: vec![u64::MAX; sets * level.assoc],
+            stamps: vec![0; sets * level.assoc],
+            dirty: vec![false; sets * level.assoc],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr >> self.line_shift) as usize) & (self.sets - 1)
+    }
+
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    /// Access one address; returns the outcome and whether a dirty line
+    /// was evicted (the write-back the next level must absorb).
+    pub fn access(&mut self, addr: u64, kind: Access) -> (Outcome, bool) {
+        self.clock += 1;
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.level.assoc;
+        // Hit path.
+        for way in 0..self.level.assoc {
+            if self.tags[base + way] == tag {
+                self.hits += 1;
+                self.stamps[base + way] = self.clock;
+                if kind == Access::Write {
+                    self.dirty[base + way] = true;
+                }
+                return (Outcome::Hit, false);
+            }
+        }
+        // Miss: fill into LRU way (write-allocate).
+        self.misses += 1;
+        let mut victim = 0;
+        for way in 1..self.level.assoc {
+            if self.stamps[base + way] < self.stamps[base + victim] {
+                victim = way;
+            }
+        }
+        let evict_dirty =
+            self.tags[base + victim] != u64::MAX && self.dirty[base + victim];
+        if evict_dirty {
+            self.writebacks += 1;
+        }
+        self.tags[base + victim] = tag;
+        self.stamps[base + victim] = self.clock;
+        self.dirty[base + victim] = kind == Access::Write;
+        (Outcome::Miss, evict_dirty)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+/// A three-level hierarchy (per-core L1/L2 view with the shared L3), plus
+/// DRAM access counting.  `access` models the full miss cascade.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+}
+
+impl Hierarchy {
+    pub fn new(l1: CacheLevel, l2: CacheLevel, l3: CacheLevel) -> Hierarchy {
+        Hierarchy {
+            l1: Cache::new(l1),
+            l2: Cache::new(l2),
+            l3: Cache::new(l3),
+            dram_reads: 0,
+            dram_writes: 0,
+        }
+    }
+
+    /// Access one byte address; the cascade fetches lines inclusively.
+    pub fn access(&mut self, addr: u64, kind: Access) {
+        let (o1, wb1) = self.l1.access(addr, kind);
+        if wb1 {
+            // Dirty eviction from L1 lands in L2 (write-back).
+            let (_, wb2) = self.l2.access(addr, Access::Write);
+            if wb2 {
+                let (_, wb3) = self.l3.access(addr, Access::Write);
+                if wb3 {
+                    self.dram_writes += 1;
+                }
+            }
+        }
+        if o1 == Outcome::Miss {
+            let (o2, wb2) = self.l2.access(addr, Access::Read);
+            if wb2 {
+                let (_, wb3) = self.l3.access(addr, Access::Write);
+                if wb3 {
+                    self.dram_writes += 1;
+                }
+            }
+            if o2 == Outcome::Miss {
+                let (o3, wb3) = self.l3.access(addr, Access::Read);
+                if wb3 {
+                    self.dram_writes += 1;
+                }
+                if o3 == Outcome::Miss {
+                    self.dram_reads += 1;
+                }
+            }
+        }
+    }
+
+    /// Sequentially touch a byte range (line-granular), e.g. a streaming
+    /// read of a packed weight row.
+    pub fn stream(&mut self, base: u64, bytes: u64, kind: Access) {
+        let line = self.l1.level.line_bytes as u64;
+        let mut a = base & !(line - 1);
+        while a < base + bytes {
+            self.access(a, kind);
+            a += line;
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.l1.reset_stats();
+        self.l2.reset_stats();
+        self.l3.reset_stats();
+        self.dram_reads = 0;
+        self.dram_writes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_level(size: usize, assoc: usize) -> CacheLevel {
+        CacheLevel {
+            size_bytes: size,
+            assoc,
+            line_bytes: 64,
+            latency_cycles: 4.0,
+            shared: false,
+        }
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = Cache::new(tiny_level(4096, 4));
+        assert_eq!(c.access(0x100, Access::Read).0, Outcome::Miss);
+        assert_eq!(c.access(0x100, Access::Read).0, Outcome::Hit);
+        assert_eq!(c.access(0x130, Access::Read).0, Outcome::Hit); // same line
+        assert_eq!(c.access(0x140, Access::Read).0, Outcome::Miss); // next line
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 2-way, 64B lines, 2 sets => same-set addresses stride by 128.
+        let mut c = Cache::new(tiny_level(256, 2));
+        let s = 128u64;
+        c.access(0 * s, Access::Read); // A
+        c.access(2 * s, Access::Read); // B (same set as A)
+        c.access(0 * s, Access::Read); // touch A -> B is LRU
+        c.access(4 * s, Access::Read); // C evicts B
+        assert_eq!(c.access(0 * s, Access::Read).0, Outcome::Hit); // A still in
+        assert_eq!(c.access(2 * s, Access::Read).0, Outcome::Miss); // B gone
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction() {
+        let mut c = Cache::new(tiny_level(128, 1)); // direct-mapped, 2 sets
+        c.access(0, Access::Write);
+        let (_, wb) = c.access(128, Access::Read); // evicts dirty line 0
+        assert!(wb);
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn working_set_behaviour() {
+        // A loop over a working set larger than the cache must thrash;
+        // one that fits must hit after the cold pass.
+        let mut small = Cache::new(tiny_level(4096, 8));
+        for pass in 0..4 {
+            for addr in (0..2048u64).step_by(64) {
+                let (o, _) = small.access(addr, Access::Read);
+                if pass > 0 {
+                    assert_eq!(o, Outcome::Hit, "fits: pass {pass} addr {addr}");
+                }
+            }
+        }
+        let mut thrash = Cache::new(tiny_level(1024, 1));
+        thrash.reset_stats();
+        for _ in 0..3 {
+            for addr in (0..4096u64).step_by(64) {
+                thrash.access(addr, Access::Read);
+            }
+        }
+        assert!(thrash.hit_rate() < 0.05, "direct-mapped thrash must miss");
+    }
+
+    #[test]
+    fn hierarchy_cascade() {
+        let mut h = Hierarchy::new(
+            tiny_level(1024, 2),
+            tiny_level(8192, 4),
+            tiny_level(65536, 8),
+        );
+        // Stream 32 KiB: misses everywhere first pass (fits L3 only).
+        h.stream(0, 32 * 1024, Access::Read);
+        assert_eq!(h.dram_reads as usize, 32 * 1024 / 64);
+        let l1_misses_first = h.l1.misses;
+        // Second pass: hits in L3, not in L1 (too big).
+        h.stream(0, 32 * 1024, Access::Read);
+        assert_eq!(h.dram_reads as usize, 32 * 1024 / 64, "L3 now absorbs");
+        assert!(h.l1.misses >= l1_misses_first);
+        assert!(h.l3.hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn dirty_writeback_reaches_dram() {
+        let mut h = Hierarchy::new(
+            tiny_level(128, 1),
+            tiny_level(256, 1),
+            tiny_level(512, 1),
+        );
+        // Write a large streaming buffer: every level evicts dirty lines.
+        h.stream(0, 16 * 1024, Access::Write);
+        assert!(h.dram_writes > 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! The gem5 substitute: a two-level performance model (DESIGN.md §2).
+//!
+//! * [`cache`] — a real set-associative LRU cache hierarchy, run on
+//!   line-granular traces for small/representative shapes and used to
+//!   validate the analytic engine.
+//! * [`engine`] — the analytic timing model used for full sweeps:
+//!   per-structure working-set placement, per-level traffic, µ-op issue
+//!   and DRAM bandwidth with multi-core contention.
+//!
+//! Kernels describe themselves to the engine as a [`KernelProfile`]: a
+//! set of [`Stream`]s (how many bytes each data structure requests from
+//! the memory system, its footprint and how many passes sweep it) plus
+//! compute µ-op counts.  This is the information a gem5 trace carries,
+//! abstracted to structure granularity so 100B-parameter sweeps finish
+//! in milliseconds.  Blocked reuse (e.g. a weight tile re-read N times
+//! from L2 while the full matrix streams from DRAM once) is expressed by
+//! splitting a structure into a cold stream plus a tile-reuse stream —
+//! see `kernels::tsar` for worked examples.
+
+pub mod cache;
+pub mod engine;
+
+pub use engine::{simulate, SimResult};
+
+/// GEMM/GEMV operand shape: (N × K) · (K × M)ᵀ.  N = 1 is decode GEMV;
+/// N = 128 is the paper's prefill batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+impl GemmShape {
+    pub const fn new(n: usize, k: usize, m: usize) -> Self {
+        GemmShape { n, k, m }
+    }
+
+    pub fn is_gemv(&self) -> bool {
+        self.n == 1
+    }
+
+    /// Multiply–accumulate count of the dense equivalent.
+    pub fn macs(&self) -> f64 {
+        self.n as f64 * self.k as f64 * self.m as f64
+    }
+}
+
+/// One data structure's memory behaviour inside a kernel execution.
+///
+/// `bytes_accessed` is what the core *requests* (the paper's "memory
+/// request volume" metric, Fig. 9); `footprint` × `passes` bounds the
+/// refill traffic that escapes to levels that cannot hold the footprint.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub name: &'static str,
+    /// Distinct bytes (working set of this stream).
+    pub footprint: f64,
+    /// Total bytes requested by the core at L1.
+    pub bytes_accessed: f64,
+    /// How many sequential sweeps of the footprint the access pattern
+    /// makes (levels too small to hold the footprint see every sweep).
+    pub passes: f64,
+    /// Fraction of requests that are stores (adds write-back traffic).
+    pub write_frac: f64,
+    /// Address-dependent accesses (LUT gathers whose address comes from
+    /// a just-loaded weight code): these cannot be prefetched and stall
+    /// at their home level's latency with little overlap — the paper's
+    /// Fig. 2(d) mechanism.  Streaming/prefetchable accesses leave this
+    /// false.
+    pub dependent: bool,
+}
+
+impl Stream {
+    /// Read the whole structure exactly once, sequentially.
+    pub fn read_once(name: &'static str, bytes: f64) -> Stream {
+        Stream {
+            name,
+            footprint: bytes,
+            bytes_accessed: bytes,
+            passes: 1.0,
+            write_frac: 0.0,
+            dependent: false,
+        }
+    }
+
+    /// Write the whole structure exactly once.
+    pub fn write_once(name: &'static str, bytes: f64) -> Stream {
+        Stream {
+            name,
+            footprint: bytes,
+            bytes_accessed: bytes,
+            passes: 1.0,
+            write_frac: 1.0,
+            dependent: false,
+        }
+    }
+
+    /// Sweep a structure `passes` times (requests = footprint × passes).
+    pub fn swept(name: &'static str, footprint: f64, passes: f64) -> Stream {
+        Stream {
+            name,
+            footprint,
+            bytes_accessed: footprint * passes,
+            passes,
+            write_frac: 0.0,
+            dependent: false,
+        }
+    }
+}
+
+/// A kernel execution's complete description for the timing engine.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub kernel: String,
+    pub shape: GemmShape,
+    pub streams: Vec<Stream>,
+    /// 256-bit SIMD ALU µ-ops (TLUT/TGEMV/vector add-mul equivalents).
+    pub simd_uops: f64,
+    /// Scalar bookkeeping µ-ops (loop control, address generation).
+    pub scalar_uops: f64,
+}
+
+impl KernelProfile {
+    /// Core→memory-system request volume in bytes: Fig. 9's metric.
+    pub fn request_bytes(&self) -> f64 {
+        self.streams.iter().map(|s| s.bytes_accessed).sum()
+    }
+
+    /// Request volume of streams whose name contains `pat` (e.g. "lut"
+    /// for the Fig. 1(c)/2(c) TLUT shares).
+    pub fn request_bytes_matching(&self, pat: &str) -> f64 {
+        self.streams
+            .iter()
+            .filter(|s| s.name.contains(pat))
+            .map(|s| s.bytes_accessed)
+            .sum()
+    }
+
+    pub fn stream(&self, name: &str) -> Option<&Stream> {
+        self.streams.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_helpers() {
+        let s = GemmShape::new(1, 2560, 6912);
+        assert!(s.is_gemv());
+        assert_eq!(s.macs(), 2560.0 * 6912.0);
+    }
+
+    #[test]
+    fn stream_constructors() {
+        let r = Stream::read_once("a", 64.0);
+        assert_eq!(r.bytes_accessed, 64.0);
+        assert_eq!(r.write_frac, 0.0);
+        let w = Stream::write_once("b", 32.0);
+        assert_eq!(w.write_frac, 1.0);
+        let s = Stream::swept("c", 10.0, 3.0);
+        assert_eq!(s.bytes_accessed, 30.0);
+    }
+
+    #[test]
+    fn profile_request_volume_sums_streams() {
+        let p = KernelProfile {
+            kernel: "x".into(),
+            shape: GemmShape::new(1, 8, 8),
+            streams: vec![
+                Stream { dependent: true, ..Stream::read_once("tlut-read", 100.0) },
+                Stream::read_once("weights", 50.0),
+            ],
+            simd_uops: 1.0,
+            scalar_uops: 0.0,
+        };
+        assert_eq!(p.request_bytes(), 150.0);
+        assert_eq!(p.request_bytes_matching("lut"), 100.0);
+        assert!(p.stream("weights").is_some());
+        assert!(p.stream("zz").is_none());
+    }
+}

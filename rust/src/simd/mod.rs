@@ -1,0 +1,162 @@
+//! Functional model of an AVX2-class 256-bit SIMD slice (paper §III-C).
+//!
+//! The paper's TLUT/TGEMV instructions reuse the *existing* datapath: 16
+//! lanes of 16-bit ALUs plus the 4:1 adder trees (ADTs) that dot-product
+//! instructions (`vpmaddwd`-style) already contain.  This module models
+//! exactly that hardware — a register file of 256-bit YMM registers, the
+//! 16×16-bit lane ALUs and the s-to-1 adder-tree reduction — so the
+//! [`crate::tsar`] instruction semantics execute on the same structures
+//! the paper's µ-ops use, and overflow behaviour is bit-faithful
+//! (wrapping 16-bit lanes, 32-bit accumulators).
+
+/// One 256-bit architectural register viewed as 16 × 16-bit lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ymm(pub [i16; 16]);
+
+impl Ymm {
+    pub const ZERO: Ymm = Ymm([0; 16]);
+
+    pub fn splat(v: i16) -> Ymm {
+        Ymm([v; 16])
+    }
+
+    /// Lane-wise wrapping add (vpaddw semantics).
+    pub fn add(self, rhs: Ymm) -> Ymm {
+        let mut out = [0i16; 16];
+        for i in 0..16 {
+            out[i] = self.0[i].wrapping_add(rhs.0[i]);
+        }
+        Ymm(out)
+    }
+
+    /// Lane-wise wrapping subtract (vpsubw semantics).
+    pub fn sub(self, rhs: Ymm) -> Ymm {
+        let mut out = [0i16; 16];
+        for i in 0..16 {
+            out[i] = self.0[i].wrapping_sub(rhs.0[i]);
+        }
+        Ymm(out)
+    }
+
+    /// Lane-wise wrapping negate.
+    pub fn neg(self) -> Ymm {
+        let mut out = [0i16; 16];
+        for i in 0..16 {
+            out[i] = self.0[i].wrapping_neg();
+        }
+        Ymm(out)
+    }
+}
+
+/// The 4:1 adder tree (ADT) stage the AVX2 dot-product path provides:
+/// reduces four 16-bit lanes into one 32-bit partial sum.  TGEMV's
+/// "m = 16 s-to-1 ADT operations" are compositions of this primitive.
+pub fn adt4(lanes: [i16; 4]) -> i32 {
+    lanes.iter().map(|&x| x as i32).sum()
+}
+
+/// s-to-1 adder tree over up to 16 lanes (s ∈ {4, 8, 16} in the paper's
+/// configurations), built from adt4 stages like the hardware.
+pub fn adt(lanes: &[i16]) -> i32 {
+    assert!(lanes.len() <= 16 && !lanes.is_empty());
+    let mut acc = 0i32;
+    for chunk in lanes.chunks(4) {
+        let mut four = [0i16; 4];
+        four[..chunk.len()].copy_from_slice(chunk);
+        acc += adt4(four);
+    }
+    acc
+}
+
+/// Architectural register file: 16 YMM registers (x86-64 AVX2).
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    regs: [Ymm; 16],
+    /// Write counter per register — lets tests assert the µ-op sequences
+    /// touch exactly the registers the paper's Fig. 6 encodings claim.
+    pub writes: [usize; 16],
+}
+
+impl Default for RegFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegFile {
+    pub fn new() -> Self {
+        RegFile { regs: [Ymm::ZERO; 16], writes: [0; 16] }
+    }
+
+    pub fn read(&self, idx: usize) -> Ymm {
+        assert!(idx < 16, "YMM index {idx} out of range");
+        self.regs[idx]
+    }
+
+    pub fn write(&mut self, idx: usize, v: Ymm) {
+        assert!(idx < 16, "YMM index {idx} out of range");
+        self.regs[idx] = v;
+        self.writes[idx] += 1;
+    }
+
+    /// Read a register *pair* (the paper's dst=0x1000 ⇒ YMM8:9 register-
+    /// pair convention, Fig. 6(d)): returns 32 16-bit lanes.
+    pub fn read_pair(&self, base: usize) -> [i16; 32] {
+        assert!(base + 1 < 16, "register pair {base}:{} out of range", base + 1);
+        let mut out = [0i16; 32];
+        out[..16].copy_from_slice(&self.read(base).0);
+        out[16..].copy_from_slice(&self.read(base + 1).0);
+        out
+    }
+
+    pub fn write_pair(&mut self, base: usize, lanes: [i16; 32]) {
+        let mut lo = [0i16; 16];
+        let mut hi = [0i16; 16];
+        lo.copy_from_slice(&lanes[..16]);
+        hi.copy_from_slice(&lanes[16..]);
+        self.write(base, Ymm(lo));
+        self.write(base + 1, Ymm(hi));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_wrap() {
+        let a = Ymm::splat(i16::MAX);
+        let b = Ymm::splat(1);
+        assert_eq!(a.add(b).0[0], i16::MIN); // wrapping, like vpaddw
+        assert_eq!(b.sub(a).0[5], 1i16.wrapping_sub(i16::MAX));
+    }
+
+    #[test]
+    fn adt_matches_scalar_sum() {
+        let lanes: Vec<i16> = (1..=16).collect();
+        assert_eq!(adt(&lanes), (1..=16).sum::<i32>());
+        assert_eq!(adt4([1000, -1000, 30000, 30000]), 60000); // no 16-bit overflow
+    }
+
+    #[test]
+    fn regfile_pairs() {
+        let mut rf = RegFile::new();
+        let mut lanes = [0i16; 32];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = i as i16;
+        }
+        rf.write_pair(8, lanes);
+        assert_eq!(rf.read(8).0[0], 0);
+        assert_eq!(rf.read(9).0[15], 31);
+        assert_eq!(rf.read_pair(8), lanes);
+        assert_eq!(rf.writes[8], 1);
+        assert_eq!(rf.writes[9], 1);
+        assert_eq!(rf.writes[0], 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pair_out_of_range() {
+        RegFile::new().read_pair(15);
+    }
+}

@@ -1,0 +1,154 @@
+//! VEX3 instruction encoding for the T-SAR primitives (paper Fig. 6(d)).
+//!
+//! Both instructions use the standard 3-byte VEX prefix (0xC4) in the
+//! 0F38 opcode map, as AVX2 integer instructions do:
+//!
+//! ```text
+//!   C4 | RXB m-mmmm | W vvvv L pp | opcode | ModRM
+//! ```
+//!
+//! * `TLUT_c×s`  — opcode 0xE0, `vvvv` unused (=0b1111), reg = dst LUT
+//!   group base, rm = activation source register.
+//! * `TGEMV_k×m` — opcode 0xE1, `vvvv` = LUT group base register,
+//!   reg = accumulator pair base, rm = weight source register.
+//!
+//! Register *groups* follow the paper's pair convention: an encoded
+//! register id denotes the group base (e.g. dst=8 with a two-register
+//! result uses YMM8:9).  The (c, s) / (k, m) configuration is carried in
+//! the two low `pp`+`L` bits (00 ⇒ 2×4/8×16, 01 ⇒ 4×4/16×16), matching
+//! the paper's "designed examples" which enumerate fixed configurations
+//! rather than a general immediate.
+
+use crate::config::IsaConfig;
+
+pub const OPC_TLUT: u8 = 0xE0;
+pub const OPC_TGEMV: u8 = 0xE1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opcode {
+    Tlut,
+    Tgemv,
+}
+
+/// A decoded T-SAR instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instruction {
+    pub op: Opcode,
+    pub cfg_sel: u8, // 0 = C2 config, 1 = C4 config
+    /// Destination: TLUT LUT-group base / TGEMV accumulator base.
+    pub dst: u8,
+    /// vvvv operand: TGEMV LUT-group base (unused for TLUT).
+    pub aux: u8,
+    /// Source: TLUT activation reg / TGEMV weight stream reg.
+    pub src: u8,
+}
+
+impl Instruction {
+    pub fn isa_config(&self) -> IsaConfig {
+        match self.cfg_sel {
+            0 => IsaConfig::C2,
+            1 => IsaConfig::C4,
+            other => panic!("unknown T-SAR config selector {other}"),
+        }
+    }
+
+    /// Encode to the 5-byte VEX3 form.
+    pub fn encode(&self) -> [u8; 5] {
+        assert!(self.dst < 16 && self.aux < 16 && self.src < 16);
+        assert!(self.cfg_sel < 2);
+        let opcode = match self.op {
+            Opcode::Tlut => OPC_TLUT,
+            Opcode::Tgemv => OPC_TGEMV,
+        };
+        // Byte 1: R̅X̅B̅ (inverted extension bits) | m-mmmm = 0b00010 (0F38).
+        let r_inv = (!(self.dst >> 3)) & 1;
+        let b_inv = (!(self.src >> 3)) & 1;
+        let byte1 = (r_inv << 7) | (1 << 6) /* X̅=1 */ | (b_inv << 5) | 0b00010;
+        // Byte 2: W=0 | v̅v̅v̅v̅ | L=cfg_sel | pp=00.
+        let vvvv_inv = (!self.aux) & 0x0F;
+        let byte2 = (vvvv_inv << 3) | ((self.cfg_sel & 1) << 2);
+        // ModRM: mod=11 (register direct) | reg = dst[2:0] | rm = src[2:0].
+        let modrm = 0b1100_0000 | ((self.dst & 0x7) << 3) | (self.src & 0x7);
+        [0xC4, byte1, byte2, opcode, modrm]
+    }
+
+    /// Decode; rejects non-T-SAR byte patterns.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Instruction> {
+        anyhow::ensure!(bytes.len() >= 5, "short instruction");
+        anyhow::ensure!(bytes[0] == 0xC4, "not a VEX3 prefix");
+        let byte1 = bytes[1];
+        anyhow::ensure!(byte1 & 0b11111 == 0b00010, "not map 0F38");
+        let op = match bytes[3] {
+            OPC_TLUT => Opcode::Tlut,
+            OPC_TGEMV => Opcode::Tgemv,
+            o => anyhow::bail!("unknown opcode {o:#x}"),
+        };
+        let byte2 = bytes[2];
+        let modrm = bytes[4];
+        anyhow::ensure!(modrm >> 6 == 0b11, "T-SAR is register-direct");
+        let r_inv = byte1 >> 7 & 1;
+        let b_inv = byte1 >> 5 & 1;
+        let dst = ((1 - r_inv) << 3) | (modrm >> 3 & 0x7);
+        let src = ((1 - b_inv) << 3) | (modrm & 0x7);
+        let aux = (!(byte2 >> 3)) & 0x0F;
+        let cfg_sel = byte2 >> 2 & 1;
+        Ok(Instruction { op, cfg_sel, dst, aux, src })
+    }
+}
+
+/// The paper's worked example encodings (Fig. 6(d)): TLUT_2×4 writing the
+/// YMM8:9 pair, and TGEMV_8×16 reading it.
+pub fn fig6_examples() -> [Instruction; 2] {
+    [
+        Instruction { op: Opcode::Tlut, cfg_sel: 0, dst: 8, aux: 0, src: 1 },
+        Instruction { op: Opcode::Tgemv, cfg_sel: 0, dst: 2, aux: 8, src: 3 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_fields() {
+        for op in [Opcode::Tlut, Opcode::Tgemv] {
+            for cfg_sel in 0..2u8 {
+                for dst in [0u8, 5, 8, 15] {
+                    for src in [0u8, 7, 9] {
+                        for aux in [0u8, 8, 14] {
+                            let insn = Instruction { op, cfg_sel, dst, aux, src };
+                            let dec = Instruction::decode(&insn.encode()).unwrap();
+                            assert_eq!(insn, dec);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_byte_patterns_are_vex3() {
+        for insn in fig6_examples() {
+            let b = insn.encode();
+            assert_eq!(b[0], 0xC4);
+            assert_eq!(b[1] & 0b11111, 0b00010); // 0F38 map
+            assert_eq!(b[4] >> 6, 0b11); // register-direct
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_bytes() {
+        assert!(Instruction::decode(&[0x0F, 0, 0, 0, 0]).is_err());
+        assert!(Instruction::decode(&[0xC4, 0b00000010, 0, 0x90, 0xC0]).is_err());
+        assert!(Instruction::decode(&[0xC4]).is_err());
+    }
+
+    #[test]
+    fn register_pair_convention() {
+        // dst=8 in the TLUT example denotes the YMM8:9 pair (the paper's
+        // "if dst is 0x1000, the operation uses YMM8 and YMM9").
+        let insn = fig6_examples()[0];
+        assert_eq!(insn.dst, 8);
+        assert_eq!(insn.isa_config().tlut_result_regs(), 2);
+    }
+}

@@ -1,0 +1,261 @@
+//! Functional (bit-faithful) semantics of TLUT_c×s / TGEMV_k×m executed
+//! on the modeled SIMD register file.
+//!
+//! These are the semantics the paper verified "by executing hand-written
+//! assembly with byte-pattern encodings" in gem5; here they are executed
+//! directly and cross-checked against the scalar ternary dot product in
+//! unit/property tests (and transitively against the Python oracle via
+//! the shared test vectors in `rust/tests/`).
+
+use crate::config::IsaConfig;
+use crate::simd::{adt, RegFile, Ymm};
+
+use super::{lut_lane, lut_regs};
+
+/// Execute `TLUT_c×s dst_group, activations`: build s dense/sparse LUT
+/// pairs from `k = c·s` int8 activations into the register group starting
+/// at `dst` (paper Fig. 6(b)).
+///
+/// Dense entry p of block b:  Σ_i (bit_i(p) ? +a[b·c+i] : −a[b·c+i])
+/// Sparse entry p of block b: Σ_i (bit_i(p) ?  a[b·c+i] : 0)
+///
+/// Entries are 16-bit; with int8 activations and c ≤ 4 the sums cannot
+/// overflow (|entry| ≤ 4·127).
+pub fn tlut(rf: &mut RegFile, cfg: &IsaConfig, dst: usize, acts: &[i8]) {
+    assert_eq!(acts.len(), cfg.k, "TLUT consumes k = c*s activations");
+    let nregs = lut_regs(cfg);
+    assert!(dst + nregs <= 16, "TLUT dst group out of range");
+
+    // Compute all lanes, then commit register by register (µ-op order).
+    // Stack buffer: the largest config (c=4, s=4) spans 8 regs = 128
+    // lanes — no heap allocation on the per-instruction hot path.
+    let total_lanes = cfg.s * cfg.lut_entries_per_block();
+    debug_assert!(total_lanes <= 128);
+    let mut lanes = [0i16; 128];
+    for b in 0..cfg.s {
+        let block = &acts[b * cfg.c..(b + 1) * cfg.c];
+        for p in 0..1usize << cfg.c {
+            let mut dense = 0i16;
+            let mut sparse = 0i16;
+            for (i, &a) in block.iter().enumerate() {
+                let a = a as i16;
+                if p >> i & 1 == 1 {
+                    dense += a;
+                    sparse += a;
+                } else {
+                    dense -= a;
+                }
+            }
+            lanes[lut_lane(cfg, b, false, p)] = dense;
+            lanes[lut_lane(cfg, b, true, p)] = sparse;
+        }
+    }
+    for r in 0..nregs {
+        let mut reg = [0i16; 16];
+        for (l, slot) in reg.iter_mut().enumerate() {
+            let idx = r * 16 + l;
+            if idx < total_lanes {
+                *slot = lanes[idx];
+            }
+        }
+        rf.write(dst + r, Ymm(reg));
+    }
+}
+
+/// Weight operand of one TGEMV: per output channel j (0..m), per block b
+/// (0..s), a dense index and a sparse index (c bits each) — the
+/// pre-encoded compile-time form streamed from memory (Fig. 5).
+#[derive(Debug, Clone)]
+pub struct TgemvWeights {
+    pub wd: Vec<u8>, // m*s entries, row-major [j][b]
+    pub ws: Vec<u8>,
+}
+
+impl TgemvWeights {
+    pub fn new(cfg: &IsaConfig, wd: Vec<u8>, ws: Vec<u8>) -> Self {
+        assert_eq!(wd.len(), cfg.m * cfg.s);
+        assert_eq!(ws.len(), cfg.m * cfg.s);
+        TgemvWeights { wd, ws }
+    }
+
+    /// Packed memory size in bytes: 2·c bits per (output, block).
+    pub fn packed_bytes(cfg: &IsaConfig) -> usize {
+        (cfg.m * cfg.s * 2 * cfg.c).div_ceil(8)
+    }
+}
+
+/// Execute `TGEMV_k×m acc_pair, lut_group, weights`: gather + subtract +
+/// adder-tree reduce + accumulate (paper Fig. 6(c)).
+///
+/// The m 32-bit accumulators live in `acc` (a `Vec<i32>` standing in for
+/// the accumulator register pair; the register-file pressure of real
+/// accumulation is modeled by the kernels' register budgets).
+pub fn tgemv(
+    rf: &RegFile,
+    cfg: &IsaConfig,
+    lut_base: usize,
+    w: &TgemvWeights,
+    acc: &mut [i32],
+) {
+    tgemv_slices(rf, cfg, lut_base, &w.wd, &w.ws, cfg.s, acc)
+}
+
+/// `tgemv` over borrowed per-row index slices with an arbitrary row
+/// stride — lets kernels stream operands straight from their pre-encoded
+/// weight buffers without copying (§Perf L3).
+pub fn tgemv_slices(
+    rf: &RegFile,
+    cfg: &IsaConfig,
+    lut_base: usize,
+    wd: &[u8],
+    ws: &[u8],
+    row_stride: usize,
+    acc: &mut [i32],
+) {
+    assert_eq!(acc.len(), cfg.m);
+    assert!(row_stride >= cfg.s);
+    assert!(wd.len() >= (cfg.m - 1) * row_stride + cfg.s);
+    assert_eq!(wd.len(), ws.len());
+    let nregs = lut_regs(cfg);
+    // Flatten the LUT register group back to lanes (stack buffer).
+    debug_assert!(nregs * 16 <= 128);
+    let mut lanes = [0i16; 128];
+    for r in 0..nregs {
+        lanes[r * 16..(r + 1) * 16].copy_from_slice(&rf.read(lut_base + r).0);
+    }
+
+    // Pre-resolve the per-block lane bases once (loop-invariant).
+    let per_block = cfg.lut_entries_per_block();
+    let sparse_off = 1usize << cfg.c;
+    for j in 0..cfg.m {
+        // s×m subtractions feed m s-to-1 adder trees (§III-C).
+        let mut diffs = [0i16; 8];
+        debug_assert!(cfg.s <= 8);
+        let row_d = &wd[j * row_stride..j * row_stride + cfg.s];
+        let row_s = &ws[j * row_stride..j * row_stride + cfg.s];
+        for b in 0..cfg.s {
+            let d_idx = row_d[b] as usize;
+            let s_idx = row_s[b] as usize;
+            debug_assert!(d_idx < 1 << cfg.c && s_idx < 1 << cfg.c);
+            let base = b * per_block;
+            let d = lanes[base + d_idx];
+            let s = lanes[base + sparse_off + s_idx];
+            diffs[b] = d.wrapping_sub(s);
+        }
+        acc[j] += adt(&diffs[..cfg.s]);
+    }
+}
+
+/// Reference scalar ternary dot product used to validate the ISA path.
+pub fn scalar_dot(w_row: &[i8], acts: &[i8]) -> i32 {
+    w_row
+        .iter()
+        .zip(acts)
+        .map(|(&w, &a)| w as i32 * a as i32)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::encode_indices;
+    use crate::util::rng::Rng;
+
+    /// Build TGEMV weight operands from a ternary (m × k) tile.
+    fn weights_from_tile(cfg: &IsaConfig, tile: &[i8]) -> TgemvWeights {
+        let enc = encode_indices(tile, cfg.m, cfg.k, cfg.c);
+        // enc is (m × k/c) = (m × s) — exactly the TGEMV operand layout.
+        TgemvWeights::new(cfg, enc.wd, enc.ws)
+    }
+
+    fn check_config(cfg: IsaConfig, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..50 {
+            let acts: Vec<i8> = rng.int8_acts(cfg.k);
+            let tile = rng.ternary_matrix(cfg.m, cfg.k, 0.33);
+            let mut rf = RegFile::new();
+            tlut(&mut rf, &cfg, 8, &acts);
+            let w = weights_from_tile(&cfg, &tile);
+            let mut acc = vec![0i32; cfg.m];
+            tgemv(&rf, &cfg, 8, &w, &mut acc);
+            for j in 0..cfg.m {
+                let want = scalar_dot(&tile[j * cfg.k..(j + 1) * cfg.k], &acts);
+                assert_eq!(acc[j], want, "cfg={} output {j}", cfg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tlut_tgemv_matches_scalar_c2() {
+        check_config(IsaConfig::C2, 100);
+    }
+
+    #[test]
+    fn tlut_tgemv_matches_scalar_c4() {
+        check_config(IsaConfig::C4, 200);
+    }
+
+    #[test]
+    fn tgemv_accumulates() {
+        // Two TGEMV invocations over two K-slices must equal one dot
+        // product over the concatenation (the fused-accumulation claim).
+        let cfg = IsaConfig::C2;
+        let mut rng = Rng::new(7);
+        let acts: Vec<i8> = rng.int8_acts(2 * cfg.k);
+        let tile = rng.ternary_matrix(cfg.m, 2 * cfg.k, 0.33);
+        let mut acc = vec![0i32; cfg.m];
+        for half in 0..2 {
+            let a = &acts[half * cfg.k..(half + 1) * cfg.k];
+            // Slice the tile columns for this half.
+            let mut sub = Vec::with_capacity(cfg.m * cfg.k);
+            for j in 0..cfg.m {
+                sub.extend_from_slice(
+                    &tile[j * 2 * cfg.k + half * cfg.k..j * 2 * cfg.k + (half + 1) * cfg.k],
+                );
+            }
+            let mut rf = RegFile::new();
+            tlut(&mut rf, &cfg, 0, a);
+            let w = weights_from_tile(&cfg, &sub);
+            tgemv(&rf, &cfg, 0, &w, &mut acc);
+        }
+        for j in 0..cfg.m {
+            let want = scalar_dot(&tile[j * 2 * cfg.k..(j + 1) * 2 * cfg.k], &acts);
+            assert_eq!(acc[j], want);
+        }
+    }
+
+    #[test]
+    fn tlut_writes_expected_registers() {
+        let cfg = IsaConfig::C2;
+        let mut rf = RegFile::new();
+        tlut(&mut rf, &cfg, 8, &vec![1i8; cfg.k]);
+        // Fig. 6(b): TLUT_2x4 writes the YMM8:9 pair, nothing else.
+        assert_eq!(rf.writes[8], 1);
+        assert_eq!(rf.writes[9], 1);
+        assert!(rf.writes.iter().enumerate().all(|(i, &w)| w == 0 || i == 8 || i == 9));
+    }
+
+    #[test]
+    fn tlut_zero_acts_gives_zero_luts() {
+        let cfg = IsaConfig::C4;
+        let mut rf = RegFile::new();
+        tlut(&mut rf, &cfg, 0, &vec![0i8; cfg.k]);
+        for r in 0..super::super::lut_regs(&cfg) {
+            assert_eq!(rf.read(r), Ymm::ZERO);
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_give_zero_outputs() {
+        let cfg = IsaConfig::C2;
+        let mut rng = Rng::new(9);
+        let acts = rng.int8_acts(cfg.k);
+        let tile = vec![0i8; cfg.m * cfg.k];
+        let mut rf = RegFile::new();
+        tlut(&mut rf, &cfg, 0, &acts);
+        let w = weights_from_tile(&cfg, &tile);
+        let mut acc = vec![0i32; cfg.m];
+        tgemv(&rf, &cfg, 0, &w, &mut acc);
+        assert!(acc.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,66 @@
+//! The T-SAR ISA extension (paper §III-B/C, Fig. 6).
+//!
+//! Two register-to-register instructions over the AVX2 SIMD slice:
+//!
+//! * `TLUT_c×s` — build `s` dense/sparse binary LUT pairs (2^c 16-bit
+//!   entries each) from `k = c·s` int8 activations, writing them to a
+//!   YMM register group.  Split into ⌈result bits / 256⌉ µ-ops, each
+//!   writing one 256-bit register per cycle (§III-C: two µ-ops for the
+//!   2×4 configuration).
+//! * `TGEMV_k×m` — a (1,k)×(k,m) GEMV: for each of the `m` outputs,
+//!   gather one dense and one sparse entry per block (s blocks), apply
+//!   the `s×m` subtractions, reduce with `m` s-to-1 adder trees, and
+//!   accumulate into a 32-bit accumulator register pair.  Four µ-ops in
+//!   the 8×16 configuration.
+//!
+//! [`exec`] gives the bit-faithful functional semantics on the
+//! [`crate::simd::RegFile`]; [`encoding`] the VEX3 byte format of
+//! Fig. 6(d); [`uops`] the µ-op sequences the timing simulator charges.
+
+pub mod encoding;
+pub mod exec;
+pub mod uops;
+
+use crate::config::IsaConfig;
+
+/// LUT register-layout helper shared by exec + tests.
+///
+/// For block `b` of a TLUT result, dense entry `p` lives at flat 16-bit
+/// lane `b * 2^(c+1) + p`, and sparse entry `p` at
+/// `b * 2^(c+1) + 2^c + p`, across the destination register group in
+/// ascending register order (Fig. 6(b)'s packing).
+pub fn lut_lane(cfg: &IsaConfig, block: usize, sparse: bool, entry: usize) -> usize {
+    debug_assert!(block < cfg.s);
+    debug_assert!(entry < 1 << cfg.c);
+    let per_block = cfg.lut_entries_per_block(); // 2^(c+1)
+    block * per_block + (sparse as usize) * (1 << cfg.c) + entry
+}
+
+/// Number of YMM registers a TLUT destination group spans.
+pub fn lut_regs(cfg: &IsaConfig) -> usize {
+    cfg.tlut_result_regs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_layout_c2() {
+        let c = IsaConfig::C2;
+        // block 0: dense entries in lanes 0..4, sparse in 4..8
+        assert_eq!(lut_lane(&c, 0, false, 0), 0);
+        assert_eq!(lut_lane(&c, 0, true, 0), 4);
+        // block 3 sparse entry 3 is the last lane of the 512-bit group
+        assert_eq!(lut_lane(&c, 3, true, 3), 31);
+        assert_eq!(lut_regs(&c), 2);
+    }
+
+    #[test]
+    fn lane_layout_c4() {
+        let c = IsaConfig::C4;
+        assert_eq!(lut_lane(&c, 0, true, 0), 16);
+        assert_eq!(lut_lane(&c, 3, true, 15), 127);
+        assert_eq!(lut_regs(&c), 8);
+    }
+}

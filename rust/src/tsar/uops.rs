@@ -1,0 +1,90 @@
+//! µ-op sequencing and cost model for the T-SAR instructions (§III-C).
+//!
+//! The paper splits each instruction into µ-ops bounded by the existing
+//! 256-bit write-back path (one 256-bit register write per cycle) and the
+//! existing ALU/ADT issue capacity:
+//!
+//! * `TLUT_2×4`: 512-bit result ⇒ **2 µ-ops**, one YMM write each.
+//! * `TLUT_4×4`: 2048-bit result ⇒ 8 µ-ops (same rule).
+//! * `TGEMV_8×16`: 64 subtractions + 16 4:1 ADTs over the 16-lane ALU
+//!   slice ⇒ **4 µ-ops**.
+//! * `TGEMV_16×16`: twice the lookup volume ⇒ 8 µ-ops.
+//!
+//! The timing simulator charges these against the platform's SIMD ports.
+
+use crate::config::IsaConfig;
+
+/// µ-op classes the issue model distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UopClass {
+    /// 256-bit SIMD ALU op (add/sub/mux network) with register write-back.
+    SimdAlu,
+    /// SIMD load (32 B) from the memory hierarchy.
+    VecLoad,
+    /// SIMD store (32 B).
+    VecStore,
+    /// Scalar bookkeeping (address generation, loop control).
+    Scalar,
+}
+
+/// µ-op sequence of one architectural instruction.
+#[derive(Debug, Clone)]
+pub struct UopSeq {
+    pub alu_uops: usize,
+}
+
+/// TLUT_c×s µ-op count: one per 256 bits of LUT result written back.
+pub fn tlut_uops(cfg: &IsaConfig) -> usize {
+    cfg.tlut_result_regs()
+}
+
+/// TGEMV_k×m µ-op count.
+///
+/// Per µ-op the slice retires 16 lanes of subtraction plus a 4:1 ADT
+/// pass (the vpmaddwd-class resources).  Work = s·m subtractions and m
+/// s-to-1 reductions; each reduction of s values consumes s/4 ADT slots.
+pub fn tgemv_uops(cfg: &IsaConfig) -> usize {
+    let subs = cfg.s * cfg.m; // 16-bit subtractions
+    let adt_slots = cfg.m * cfg.s.div_ceil(4); // 4:1 tree passes
+    // 16 sub lanes + 4 ADT outputs retire per µ-op (§III-C: four µ-ops
+    // for the 64-sub / 16-ADT 8×16 example).
+    let by_subs = subs.div_ceil(16);
+    let by_adts = adt_slots.div_ceil(4);
+    by_subs.max(by_adts)
+}
+
+/// Total SIMD-ALU µ-ops to compute a (1,K)×(K,M) GEMV with the T-SAR
+/// instruction pair, excluding loads/stores (charged separately from the
+/// kernel's traffic descriptor): one TLUT per k-slice per LUT residency,
+/// one TGEMV per (k-slice, m-tile).
+pub fn gemv_compute_uops(cfg: &IsaConfig, kk: usize, mm: usize, tlut_invocations: usize) -> usize {
+    let k_slices = kk.div_ceil(cfg.k);
+    let m_tiles = mm.div_ceil(cfg.m);
+    tlut_invocations * tlut_uops(cfg) + k_slices * m_tiles * tgemv_uops(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_uop_counts() {
+        // §III-C: TLUT_2×4 = two µ-ops, TGEMV_8×16 = four µ-ops.
+        assert_eq!(tlut_uops(&IsaConfig::C2), 2);
+        assert_eq!(tgemv_uops(&IsaConfig::C2), 4);
+    }
+
+    #[test]
+    fn c4_uop_counts_scale() {
+        assert_eq!(tlut_uops(&IsaConfig::C4), 8);
+        assert_eq!(tgemv_uops(&IsaConfig::C4), 4); // s=4, m=16 same sub/ADT volume
+    }
+
+    #[test]
+    fn gemv_uops_minimum_tluts() {
+        // K=64, M=32 with C2: 8 k-slices, 2 m-tiles.
+        let cfg = IsaConfig::C2;
+        let uops = gemv_compute_uops(&cfg, 64, 32, 8);
+        assert_eq!(uops, 8 * 2 + 8 * 2 * 4);
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained utilities: JSON, PRNG, statistics, table printing.
+//!
+//! The build environment is offline with a minimal crate cache (no serde,
+//! rand, criterion), so these are in-tree. Each is deliberately tiny and
+//! fully unit-tested.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with SI units (1.2 M, 3.4 G, ...).
+pub fn fmt_si(x: f64) -> String {
+    const UNITS: [&str; 5] = ["", "K", "M", "G", "T"];
+    let mut v = x;
+    let mut u = 0;
+    while v.abs() >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(999.0), "999");
+        assert_eq!(fmt_si(1200.0), "1.20 K");
+        assert_eq!(fmt_si(2.5e9), "2.50 G");
+    }
+}

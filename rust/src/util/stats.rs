@@ -1,0 +1,110 @@
+//! Statistics helpers used by the bench harnesses and the coordinator's
+//! latency reporting.
+
+/// Geometric mean of strictly-positive values (paper's speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let logsum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean needs positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (logsum / xs.len() as f64).exp()
+}
+
+/// Percentile via linear interpolation on a sorted copy. `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Simple wall-clock timing of repeated runs: returns (mean_s, min_s, runs).
+/// The in-tree stand-in for criterion (not in the offline cache).
+pub fn time_it<F: FnMut()>(mut f: F, min_runs: usize, min_secs: f64) -> (f64, f64, usize) {
+    // Warmup.
+    f();
+    let mut times = Vec::new();
+    let start = std::time::Instant::now();
+    while times.len() < min_runs || start.elapsed().as_secs_f64() < min_secs {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    (mean(&times), min(&times), times.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[8.0]) - 8.0).abs() < 1e-12);
+        let g = geomean(&[2.0, 8.0, 4.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_min_max() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(mean(&xs), 2.0);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 3.0);
+    }
+
+    #[test]
+    fn timing_runs() {
+        let (_, mn, n) = time_it(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            5,
+            0.0,
+        );
+        assert!(n >= 5);
+        assert!(mn >= 0.0);
+    }
+}

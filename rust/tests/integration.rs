@@ -1,0 +1,209 @@
+//! Cross-module integration tests: ISA ⇄ kernels ⇄ simulator ⇄ reports,
+//! plus analytic-engine vs trace-driven-cache cross-validation.
+
+use tsar::bench;
+use tsar::config::platforms::{CacheLevel, Platform};
+use tsar::config::IsaConfig;
+use tsar::kernels::{select_tsar_kernel, scalar_gemm, TernaryKernel, Tl2Kernel, TsarKernel, Dataflow};
+use tsar::sim::cache::{Access, Hierarchy};
+use tsar::sim::{simulate, GemmShape};
+use tsar::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Engine vs trace-driven cache hierarchy: working-set placement agreement
+// ---------------------------------------------------------------------------
+
+fn tiny_platform() -> Platform {
+    // A shrunken hierarchy so trace simulation is fast: 4 KiB / 64 KiB /
+    // 1 MiB.
+    let mut p = Platform::workstation();
+    p.l1d = CacheLevel { size_bytes: 4096, assoc: 8, line_bytes: 64, latency_cycles: 4.0, shared: false };
+    p.l2 = CacheLevel { size_bytes: 64 * 1024, assoc: 8, line_bytes: 64, latency_cycles: 14.0, shared: false };
+    p.l3 = CacheLevel { size_bytes: 1024 * 1024, assoc: 16, line_bytes: 64, latency_cycles: 50.0, shared: true };
+    p
+}
+
+#[test]
+fn analytic_placement_matches_trace_simulation() {
+    // Sweep working sets around each level boundary; the analytic rule
+    // ("fits level L => deeper levels see the cold fill only") must agree
+    // with the real LRU hierarchy on where repeated sweeps hit.
+    let plat = tiny_platform();
+    for &(ws, passes) in &[
+        (2 * 1024usize, 4usize),   // fits L1
+        (32 * 1024, 4),            // fits L2
+        (512 * 1024, 4),           // fits L3
+        (4 * 1024 * 1024, 2),      // DRAM-resident
+    ] {
+        // Trace-driven ground truth.
+        let mut h = Hierarchy::new(plat.l1d, plat.l2, plat.l3);
+        for _ in 0..passes {
+            h.stream(0, ws as u64, Access::Read);
+        }
+        let lines = (ws / 64) as u64;
+        let dram_per_pass = h.dram_reads as f64 / passes as f64;
+
+        // Analytic prediction.
+        let p = tsar::sim::KernelProfile {
+            kernel: "ws".into(),
+            shape: GemmShape::new(1, 8, 8),
+            streams: vec![tsar::sim::Stream::swept("w", ws as f64, passes as f64)],
+            simd_uops: 1.0,
+            scalar_uops: 0.0,
+        };
+        let r = simulate(&p, &plat, 1);
+        let analytic_dram_lines = r.traffic.bytes[3] / 64.0;
+
+        if ws as f64 <= plat.l3.size_bytes as f64 * 0.8 {
+            // Fits somewhere on-chip: trace shows cold-fill-only DRAM
+            // traffic; analytic must agree within 10%.
+            assert!(
+                (h.dram_reads as f64 - lines as f64).abs() < lines as f64 * 0.05,
+                "trace: ws {ws} should cold-fill {lines} lines, got {}",
+                h.dram_reads
+            );
+            assert!(
+                (analytic_dram_lines - lines as f64).abs() < lines as f64 * 0.1,
+                "analytic: ws {ws} DRAM lines {analytic_dram_lines} != {lines}"
+            );
+        } else {
+            // Thrashes: every pass reaches DRAM in both models.
+            assert!(dram_per_pass > lines as f64 * 0.9, "trace should thrash");
+            assert!(
+                analytic_dram_lines > (passes as f64 - 0.5) * lines as f64 * 0.9,
+                "analytic should thrash: {analytic_dram_lines} vs {}",
+                passes as u64 * lines
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ISA-level kernels vs Python-oracle-style test vectors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tsar_kernel_against_known_vector() {
+    // A fixed vector, mirrored in python/tests/test_kernel.py semantics:
+    // acts = [1..8], weights row j alternates (+1, 0, -1, ...), shifted.
+    let k = 8usize;
+    let m = 4usize;
+    let acts: Vec<i8> = (1..=8).collect();
+    let mut w = vec![0i8; m * k];
+    for j in 0..m {
+        for x in 0..k {
+            w[j * k + x] = match (x + j) % 3 {
+                0 => 1,
+                1 => 0,
+                _ => -1,
+            };
+        }
+    }
+    let shape = GemmShape::new(1, k, m);
+    let want = scalar_gemm(&acts, &w, shape);
+    // Hand-check one entry: row 0 = [1,0,-1,1,0,-1,1,0] · [1..8]
+    assert_eq!(want[0], 1 - 3 + 4 - 6 + 7);
+    for isa in [IsaConfig::C2, IsaConfig::C4] {
+        for df in [Dataflow::ApMin, Dataflow::ApMax, Dataflow::Op] {
+            let kern = TsarKernel::new(isa, df);
+            assert_eq!(kern.run(&acts, &w, shape), want, "{}", kern.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure-level invariants (the paper's headline shapes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig8_tsar_wins_prefill_everywhere() {
+    let rows = bench::fig8();
+    for r in &rows {
+        assert!(
+            r.prefill_tsar_s < r.prefill_tl2_s,
+            "{} on {}: prefill T-SAR {:.4}s !< TL-2 {:.4}s",
+            r.model,
+            r.platform,
+            r.prefill_tsar_s,
+            r.prefill_tl2_s
+        );
+        assert!(
+            r.decode_tsar_tps >= r.decode_tl2_tps * 0.999,
+            "{} on {}: decode T-SAR must not lose",
+            r.model,
+            r.platform
+        );
+    }
+}
+
+#[test]
+fn fig10_gemm_scales_further_than_gemv() {
+    // The paper's Fig. 10 story: compute-bound GEMM keeps scaling where
+    // bandwidth-bound GEMV plateaus early.
+    let plat = Platform::workstation();
+    let gemm = GemmShape::new(128, 2560, 6912);
+    let gemv = GemmShape::new(1, 2560, 6912);
+    let speedup = |shape: GemmShape| {
+        let t1 = {
+            let (k, _) = select_tsar_kernel(shape, &plat, 1);
+            simulate(&k.profile(shape, &plat, 1), &plat, 1).seconds
+        };
+        let t16 = {
+            let (k, _) = select_tsar_kernel(shape, &plat, 16);
+            simulate(&k.profile(shape, &plat, 16), &plat, 16).seconds
+        };
+        t1 / t16
+    };
+    let s_gemm = speedup(gemm);
+    let s_gemv = speedup(gemv);
+    assert!(
+        s_gemm > 1.7 * s_gemv,
+        "GEMM thread-scaling {s_gemm:.1}x must exceed GEMV {s_gemv:.1}x"
+    );
+    assert!(s_gemm > 6.0, "GEMM should scale well, got {s_gemm:.1}x");
+    assert!(s_gemv < 4.0, "GEMV should plateau, got {s_gemv:.1}x");
+}
+
+#[test]
+fn mobile_prefill_becomes_interactive() {
+    // §IV-B: Mobile 7B prefill drops from >20 s to interactive range.
+    let spec = tsar::model::zoo::by_name("BitNet-7B").unwrap();
+    let plat = Platform::mobile();
+    let tl2 = bench::pass_seconds(spec, &plat, 128, false);
+    let tsar = bench::pass_seconds(spec, &plat, 128, true);
+    assert!(tl2 > 4.0 * tsar, "tl2 {tl2:.1}s vs tsar {tsar:.1}s");
+    assert!(tsar < 5.0, "T-SAR mobile 7B prefill should be interactive");
+}
+
+#[test]
+fn request_volume_reduction_grows_then_saturates_with_size() {
+    // §IV-C: request reduction grows with model size for GEMV.
+    let rows = bench::fig9();
+    let gemv: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.phase.starts_with("GEMV"))
+        .map(|r| r.tl2_mb / r.tsar_mb)
+        .collect();
+    assert_eq!(gemv.len(), 3);
+    for r in &gemv {
+        assert!(*r > 4.0, "GEMV reduction {r:.1} too small");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional kernels at model-layer scale (spot check, moderate size)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn functional_kernels_agree_at_layer_scale() {
+    let mut rng = Rng::new(99);
+    let shape = GemmShape::new(2, 256, 320);
+    let acts = rng.int8_acts(shape.n * shape.k);
+    let w = rng.ternary_matrix(shape.m, shape.k, 0.34);
+    let want = scalar_gemm(&acts, &w, shape);
+    assert_eq!(
+        TsarKernel::new(IsaConfig::C2, Dataflow::Op).run(&acts, &w, shape),
+        want
+    );
+    assert_eq!(Tl2Kernel::new().run(&acts, &w, shape), want);
+}

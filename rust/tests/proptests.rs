@@ -1,0 +1,288 @@
+//! Property-based tests (in-tree harness: seeded PRNG + generators; the
+//! proptest crate is not in the offline cache).  Each property runs many
+//! randomized cases and reports the failing seed on violation, so cases
+//! reproduce deterministically.
+
+use tsar::config::IsaConfig;
+use tsar::coordinator::{Batcher, KvSlotPool, Request};
+use tsar::kernels::{all_kernels, scalar_gemm, Dataflow, TernaryKernel, TsarKernel};
+use tsar::quant::{absmax_quantize, absmean_ternarize, decompose, decode_indices, encode_indices};
+use tsar::quant::pack::{Tl2Packed, TmacPacked};
+use tsar::sim::{simulate, GemmShape};
+use tsar::config::platforms::Platform;
+use tsar::tsar::encoding::{Instruction, Opcode};
+use tsar::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Run `f` over `CASES` seeded cases, reporting the failing seed.
+fn for_all_seeds(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(0xDEAD_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization & packing properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_decomposition_identity() {
+    for_all_seeds("w == w_D - w_S", |rng| {
+        let m = rng.range_i64(1, 16) as usize;
+        let k = rng.range_i64(1, 64) as usize;
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        let (d, s) = decompose(&w);
+        for i in 0..w.len() {
+            assert_eq!(w[i], d[i] - s[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    for_all_seeds("encode_indices round-trips", |rng| {
+        let c = if rng.f64() < 0.5 { 2 } else { 4 };
+        let m = rng.range_i64(1, 12) as usize;
+        let k = c * rng.range_i64(1, 16) as usize;
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        let enc = encode_indices(&w, m, k, c);
+        assert_eq!(decode_indices(&enc), w);
+    });
+}
+
+#[test]
+fn prop_tl2_tmac_roundtrip() {
+    for_all_seeds("baseline packings round-trip", |rng| {
+        let m = rng.range_i64(1, 10) as usize;
+        let k = rng.range_i64(1, 50) as usize;
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        assert_eq!(Tl2Packed::pack(&w, m, k).unpack(), w);
+        let k4 = k.div_ceil(4) * 4;
+        let mut wp = vec![0i8; m * k4];
+        for r in 0..m {
+            wp[r * k4..r * k4 + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+        }
+        assert_eq!(TmacPacked::pack(&wp, m, k4, 4).unpack(), wp);
+    });
+}
+
+#[test]
+fn prop_act_quant_bounds() {
+    for_all_seeds("absmax quant stays in [-127,127] and scales back", |rng| {
+        let n = rng.range_i64(1, 128) as usize;
+        let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 10.0) as f32).collect();
+        let (q, s) = absmax_quantize(&x);
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+        assert!(s > 0.0);
+        let absmax = x.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        if absmax > 1e-5 {
+            // Max-magnitude element quantizes to ±127.
+            assert_eq!(q.iter().map(|v| v.abs()).max().unwrap(), 127);
+        }
+    });
+}
+
+#[test]
+fn prop_ternarize_values() {
+    for_all_seeds("absmean ternary values", |rng| {
+        let n = rng.range_i64(1, 64) as usize;
+        let w: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let (t, s) = absmean_ternarize(&w);
+        assert!(s > 0.0);
+        assert!(t.iter().all(|&v| (-1..=1).contains(&v)));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Kernel equivalence: every kernel == scalar reference on random inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_kernels_match_scalar() {
+    for_all_seeds("kernels == scalar reference", |rng| {
+        let n = rng.range_i64(1, 4) as usize;
+        let k = 4 * rng.range_i64(1, 24) as usize;
+        let m = rng.range_i64(1, 40) as usize;
+        let shape = GemmShape::new(n, k, m);
+        let acts = rng.int8_acts(n * k);
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        let want = scalar_gemm(&acts, &w, shape);
+        for kern in all_kernels() {
+            assert_eq!(kern.run(&acts, &w, shape), want, "{}", kern.name());
+        }
+    });
+}
+
+#[test]
+fn prop_tsar_dataflow_invariance() {
+    // The dataflow/tiling choice may never change the numeric result.
+    for_all_seeds("AP/OP produce identical results", |rng| {
+        let shape = GemmShape::new(
+            rng.range_i64(1, 3) as usize,
+            8 * rng.range_i64(1, 16) as usize,
+            rng.range_i64(1, 48) as usize,
+        );
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+        let a = TsarKernel::new(IsaConfig::C2, Dataflow::ApMin).run(&acts, &w, shape);
+        let b = TsarKernel::new(IsaConfig::C2, Dataflow::Op).run(&acts, &w, shape);
+        let c = TsarKernel::new(IsaConfig::C4, Dataflow::ApMax).run(&acts, &w, shape);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ISA encoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_encoding_roundtrip() {
+    for_all_seeds("VEX3 encode/decode round-trip", |rng| {
+        let insn = Instruction {
+            op: if rng.f64() < 0.5 { Opcode::Tlut } else { Opcode::Tgemv },
+            cfg_sel: rng.below(2) as u8,
+            dst: rng.below(16) as u8,
+            aux: rng.below(16) as u8,
+            src: rng.below(16) as u8,
+        };
+        assert_eq!(Instruction::decode(&insn.encode()).unwrap(), insn);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator sanity under random profiles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_simulator_monotonic_in_threads_for_compute() {
+    for_all_seeds("compute-bound time never grows with threads", |rng| {
+        let plat = Platform::workstation();
+        let uops = 1e6 + rng.f64() * 1e9;
+        let p = tsar::sim::KernelProfile {
+            kernel: "prop".into(),
+            shape: GemmShape::new(1, 64, 64),
+            streams: vec![tsar::sim::Stream::read_once("w", 1e4)],
+            simd_uops: uops,
+            scalar_uops: 0.0,
+        };
+        let mut last = f64::INFINITY;
+        for t in [1, 2, 4, 8, 16] {
+            let s = simulate(&p, &plat, t).seconds;
+            assert!(s <= last * 1.001);
+            last = s;
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_positive_finite() {
+    for_all_seeds("simulated time positive & finite", |rng| {
+        let plat = match rng.below(3) {
+            0 => Platform::workstation(),
+            1 => Platform::laptop(),
+            _ => Platform::mobile(),
+        };
+        let shape = GemmShape::new(
+            1 + rng.below(128) as usize,
+            8 * (1 + rng.below(512) as usize),
+            1 + rng.below(8192) as usize,
+        );
+        for kern in all_kernels() {
+            let t = 1 + rng.below(plat.cores as u64) as usize;
+            let r = simulate(&kern.profile(shape, &plat, t), &plat, t);
+            assert!(r.seconds.is_finite() && r.seconds > 0.0, "{}", kern.name());
+            assert!(r.request_bytes.is_finite() && r.request_bytes > 0.0);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kvpool_never_double_allocates() {
+    for_all_seeds("KV slots unique among live", |rng| {
+        let cap = 1 + rng.below(16) as usize;
+        let mut pool = KvSlotPool::new(cap);
+        let mut live = Vec::new();
+        for _ in 0..200 {
+            if rng.f64() < 0.55 {
+                if let Some(slot) = pool.allocate() {
+                    assert!(!live.contains(&slot), "slot double-allocated");
+                    live.push(slot);
+                }
+            } else if let Some(i) = (!live.is_empty())
+                .then(|| rng.below(live.len() as u64) as usize)
+            {
+                let slot = live.swap_remove(i);
+                pool.release(slot).unwrap();
+            }
+            assert_eq!(pool.live_count(), live.len());
+            assert_eq!(pool.available(), cap - live.len());
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_no_request_lost_or_duplicated() {
+    for_all_seeds("batcher conserves requests", |rng| {
+        let max_batch = 1 + rng.below(6) as usize;
+        let mut b = Batcher::new(max_batch);
+        let total = 1 + rng.below(40) as u64;
+        let mut submitted = 0u64;
+        let mut admitted = Vec::new();
+        let mut finished = Vec::new();
+        let mut steps = 0;
+        while (finished.len() as u64) < total && steps < 10_000 {
+            steps += 1;
+            match rng.below(3) {
+                0 if submitted < total => {
+                    b.submit(Request::new(submitted, vec![1], 4));
+                    submitted += 1;
+                }
+                1 => {
+                    if let Some(r) = b.admit() {
+                        assert!(!admitted.contains(&r.id), "duplicate admit");
+                        admitted.push(r.id);
+                        assert!(b.active_len() <= max_batch);
+                    }
+                }
+                _ => {
+                    if let Some(id) = b.next_decode() {
+                        if rng.f64() < 0.3 {
+                            b.finish(id).unwrap();
+                            assert!(!finished.contains(&id), "duplicate finish");
+                            finished.push(id);
+                        }
+                    }
+                }
+            }
+            // Submit any stragglers so the loop can drain.
+            if submitted < total && rng.f64() < 0.2 {
+                b.submit(Request::new(submitted, vec![1], 4));
+                submitted += 1;
+            }
+        }
+        // Everything admitted exactly once, in FIFO order.
+        let mut sorted = admitted.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), admitted.len());
+        for w in admitted.windows(2) {
+            assert!(w[0] < w[1], "admission must be FIFO");
+        }
+    });
+}

@@ -1,0 +1,120 @@
+//! End-to-end runtime tests: load the AOT artifacts (built by
+//! `make artifacts`), execute prefill/decode through PJRT, and check the
+//! Rust-side generation against the Python-recorded goldens.
+//!
+//! Skipped (with a visible message) when `artifacts/` has not been built
+//! — `cargo test` must be runnable before `make artifacts` in CI.
+
+use std::path::PathBuf;
+
+use tsar::coordinator::{serve::serve_all, Request, Server, ServerConfig};
+use tsar::runtime::ModelRuntime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn ref_variant_reproduces_python_golden() {
+    let dir = require_artifacts!();
+    let rt = ModelRuntime::load(&dir, "ref").expect("load ref variant");
+    let g = rt.manifest.golden.clone();
+    let toks = rt
+        .generate(&g.prompt, g.tokens.len())
+        .expect("generation");
+    assert_eq!(
+        toks, g.tokens,
+        "Rust PJRT generation must reproduce the Python golden exactly"
+    );
+}
+
+#[test]
+fn tsar_variant_matches_ref_variant() {
+    // The Pallas LUT-kernel path and the direct ternary matmul path are
+    // bit-identical in the int32 domain; greedy decoding through PJRT
+    // must therefore produce the same tokens.
+    let dir = require_artifacts!();
+    let rt_tsar = ModelRuntime::load(&dir, "tsar").expect("load tsar variant");
+    let g = rt_tsar.manifest.golden.clone();
+    let n = g.tokens.len().min(8); // keep the slower LUT path short
+    let toks = rt_tsar.generate(&g.prompt, n).expect("generation");
+    assert_eq!(toks, g.tokens[..n].to_vec());
+}
+
+#[test]
+fn prefill_is_padding_invariant() {
+    let dir = require_artifacts!();
+    let rt = ModelRuntime::load(&dir, "ref").unwrap();
+    let p = rt.manifest.config.prefill_len;
+    let prompt = [3i32, 5, 7];
+    let mut padded_zeros = vec![0i32; p];
+    padded_zeros[..3].copy_from_slice(&prompt);
+    let mut padded_junk = vec![11i32; p];
+    padded_junk[..3].copy_from_slice(&prompt);
+    let a = rt.prefill(&padded_zeros, 3).unwrap();
+    let b = rt.prefill(&padded_junk, 3).unwrap();
+    assert_eq!(a.next_token, b.next_token);
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let dir = require_artifacts!();
+    let rt = ModelRuntime::load(&dir, "ref").unwrap();
+    let g = rt.manifest.golden.clone();
+    let t1 = rt.generate(&g.prompt, 4).unwrap();
+    let t2 = rt.generate(&g.prompt, 4).unwrap();
+    assert_eq!(t1, t2);
+}
+
+#[test]
+fn server_serves_batched_requests() {
+    let dir = require_artifacts!();
+    let rt = ModelRuntime::load(&dir, "ref").unwrap();
+    let vocab = rt.manifest.config.vocab as i32;
+    let server = Server::new(rt, ServerConfig { max_batch: 3, kv_slots: 3 });
+    let requests: Vec<Request> = (0..6u64)
+        .map(|id| {
+            Request::new(
+                id,
+                vec![
+                    (1 + id as i32) % vocab,
+                    (3 + 2 * id as i32) % vocab,
+                    (7 + id as i32) % vocab,
+                ],
+                5,
+            )
+        })
+        .collect();
+    let report = serve_all(&server, requests).expect("serve");
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.total_tokens, 30);
+    assert!(report.tokens_per_s > 0.0);
+    assert!(report.prefill.p95 >= report.prefill.p50);
+}
+
+#[test]
+fn server_interleaves_under_tight_batch() {
+    // max_batch=1 degenerates to sequential serving; all requests still
+    // complete with the same token counts.
+    let dir = require_artifacts!();
+    let rt = ModelRuntime::load(&dir, "ref").unwrap();
+    let server = Server::new(rt, ServerConfig { max_batch: 1, kv_slots: 1 });
+    let requests: Vec<Request> =
+        (0..3u64).map(|id| Request::new(id, vec![2, 4, 6], 4)).collect();
+    let report = serve_all(&server, requests).expect("serve");
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.total_tokens, 12);
+}
