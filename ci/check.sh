@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 verify + formatting + best-effort pjrt build.
+#
+# The default build must stay dependency-free and green offline; the
+# pjrt feature build needs crates.io (see rust/Cargo.toml) and is
+# allowed to fail here with a visible skip message.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo
+echo "== rustfmt (advisory) =="
+if cargo fmt --version >/dev/null 2>&1; then
+  if ! cargo fmt --all -- --check; then
+    echo "WARN: rustfmt differences found (advisory only: the seed predates"
+    echo "      rustfmt enforcement; format touched files as you go)."
+  fi
+else
+  echo "SKIP: rustfmt not installed"
+fi
+
+echo
+echo "== pjrt feature build (best-effort) =="
+# The xla/anyhow dependencies are commented out in rust/Cargo.toml for
+# offline builds, so this fails unless they have been enabled on a
+# networked machine (README.md "The PJRT flow").
+if cargo build --features pjrt >/dev/null 2>&1; then
+  echo "OK: pjrt feature builds"
+else
+  echo "SKIP: pjrt feature build failed — expected offline (xla/anyhow are"
+  echo "      not vendored; see rust/Cargo.toml [features] pjrt and README.md)."
+fi
+
+echo
+echo "All required checks passed."

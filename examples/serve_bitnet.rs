@@ -1,36 +1,87 @@
-//! End-to-end serving driver (DESIGN.md §6): load the AOT-compiled
-//! BitNet-style model (built by `make artifacts`: JAX + Pallas LUT-GEMV
-//! kernel lowered to HLO text), serve a Poisson stream of batched
-//! requests through the coordinator, and report latency/throughput.
+//! End-to-end serving driver (DESIGN.md §6): serve a Poisson stream of
+//! batched requests through the coordinator and report
+//! latency/throughput.
 //!
-//!   make artifacts && cargo run --release --example serve_bitnet
+//! Default build — the simulator-costed backend (no dependencies, no
+//! artifacts): BitNet shapes + §III-D kernel plans through the timing
+//! engine, so the reported latencies are the paper-faithful model:
 //!
-//! This is the proof that all three layers compose: the Pallas kernel
-//! (L1) inside the JAX transformer (L2) executed by the Rust
-//! coordinator (L3) over PJRT, with Python nowhere on the request path.
+//!   cargo run --release --example serve_bitnet
+//!   TSAR_MODEL=BitNet-7B cargo run --release --example serve_bitnet
+//!
+//! PJRT build — load the AOT-compiled BitNet-style model (built by
+//! `make artifacts`: JAX + Pallas LUT-GEMV kernel lowered to HLO text)
+//! and execute it for real.  This is the proof that all three layers
+//! compose: the Pallas kernel (L1) inside the JAX transformer (L2)
+//! executed by the Rust coordinator (L3) over PJRT, with Python nowhere
+//! on the request path:
+//!
+//!   make artifacts && cargo run --release --features pjrt --example serve_bitnet -- artifacts
+//!
+//! Both paths drive the same generic loop over `runtime::Backend`.
 
 use std::sync::mpsc::channel;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use tsar::coordinator::{Request, Server, ServerConfig};
-use tsar::runtime::ModelRuntime;
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{Request, RequestResult, Server, ServerConfig};
+use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
+use tsar::util::error::Result;
 use tsar::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let variant = std::env::var("TSAR_VARIANT").unwrap_or_else(|_| "tsar".into());
-    let n_requests: usize = std::env::var("TSAR_REQUESTS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(12);
-    let max_new: usize = std::env::var("TSAR_MAX_NEW")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(16);
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
+fn main() -> Result<()> {
+    // Read the knobs once; max_new feeds both the request budget and
+    // the sim backend's KV window, so it must be one value.
+    let n_requests = env_usize("TSAR_REQUESTS", 12);
+    let max_new = env_usize("TSAR_MAX_NEW", 16);
+    let dir = std::env::args().nth(1);
+
+    #[cfg(feature = "pjrt")]
+    if let Some(d) = dir.as_deref() {
+        return pjrt_main(d, n_requests, max_new);
+    }
+
+    if let Some(d) = dir.as_deref() {
+        println!(
+            "note: ignoring artifacts dir {d:?} — this build has no PJRT runtime \
+             (rebuild with --features pjrt); serving on the SimBackend instead"
+        );
+    }
+    sim_main(n_requests, max_new)
+}
+
+/// Default path: the simulator-costed backend.
+fn sim_main(n_requests: usize, max_new: usize) -> Result<()> {
+    let model = std::env::var("TSAR_MODEL").unwrap_or_else(|_| "BitNet-2B-4T".into());
+    let backend = SimBackend::by_name(
+        &model,
+        Platform::workstation(),
+        SimBackendConfig {
+            prefill_len: 32,
+            max_seq: 32 + max_new + 8,
+            ..SimBackendConfig::default()
+        },
+    )?;
+    println!("== T-SAR end-to-end serving ({}) ==", backend.describe());
+    println!(
+        "decode plan: {:.2} simulated tok/s at N=1; prefill pass {:.1} ms",
+        1.0 / backend.decode_plan().pass_seconds(),
+        backend.prefill_plan().pass_seconds() * 1e3
+    );
+    drive(backend, n_requests, max_new)
+}
+
+/// PJRT path: load the AOT artifacts, check the Python golden, serve.
+#[cfg(feature = "pjrt")]
+fn pjrt_main(dir: &str, n_requests: usize, max_new: usize) -> Result<()> {
+    let variant = std::env::var("TSAR_VARIANT").unwrap_or_else(|_| "tsar".into());
     println!("== T-SAR end-to-end serving (variant: {variant}) ==");
-    let t0 = Instant::now();
-    let rt = ModelRuntime::load(&dir, &variant)?;
+    let t0 = std::time::Instant::now();
+    let rt = tsar::runtime::ModelRuntime::load(dir, &variant)?;
     println!(
         "loaded {} ({} params tensors, d={}, L={}, vocab={}) in {:.2}s",
         rt.manifest.config_name,
@@ -51,23 +102,27 @@ fn main() -> anyhow::Result<()> {
         "runtime does not reproduce the AOT golden"
     );
     println!("golden check passed: first {} tokens match Python", check.len());
+    drive(rt, n_requests, max_new)
+}
 
-    let vocab = rt.manifest.config.vocab as u64;
-    let window = rt.manifest.config.prefill_len;
-    let server = Server::new(rt, ServerConfig { max_batch: 4, kv_slots: 4 });
+/// The generic serving loop: Poisson arrivals (open-loop) with mixed
+/// prompt lengths, a collector thread printing completions, and the
+/// engine on the main thread.
+fn drive<B: Backend>(backend: B, n_requests: usize, max_new: usize) -> Result<()> {
+    let vocab = backend.config().vocab as u64;
+    let window = backend.config().prefill_len;
+    let server = Server::new(backend, ServerConfig { max_batch: 4, kv_slots: 4 });
 
-    // Poisson arrivals (open-loop) with mixed prompt lengths.
-    let mut rng = Rng::new(123);
     let lambda_per_s = 4.0;
     let (req_tx, req_rx) = channel::<Request>();
-    let (res_tx, res_rx) = channel::<tsar::coordinator::RequestResult>();
+    let (res_tx, res_rx) = channel::<RequestResult>();
 
     let producer = std::thread::spawn(move || {
         let mut rng_p = Rng::new(7);
         for id in 0..n_requests as u64 {
             let wait = rng_p.exp(lambda_per_s);
             std::thread::sleep(Duration::from_secs_f64(wait.min(0.5)));
-            let plen = 3 + rng_p.below(window as u64 / 2) as usize;
+            let plen = 3 + rng_p.below((window as u64 / 2).max(1)) as usize;
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng_p.below(vocab) as i32).collect();
             if req_tx.send(Request::new(id, prompt, max_new)).is_err() {
@@ -99,7 +154,5 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== serve report ==");
     report.print();
-    let _ = rng.next_u64();
-    println!("\nrecorded in EXPERIMENTS.md §End-to-end.");
     Ok(())
 }

@@ -34,9 +34,9 @@ impl IsaConfig {
     /// `TLUT_4×4 + TGEMV_16×16` — the paper's second kernel config.
     pub const C4: IsaConfig = IsaConfig::new(4, 4, 16, 16);
 
-    pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.k == self.c * self.s, "k must equal c*s");
-        anyhow::ensure!(
+    pub fn validate(&self) -> crate::util::error::Result<()> {
+        crate::ensure!(self.k == self.c * self.s, "k must equal c*s");
+        crate::ensure!(
             self.c == 2 || self.c == 4,
             "paper configs use c in {{2,4}}"
         );

@@ -68,12 +68,12 @@ impl Batcher {
     }
 
     /// Retire a finished sequence, freeing its batch slot.
-    pub fn finish(&mut self, id: RequestId) -> anyhow::Result<()> {
+    pub fn finish(&mut self, id: RequestId) -> crate::util::error::Result<()> {
         let idx = self
             .active
             .iter()
             .position(|&a| a == id)
-            .ok_or_else(|| anyhow::anyhow!("finish of inactive request {id}"))?;
+            .ok_or_else(|| crate::err!("finish of inactive request {id}"))?;
         self.active.remove(idx);
         if self.cursor > idx {
             self.cursor -= 1;

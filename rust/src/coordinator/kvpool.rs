@@ -48,9 +48,9 @@ impl KvSlotPool {
     }
 
     /// Release a slot back to the pool.
-    pub fn release(&mut self, slot: SlotId) -> anyhow::Result<()> {
-        anyhow::ensure!(slot.0 < self.capacity, "foreign slot {slot:?}");
-        anyhow::ensure!(self.live.remove(&slot.0), "double free of {slot:?}");
+    pub fn release(&mut self, slot: SlotId) -> crate::util::error::Result<()> {
+        crate::ensure!(slot.0 < self.capacity, "foreign slot {slot:?}");
+        crate::ensure!(self.live.remove(&slot.0), "double free of {slot:?}");
         self.free.push(slot);
         Ok(())
     }

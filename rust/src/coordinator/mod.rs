@@ -3,15 +3,17 @@
 //! The paper's system contribution is the kernel/ISA layer, so the
 //! coordinator is the serving harness a deployment wraps around it
 //! (DESIGN.md §3): a request queue feeding a continuous batcher, a
-//! prefill/decode scheduler driving the PJRT runtime, a KV-slot pool,
-//! and the paper's §III-D *adaptive kernel selector* that picks the
-//! AP/OP dataflow per layer at compile (model-load) time.
+//! prefill/decode scheduler driving any [`crate::runtime::Backend`]
+//! (the simulator-costed `SimBackend` by default, PJRT behind the
+//! `pjrt` feature), a KV-slot pool, and the paper's §III-D *adaptive
+//! kernel selector* that picks the AP/OP dataflow per layer at compile
+//! (model-load) time.
 //!
 //! Threading: std::thread + mpsc channels (tokio is not in the offline
-//! crate cache).  One engine thread owns the PJRT executables; client
-//! threads submit requests and await results over channels — the same
-//! topology a tokio implementation would have, with the async reactor
-//! replaced by blocking queues.
+//! crate cache).  One engine thread owns the backend; client threads
+//! submit requests and await results over channels — the same topology
+//! a tokio implementation would have, with the async reactor replaced
+//! by blocking queues.
 
 pub mod batcher;
 pub mod kvpool;

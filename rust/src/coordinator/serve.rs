@@ -1,4 +1,4 @@
-//! The serving engine: one thread owns the PJRT runtime and drives
+//! The serving engine: one thread owns the model backend and drives
 //! continuous batching; clients submit requests over a channel.
 //!
 //! Scheduling policy per engine iteration:
@@ -6,18 +6,26 @@
 //!   2. run one decode step for each active sequence (round-robin),
 //!   3. retire sequences that hit EOS-budget, freeing slots immediately.
 //!
-//! The AOT artifact is a batch-1 executable, so "continuous batching"
+//! The backends execute batch-1 steps, so "continuous batching"
 //! interleaves sequences at step granularity — the same policy a
 //! multi-batch executable would follow, with the batch dimension
 //! serialized (DESIGN.md §3).
+//!
+//! Timing: backends that *model* execution ([`SimBackend`]) report a
+//! simulated cost per step; the engine accumulates those on a virtual
+//! clock (steps are serialized on the engine thread, so simulated wall
+//! time is their sum) and per-request latencies come out paper-faithful.
+//! Backends that really execute (PJRT) report no cost and the engine
+//! falls back to wall-clock timing.
+//!
+//! [`SimBackend`]: crate::runtime::SimBackend
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
-use anyhow::Result;
-
-use crate::runtime::{KvCache, ModelRuntime};
+use crate::runtime::Backend;
+use crate::util::error::Result;
 
 use super::batcher::Batcher;
 use super::kvpool::KvSlotPool;
@@ -38,27 +46,38 @@ impl Default for ServerConfig {
     }
 }
 
-/// An active sequence's decode state.
-struct Active {
+/// An active sequence's decode state, generic over the backend's KV
+/// representation.
+struct Active<C> {
     req: Request,
     tokens: Vec<i32>,
-    cache: KvCache,
+    cache: C,
     pos: i32,
     queue_s: f64,
     prefill_s: f64,
     decode_s: f64,
+    /// Virtual-clock reading at admission (simulated backends).
+    admit_clock: f64,
 }
 
-/// The serving engine. Owns the runtime; `run` drains a request stream.
-pub struct Server {
-    runtime: ModelRuntime,
+/// The serving engine. Owns the backend; `run` drains a request stream.
+pub struct Server<B: Backend> {
+    backend: B,
     cfg: ServerConfig,
 }
 
-impl Server {
-    pub fn new(runtime: ModelRuntime, cfg: ServerConfig) -> Server {
+impl<B: Backend> Server<B> {
+    pub fn new(backend: B, cfg: ServerConfig) -> Server<B> {
         assert!(cfg.kv_slots >= cfg.max_batch);
-        Server { runtime, cfg }
+        Server { backend, cfg }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn into_backend(self) -> B {
+        self.backend
     }
 
     /// Serve every request from `rx` until the channel closes and all
@@ -71,10 +90,14 @@ impl Server {
         let start = Instant::now();
         let mut batcher = Batcher::new(self.cfg.max_batch);
         let mut pool = KvSlotPool::new(self.cfg.kv_slots);
-        let mut active: HashMap<RequestId, (Active, super::kvpool::SlotId)> =
+        let mut active: HashMap<RequestId, (Active<B::Cache>, super::kvpool::SlotId)> =
             HashMap::new();
         let mut results: Vec<RequestResult> = Vec::new();
         let mut open = true;
+        // Virtual clock: sum of backend-reported step costs.  Stays at
+        // zero (and unused) for backends that execute for real.
+        let mut sim_clock = 0.0f64;
+        let mut sim_timed = false;
 
         while open || batcher.has_work() {
             // Pull newly arrived requests (non-blocking unless idle).
@@ -112,13 +135,32 @@ impl Server {
                 let Some(req) = batcher.admit() else { break };
                 let slot = pool.allocate().expect("available() said so");
                 let queue_s = req.arrival.elapsed().as_secs_f64();
-                let p = self.runtime.manifest.config.prefill_len;
+                let p = self.backend.config().prefill_len;
                 let mut padded = vec![0i32; p];
                 let plen = req.prompt.len().min(p);
                 padded[..plen].copy_from_slice(&req.prompt[..plen]);
+                let admit_clock = sim_clock;
                 let t0 = Instant::now();
-                let out = self.runtime.prefill(&padded, plen as i32)?;
-                let prefill_s = t0.elapsed().as_secs_f64();
+                let out = match self.backend.prefill(&padded, plen as i32) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        // One malformed request must not take down the
+                        // engine or the rest of the batch: drop it,
+                        // free its slots, keep serving.
+                        eprintln!("request {}: prefill failed: {e}", req.id);
+                        batcher.finish(req.id)?;
+                        pool.release(slot)?;
+                        continue;
+                    }
+                };
+                let prefill_s = match out.cost_s {
+                    Some(c) => {
+                        sim_clock += c;
+                        sim_timed = true;
+                        c
+                    }
+                    None => t0.elapsed().as_secs_f64(),
+                };
                 active.insert(
                     req.id,
                     (
@@ -130,6 +172,7 @@ impl Server {
                             queue_s,
                             prefill_s,
                             decode_s: 0.0,
+                            admit_clock,
                         },
                         slot,
                     ),
@@ -142,27 +185,57 @@ impl Server {
                 .collect();
             for id in round {
                 let Some((seq, _slot)) = active.get_mut(&id) else { continue };
+                let max_seq = self.backend.config().max_seq;
                 let done = seq.tokens.len() >= seq.req.max_new_tokens
-                    || (seq.pos as usize) >= self.runtime.manifest.config.max_seq - 1;
+                    || (seq.pos as usize) >= max_seq - 1;
+                let mut failed = false;
                 if !done {
                     let t0 = Instant::now();
-                    let out =
-                        self.runtime.decode(*seq.tokens.last().unwrap(), seq.pos, &seq.cache)?;
-                    seq.decode_s += t0.elapsed().as_secs_f64();
-                    seq.tokens.push(out.next_token);
-                    seq.cache = out.cache;
-                    seq.pos += 1;
+                    match self.backend.decode(*seq.tokens.last().unwrap(), seq.pos, &seq.cache)
+                    {
+                        Ok(out) => {
+                            seq.decode_s += match out.cost_s {
+                                Some(c) => {
+                                    sim_clock += c;
+                                    sim_timed = true;
+                                    c
+                                }
+                                None => t0.elapsed().as_secs_f64(),
+                            };
+                            seq.tokens.push(out.next_token);
+                            seq.cache = out.cache;
+                            seq.pos += 1;
+                        }
+                        Err(e) => {
+                            // Same policy as prefill: one failing
+                            // sequence must not take down the engine.
+                            // Retire it with the tokens it has.
+                            eprintln!(
+                                "request {}: decode failed: {e}; retiring with partial output",
+                                seq.req.id
+                            );
+                            failed = true;
+                        }
+                    }
                 }
-                let done = seq.tokens.len() >= seq.req.max_new_tokens
-                    || (seq.pos as usize) >= self.runtime.manifest.config.max_seq - 1;
+                let done = failed
+                    || seq.tokens.len() >= seq.req.max_new_tokens
+                    || (seq.pos as usize) >= max_seq - 1;
                 if done {
                     // 3. Retire.
                     let (seq, slot) = active.remove(&id).unwrap();
                     batcher.finish(id)?;
                     pool.release(slot)?;
+                    let total_s = if sim_timed {
+                        // Virtual residency (including steps spent on
+                        // interleaved neighbours) + real queue wait.
+                        seq.queue_s + (sim_clock - seq.admit_clock)
+                    } else {
+                        seq.req.arrival.elapsed().as_secs_f64()
+                    };
                     let res = RequestResult {
                         id,
-                        total_s: seq.req.arrival.elapsed().as_secs_f64(),
+                        total_s,
                         tokens: seq.tokens,
                         queue_s: seq.queue_s,
                         prefill_s: seq.prefill_s,
@@ -174,14 +247,15 @@ impl Server {
             }
         }
 
-        ServeReport::from(&results, start.elapsed().as_secs_f64())
-            .ok_or_else(|| anyhow::anyhow!("no requests served"))
+        let wall_s = if sim_timed { sim_clock } else { start.elapsed().as_secs_f64() };
+        ServeReport::from(&results, wall_s)
+            .ok_or_else(|| crate::err!("no requests served"))
     }
 }
 
 /// Convenience: serve a fixed list of requests synchronously (used by
 /// the examples and integration tests).
-pub fn serve_all(server: &Server, requests: Vec<Request>) -> Result<ServeReport> {
+pub fn serve_all<B: Backend>(server: &Server<B>, requests: Vec<Request>) -> Result<ServeReport> {
     let (req_tx, req_rx) = channel();
     let (res_tx, _res_rx) = channel();
     for r in requests {

@@ -25,15 +25,18 @@
 //!   slice (TSMC 28 nm analytical gate model).
 //! * [`energy`] — CPU package power + Jetson AGX Orin comparison model
 //!   (Table III).
-//! * [`runtime`] — PJRT CPU client: loads the AOT HLO-text artifacts
+//! * [`runtime`] — the model-backend abstraction the serving stack is
+//!   written against: `Backend` with the default simulator-costed
+//!   `SimBackend`, and the PJRT CPU client (`ModelRuntime`, behind the
+//!   `pjrt` cargo feature) that loads the AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py` and executes them.
 //! * [`coordinator`] — the serving layer: request queue, continuous
 //!   batcher, prefill/decode scheduler, KV-slot manager and the paper's
 //!   adaptive AP/OP kernel selector (§III-D).
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
-//! * [`util`] — in-tree JSON, PRNG, statistics (offline environment: no
-//!   serde/rand/criterion available).
+//! * [`util`] — in-tree errors, JSON, PRNG, statistics (offline
+//!   environment: no anyhow/serde/rand/criterion available).
 
 pub mod bench;
 pub mod config;
@@ -48,3 +51,5 @@ pub mod sim;
 pub mod simd;
 pub mod tsar;
 pub mod util;
+
+pub use util::error::{Error, Result};

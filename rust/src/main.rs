@@ -1,18 +1,21 @@
 //! `tsar-cli` — the leader entrypoint: report harnesses, the simulator,
-//! kernel planning and the PJRT serving loop, behind a hand-rolled CLI
-//! (clap is not in the offline crate cache).
+//! kernel planning and the serving loop, behind a hand-rolled CLI (clap
+//! is not in the offline crate cache).
+//!
+//! `serve` runs on the default [`SimBackend`] (simulator-costed, zero
+//! dependencies); pass `--artifacts DIR` on a `--features pjrt` build to
+//! serve the AOT-compiled model through PJRT instead.
 
 use std::sync::mpsc::channel;
-
-use anyhow::{Context, Result};
 
 use tsar::bench;
 use tsar::config::platforms::{Platform, PlatformKind};
 use tsar::coordinator::{select_plan, Request, Server, ServerConfig};
 use tsar::kernels::all_kernels;
 use tsar::model::zoo;
-use tsar::runtime::ModelRuntime;
+use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
 use tsar::sim::{simulate, GemmShape};
+use tsar::util::error::{Context, Result};
 use tsar::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -22,7 +25,9 @@ USAGE:
   tsar-cli report <fig1a|fig1c|fig2c|fig2d|fig8|fig9|fig10|table1|table2|table3|llc|ablations|all>
   tsar-cli simulate --shape NxKxM [--platform workstation|laptop|mobile] [--threads T]
   tsar-cli plan --model <name> [--platform P] [--n N]
-  tsar-cli serve [--artifacts DIR] [--variant tsar|ref] [--requests R] [--max-new T] [--batch B]
+  tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
+                 [--requests R] [--max-new T] [--batch B]
+                 [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
 ";
@@ -94,7 +99,7 @@ fn report(which: &str) -> Result<()> {
             println!();
             bench::ablations::all();
         }
-        other => anyhow::bail!("unknown report {other:?}"),
+        other => tsar::bail!("unknown report {other:?}"),
     }
     Ok(())
 }
@@ -104,6 +109,15 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+/// Numeric flag with a default; a present-but-unparsable value is an
+/// error, never a silent fallback.
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T> {
+    match flag(args, name) {
+        Some(v) => v.parse::<T>().map_err(|_| tsar::err!("{name} expects a number, got {v:?}")),
+        None => Ok(default),
+    }
 }
 
 fn parse_platform(args: &[String]) -> Platform {
@@ -120,7 +134,7 @@ fn simulate_cmd(args: &[String]) -> Result<()> {
         .split('x')
         .map(|p| p.parse::<usize>().context("bad shape"))
         .collect::<Result<_>>()?;
-    anyhow::ensure!(dims.len() == 3, "--shape must be NxKxM");
+    tsar::ensure!(dims.len() == 3, "--shape must be NxKxM");
     let shape = GemmShape::new(dims[0], dims[1], dims[2]);
     let plat = parse_platform(args);
     let threads = flag(args, "--threads")
@@ -172,25 +186,83 @@ fn plan_cmd(args: &[String]) -> Result<()> {
 }
 
 fn serve_cmd(args: &[String]) -> Result<()> {
-    let dir = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
-    let variant = flag(args, "--variant").unwrap_or_else(|| "tsar".into());
-    let n_req: usize = flag(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(8);
-    let max_new: usize = flag(args, "--max-new").map(|v| v.parse().unwrap()).unwrap_or(16);
-    let batch: usize = flag(args, "--batch").map(|v| v.parse().unwrap()).unwrap_or(4);
+    let n_req: usize = parse_flag(args, "--requests", 8)?;
+    let max_new: usize = parse_flag(args, "--max-new", 16)?;
+    let batch: usize = parse_flag(args, "--batch", 4)?;
+    tsar::ensure!(max_new >= 1, "--max-new must be >= 1");
+    tsar::ensure!(batch >= 1, "--batch must be >= 1");
 
+    if let Some(dir) = flag(args, "--artifacts") {
+        return serve_pjrt(&dir, args, n_req, max_new, batch);
+    }
+
+    let model = flag(args, "--model").unwrap_or_else(|| "BitNet-2B-4T".into());
+    let plat = parse_platform(args);
+    let threads: usize = parse_flag(args, "--threads", 0)?;
+    let prefill_len: usize = parse_flag(args, "--prefill-len", 32)?;
+    tsar::ensure!(prefill_len >= 1, "--prefill-len must be >= 1");
+    let backend = SimBackend::by_name(
+        &model,
+        plat,
+        SimBackendConfig {
+            prefill_len,
+            max_seq: prefill_len + max_new + 8,
+            threads,
+            ..SimBackendConfig::default()
+        },
+    )?;
+    println!("adaptive decode plan (§III-D):");
+    for l in &backend.decode_plan().layers {
+        println!("  {}", l.describe());
+    }
+    drive(backend, n_req, max_new, batch)
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    dir: &str,
+    args: &[String],
+    n_req: usize,
+    max_new: usize,
+    batch: usize,
+) -> Result<()> {
+    let variant = flag(args, "--variant").unwrap_or_else(|| "tsar".into());
     println!("loading artifacts from {dir} (variant {variant}) ...");
-    let rt = ModelRuntime::load(&dir, &variant)?;
-    let cfg = rt.manifest.config.clone();
+    let rt = tsar::runtime::ModelRuntime::load(dir, &variant)?;
+    drive(rt, n_req, max_new, batch)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(
+    _dir: &str,
+    _args: &[String],
+    _n_req: usize,
+    _max_new: usize,
+    _batch: usize,
+) -> Result<()> {
+    tsar::bail!(
+        "--artifacts needs the PJRT runtime; rebuild with `cargo build --features pjrt` \
+         (see README.md for the dependency note), or drop --artifacts to serve on the \
+         default SimBackend"
+    )
+}
+
+/// Drive any backend through the coordinator with a synthetic request
+/// mix and print the serve report.
+fn drive<B: Backend>(backend: B, n_req: usize, max_new: usize, batch: usize) -> Result<()> {
+    let cfg = backend.config().clone();
+    println!("serving on {}", backend.describe());
     println!(
-        "model: {} (d={}, L={}, vocab={}), prefill window {}",
-        rt.manifest.config_name, cfg.d_model, cfg.n_layers, cfg.vocab, cfg.prefill_len
+        "window: prefill {} tokens, KV capacity {}, vocab {}",
+        cfg.prefill_len, cfg.max_seq, cfg.vocab
     );
 
-    let server = Server::new(rt, ServerConfig { max_batch: batch, kv_slots: batch });
+    let server = Server::new(backend, ServerConfig { max_batch: batch, kv_slots: batch });
     let mut rng = Rng::new(7);
     let requests: Vec<Request> = (0..n_req as u64)
         .map(|id| {
-            let plen = rng.range_i64(3, cfg.prefill_len as i64 - 1) as usize;
+            let hi = (cfg.prefill_len as i64 - 1).max(3);
+            let plen = rng.range_i64(3, hi) as usize;
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
             Request::new(id, prompt, max_new)

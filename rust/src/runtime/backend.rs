@@ -1,0 +1,76 @@
+//! The backend abstraction the serving stack is written against
+//! (DESIGN.md §3): everything the coordinator needs from a loaded model
+//! — the prefill/decode step surface plus the per-sequence KV state it
+//! threads between steps.
+//!
+//! Two implementations ship in-tree:
+//!
+//! * [`super::SimBackend`] (default build) — routes token steps through
+//!   the `model` shape tables, the §III-D adaptive kernel selector and
+//!   the `sim` timing engine, so serving latency numbers stay
+//!   paper-faithful without any external runtime.
+//! * [`super::ModelRuntime`] (`--features pjrt`) — the PJRT CPU client
+//!   executing the AOT HLO-text artifacts built by
+//!   `python/compile/aot.py`.
+
+use crate::util::error::Result;
+
+use super::manifest::ModelConfig;
+
+/// One prefill/decode step's result, generic over the backend's
+/// KV-cache representation.
+pub struct Step<C> {
+    pub next_token: i32,
+    pub cache: C,
+    /// Simulated execution seconds for this step, when the backend
+    /// *models* time instead of spending it ([`super::SimBackend`]).
+    /// Real backends return `None` and the server falls back to
+    /// wall-clock timing.
+    pub cost_s: Option<f64>,
+}
+
+/// A loaded model an engine thread can drive: batch-1 prefill/decode
+/// steps over explicit per-sequence KV state.
+pub trait Backend {
+    /// Per-sequence KV state threaded between steps by the scheduler.
+    type Cache;
+
+    /// Architecture + serving-window description of the loaded model.
+    fn config(&self) -> &ModelConfig;
+
+    /// Human-readable identity (model/variant) for logs.
+    fn describe(&self) -> String;
+
+    /// Run prefill over a padded prompt. `tokens` must have exactly
+    /// `config().prefill_len` entries; `prompt_len` is the real prompt
+    /// length (padding beyond it must not affect the result).
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<Self::Cache>>;
+
+    /// One greedy decode step: feed `token` at position `pos` against
+    /// `cache`, producing the next token and the successor cache.
+    fn decode(&self, token: i32, pos: i32, cache: &Self::Cache) -> Result<Step<Self::Cache>>;
+
+    /// Greedy generation: prefill + `n_new - 1` decode steps.
+    fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        let p = self.config().prefill_len;
+        crate::ensure!(prompt.len() <= p, "prompt longer than prefill window");
+        crate::ensure!(n_new >= 1, "n_new must be >= 1");
+        let mut padded = vec![0i32; p];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let step = self.prefill(&padded, prompt.len() as i32)?;
+        let mut toks = vec![step.next_token];
+        let mut cache = step.cache;
+        let mut pos = prompt.len() as i32;
+        for _ in 1..n_new {
+            crate::ensure!(
+                (pos as usize) < self.config().max_seq,
+                "KV cache exhausted"
+            );
+            let s = self.decode(*toks.last().unwrap(), pos, &cache)?;
+            toks.push(s.next_token);
+            cache = s.cache;
+            pos += 1;
+        }
+        Ok(toks)
+    }
+}

@@ -3,8 +3,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,7 +17,7 @@ impl DType {
         match s {
             "f32" => Ok(DType::F32),
             "i32" => Ok(DType::I32),
-            other => anyhow::bail!("unsupported dtype {other:?}"),
+            other => crate::bail!("unsupported dtype {other:?}"),
         }
     }
 
@@ -100,7 +99,7 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let j = Json::parse(text).map_err(|e| crate::err!("{e}"))?;
 
         let cfg = j.req("config")?;
         let usize_of = |node: &Json, key: &str| -> Result<usize> {

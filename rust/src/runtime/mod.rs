@@ -1,205 +1,31 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them on the request path.
+//! Model runtimes behind one serving-facing abstraction (DESIGN.md §3).
 //!
-//! Python runs only at build time; this module is everything the serving
-//! binary needs at run time: the manifest (JSON), the packed parameter
-//! file (`weights.bin`), and the PJRT CPU client.  Parameters are
-//! uploaded to device buffers once at load; each inference step passes
-//! borrowed buffers (`execute_b`), so the hot loop never re-copies
-//! weights.
+//! [`Backend`] is the surface the coordinator drives: batch-1
+//! prefill/decode steps over explicit per-sequence KV state, plus the
+//! model/window description ([`ModelConfig`]).  Implementations:
 //!
-//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
-//! 0.5.1 rejects jax≥0.5's serialized protos (64-bit instruction ids);
-//! the text parser reassigns ids.
+//! * [`SimBackend`] (default) — functional token steps costed by the
+//!   §III-D adaptive kernel plan through the `sim` timing engine; the
+//!   whole serving stack runs offline with zero dependencies.
+//! * [`ModelRuntime`] (`--features pjrt`) — the PJRT CPU client
+//!   executing AOT HLO-text artifacts from `python/compile/aot.py`
+//!   (DESIGN.md §4).  The `xla`/`anyhow` crates are only reachable
+//!   through this feature.
+//!
+//! [`manifest`] (the typed view of `artifacts/manifest.json`) stays in
+//! the default build: its [`ModelConfig`] doubles as the backend
+//! description and the parser is plain in-tree JSON.
 
+pub mod backend;
 pub mod manifest;
+pub mod sim_backend;
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{Context, Result};
+pub use backend::{Backend, Step};
+pub use manifest::{DType, EntryPoint, Manifest, ModelConfig, ParamMeta};
+pub use sim_backend::{SimBackend, SimBackendConfig, SimKvCache};
 
-pub use manifest::{DType, EntryPoint, Manifest, ParamMeta};
-
-/// A loaded model variant ("tsar" or "ref"): compiled prefill + decode
-/// executables with parameters resident on device.
-pub struct ModelRuntime {
-    pub dir: PathBuf,
-    pub manifest: Manifest,
-    pub variant: String,
-    client: xla::PjRtClient,
-    prefill_exe: xla::PjRtLoadedExecutable,
-    decode_exe: xla::PjRtLoadedExecutable,
-    prefill_params: Vec<xla::PjRtBuffer>,
-    decode_params: Vec<xla::PjRtBuffer>,
-}
-
-/// The KV cache travels between steps as a pair of literals.
-pub struct KvCache {
-    pub k: xla::Literal,
-    pub v: xla::Literal,
-}
-
-/// One decode/prefill step's result.
-pub struct StepOut {
-    pub next_token: i32,
-    pub cache: KvCache,
-}
-
-impl ModelRuntime {
-    /// Load a variant from an artifacts directory.
-    pub fn load(dir: impl AsRef<Path>, variant: &str) -> Result<ModelRuntime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .context("loading manifest.json")?;
-        let client = xla::PjRtClient::cpu()?;
-
-        let compile = |phase: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let ep = manifest.entrypoint(&format!("{phase}_{variant}"))?;
-            let path = dir.join(&ep.hlo);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let prefill_exe = compile("prefill")?;
-        let decode_exe = compile("decode")?;
-
-        let weights = std::fs::read(dir.join(&manifest.weights_bin))
-            .context("reading weights.bin")?;
-        let upload = |phase: &str| -> Result<Vec<xla::PjRtBuffer>> {
-            let ep = manifest.entrypoint(&format!("{phase}_{variant}"))?;
-            ep.param_args
-                .iter()
-                .map(|name| {
-                    let meta = manifest.param(name)?;
-                    param_buffer(&client, meta, &weights)
-                })
-                .collect()
-        };
-        let prefill_params = upload("prefill")?;
-        let decode_params = upload("decode")?;
-
-        Ok(ModelRuntime {
-            dir,
-            manifest,
-            variant: variant.to_string(),
-            client,
-            prefill_exe,
-            decode_exe,
-            prefill_params,
-            decode_params,
-        })
-    }
-
-    /// Run prefill over a padded prompt. `tokens` must have exactly
-    /// `prefill_len` entries; `prompt_len` is the real prompt length.
-    pub fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<StepOut> {
-        let p = self.manifest.config.prefill_len;
-        anyhow::ensure!(tokens.len() == p, "expected {p} padded tokens");
-        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[p], None)?;
-        let len_buf = self.client.buffer_from_host_buffer(&[prompt_len], &[], None)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
-        args.extend(self.prefill_params.iter());
-        let out = self.prefill_exe.execute_b(&args)?;
-        self.unpack(out)
-    }
-
-    /// One greedy decode step.
-    pub fn decode(&self, token: i32, pos: i32, cache: &KvCache) -> Result<StepOut> {
-        let tok = self.client.buffer_from_host_buffer(&[token], &[], None)?;
-        let pos_b = self.client.buffer_from_host_buffer(&[pos], &[], None)?;
-        let k = self.client.buffer_from_host_literal(None, &cache.k)?;
-        let v = self.client.buffer_from_host_literal(None, &cache.v)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok, &pos_b, &k, &v];
-        args.extend(self.decode_params.iter());
-        let out = self.decode_exe.execute_b(&args)?;
-        self.unpack(out)
-    }
-
-    fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<StepOut> {
-        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty result");
-        let lit = out[0][0].to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        anyhow::ensure!(parts.len() == 3, "expected 3-tuple output");
-        let mut it = parts.into_iter();
-        let next = it.next().unwrap().to_vec::<i32>()?[0];
-        let k = it.next().unwrap();
-        let v = it.next().unwrap();
-        Ok(StepOut { next_token: next, cache: KvCache { k, v } })
-    }
-
-    /// Greedy generation: prefill + n_new-1 decode steps.
-    pub fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
-        let p = self.manifest.config.prefill_len;
-        anyhow::ensure!(prompt.len() <= p, "prompt longer than prefill window");
-        let mut padded = vec![0i32; p];
-        padded[..prompt.len()].copy_from_slice(prompt);
-        let step = self.prefill(&padded, prompt.len() as i32)?;
-        let mut toks = vec![step.next_token];
-        let mut cache = step.cache;
-        let mut pos = prompt.len() as i32;
-        for _ in 1..n_new {
-            anyhow::ensure!(
-                (pos as usize) < self.manifest.config.max_seq,
-                "KV cache exhausted"
-            );
-            let s = self.decode(*toks.last().unwrap(), pos, &cache)?;
-            toks.push(s.next_token);
-            cache = s.cache;
-            pos += 1;
-        }
-        Ok(toks)
-    }
-}
-
-/// Build a device buffer for one parameter from the packed weights file.
-fn param_buffer(
-    client: &xla::PjRtClient,
-    meta: &ParamMeta,
-    weights: &[u8],
-) -> Result<xla::PjRtBuffer> {
-    let bytes = weights
-        .get(meta.offset..meta.offset + meta.nbytes)
-        .with_context(|| format!("param {} out of range", meta.name))?;
-    let dims: Vec<usize> = meta.shape.clone();
-    let n = meta.elem_count();
-    match meta.dtype {
-        DType::F32 => {
-            let mut v = vec![0f32; n];
-            bytemuck_cast(bytes, &mut v);
-            Ok(client.buffer_from_host_buffer(&v, &dims, None)?)
-        }
-        DType::I32 => {
-            let mut v = vec![0i32; n];
-            bytemuck_cast(bytes, &mut v);
-            Ok(client.buffer_from_host_buffer(&v, &dims, None)?)
-        }
-    }
-}
-
-/// Little-endian byte reinterpretation (manifest data is LE by
-/// construction; x86-64/aarch64 targets are LE).
-fn bytemuck_cast<T: Copy>(bytes: &[u8], out: &mut [T]) {
-    let want = std::mem::size_of_val(out);
-    assert_eq!(bytes.len(), want, "byte length mismatch");
-    unsafe {
-        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, want);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    // The runtime requires built artifacts; end-to-end coverage lives in
-    // rust/tests/runtime_e2e.rs (skipped when artifacts/ is absent).
-
-    #[test]
-    fn bytemuck_roundtrip() {
-        let src: Vec<f32> = vec![1.5, -2.25, 0.0, 3.0e9];
-        let bytes: Vec<u8> = src.iter().flat_map(|f| f.to_le_bytes()).collect();
-        let mut dst = vec![0f32; 4];
-        super::bytemuck_cast(&bytes, &mut dst);
-        assert_eq!(src, dst);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{KvCache, ModelRuntime, StepOut};

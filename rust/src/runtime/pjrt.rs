@@ -1,0 +1,234 @@
+//! PJRT-backed [`Backend`] (`--features pjrt`): load the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` and execute them.
+//!
+//! Python runs only at build time; this module is everything the serving
+//! binary needs at run time: the manifest (JSON), the packed parameter
+//! file (`weights.bin`), and the PJRT CPU client.  Parameters are
+//! uploaded to device buffers once at load; each inference step passes
+//! borrowed buffers (`execute_b`), so the hot loop never re-copies
+//! weights.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md §4): xla_extension
+//! 0.5.1 rejects jax≥0.5's serialized protos (64-bit instruction ids);
+//! the text parser reassigns ids.
+//!
+//! This module is the only place the `xla` and `anyhow` crates are
+//! reachable; the default offline build compiles without them (see
+//! `rust/Cargo.toml` for how to enable the feature).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, Step};
+use super::manifest::{DType, Manifest, ModelConfig, ParamMeta};
+
+/// Bridge `anyhow`-reported PJRT failures into the crate error type the
+/// [`Backend`] trait (and the default build) uses.
+impl From<anyhow::Error> for crate::util::error::Error {
+    fn from(e: anyhow::Error) -> crate::util::error::Error {
+        crate::util::error::Error::msg(format!("{e:#}"))
+    }
+}
+
+/// A loaded model variant ("tsar" or "ref"): compiled prefill + decode
+/// executables with parameters resident on device.
+pub struct ModelRuntime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub variant: String,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    prefill_params: Vec<xla::PjRtBuffer>,
+    decode_params: Vec<xla::PjRtBuffer>,
+}
+
+/// The KV cache travels between steps as a pair of literals.
+pub struct KvCache {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+}
+
+/// One decode/prefill step's result.
+pub struct StepOut {
+    pub next_token: i32,
+    pub cache: KvCache,
+}
+
+impl ModelRuntime {
+    /// Load a variant from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>, variant: &str) -> Result<ModelRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .context("loading manifest.json")?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |phase: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let ep = manifest
+                .entrypoint(&format!("{phase}_{variant}"))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let path = dir.join(&ep.hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile("prefill")?;
+        let decode_exe = compile("decode")?;
+
+        let weights = std::fs::read(dir.join(&manifest.weights_bin))
+            .context("reading weights.bin")?;
+        let upload = |phase: &str| -> Result<Vec<xla::PjRtBuffer>> {
+            let ep = manifest
+                .entrypoint(&format!("{phase}_{variant}"))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            ep.param_args
+                .iter()
+                .map(|name| {
+                    let meta = manifest.param(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+                    param_buffer(&client, meta, &weights)
+                })
+                .collect()
+        };
+        let prefill_params = upload("prefill")?;
+        let decode_params = upload("decode")?;
+
+        Ok(ModelRuntime {
+            dir,
+            manifest,
+            variant: variant.to_string(),
+            client,
+            prefill_exe,
+            decode_exe,
+            prefill_params,
+            decode_params,
+        })
+    }
+
+    /// Run prefill over a padded prompt. `tokens` must have exactly
+    /// `prefill_len` entries; `prompt_len` is the real prompt length.
+    pub fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<StepOut> {
+        let p = self.manifest.config.prefill_len;
+        anyhow::ensure!(tokens.len() == p, "expected {p} padded tokens");
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[p], None)?;
+        let len_buf = self.client.buffer_from_host_buffer(&[prompt_len], &[], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(self.prefill_params.iter());
+        let out = self.prefill_exe.execute_b(&args)?;
+        self.unpack(out)
+    }
+
+    /// One greedy decode step.
+    pub fn decode(&self, token: i32, pos: i32, cache: &KvCache) -> Result<StepOut> {
+        let tok = self.client.buffer_from_host_buffer(&[token], &[], None)?;
+        let pos_b = self.client.buffer_from_host_buffer(&[pos], &[], None)?;
+        let k = self.client.buffer_from_host_literal(None, &cache.k)?;
+        let v = self.client.buffer_from_host_literal(None, &cache.v)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok, &pos_b, &k, &v];
+        args.extend(self.decode_params.iter());
+        let out = self.decode_exe.execute_b(&args)?;
+        self.unpack(out)
+    }
+
+    fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<StepOut> {
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty result");
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "expected 3-tuple output");
+        let mut it = parts.into_iter();
+        let next = it.next().unwrap().to_vec::<i32>()?[0];
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        Ok(StepOut { next_token: next, cache: KvCache { k, v } })
+    }
+
+    // Greedy generation comes from the Backend trait's provided
+    // `generate` (one copy of the prefill+decode loop for both
+    // backends).
+}
+
+impl Backend for ModelRuntime {
+    type Cache = KvCache;
+
+    fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{} (variant {})", self.manifest.config_name, self.variant)
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        prompt_len: i32,
+    ) -> crate::util::error::Result<Step<KvCache>> {
+        let out = ModelRuntime::prefill(self, tokens, prompt_len)?;
+        Ok(Step { next_token: out.next_token, cache: out.cache, cost_s: None })
+    }
+
+    fn decode(
+        &self,
+        token: i32,
+        pos: i32,
+        cache: &KvCache,
+    ) -> crate::util::error::Result<Step<KvCache>> {
+        let out = ModelRuntime::decode(self, token, pos, cache)?;
+        Ok(Step { next_token: out.next_token, cache: out.cache, cost_s: None })
+    }
+}
+
+/// Build a device buffer for one parameter from the packed weights file.
+fn param_buffer(
+    client: &xla::PjRtClient,
+    meta: &ParamMeta,
+    weights: &[u8],
+) -> Result<xla::PjRtBuffer> {
+    let bytes = weights
+        .get(meta.offset..meta.offset + meta.nbytes)
+        .with_context(|| format!("param {} out of range", meta.name))?;
+    let dims: Vec<usize> = meta.shape.clone();
+    let n = meta.elem_count();
+    match meta.dtype {
+        DType::F32 => {
+            let mut v = vec![0f32; n];
+            bytemuck_cast(bytes, &mut v);
+            Ok(client.buffer_from_host_buffer(&v, &dims, None)?)
+        }
+        DType::I32 => {
+            let mut v = vec![0i32; n];
+            bytemuck_cast(bytes, &mut v);
+            Ok(client.buffer_from_host_buffer(&v, &dims, None)?)
+        }
+    }
+}
+
+/// Little-endian byte reinterpretation (manifest data is LE by
+/// construction; x86-64/aarch64 targets are LE).
+fn bytemuck_cast<T: Copy>(bytes: &[u8], out: &mut [T]) {
+    let want = std::mem::size_of_val(out);
+    assert_eq!(bytes.len(), want, "byte length mismatch");
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, want);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The runtime requires built artifacts; end-to-end coverage lives in
+    // rust/tests/runtime_e2e.rs (gated on the pjrt feature and skipped
+    // when artifacts/ is absent).
+
+    #[test]
+    fn bytemuck_roundtrip() {
+        let src: Vec<f32> = vec![1.5, -2.25, 0.0, 3.0e9];
+        let bytes: Vec<u8> = src.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let mut dst = vec![0f32; 4];
+        super::bytemuck_cast(&bytes, &mut dst);
+        assert_eq!(src, dst);
+    }
+}

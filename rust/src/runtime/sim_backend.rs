@@ -1,0 +1,265 @@
+//! The default, dependency-free backend: token steps are *functional*
+//! (a deterministic seeded token stream stands in for real logits,
+//! exactly like the synthetic ternary checkpoints of `model::zoo`) while
+//! per-step *cost* comes from the §III-D adaptive kernel plan run
+//! through the `sim` timing engine — so coordinator-level latency and
+//! throughput numbers stay paper-faithful (DESIGN.md §3).
+//!
+//! The KV cache substitute is the token history: that is the exact
+//! information content of a real KV cache for a deterministic model, and
+//! it keeps the scheduler honest (prefill/decode must thread state
+//! between steps just like the PJRT path).
+
+use crate::config::platforms::Platform;
+use crate::coordinator::selector::{select_plan, ModelPlan};
+use crate::model::zoo::{self, ModelSpec};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::backend::{Backend, Step};
+use super::manifest::ModelConfig;
+
+/// Serving-window parameters of a [`SimBackend`] (the counterpart of the
+/// AOT manifest's `prefill_len` / `max_seq`).
+#[derive(Debug, Clone, Copy)]
+pub struct SimBackendConfig {
+    /// Padded prompt window (every prefill processes exactly this many
+    /// tokens, like the batch-1 AOT executable).
+    pub prefill_len: usize,
+    /// KV capacity in tokens.
+    pub max_seq: usize,
+    /// Simulated thread count; 0 = the platform's default protocol
+    /// thread count.
+    pub threads: usize,
+    /// Seed of the synthetic token stream.
+    pub seed: u64,
+}
+
+impl Default for SimBackendConfig {
+    fn default() -> Self {
+        SimBackendConfig { prefill_len: 32, max_seq: 160, threads: 0, seed: 0x7E54 }
+    }
+}
+
+/// Per-sequence state: the token history (prompt + generated tokens).
+#[derive(Debug, Clone)]
+pub struct SimKvCache {
+    history: Vec<i32>,
+}
+
+impl SimKvCache {
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+}
+
+/// Simulator-backed [`Backend`]: shape tables + kernel selector + timing
+/// engine behind the serving API.
+pub struct SimBackend {
+    spec: &'static ModelSpec,
+    platform: Platform,
+    threads: usize,
+    config: ModelConfig,
+    seed: u64,
+    prefill_plan: ModelPlan,
+    decode_plan: ModelPlan,
+}
+
+impl SimBackend {
+    /// Build a backend for `spec` on `platform`: runs the §III-D
+    /// compile-time kernel selection for both phases up front, exactly
+    /// like model-load time in the paper's framework.
+    pub fn new(spec: &'static ModelSpec, platform: Platform, cfg: SimBackendConfig) -> SimBackend {
+        assert!(cfg.prefill_len >= 1);
+        assert!(cfg.max_seq > cfg.prefill_len, "max_seq must exceed the prefill window");
+        let threads = if cfg.threads == 0 { platform.threads } else { cfg.threads };
+        let prefill_plan = select_plan(spec, &platform, cfg.prefill_len, threads);
+        let decode_plan = select_plan(spec, &platform, 1, threads);
+        let config = ModelConfig {
+            vocab: spec.vocab,
+            d_model: spec.d_model,
+            n_layers: spec.layers,
+            n_heads: spec.n_heads,
+            ffn_dim: spec.ffn_dim,
+            max_seq: cfg.max_seq,
+            prefill_len: cfg.prefill_len,
+        };
+        SimBackend {
+            spec,
+            platform,
+            threads,
+            config,
+            seed: cfg.seed,
+            prefill_plan,
+            decode_plan,
+        }
+    }
+
+    /// Look up `name` in the model zoo and build a backend for it.
+    pub fn by_name(name: &str, platform: Platform, cfg: SimBackendConfig) -> Result<SimBackend> {
+        let spec = zoo::by_name(name)
+            .ok_or_else(|| crate::err!("unknown model {name:?} (see `tsar-cli models`)"))?;
+        Ok(SimBackend::new(spec, platform, cfg))
+    }
+
+    pub fn spec(&self) -> &'static ModelSpec {
+        self.spec
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The adaptive kernel plan driving decode-step cost (N = 1).
+    pub fn decode_plan(&self) -> &ModelPlan {
+        &self.decode_plan
+    }
+
+    /// The adaptive kernel plan driving prefill cost (N = prefill_len).
+    pub fn prefill_plan(&self) -> &ModelPlan {
+        &self.prefill_plan
+    }
+
+    /// Deterministic next token from a history: FNV-1a fold of the
+    /// tokens seeds one PRNG draw.  Same (seed, history) → same token,
+    /// which gives the PJRT path's determinism and padding-invariance
+    /// properties for free.
+    fn next_token(&self, history: &[i32]) -> i32 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
+        for &t in history {
+            h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let mut rng = Rng::new(h);
+        rng.below(self.config.vocab as u64) as i32
+    }
+}
+
+impl Backend for SimBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sim:{} on {} ({} threads)",
+            self.spec.name,
+            self.platform.kind.name(),
+            self.threads
+        )
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        let p = self.config.prefill_len;
+        crate::ensure!(tokens.len() == p, "expected {p} padded tokens");
+        crate::ensure!(
+            prompt_len >= 1 && prompt_len as usize <= p,
+            "prompt_len {prompt_len} outside the prefill window"
+        );
+        let history: Vec<i32> = tokens[..prompt_len as usize].to_vec();
+        let next_token = self.next_token(&history);
+        Ok(Step {
+            next_token,
+            cache: SimKvCache { history },
+            cost_s: Some(self.prefill_plan.pass_seconds()),
+        })
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        crate::ensure!(
+            (pos as usize) < self.config.max_seq,
+            "KV cache exhausted at pos {pos}"
+        );
+        let mut history = cache.history.clone();
+        history.push(token);
+        let next_token = self.next_token(&history);
+        Ok(Step {
+            next_token,
+            cache: SimKvCache { history },
+            cost_s: Some(self.decode_plan.pass_seconds()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SimBackend {
+        SimBackend::by_name(
+            "BitNet-125M",
+            Platform::workstation(),
+            SimBackendConfig { prefill_len: 8, max_seq: 32, threads: 0, seed: 1 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let e = SimBackend::by_name(
+            "NoSuchNet",
+            Platform::workstation(),
+            SimBackendConfig::default(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("NoSuchNet"));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let b = backend();
+        let t1 = b.generate(&[3, 5, 7], 6).unwrap();
+        let t2 = b.generate(&[3, 5, 7], 6).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), 6);
+        assert!(t1.iter().all(|&t| t >= 0 && (t as usize) < b.config().vocab));
+        // A different prompt diverges (the stream depends on history).
+        let t3 = b.generate(&[3, 5, 8], 6).unwrap();
+        assert_ne!(t1, t3);
+    }
+
+    #[test]
+    fn prefill_is_padding_invariant() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let prompt = [3i32, 5, 7];
+        let mut zeros = vec![0i32; p];
+        zeros[..3].copy_from_slice(&prompt);
+        let mut junk = vec![11i32; p];
+        junk[..3].copy_from_slice(&prompt);
+        let a = b.prefill(&zeros, 3).unwrap();
+        let c = b.prefill(&junk, 3).unwrap();
+        assert_eq!(a.next_token, c.next_token);
+    }
+
+    #[test]
+    fn step_costs_come_from_the_plans() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let s = b.prefill(&vec![1i32; p], 2).unwrap();
+        assert_eq!(s.cost_s, Some(b.prefill_plan().pass_seconds()));
+        let d = b.decode(s.next_token, 2, &s.cache).unwrap();
+        assert_eq!(d.cost_s, Some(b.decode_plan().pass_seconds()));
+        // Prefill over the whole window must cost more than one decode.
+        assert!(s.cost_s.unwrap() > d.cost_s.unwrap());
+    }
+
+    #[test]
+    fn kv_exhaustion_errors() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let s = b.prefill(&vec![1i32; p], 2).unwrap();
+        let max = b.config().max_seq as i32;
+        assert!(b.decode(0, max, &s.cache).is_err());
+        assert!(b.generate(&[1, 2], b.config().max_seq + 4).is_err());
+    }
+}

@@ -73,19 +73,19 @@ impl Instruction {
     }
 
     /// Decode; rejects non-T-SAR byte patterns.
-    pub fn decode(bytes: &[u8]) -> anyhow::Result<Instruction> {
-        anyhow::ensure!(bytes.len() >= 5, "short instruction");
-        anyhow::ensure!(bytes[0] == 0xC4, "not a VEX3 prefix");
+    pub fn decode(bytes: &[u8]) -> crate::util::error::Result<Instruction> {
+        crate::ensure!(bytes.len() >= 5, "short instruction");
+        crate::ensure!(bytes[0] == 0xC4, "not a VEX3 prefix");
         let byte1 = bytes[1];
-        anyhow::ensure!(byte1 & 0b11111 == 0b00010, "not map 0F38");
+        crate::ensure!(byte1 & 0b11111 == 0b00010, "not map 0F38");
         let op = match bytes[3] {
             OPC_TLUT => Opcode::Tlut,
             OPC_TGEMV => Opcode::Tgemv,
-            o => anyhow::bail!("unknown opcode {o:#x}"),
+            o => crate::bail!("unknown opcode {o:#x}"),
         };
         let byte2 = bytes[2];
         let modrm = bytes[4];
-        anyhow::ensure!(modrm >> 6 == 0b11, "T-SAR is register-direct");
+        crate::ensure!(modrm >> 6 == 0b11, "T-SAR is register-direct");
         let r_inv = byte1 >> 7 & 1;
         let b_inv = byte1 >> 5 & 1;
         let dst = ((1 - r_inv) << 3) | (modrm >> 3 & 0x7);

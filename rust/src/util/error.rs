@@ -1,0 +1,173 @@
+//! In-tree error type: the `anyhow` substitute for the offline default
+//! build (no crates.io access; see `rust/Cargo.toml`).
+//!
+//! Mirrors the slice of anyhow's surface this crate uses — a context
+//! chain, a [`Context`] extension trait for `Result`/`Option`, and the
+//! [`crate::bail!`] / [`crate::ensure!`] / [`crate::err!`] macros — so
+//! the PJRT feature (which keeps real `anyhow` for the `xla` crate's
+//! error types) and the default build share call sites.
+
+use std::fmt;
+
+/// A boxed-string error with an outermost-first context chain.
+pub struct Error {
+    /// `chain[0]` is the most recently attached context; the root cause
+    /// is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Attach outer context (like `anyhow::Error::context`).
+    pub fn context(mut self, ctx: impl Into<String>) -> Error {
+        self.chain.insert(0, ctx.into());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<()>` exits through Debug; keep it readable.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context attachment for `Result` and `Option`, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow::anyhow!`
+/// substitute).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing_io() -> Result<String> {
+        std::fs::read_to_string("/definitely/not/a/path")
+            .context("reading config")
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = failing_io().unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("reading config: "), "got {s:?}");
+        assert!(!e.root_cause().contains("reading config"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(3).context("never used").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_roundtrip() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(crate::err!("e {}", 1).to_string(), "e 1");
+    }
+
+    #[test]
+    fn bare_ensure_reports_condition() {
+        fn f() -> Result<()> {
+            crate::ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("1 + 1 == 3"));
+    }
+}

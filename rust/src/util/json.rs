@@ -53,9 +53,9 @@ impl Json {
     }
 
     /// Object field lookup that reports the missing key.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+    pub fn req(&self, key: &str) -> crate::util::error::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
+            .ok_or_else(|| crate::err!("missing JSON key {key:?}"))
     }
 
     pub fn as_str(&self) -> Option<&str> {

@@ -1,9 +1,11 @@
-//! Small self-contained utilities: JSON, PRNG, statistics, table printing.
+//! Small self-contained utilities: errors, JSON, PRNG, statistics,
+//! table printing.
 //!
 //! The build environment is offline with a minimal crate cache (no serde,
-//! rand, criterion), so these are in-tree. Each is deliberately tiny and
-//! fully unit-tested.
+//! rand, criterion, anyhow), so these are in-tree. Each is deliberately
+//! tiny and fully unit-tested.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -2,13 +2,17 @@
 //! `make artifacts`), execute prefill/decode through PJRT, and check the
 //! Rust-side generation against the Python-recorded goldens.
 //!
-//! Skipped (with a visible message) when `artifacts/` has not been built
+//! Gated on `--features pjrt` (the default offline build has no PJRT
+//! runtime; the SimBackend counterpart lives in `serve_sim.rs`), and
+//! skipped with a visible message when `artifacts/` has not been built
 //! — `cargo test` must be runnable before `make artifacts` in CI.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
 use tsar::coordinator::{serve::serve_all, Request, Server, ServerConfig};
-use tsar::runtime::ModelRuntime;
+use tsar::runtime::{Backend, ModelRuntime};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

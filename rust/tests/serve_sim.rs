@@ -1,0 +1,140 @@
+//! Default-build end-to-end serving tests: drive `coordinator::Server`
+//! on the dependency-free `SimBackend` through the full lifecycle
+//! (admission → prefill → interleaved decode → retire), and check that
+//! the §III-D adaptive selector shapes the plan the serving loop runs on
+//! (DESIGN.md §3).
+
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{serve::serve_all, Request, Server, ServerConfig};
+use tsar::kernels::Dataflow;
+use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
+
+fn backend() -> SimBackend {
+    SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
+    )
+    .expect("zoo model")
+}
+
+#[test]
+fn selector_picks_op_for_gemv_shaped_decode_steps() {
+    // §III-D: every decode-plan site is GEMV-shaped (N = 1), and the
+    // empirical compile-time selection must prefer the output-persistent
+    // dataflow for the high-M layers that dominate decode.
+    let b = backend();
+    let plan = b.decode_plan();
+    assert!(plan.layers.iter().all(|l| l.shape.is_gemv()));
+    let op_share = plan
+        .layers
+        .iter()
+        .filter(|l| l.kernel.dataflow == Dataflow::Op)
+        .count() as f64
+        / plan.layers.len() as f64;
+    assert!(op_share >= 0.5, "decode OP share {op_share}");
+    // The fused FFN gate/up GEMV (1×2560×13824) is the paper's canonical
+    // OP-winning shape.
+    let gate = plan.layers.iter().find(|l| l.site == "ffn-gate-up").unwrap();
+    assert_eq!(gate.kernel.dataflow, Dataflow::Op, "{}", gate.describe());
+}
+
+#[test]
+fn server_runs_admission_prefill_decode_retire() {
+    let b = backend();
+    let vocab = b.config().vocab as i32;
+    let server = Server::new(b, ServerConfig { max_batch: 3, kv_slots: 3 });
+    let requests: Vec<Request> = (0..6u64)
+        .map(|id| {
+            Request::new(
+                id,
+                vec![
+                    (1 + id as i32) % vocab,
+                    (3 + 2 * id as i32) % vocab,
+                    (7 + id as i32) % vocab,
+                ],
+                5,
+            )
+        })
+        .collect();
+    let report = serve_all(&server, requests).expect("serve");
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.total_tokens, 30);
+    assert!(report.tokens_per_s > 0.0);
+    assert!(report.prefill.p95 >= report.prefill.p50);
+
+    // Simulated timing is plumbed end-to-end: every prefill costs
+    // exactly one padded-window pass of the prefill plan.
+    let prefill_pass = server.backend().prefill_plan().pass_seconds();
+    assert!(
+        (report.prefill.mean - prefill_pass).abs() <= prefill_pass * 1e-9,
+        "prefill mean {} != plan pass {}",
+        report.prefill.mean,
+        prefill_pass
+    );
+    // 6 requests × (1 prefill + 4 decode steps) on the virtual clock.
+    let decode_pass = server.backend().decode_plan().pass_seconds();
+    let expect_wall = 6.0 * (prefill_pass + 4.0 * decode_pass);
+    assert!(
+        (report.wall_s - expect_wall).abs() <= expect_wall * 1e-9,
+        "wall {} != {}",
+        report.wall_s,
+        expect_wall
+    );
+}
+
+#[test]
+fn tight_batch_degenerates_to_sequential_serving() {
+    let b = backend();
+    let server = Server::new(b, ServerConfig { max_batch: 1, kv_slots: 1 });
+    let requests: Vec<Request> =
+        (0..3u64).map(|id| Request::new(id, vec![2, 4, 6], 4)).collect();
+    let report = serve_all(&server, requests).expect("serve");
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.total_tokens, 12);
+}
+
+#[test]
+fn served_tokens_match_direct_generation() {
+    // The scheduler must not perturb per-sequence results: interleaved
+    // decoding of many sequences produces exactly what Backend::generate
+    // produces for each prompt alone (KV state is threaded correctly).
+    let b = backend();
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![9, 8], vec![5, 5, 5, 5]];
+    let direct: Vec<Vec<i32>> =
+        prompts.iter().map(|p| b.generate(p, 4).unwrap()).collect();
+
+    let server = Server::new(b, ServerConfig { max_batch: 3, kv_slots: 3 });
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (res_tx, res_rx) = std::sync::mpsc::channel();
+    for (id, p) in prompts.iter().enumerate() {
+        req_tx.send(Request::new(id as u64, p.clone(), 4)).unwrap();
+    }
+    drop(req_tx);
+    server.run(req_rx, res_tx).expect("serve");
+    let mut served: Vec<(u64, Vec<i32>)> = res_rx
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    served.sort_by_key(|(id, _)| *id);
+    for (id, tokens) in served {
+        assert_eq!(tokens, direct[id as usize], "request {id}");
+    }
+}
+
+#[test]
+fn max_seq_guard_caps_generation() {
+    // A KV window too small for the full budget retires the sequence at
+    // the cap instead of erroring the engine.
+    let b = SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 8, max_seq: 10, threads: 0, seed: 3 },
+    )
+    .unwrap();
+    let server = Server::new(b, ServerConfig { max_batch: 1, kv_slots: 1 });
+    let report =
+        serve_all(&server, vec![Request::new(0, vec![1, 2, 3], 50)]).expect("serve");
+    assert_eq!(report.requests, 1);
+    assert!(report.total_tokens < 50);
+}
