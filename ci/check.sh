@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Repo check: tier-1 verify + formatting + best-effort pjrt build.
+# Repo check: tier-1 verify + lints + formatting + best-effort pjrt
+# build.
 #
 # The default build must stay dependency-free and green offline; the
 # pjrt feature build needs crates.io (see rust/Cargo.toml) and is
@@ -12,14 +13,19 @@ cargo build --release
 cargo test -q
 
 echo
-echo "== rustfmt (advisory) =="
-if cargo fmt --version >/dev/null 2>&1; then
-  if ! cargo fmt --all -- --check; then
-    echo "WARN: rustfmt differences found (advisory only: the seed predates"
-    echo "      rustfmt enforcement; format touched files as you go)."
-  fi
+echo "== clippy (required) =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
 else
-  echo "SKIP: rustfmt not installed"
+  echo "SKIP: clippy not installed (rustup component add clippy)"
+fi
+
+echo
+echo "== rustfmt (required) =="
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --all -- --check
+else
+  echo "SKIP: rustfmt not installed (rustup component add rustfmt)"
 fi
 
 echo

@@ -1,6 +1,8 @@
 //! End-to-end serving driver (DESIGN.md §6): serve a Poisson stream of
-//! batched requests through the coordinator and report
-//! latency/throughput.
+//! batched requests through the sharded coordinator (`TSAR_WORKERS`
+//! lanes, batched decode rounds per lane) and report
+//! latency/throughput, including the per-lane breakdown and the
+//! streamed request-level metrics records.
 //!
 //! Default build — the simulator-costed backend (no dependencies, no
 //! artifacts): BitNet shapes + §III-D kernel plans through the timing
@@ -24,7 +26,7 @@ use std::sync::mpsc::channel;
 use std::time::Duration;
 
 use tsar::config::platforms::Platform;
-use tsar::coordinator::{Request, RequestResult, Server, ServerConfig};
+use tsar::coordinator::{Request, RequestRecord, RequestResult, Server, ServerConfig};
 use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
 use tsar::util::error::Result;
 use tsar::util::rng::Rng;
@@ -38,11 +40,12 @@ fn main() -> Result<()> {
     // the sim backend's KV window, so it must be one value.
     let n_requests = env_usize("TSAR_REQUESTS", 12);
     let max_new = env_usize("TSAR_MAX_NEW", 16);
+    let workers = env_usize("TSAR_WORKERS", 2);
     let dir = std::env::args().nth(1);
 
     #[cfg(feature = "pjrt")]
     if let Some(d) = dir.as_deref() {
-        return pjrt_main(d, n_requests, max_new);
+        return pjrt_main(d, n_requests, max_new, workers);
     }
 
     if let Some(d) = dir.as_deref() {
@@ -51,11 +54,11 @@ fn main() -> Result<()> {
              (rebuild with --features pjrt); serving on the SimBackend instead"
         );
     }
-    sim_main(n_requests, max_new)
+    sim_main(n_requests, max_new, workers)
 }
 
 /// Default path: the simulator-costed backend.
-fn sim_main(n_requests: usize, max_new: usize) -> Result<()> {
+fn sim_main(n_requests: usize, max_new: usize, workers: usize) -> Result<()> {
     let model = std::env::var("TSAR_MODEL").unwrap_or_else(|_| "BitNet-2B-4T".into());
     let backend = SimBackend::by_name(
         &model,
@@ -72,12 +75,12 @@ fn sim_main(n_requests: usize, max_new: usize) -> Result<()> {
         1.0 / backend.decode_plan().pass_seconds(),
         backend.prefill_plan().pass_seconds() * 1e3
     );
-    drive(backend, n_requests, max_new)
+    drive(backend, n_requests, max_new, workers)
 }
 
 /// PJRT path: load the AOT artifacts, check the Python golden, serve.
 #[cfg(feature = "pjrt")]
-fn pjrt_main(dir: &str, n_requests: usize, max_new: usize) -> Result<()> {
+fn pjrt_main(dir: &str, n_requests: usize, max_new: usize, workers: usize) -> Result<()> {
     let variant = std::env::var("TSAR_VARIANT").unwrap_or_else(|_| "tsar".into());
     println!("== T-SAR end-to-end serving (variant: {variant}) ==");
     let t0 = std::time::Instant::now();
@@ -102,20 +105,41 @@ fn pjrt_main(dir: &str, n_requests: usize, max_new: usize) -> Result<()> {
         "runtime does not reproduce the AOT golden"
     );
     println!("golden check passed: first {} tokens match Python", check.len());
-    drive(rt, n_requests, max_new)
+    drive(rt, n_requests, max_new, workers)
 }
 
 /// The generic serving loop: Poisson arrivals (open-loop) with mixed
-/// prompt lengths, a collector thread printing completions, and the
-/// engine on the main thread.
-fn drive<B: Backend>(backend: B, n_requests: usize, max_new: usize) -> Result<()> {
+/// prompt lengths, a collector thread printing completions, a metrics
+/// sink draining the streamed per-request records, and the sharded
+/// engine (dispatcher + worker lanes) on the main thread.
+fn drive<B: Backend + Sync>(
+    backend: B,
+    n_requests: usize,
+    max_new: usize,
+    workers: usize,
+) -> Result<()> {
     let vocab = backend.config().vocab as u64;
     let window = backend.config().prefill_len;
-    let server = Server::new(backend, ServerConfig { max_batch: 4, kv_slots: 4 });
+    let (rec_tx, rec_rx) = channel::<RequestRecord>();
+    let server = Server::new(
+        backend,
+        ServerConfig { max_batch: 4, kv_slots: 4, workers },
+    )?
+    .with_metrics_sink(rec_tx);
 
     let lambda_per_s = 4.0;
     let (req_tx, req_rx) = channel::<Request>();
     let (res_tx, res_rx) = channel::<RequestResult>();
+
+    // The scrape-endpoint stand-in: drain the request-record stream as
+    // it arrives (one record per retired request, any lane).
+    let sink = std::thread::spawn(move || {
+        let mut records: Vec<RequestRecord> = Vec::new();
+        while let Ok(rec) = rec_rx.recv() {
+            records.push(rec);
+        }
+        records
+    });
 
     let producer = std::thread::spawn(move || {
         let mut rng_p = Rng::new(7);
@@ -152,7 +176,29 @@ fn drive<B: Backend>(backend: B, n_requests: usize, max_new: usize) -> Result<()
     let done = collector.join().unwrap();
     assert_eq!(done, n_requests);
 
+    // Drop the server (and with it the sink's last sender) so the
+    // record stream closes and the sink thread drains out.
+    drop(server);
+    let records = sink.join().unwrap();
+    assert_eq!(records.len(), n_requests);
+
     println!("\n== serve report ==");
     report.print();
+    println!("\n== metrics sink ({} records streamed) ==", records.len());
+    for rec in records.iter().take(3) {
+        println!(
+            "  req {:>2} via lane {}: queue {:>6.1} ms  prefill {:>6.1} ms  \
+             decode {:>7.1} ms  plan [{}]",
+            rec.id,
+            rec.lane,
+            rec.queue_s * 1e3,
+            rec.prefill_s * 1e3,
+            rec.decode_s * 1e3,
+            rec.plan.as_deref().unwrap_or("n/a")
+        );
+    }
+    if records.len() > 3 {
+        println!("  ... {} more", records.len() - 3);
+    }
     Ok(())
 }

@@ -1,0 +1,332 @@
+//! One worker lane of the sharded serving engine (DESIGN.md §3).
+//!
+//! A lane owns a shard of the admitted sequences: its own continuous
+//! batcher, KV-slot pool, and **virtual clock**.  Per iteration it
+//! admits pending requests (prefill), runs one *batched* decode round
+//! over its active set through [`Backend::decode_batch`], and retires
+//! finished sequences — freeing slots immediately, vLLM-style.
+//!
+//! Timing: backends that model execution report per-step simulated
+//! costs; the lane accumulates them on its local clock (steps within a
+//! lane are serialized, so lane-simulated time is their sum).  Backends
+//! that execute for real contribute measured busy wall seconds instead.
+//! Either way the clock counts *busy* time only — a lane that never
+//! receives work stays at zero, so the server's merge-at-retire step
+//! can reconcile the lane clocks into one global timeline: lanes run
+//! concurrently over disjoint shards, so the merged makespan is the
+//! slowest lane's clock (`max`), while the sum of lane clocks is
+//! aggregate busy time.
+//!
+//! Fault isolation: a failing prefill drops that request; a failing
+//! batched round falls back to serialized batch-1 steps so one poisoned
+//! sequence retires with partial output instead of taking down its
+//! whole round.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use crate::runtime::{Backend, BatchItem, Step};
+use crate::util::error::Result;
+
+use super::batcher::Batcher;
+use super::kvpool::{KvSlotPool, SlotId};
+use super::metrics::{LaneStats, RequestRecord};
+use super::request::{Request, RequestId, RequestResult};
+use super::serve::ServerConfig;
+
+/// An active sequence's decode state, generic over the backend's KV
+/// representation.
+struct Active<C> {
+    req: Request,
+    tokens: Vec<i32>,
+    cache: C,
+    pos: i32,
+    queue_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    /// Lane-clock reading at admission (simulated backends).
+    admit_clock: f64,
+}
+
+/// Everything a lane hands back to the merge step.
+pub(crate) struct LaneOutcome {
+    pub results: Vec<RequestResult>,
+    pub stats: LaneStats,
+    /// Whether any step reported a simulated cost (the lane clock is a
+    /// virtual timeline rather than busy wall time).
+    pub sim_timed: bool,
+}
+
+/// Has `seq` hit its token budget or the KV window?
+fn seq_done<C>(seq: &Active<C>, max_seq: usize) -> bool {
+    seq.tokens.len() >= seq.req.max_new_tokens || (seq.pos as usize) >= max_seq - 1
+}
+
+/// Apply one decode step to `seq`, accounting its cost (simulated, or
+/// `wall_s` measured busy seconds) on the lane clock; returns whether
+/// the sequence is now done.  The clock accumulates *busy* time in both
+/// modes — an idle lane's clock stays at zero, so the merge never mixes
+/// blocked real time into a simulated timeline.
+fn apply_step<C>(
+    seq: &mut Active<C>,
+    step: Step<C>,
+    wall_s: f64,
+    max_seq: usize,
+    clock: &mut f64,
+    sim_timed: &mut bool,
+) -> bool {
+    let cost = match step.cost_s {
+        Some(c) => {
+            *sim_timed = true;
+            c
+        }
+        None => wall_s,
+    };
+    *clock += cost;
+    seq.decode_s += cost;
+    seq.tokens.push(step.next_token);
+    seq.cache = step.cache;
+    seq.pos += 1;
+    seq_done(seq, max_seq)
+}
+
+/// Drain `rx` on lane `lane_id`, pushing completions into `tx` (and
+/// per-request records into `sink`, when attached) until the shard
+/// channel closes and all admitted work retires.
+pub(crate) fn lane_loop<B: Backend>(
+    backend: &B,
+    cfg: &ServerConfig,
+    lane_id: usize,
+    rx: Receiver<Request>,
+    tx: Sender<RequestResult>,
+    sink: Option<Sender<RequestRecord>>,
+) -> Result<LaneOutcome> {
+    let plan = backend.plan_summary();
+    let mut batcher = Batcher::new(cfg.max_batch);
+    let mut pool = KvSlotPool::new(cfg.kv_slots);
+    let mut active: HashMap<RequestId, (Active<B::Cache>, SlotId)> = HashMap::new();
+    let mut results: Vec<RequestResult> = Vec::new();
+    let mut stats = LaneStats::new(lane_id, cfg.max_batch);
+    let mut open = true;
+    // Lane-local clock: sum of backend-reported simulated step costs,
+    // or of measured busy wall seconds for backends that execute for
+    // real.  Either way it is *busy* time only — an idle lane stays at
+    // zero and never pollutes the merged timeline.
+    let mut clock = 0.0f64;
+    let mut sim_timed = false;
+
+    while open || batcher.has_work() {
+        // Pull newly arrived requests (non-blocking unless idle).
+        loop {
+            if !open {
+                break;
+            }
+            let msg = if batcher.has_work() {
+                match rx.try_recv() {
+                    Ok(r) => Some(r),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                }
+            } else {
+                // Idle: block for the next request or shutdown.
+                match rx.recv() {
+                    Ok(r) => Some(r),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some(r) => batcher.submit(r),
+                None => break,
+            }
+        }
+
+        // 1. Admission + prefill.
+        while pool.available() > 0 {
+            let Some(req) = batcher.admit() else { break };
+            let slot = pool.allocate().expect("available() said so");
+            let queue_s = req.arrival.elapsed().as_secs_f64();
+            let p = backend.config().prefill_len;
+            let mut padded = vec![0i32; p];
+            let plen = req.prompt.len().min(p);
+            padded[..plen].copy_from_slice(&req.prompt[..plen]);
+            let admit_clock = clock;
+            let t0 = Instant::now();
+            let out = match backend.prefill(&padded, plen as i32) {
+                Ok(out) => out,
+                Err(e) => {
+                    // One malformed request must not take down the
+                    // lane or the rest of the batch: drop it, free its
+                    // slots, keep serving.
+                    eprintln!("lane {lane_id}: request {}: prefill failed: {e}", req.id);
+                    batcher.finish(req.id)?;
+                    pool.release(slot)?;
+                    continue;
+                }
+            };
+            let prefill_s = match out.cost_s {
+                Some(c) => {
+                    sim_timed = true;
+                    c
+                }
+                None => t0.elapsed().as_secs_f64(),
+            };
+            clock += prefill_s;
+            active.insert(
+                req.id,
+                (
+                    Active {
+                        pos: plen as i32,
+                        tokens: vec![out.next_token],
+                        cache: out.cache,
+                        req,
+                        queue_s,
+                        prefill_s,
+                        decode_s: 0.0,
+                        admit_clock,
+                    },
+                    slot,
+                ),
+            );
+        }
+
+        // 2. One batched decode round over the active set.
+        let order: Vec<RequestId> = (0..batcher.active_len())
+            .filter_map(|_| batcher.next_decode())
+            .collect();
+        let max_seq = backend.config().max_seq;
+        let mut retired: Vec<RequestId> = Vec::new();
+        let mut ready: Vec<RequestId> = Vec::new();
+        for id in &order {
+            let Some((seq, _slot)) = active.get(id) else { continue };
+            if seq_done(seq, max_seq) {
+                retired.push(*id);
+            } else {
+                ready.push(*id);
+            }
+        }
+
+        if !ready.is_empty() {
+            let width = ready.len();
+            let t0 = Instant::now();
+            let round = {
+                let items: Vec<BatchItem<'_, B::Cache>> = ready
+                    .iter()
+                    .map(|id| {
+                        let (seq, _slot) = &active[id];
+                        BatchItem {
+                            token: *seq.tokens.last().expect("prefill seeded tokens"),
+                            pos: seq.pos,
+                            cache: &seq.cache,
+                        }
+                    })
+                    .collect();
+                backend.decode_batch(&items)
+            };
+            match round {
+                Ok(steps) => {
+                    stats.record_round(width);
+                    let wall_share = t0.elapsed().as_secs_f64() / width as f64;
+                    for (id, step) in ready.iter().zip(steps) {
+                        let (seq, _slot) =
+                            active.get_mut(id).expect("ready ids are active");
+                        if apply_step(seq, step, wall_share, max_seq, &mut clock, &mut sim_timed)
+                        {
+                            retired.push(*id);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Round-level failure: fall back to serialized
+                    // batch-1 steps so only the poisoned sequence(s)
+                    // retire with partial output.
+                    eprintln!(
+                        "lane {lane_id}: decode_batch of width {width} failed: {e}; \
+                         retrying serialized"
+                    );
+                    for id in &ready {
+                        let (seq, _slot) =
+                            active.get_mut(id).expect("ready ids are active");
+                        let t1 = Instant::now();
+                        match backend.decode(
+                            *seq.tokens.last().expect("prefill seeded tokens"),
+                            seq.pos,
+                            &seq.cache,
+                        ) {
+                            Ok(step) => {
+                                stats.record_round(1);
+                                let wall = t1.elapsed().as_secs_f64();
+                                if apply_step(
+                                    seq,
+                                    step,
+                                    wall,
+                                    max_seq,
+                                    &mut clock,
+                                    &mut sim_timed,
+                                ) {
+                                    retired.push(*id);
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "lane {lane_id}: request {}: decode failed: {e}; \
+                                     retiring with partial output",
+                                    seq.req.id
+                                );
+                                retired.push(*id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 3. Retire.
+        for id in retired {
+            let (seq, slot) = active.remove(&id).expect("retired ids are active");
+            batcher.finish(id)?;
+            pool.release(slot)?;
+            let total_s = if sim_timed {
+                // Virtual residency (including rounds spent on
+                // interleaved neighbours) + real queue wait.
+                seq.queue_s + (clock - seq.admit_clock)
+            } else {
+                seq.req.arrival.elapsed().as_secs_f64()
+            };
+            let res = RequestResult {
+                id,
+                total_s,
+                tokens: seq.tokens,
+                queue_s: seq.queue_s,
+                prefill_s: seq.prefill_s,
+                decode_s: seq.decode_s,
+            };
+            if let Some(sink) = &sink {
+                // The sink is best-effort: a hung-up scraper must not
+                // stall serving.
+                let _ = sink.send(RequestRecord {
+                    id,
+                    lane: lane_id,
+                    queue_s: res.queue_s,
+                    prefill_s: res.prefill_s,
+                    decode_s: res.decode_s,
+                    total_s: res.total_s,
+                    tokens: res.tokens.len(),
+                    plan: plan.clone(),
+                });
+            }
+            let _ = tx.send(res.clone());
+            stats.requests += 1;
+            results.push(res);
+        }
+    }
+
+    stats.clock_s = clock;
+    Ok(LaneOutcome { results, stats, sim_timed })
+}

@@ -1,8 +1,10 @@
-//! Serving metrics: latency percentiles and throughput aggregation.
+//! Serving metrics: latency percentiles, throughput aggregation,
+//! per-lane breakdowns of the sharded engine, and the streaming
+//! request-record channel a scrape endpoint can sit on.
 
 use crate::util::stats::{geomean, max, mean, percentile};
 
-use super::request::RequestResult;
+use super::request::{RequestId, RequestResult};
 
 /// Latency summary over a set of samples (seconds).
 #[derive(Debug, Clone)]
@@ -37,11 +39,102 @@ impl LatencyStats {
     }
 }
 
+/// One retired request's record, streamed over the server's optional
+/// metrics sink while the run is still in flight (the channel half of
+/// the request-level metrics endpoint: a scrape/export loop sits on the
+/// receiving end).
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    /// Worker lane that served the request.
+    pub lane: usize,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+    /// Generated tokens (prefill token included).
+    pub tokens: usize,
+    /// The backend's chosen §III-D kernel plan, `None` for backends
+    /// that don't model one (PJRT).
+    pub plan: Option<String>,
+}
+
+/// One worker lane's accounting over a completed run.
+#[derive(Debug, Clone)]
+pub struct LaneStats {
+    pub lane: usize,
+    /// Requests retired on this lane.
+    pub requests: usize,
+    /// Batched decode rounds executed.
+    pub rounds: usize,
+    /// Lane-local clock: *busy* seconds only (simulated for modeled
+    /// backends, measured wall time for real ones); a lane that never
+    /// received work reads zero.
+    pub clock_s: f64,
+    /// `width_hist[w]` counts decode rounds that stepped exactly `w`
+    /// sequences (index 0 unused).
+    pub width_hist: Vec<usize>,
+    /// `clock_s` / merged wall time — filled in by the clock merge at
+    /// report time.
+    pub utilization: f64,
+}
+
+impl LaneStats {
+    pub fn new(lane: usize, max_width: usize) -> LaneStats {
+        LaneStats {
+            lane,
+            requests: 0,
+            rounds: 0,
+            clock_s: 0.0,
+            width_hist: vec![0; max_width + 1],
+            utilization: 0.0,
+        }
+    }
+
+    /// Account one decode round of `width` sequences.
+    pub fn record_round(&mut self, width: usize) {
+        self.rounds += 1;
+        if width < self.width_hist.len() {
+            self.width_hist[width] += 1;
+        } else if let Some(last) = self.width_hist.last_mut() {
+            *last += 1;
+        }
+    }
+
+    /// Mean batched-round width (0 when the lane never decoded).
+    pub fn mean_width(&self) -> f64 {
+        let steps: usize = self
+            .width_hist
+            .iter()
+            .enumerate()
+            .map(|(w, &c)| w * c)
+            .sum();
+        if self.rounds == 0 {
+            0.0
+        } else {
+            steps as f64 / self.rounds as f64
+        }
+    }
+
+    fn fmt_hist(&self) -> String {
+        self.width_hist
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(w, &c)| format!("{w}x{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 /// Aggregate report over a completed serve run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: usize,
     pub total_tokens: usize,
+    /// Merged timeline: max over the lanes' virtual clocks (the lanes
+    /// run concurrently, so the simulated makespan is the slowest
+    /// lane), or real elapsed time for non-modeled backends.
     pub wall_s: f64,
     pub prefill: LatencyStats,
     pub e2e: LatencyStats,
@@ -50,10 +143,26 @@ pub struct ServeReport {
     pub tokens_per_s: f64,
     /// Geomean of per-request decode throughputs.
     pub per_request_tps_geomean: f64,
+    /// Per-lane breakdowns, ordered by lane id (empty for reports built
+    /// without lane accounting).
+    pub lanes: Vec<LaneStats>,
+    /// Σ lane clocks: aggregate busy time across the lanes (≥ `wall_s`
+    /// whenever more than one lane did work).
+    pub lane_clock_sum_s: f64,
 }
 
 impl ServeReport {
     pub fn from(results: &[RequestResult], wall_s: f64) -> Option<ServeReport> {
+        ServeReport::from_lanes(results, wall_s, Vec::new())
+    }
+
+    /// Build the report and run the clock merge: lane utilizations are
+    /// normalized against the merged `wall_s` timeline.
+    pub fn from_lanes(
+        results: &[RequestResult],
+        wall_s: f64,
+        mut lanes: Vec<LaneStats>,
+    ) -> Option<ServeReport> {
         if results.is_empty() {
             return None;
         }
@@ -66,6 +175,11 @@ impl ServeReport {
             .map(|r| r.decode_tokens_per_s())
             .filter(|&t| t > 0.0)
             .collect();
+        lanes.sort_by_key(|l| l.lane);
+        let lane_clock_sum_s: f64 = lanes.iter().map(|l| l.clock_s).sum();
+        for l in &mut lanes {
+            l.utilization = if wall_s > 0.0 { l.clock_s / wall_s } else { 0.0 };
+        }
         Some(ServeReport {
             requests: results.len(),
             total_tokens,
@@ -75,6 +189,8 @@ impl ServeReport {
             queue: LatencyStats::from(&queue)?,
             tokens_per_s: total_tokens as f64 / wall_s,
             per_request_tps_geomean: if tps.is_empty() { 0.0 } else { geomean(&tps) },
+            lanes,
+            lane_clock_sum_s,
         })
     }
 
@@ -90,6 +206,26 @@ impl ServeReport {
         println!("queue   latency : {}", self.queue.fmt_ms());
         println!("prefill latency : {}", self.prefill.fmt_ms());
         println!("e2e     latency : {}", self.e2e.fmt_ms());
+        if !self.lanes.is_empty() {
+            println!(
+                "lane busy sum   : {:.2} s across {} lane(s)",
+                self.lane_clock_sum_s,
+                self.lanes.len()
+            );
+            for l in &self.lanes {
+                println!(
+                    "  lane {:>2}: {:>3} req  {:>5} rounds  busy {:>8.3} s  \
+                     util {:>5.1}%  mean width {:.2}  [{}]",
+                    l.lane,
+                    l.requests,
+                    l.rounds,
+                    l.clock_s,
+                    l.utilization * 100.0,
+                    l.mean_width(),
+                    l.fmt_hist()
+                );
+            }
+        }
     }
 }
 
@@ -117,11 +253,40 @@ mod tests {
         assert!((rep.tokens_per_s - 8.0).abs() < 1e-12);
         assert!((rep.per_request_tps_geomean - 10.0).abs() < 1e-9);
         assert!((rep.prefill.p50 - 0.15).abs() < 1e-12);
+        assert!(rep.lanes.is_empty());
     }
 
     #[test]
     fn empty_is_none() {
         assert!(ServeReport::from(&[], 1.0).is_none());
         assert!(LatencyStats::from(&[]).is_none());
+    }
+
+    #[test]
+    fn lane_merge_normalizes_utilization() {
+        let rs = vec![result(0.1, 1.0, 4), result(0.1, 1.0, 4)];
+        let mut a = LaneStats::new(1, 4);
+        a.clock_s = 2.0;
+        a.record_round(3);
+        a.record_round(3);
+        a.record_round(1);
+        let mut b = LaneStats::new(0, 4);
+        b.clock_s = 4.0;
+        // Merged wall = slowest lane; utilizations come out of the
+        // merge, and the busy sum exceeds the merged timeline.
+        let rep = ServeReport::from_lanes(&rs, 4.0, vec![a, b]).unwrap();
+        assert_eq!(rep.lanes[0].lane, 0, "lanes ordered by id");
+        assert!((rep.lane_clock_sum_s - 6.0).abs() < 1e-12);
+        assert!((rep.lanes[1].utilization - 0.5).abs() < 1e-12);
+        assert!((rep.lanes[0].utilization - 1.0).abs() < 1e-12);
+        assert!((rep.lanes[1].mean_width() - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rep.lanes[1].width_hist[3], 2);
+    }
+
+    #[test]
+    fn width_histogram_clamps_oversized_rounds() {
+        let mut l = LaneStats::new(0, 2);
+        l.record_round(5); // wider than declared max: clamp to the top bin
+        assert_eq!(l.width_hist, vec![0, 0, 1]);
     }
 }

@@ -2,21 +2,25 @@
 //!
 //! The paper's system contribution is the kernel/ISA layer, so the
 //! coordinator is the serving harness a deployment wraps around it
-//! (DESIGN.md §3): a request queue feeding a continuous batcher, a
-//! prefill/decode scheduler driving any [`crate::runtime::Backend`]
-//! (the simulator-costed `SimBackend` by default, PJRT behind the
-//! `pjrt` feature), a KV-slot pool, and the paper's §III-D *adaptive
-//! kernel selector* that picks the AP/OP dataflow per layer at compile
-//! (model-load) time.
+//! (DESIGN.md §3): a request queue feeding a dispatcher that shards
+//! sequences across worker lanes, each lane a continuous batcher +
+//! KV-slot pool driving *batched* decode rounds against any
+//! [`crate::runtime::Backend`] (the simulator-costed `SimBackend` by
+//! default, PJRT behind the `pjrt` feature), and the paper's §III-D
+//! *adaptive kernel selector* that picks the AP/OP dataflow per layer
+//! at compile (model-load) time.
 //!
 //! Threading: std::thread + mpsc channels (tokio is not in the offline
-//! crate cache).  One engine thread owns the backend; client threads
-//! submit requests and await results over channels — the same topology
-//! a tokio implementation would have, with the async reactor replaced
-//! by blocking queues.
+//! crate cache).  The dispatcher runs on the calling thread; each lane
+//! is a scoped worker thread sharing the backend by reference (all
+//! [`crate::runtime::Backend`] methods take `&self`).  Lanes keep
+//! per-lane virtual clocks that the server merges at retire into one
+//! global simulated timeline — the same topology a tokio implementation
+//! would have, with the async reactor replaced by blocking queues.
 
 pub mod batcher;
 pub mod kvpool;
+mod lane;
 pub mod metrics;
 pub mod request;
 pub mod selector;
@@ -24,7 +28,7 @@ pub mod serve;
 
 pub use batcher::Batcher;
 pub use kvpool::KvSlotPool;
-pub use metrics::{LatencyStats, ServeReport};
+pub use metrics::{LaneStats, LatencyStats, RequestRecord, ServeReport};
 pub use request::{Request, RequestId, RequestResult};
 pub use selector::{select_plan, LayerPlan, ModelPlan};
 pub use serve::{Server, ServerConfig};

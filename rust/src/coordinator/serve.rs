@@ -1,75 +1,89 @@
-//! The serving engine: one thread owns the model backend and drives
-//! continuous batching; clients submit requests over a channel.
+//! The sharded serving engine: admitted sequences are sharded across N
+//! worker lanes (std::thread + mpsc channels), each lane driving
+//! *batched* decode rounds against a shared backend and keeping its own
+//! virtual clock; clients submit requests over a channel.
 //!
-//! Scheduling policy per engine iteration:
-//!   1. admit pending requests into free batch + KV slots (prefill),
-//!   2. run one decode step for each active sequence (round-robin),
-//!   3. retire sequences that hit EOS-budget, freeing slots immediately.
+//! Topology per [`Server::run`]:
 //!
-//! The backends execute batch-1 steps, so "continuous batching"
-//! interleaves sequences at step granularity — the same policy a
-//! multi-batch executable would follow, with the batch dimension
-//! serialized (DESIGN.md §3).
+//!   1. the calling thread becomes the **dispatcher**: it drains the
+//!      request channel and shards arrivals round-robin across lanes,
+//!   2. each **lane** (scoped worker thread) runs admission → prefill →
+//!      batched decode rounds → retire over its shard (the `lane`
+//!      module), sharing the backend by reference — every [`Backend`]
+//!      method takes `&self`, so `B: Sync` is all that is required,
+//!   3. when the request channel closes, the lane channels close, the
+//!      lanes drain and exit, and the **merge-at-retire** step
+//!      reconciles the per-lane virtual clocks into one global
+//!      simulated timeline for the [`ServeReport`].
 //!
-//! Timing: backends that *model* execution ([`SimBackend`]) report a
-//! simulated cost per step; the engine accumulates those on a virtual
-//! clock (steps are serialized on the engine thread, so simulated wall
-//! time is their sum) and per-request latencies come out paper-faithful.
-//! Backends that really execute (PJRT) report no cost and the engine
-//! falls back to wall-clock timing.
-//!
-//! [`SimBackend`]: crate::runtime::SimBackend
+//! Clock-merge rule: lanes run concurrently over disjoint shards, so
+//! the merged makespan is the *slowest lane's* clock (`max` over
+//! lanes), while Σ lane clocks is aggregate busy time — both are
+//! reported.  Backends that really execute (PJRT) report no step costs
+//! and the engine falls back to wall-clock timing.
 
-use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use crate::runtime::Backend;
 use crate::util::error::Result;
 
-use super::batcher::Batcher;
-use super::kvpool::KvSlotPool;
-use super::metrics::ServeReport;
-use super::request::{Request, RequestId, RequestResult};
+use super::lane::{lane_loop, LaneOutcome};
+use super::metrics::{RequestRecord, ServeReport};
+use super::request::{Request, RequestResult};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Max sequences decoded concurrently (continuous-batch width).
+    /// Max sequences decoded concurrently *per lane* (the batched
+    /// decode round width ceiling).
     pub max_batch: usize,
-    /// KV slots (>= max_batch; extra slots admit prefills early).
+    /// KV slots per lane (>= max_batch; extra slots admit prefills
+    /// early).
     pub kv_slots: usize,
+    /// Worker lanes the admitted sequences are sharded across.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 4, kv_slots: 4 }
+        ServerConfig { max_batch: 4, kv_slots: 4, workers: 1 }
     }
-}
-
-/// An active sequence's decode state, generic over the backend's KV
-/// representation.
-struct Active<C> {
-    req: Request,
-    tokens: Vec<i32>,
-    cache: C,
-    pos: i32,
-    queue_s: f64,
-    prefill_s: f64,
-    decode_s: f64,
-    /// Virtual-clock reading at admission (simulated backends).
-    admit_clock: f64,
 }
 
 /// The serving engine. Owns the backend; `run` drains a request stream.
 pub struct Server<B: Backend> {
     backend: B,
     cfg: ServerConfig,
+    record_tx: Option<Sender<RequestRecord>>,
 }
 
 impl<B: Backend> Server<B> {
-    pub fn new(backend: B, cfg: ServerConfig) -> Server<B> {
-        assert!(cfg.kv_slots >= cfg.max_batch);
-        Server { backend, cfg }
+    /// Validate `cfg` and build the engine.  Library code must not
+    /// abort the caller on bad config, so every constraint is an `Err`,
+    /// never a panic.
+    pub fn new(backend: B, cfg: ServerConfig) -> Result<Server<B>> {
+        crate::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        crate::ensure!(cfg.workers >= 1, "workers must be >= 1");
+        crate::ensure!(
+            cfg.kv_slots >= cfg.max_batch,
+            "kv_slots ({}) must cover max_batch ({}) on every lane",
+            cfg.kv_slots,
+            cfg.max_batch
+        );
+        Ok(Server { backend, cfg, record_tx: None })
+    }
+
+    /// Attach a metrics sink: every retired request streams one
+    /// [`RequestRecord`] (queue/prefill/decode seconds, lane id, chosen
+    /// kernel plan) over `tx` while the run is in flight.  Sends are
+    /// best-effort — a dropped receiver never stalls serving.
+    pub fn with_metrics_sink(mut self, tx: Sender<RequestRecord>) -> Server<B> {
+        self.record_tx = Some(tx);
+        self
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
     }
 
     pub fn backend(&self) -> &B {
@@ -79,7 +93,18 @@ impl<B: Backend> Server<B> {
     pub fn into_backend(self) -> B {
         self.backend
     }
+}
 
+/// How `run_inner` is fed: a live request stream (open-loop serving,
+/// the dispatcher shards arrivals as they come) or a preloaded list
+/// (sharded up front, so lane assignment and batched round widths are
+/// deterministic — no dispatch/lane-startup race).
+enum Feed {
+    Stream(Receiver<Request>),
+    Preloaded(Vec<Request>),
+}
+
+impl<B: Backend + Sync> Server<B> {
     /// Serve every request from `rx` until the channel closes and all
     /// work drains; completed results go out through `tx`.
     pub fn run(
@@ -87,180 +112,104 @@ impl<B: Backend> Server<B> {
         rx: Receiver<Request>,
         tx: Sender<RequestResult>,
     ) -> Result<ServeReport> {
+        self.run_inner(Feed::Stream(rx), tx)
+    }
+
+    /// Serve a fixed request list: the whole list is sharded
+    /// round-robin across the lanes before any lane starts, so the
+    /// schedule (lane assignment, batched round widths, virtual clocks)
+    /// is a pure function of the list — the mode batch jobs and
+    /// integration tests want.
+    pub fn run_preloaded(
+        &self,
+        requests: Vec<Request>,
+        tx: Sender<RequestResult>,
+    ) -> Result<ServeReport> {
+        self.run_inner(Feed::Preloaded(requests), tx)
+    }
+
+    fn run_inner(&self, feed: Feed, tx: Sender<RequestResult>) -> Result<ServeReport> {
         let start = Instant::now();
-        let mut batcher = Batcher::new(self.cfg.max_batch);
-        let mut pool = KvSlotPool::new(self.cfg.kv_slots);
-        let mut active: HashMap<RequestId, (Active<B::Cache>, super::kvpool::SlotId)> =
-            HashMap::new();
+        let workers = self.cfg.workers;
+        let outcomes: Vec<Result<LaneOutcome>> = std::thread::scope(|s| {
+            let mut lane_txs: Vec<Sender<Request>> = Vec::with_capacity(workers);
+            let mut lane_rxs = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (lane_tx, lane_rx) = channel::<Request>();
+                lane_txs.push(lane_tx);
+                lane_rxs.push(lane_rx);
+            }
+            // Preloaded work is sharded (and the shard channels closed)
+            // before the lanes spawn, so every lane sees its whole
+            // shard at its first pull.
+            let feed = match feed {
+                Feed::Preloaded(requests) => {
+                    for (i, req) in requests.into_iter().enumerate() {
+                        let _ = lane_txs[i % workers].send(req);
+                    }
+                    lane_txs.clear();
+                    None
+                }
+                Feed::Stream(rx) => Some(rx),
+            };
+            let mut handles = Vec::with_capacity(workers);
+            for (lane_id, lane_rx) in lane_rxs.into_iter().enumerate() {
+                let backend = &self.backend;
+                let cfg = &self.cfg;
+                let res_tx = tx.clone();
+                let sink = self.record_tx.clone();
+                handles.push(s.spawn(move || {
+                    lane_loop(backend, cfg, lane_id, lane_rx, res_tx, sink)
+                }));
+            }
+            // Dispatcher: shard live arrivals round-robin across the
+            // lanes.  A send only fails if a lane died early; stop
+            // feeding and surface that lane's error through its join.
+            if let Some(rx) = feed {
+                let mut next = 0usize;
+                while let Ok(req) = rx.recv() {
+                    if lane_txs[next % workers].send(req).is_err() {
+                        break;
+                    }
+                    next += 1;
+                }
+            }
+            drop(lane_txs); // close the shard channels: lanes drain and exit
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("lane thread panicked"))
+                .collect()
+        });
+
         let mut results: Vec<RequestResult> = Vec::new();
-        let mut open = true;
-        // Virtual clock: sum of backend-reported step costs.  Stays at
-        // zero (and unused) for backends that execute for real.
-        let mut sim_clock = 0.0f64;
+        let mut lanes = Vec::with_capacity(workers);
         let mut sim_timed = false;
-
-        while open || batcher.has_work() {
-            // Pull newly arrived requests (non-blocking unless idle).
-            loop {
-                if !open {
-                    break;
-                }
-                let msg = if batcher.has_work() {
-                    match rx.try_recv() {
-                        Ok(r) => Some(r),
-                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                            open = false;
-                            None
-                        }
-                    }
-                } else {
-                    // Idle: block for the next request or shutdown.
-                    match rx.recv() {
-                        Ok(r) => Some(r),
-                        Err(_) => {
-                            open = false;
-                            None
-                        }
-                    }
-                };
-                match msg {
-                    Some(r) => batcher.submit(r),
-                    None => break,
-                }
-            }
-
-            // 1. Admission + prefill.
-            while pool.available() > 0 {
-                let Some(req) = batcher.admit() else { break };
-                let slot = pool.allocate().expect("available() said so");
-                let queue_s = req.arrival.elapsed().as_secs_f64();
-                let p = self.backend.config().prefill_len;
-                let mut padded = vec![0i32; p];
-                let plen = req.prompt.len().min(p);
-                padded[..plen].copy_from_slice(&req.prompt[..plen]);
-                let admit_clock = sim_clock;
-                let t0 = Instant::now();
-                let out = match self.backend.prefill(&padded, plen as i32) {
-                    Ok(out) => out,
-                    Err(e) => {
-                        // One malformed request must not take down the
-                        // engine or the rest of the batch: drop it,
-                        // free its slots, keep serving.
-                        eprintln!("request {}: prefill failed: {e}", req.id);
-                        batcher.finish(req.id)?;
-                        pool.release(slot)?;
-                        continue;
-                    }
-                };
-                let prefill_s = match out.cost_s {
-                    Some(c) => {
-                        sim_clock += c;
-                        sim_timed = true;
-                        c
-                    }
-                    None => t0.elapsed().as_secs_f64(),
-                };
-                active.insert(
-                    req.id,
-                    (
-                        Active {
-                            pos: plen as i32,
-                            tokens: vec![out.next_token],
-                            cache: out.cache,
-                            req,
-                            queue_s,
-                            prefill_s,
-                            decode_s: 0.0,
-                            admit_clock,
-                        },
-                        slot,
-                    ),
-                );
-            }
-
-            // 2. One decode step per active sequence this round.
-            let round: Vec<RequestId> = (0..batcher.active_len())
-                .filter_map(|_| batcher.next_decode())
-                .collect();
-            for id in round {
-                let Some((seq, _slot)) = active.get_mut(&id) else { continue };
-                let max_seq = self.backend.config().max_seq;
-                let done = seq.tokens.len() >= seq.req.max_new_tokens
-                    || (seq.pos as usize) >= max_seq - 1;
-                let mut failed = false;
-                if !done {
-                    let t0 = Instant::now();
-                    match self.backend.decode(*seq.tokens.last().unwrap(), seq.pos, &seq.cache)
-                    {
-                        Ok(out) => {
-                            seq.decode_s += match out.cost_s {
-                                Some(c) => {
-                                    sim_clock += c;
-                                    sim_timed = true;
-                                    c
-                                }
-                                None => t0.elapsed().as_secs_f64(),
-                            };
-                            seq.tokens.push(out.next_token);
-                            seq.cache = out.cache;
-                            seq.pos += 1;
-                        }
-                        Err(e) => {
-                            // Same policy as prefill: one failing
-                            // sequence must not take down the engine.
-                            // Retire it with the tokens it has.
-                            eprintln!(
-                                "request {}: decode failed: {e}; retiring with partial output",
-                                seq.req.id
-                            );
-                            failed = true;
-                        }
-                    }
-                }
-                let done = failed
-                    || seq.tokens.len() >= seq.req.max_new_tokens
-                    || (seq.pos as usize) >= max_seq - 1;
-                if done {
-                    // 3. Retire.
-                    let (seq, slot) = active.remove(&id).unwrap();
-                    batcher.finish(id)?;
-                    pool.release(slot)?;
-                    let total_s = if sim_timed {
-                        // Virtual residency (including steps spent on
-                        // interleaved neighbours) + real queue wait.
-                        seq.queue_s + (sim_clock - seq.admit_clock)
-                    } else {
-                        seq.req.arrival.elapsed().as_secs_f64()
-                    };
-                    let res = RequestResult {
-                        id,
-                        total_s,
-                        tokens: seq.tokens,
-                        queue_s: seq.queue_s,
-                        prefill_s: seq.prefill_s,
-                        decode_s: seq.decode_s,
-                    };
-                    let _ = tx.send(res.clone());
-                    results.push(res);
-                }
-            }
+        for outcome in outcomes {
+            let outcome = outcome?;
+            sim_timed |= outcome.sim_timed;
+            results.extend(outcome.results);
+            lanes.push(outcome.stats);
         }
-
-        let wall_s = if sim_timed { sim_clock } else { start.elapsed().as_secs_f64() };
-        ServeReport::from(&results, wall_s)
+        // Merge at retire: lanes are concurrent engines over disjoint
+        // shards, so the global simulated timeline is the slowest
+        // lane's clock; real backends report elapsed wall time instead.
+        let wall_s = if sim_timed {
+            lanes.iter().map(|l| l.clock_s).fold(0.0f64, f64::max)
+        } else {
+            start.elapsed().as_secs_f64()
+        };
+        results.sort_by_key(|r| r.id);
+        ServeReport::from_lanes(&results, wall_s, lanes)
             .ok_or_else(|| crate::err!("no requests served"))
     }
 }
 
-/// Convenience: serve a fixed list of requests synchronously (used by
-/// the examples and integration tests).
-pub fn serve_all<B: Backend>(server: &Server<B>, requests: Vec<Request>) -> Result<ServeReport> {
-    let (req_tx, req_rx) = channel();
+/// Convenience: serve a fixed list of requests synchronously with
+/// deterministic sharding (used by the examples and integration tests).
+pub fn serve_all<B: Backend + Sync>(
+    server: &Server<B>,
+    requests: Vec<Request>,
+) -> Result<ServeReport> {
     let (res_tx, _res_rx) = channel();
-    for r in requests {
-        req_tx.send(r).unwrap();
-    }
-    drop(req_tx);
-    server.run(req_rx, res_tx)
+    server.run_preloaded(requests, res_tx)
 }

@@ -26,7 +26,7 @@ USAGE:
   tsar-cli simulate --shape NxKxM [--platform workstation|laptop|mobile] [--threads T]
   tsar-cli plan --model <name> [--platform P] [--n N]
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
-                 [--requests R] [--max-new T] [--batch B]
+                 [--requests R] [--max-new T] [--batch B] [--workers W]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
@@ -189,11 +189,13 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let n_req: usize = parse_flag(args, "--requests", 8)?;
     let max_new: usize = parse_flag(args, "--max-new", 16)?;
     let batch: usize = parse_flag(args, "--batch", 4)?;
+    let workers: usize = parse_flag(args, "--workers", 1)?;
     tsar::ensure!(max_new >= 1, "--max-new must be >= 1");
     tsar::ensure!(batch >= 1, "--batch must be >= 1");
+    tsar::ensure!(workers >= 1, "--workers must be >= 1");
 
     if let Some(dir) = flag(args, "--artifacts") {
-        return serve_pjrt(&dir, args, n_req, max_new, batch);
+        return serve_pjrt(&dir, args, n_req, max_new, batch, workers);
     }
 
     let model = flag(args, "--model").unwrap_or_else(|| "BitNet-2B-4T".into());
@@ -215,7 +217,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     for l in &backend.decode_plan().layers {
         println!("  {}", l.describe());
     }
-    drive(backend, n_req, max_new, batch)
+    drive(backend, n_req, max_new, batch, workers)
 }
 
 #[cfg(feature = "pjrt")]
@@ -225,11 +227,12 @@ fn serve_pjrt(
     n_req: usize,
     max_new: usize,
     batch: usize,
+    workers: usize,
 ) -> Result<()> {
     let variant = flag(args, "--variant").unwrap_or_else(|| "tsar".into());
     println!("loading artifacts from {dir} (variant {variant}) ...");
     let rt = tsar::runtime::ModelRuntime::load(dir, &variant)?;
-    drive(rt, n_req, max_new, batch)
+    drive(rt, n_req, max_new, batch, workers)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -239,6 +242,7 @@ fn serve_pjrt(
     _n_req: usize,
     _max_new: usize,
     _batch: usize,
+    _workers: usize,
 ) -> Result<()> {
     tsar::bail!(
         "--artifacts needs the PJRT runtime; rebuild with `cargo build --features pjrt` \
@@ -248,16 +252,25 @@ fn serve_pjrt(
 }
 
 /// Drive any backend through the coordinator with a synthetic request
-/// mix and print the serve report.
-fn drive<B: Backend>(backend: B, n_req: usize, max_new: usize, batch: usize) -> Result<()> {
+/// mix and print the serve report (per-lane breakdown included when
+/// serving with more than one worker).
+fn drive<B: Backend + Sync>(
+    backend: B,
+    n_req: usize,
+    max_new: usize,
+    batch: usize,
+    workers: usize,
+) -> Result<()> {
     let cfg = backend.config().clone();
     println!("serving on {}", backend.describe());
     println!(
-        "window: prefill {} tokens, KV capacity {}, vocab {}",
+        "window: prefill {} tokens, KV capacity {}, vocab {}  ({workers} worker lane(s), \
+         batch {batch}/lane)",
         cfg.prefill_len, cfg.max_seq, cfg.vocab
     );
 
-    let server = Server::new(backend, ServerConfig { max_batch: batch, kv_slots: batch });
+    let server =
+        Server::new(backend, ServerConfig { max_batch: batch, kv_slots: batch, workers })?;
     let mut rng = Rng::new(7);
     let requests: Vec<Request> = (0..n_req as u64)
         .map(|id| {
@@ -269,13 +282,11 @@ fn drive<B: Backend>(backend: B, n_req: usize, max_new: usize, batch: usize) -> 
         })
         .collect();
 
-    let (req_tx, req_rx) = channel();
+    // Preloaded mode shards the fixed list before the lanes start, so
+    // repeated runs (e.g. --workers 1 vs --workers 4 comparisons) are
+    // schedule-deterministic.
     let (res_tx, res_rx) = channel();
-    for r in requests {
-        req_tx.send(r).unwrap();
-    }
-    drop(req_tx);
-    let report = server.run(req_rx, res_tx)?;
+    let report = server.run_preloaded(requests, res_tx)?;
     drop(res_rx);
     report.print();
     Ok(())

@@ -26,11 +26,26 @@ pub struct Step<C> {
     /// *models* time instead of spending it ([`super::SimBackend`]).
     /// Real backends return `None` and the server falls back to
     /// wall-clock timing.
+    ///
+    /// For a step produced by [`Backend::decode_batch`], this is the
+    /// step's *share* of the whole round's cost (the round total is the
+    /// sum over the returned steps), so schedulers can account rounds
+    /// and single steps uniformly.
     pub cost_s: Option<f64>,
 }
 
-/// A loaded model an engine thread can drive: batch-1 prefill/decode
-/// steps over explicit per-sequence KV state.
+/// One sequence's slice of a batched decode round: the freshly sampled
+/// token to feed, its position, and a borrow of the sequence's KV state.
+pub struct BatchItem<'a, C> {
+    pub token: i32,
+    pub pos: i32,
+    pub cache: &'a C,
+}
+
+/// A loaded model a worker lane can drive: prefill/decode steps over
+/// explicit per-sequence KV state, batch-1 or as whole batched decode
+/// rounds ([`Backend::decode_batch`]).  All methods take `&self`, so one
+/// backend instance can be shared across worker lanes.
 pub trait Backend {
     /// Per-sequence KV state threaded between steps by the scheduler.
     type Cache;
@@ -49,6 +64,34 @@ pub trait Backend {
     /// One greedy decode step: feed `token` at position `pos` against
     /// `cache`, producing the next token and the successor cache.
     fn decode(&self, token: i32, pos: i32, cache: &Self::Cache) -> Result<Step<Self::Cache>>;
+
+    /// One decode round over a whole batch of sequences, returning one
+    /// step per item in order.
+    ///
+    /// The default implementation serializes batch-1 [`Backend::decode`]
+    /// calls, so every backend supports the batched surface; backends
+    /// that can vectorize the batch dimension (a multi-batch AOT
+    /// executable, or [`super::SimBackend`]'s contention-aware round
+    /// costing) override it.  Tokens must be identical to what the
+    /// serialized path produces — batching is a cost/throughput
+    /// optimization, never a semantic one.
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, Self::Cache>],
+    ) -> Result<Vec<Step<Self::Cache>>> {
+        let mut steps = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            steps.push(self.decode(r.token, r.pos, r.cache)?);
+        }
+        Ok(steps)
+    }
+
+    /// Compact description of the kernel plan this backend decodes with
+    /// (for request-level metrics records).  Backends that execute for
+    /// real and have no modeled plan return `None`.
+    fn plan_summary(&self) -> Option<String> {
+        None
+    }
 
     /// Greedy generation: prefill + `n_new - 1` decode steps.
     fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {

@@ -1,8 +1,10 @@
 //! Model runtimes behind one serving-facing abstraction (DESIGN.md §3).
 //!
-//! [`Backend`] is the surface the coordinator drives: batch-1
-//! prefill/decode steps over explicit per-sequence KV state, plus the
-//! model/window description ([`ModelConfig`]).  Implementations:
+//! [`Backend`] is the surface the coordinator's worker lanes drive:
+//! prefill/decode steps — batch-1 or whole batched decode rounds
+//! ([`Backend::decode_batch`] over [`BatchItem`]s) — over explicit
+//! per-sequence KV state, plus the model/window description
+//! ([`ModelConfig`]).  Implementations:
 //!
 //! * [`SimBackend`] (default) — functional token steps costed by the
 //!   §III-D adaptive kernel plan through the `sim` timing engine; the
@@ -23,7 +25,7 @@ pub mod sim_backend;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use backend::{Backend, Step};
+pub use backend::{Backend, BatchItem, Step};
 pub use manifest::{DType, EntryPoint, Manifest, ModelConfig, ParamMeta};
 pub use sim_backend::{SimBackend, SimBackendConfig, SimKvCache};
 

@@ -3,20 +3,27 @@
 //! exactly like the synthetic ternary checkpoints of `model::zoo`) while
 //! per-step *cost* comes from the §III-D adaptive kernel plan run
 //! through the `sim` timing engine — so coordinator-level latency and
-//! throughput numbers stay paper-faithful (DESIGN.md §3).
+//! throughput numbers stay paper-faithful (DESIGN.md §3).  Batched
+//! decode rounds are costed as one plan selection on the batched GEMV
+//! shape (N = round width) under the multi-core contention model, so
+//! batching is cheaper than serializing without perturbing tokens.
 //!
 //! The KV cache substitute is the token history: that is the exact
 //! information content of a real KV cache for a deterministic model, and
 //! it keeps the scheduler honest (prefill/decode must thread state
 //! between steps just like the PJRT path).
 
+use std::collections::HashMap;
+use std::sync::Mutex;
+
 use crate::config::platforms::Platform;
 use crate::coordinator::selector::{select_plan, ModelPlan};
+use crate::kernels::TernaryKernel;
 use crate::model::zoo::{self, ModelSpec};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
-use super::backend::{Backend, Step};
+use super::backend::{Backend, BatchItem, Step};
 use super::manifest::ModelConfig;
 
 /// Serving-window parameters of a [`SimBackend`] (the counterpart of the
@@ -67,6 +74,10 @@ pub struct SimBackend {
     seed: u64,
     prefill_plan: ModelPlan,
     decode_plan: ModelPlan,
+    /// Lazily selected §III-D plans for batched decode rounds, keyed by
+    /// round width (N of the batched GEMV shape).  Interior-mutable so
+    /// worker lanes sharing one backend can fault plans in on demand.
+    batch_plans: Mutex<HashMap<usize, ModelPlan>>,
 }
 
 impl SimBackend {
@@ -96,6 +107,7 @@ impl SimBackend {
             seed: cfg.seed,
             prefill_plan,
             decode_plan,
+            batch_plans: Mutex::new(HashMap::new()),
         }
     }
 
@@ -126,6 +138,30 @@ impl SimBackend {
     /// The adaptive kernel plan driving prefill cost (N = prefill_len).
     pub fn prefill_plan(&self) -> &ModelPlan {
         &self.prefill_plan
+    }
+
+    /// The §III-D plan costing one batched decode round of `width`
+    /// sequences: plan selection on the batched GEMV shape (N = width),
+    /// simulated with one core per batch lane — `threads` grows with the
+    /// width (floored at the configured thread budget), so the round is
+    /// contention-aware: weights stream once for the whole batch while
+    /// the lanes compete for shared cache capacity and DRAM bandwidth,
+    /// exactly the Fig. 10 multi-core mechanism.  Plans are cached per
+    /// width.
+    pub fn decode_round_plan(&self, width: usize) -> ModelPlan {
+        assert!(width >= 1, "a decode round needs at least one sequence");
+        if width == 1 {
+            // A width-1 round is a plain decode step: same plan, so
+            // batched and serialized costing agree exactly.
+            return self.decode_plan.clone();
+        }
+        let mut plans = self.batch_plans.lock().expect("batch-plan cache poisoned");
+        plans
+            .entry(width)
+            .or_insert_with(|| {
+                select_plan(self.spec, &self.platform, width, self.threads.max(width))
+            })
+            .clone()
     }
 
     /// Deterministic next token from a history: FNV-1a fold of the
@@ -187,6 +223,49 @@ impl Backend for SimBackend {
             cache: SimKvCache { history },
             cost_s: Some(self.decode_plan.pass_seconds()),
         })
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Tokens are computed exactly as the serialized batch-1 path
+        // computes them (same functional stream); only the *cost* model
+        // changes: the whole round is one batched GEMV pass, split
+        // evenly across the sequences so per-request decode accounting
+        // still sums to the round total.
+        let round = self.decode_round_plan(reqs.len());
+        let share = round.pass_seconds() / reqs.len() as f64;
+        let mut steps = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            crate::ensure!(
+                (r.pos as usize) < self.config.max_seq,
+                "KV cache exhausted at pos {}",
+                r.pos
+            );
+            let mut history = r.cache.history.clone();
+            history.push(r.token);
+            let next_token = self.next_token(&history);
+            steps.push(Step {
+                next_token,
+                cache: SimKvCache { history },
+                cost_s: Some(share),
+            });
+        }
+        Ok(steps)
+    }
+
+    fn plan_summary(&self) -> Option<String> {
+        let sites: Vec<String> = self
+            .decode_plan
+            .layers
+            .iter()
+            .map(|l| format!("{}:{}", l.site, l.kernel.name()))
+            .collect();
+        Some(sites.join(" "))
     }
 }
 
@@ -251,6 +330,71 @@ mod tests {
         assert_eq!(d.cost_s, Some(b.decode_plan().pass_seconds()));
         // Prefill over the whole window must cost more than one decode.
         assert!(s.cost_s.unwrap() > d.cost_s.unwrap());
+    }
+
+    #[test]
+    fn decode_batch_matches_serialized_and_is_cheaper() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        // Three sequences with distinct histories.
+        let caches: Vec<SimKvCache> = (0..3)
+            .map(|i| {
+                let mut padded = vec![0i32; p];
+                padded[0] = 2 + i;
+                padded[1] = 5;
+                b.prefill(&padded, 2).unwrap().cache
+            })
+            .collect();
+        let items: Vec<BatchItem<'_, SimKvCache>> = caches
+            .iter()
+            .enumerate()
+            .map(|(i, c)| BatchItem { token: 9 + i as i32, pos: 2, cache: c })
+            .collect();
+        let batched = b.decode_batch(&items).unwrap();
+        assert_eq!(batched.len(), 3);
+        let mut batched_cost = 0.0;
+        let mut serial_cost = 0.0;
+        for (item, step) in items.iter().zip(&batched) {
+            let lone = b.decode(item.token, item.pos, item.cache).unwrap();
+            assert_eq!(step.next_token, lone.next_token, "batching changed a token");
+            batched_cost += step.cost_s.unwrap();
+            serial_cost += lone.cost_s.unwrap();
+        }
+        // The batched round streams the weights once for all three
+        // sequences; serializing streams them three times.
+        assert!(
+            batched_cost < serial_cost,
+            "batched round {batched_cost} not cheaper than serialized {serial_cost}"
+        );
+    }
+
+    #[test]
+    fn width_one_round_costs_a_plain_decode_step() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let s = b.prefill(&vec![1i32; p], 2).unwrap();
+        let item = [BatchItem { token: 4, pos: 2, cache: &s.cache }];
+        let round = b.decode_batch(&item).unwrap();
+        assert_eq!(round[0].cost_s, Some(b.decode_plan().pass_seconds()));
+    }
+
+    #[test]
+    fn decode_batch_rejects_exhausted_kv() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let s = b.prefill(&vec![1i32; p], 2).unwrap();
+        let max = b.config().max_seq as i32;
+        let items = [BatchItem { token: 0, pos: max, cache: &s.cache }];
+        assert!(b.decode_batch(&items).is_err());
+    }
+
+    #[test]
+    fn plan_summary_names_every_site() {
+        let b = backend();
+        let summary = b.plan_summary().unwrap();
+        for site in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
+            assert!(summary.contains(site), "{site} missing from {summary:?}");
+        }
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! Default-build end-to-end serving tests: drive `coordinator::Server`
-//! on the dependency-free `SimBackend` through the full lifecycle
-//! (admission → prefill → interleaved decode → retire), and check that
-//! the §III-D adaptive selector shapes the plan the serving loop runs on
-//! (DESIGN.md §3).
+//! Default-build end-to-end serving tests: drive the sharded
+//! `coordinator::Server` on the dependency-free `SimBackend` through
+//! the full lifecycle (dispatch → admission → prefill → batched decode
+//! rounds → retire → clock merge), and check that the §III-D adaptive
+//! selector shapes the plans the serving loop runs on (DESIGN.md §3).
+
+use std::sync::mpsc::channel;
 
 use tsar::config::platforms::Platform;
-use tsar::coordinator::{serve::serve_all, Request, Server, ServerConfig};
+use tsar::coordinator::{serve::serve_all, Request, RequestRecord, Server, ServerConfig};
 use tsar::kernels::Dataflow;
-use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
+use tsar::runtime::{Backend, BatchItem, SimBackend, SimBackendConfig};
 
 fn backend() -> SimBackend {
     SimBackend::by_name(
@@ -16,6 +18,10 @@ fn backend() -> SimBackend {
         SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
     )
     .expect("zoo model")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers }
 }
 
 #[test]
@@ -40,10 +46,18 @@ fn selector_picks_op_for_gemv_shaped_decode_steps() {
 }
 
 #[test]
+fn bad_config_is_an_error_not_a_panic() {
+    let e = Server::new(backend(), cfg(4, 2, 1)).err().expect("must reject");
+    assert!(e.to_string().contains("kv_slots"), "got {e}");
+    assert!(Server::new(backend(), cfg(0, 4, 1)).is_err());
+    assert!(Server::new(backend(), cfg(1, 1, 0)).is_err());
+}
+
+#[test]
 fn server_runs_admission_prefill_decode_retire() {
     let b = backend();
     let vocab = b.config().vocab as i32;
-    let server = Server::new(b, ServerConfig { max_batch: 3, kv_slots: 3 });
+    let server = Server::new(b, cfg(3, 3, 1)).expect("config");
     let requests: Vec<Request> = (0..6u64)
         .map(|id| {
             Request::new(
@@ -72,9 +86,40 @@ fn server_runs_admission_prefill_decode_retire() {
         report.prefill.mean,
         prefill_pass
     );
-    // 6 requests × (1 prefill + 4 decode steps) on the virtual clock.
+    // 6 requests in two waves of 3: per wave, 3 prefills then 4 batched
+    // decode rounds of width 3 — 6 prefills + 8 rounds on the virtual
+    // clock.
+    let round3 = server.backend().decode_round_plan(3).pass_seconds();
+    let expect_wall = 6.0 * prefill_pass + 8.0 * round3;
+    assert!(
+        (report.wall_s - expect_wall).abs() <= expect_wall * 1e-9,
+        "wall {} != {}",
+        report.wall_s,
+        expect_wall
+    );
+    // One lane served everything; its width histogram saw exactly the
+    // 8 width-3 rounds.
+    assert_eq!(report.lanes.len(), 1);
+    assert_eq!(report.lanes[0].requests, 6);
+    assert_eq!(report.lanes[0].rounds, 8);
+    assert_eq!(report.lanes[0].width_hist[3], 8);
+    assert!((report.lanes[0].utilization - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn tight_batch_degenerates_to_sequential_serving() {
+    let b = backend();
+    let server = Server::new(b, cfg(1, 1, 1)).expect("config");
+    let requests: Vec<Request> =
+        (0..3u64).map(|id| Request::new(id, vec![2, 4, 6], 4)).collect();
+    let report = serve_all(&server, requests).expect("serve");
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.total_tokens, 12);
+    // Width-1 rounds cost exactly a batch-1 decode step, so the clock
+    // is the fully serialized sum.
+    let prefill_pass = server.backend().prefill_plan().pass_seconds();
     let decode_pass = server.backend().decode_plan().pass_seconds();
-    let expect_wall = 6.0 * (prefill_pass + 4.0 * decode_pass);
+    let expect_wall = 3.0 * (prefill_pass + 3.0 * decode_pass);
     assert!(
         (report.wall_s - expect_wall).abs() <= expect_wall * 1e-9,
         "wall {} != {}",
@@ -84,19 +129,8 @@ fn server_runs_admission_prefill_decode_retire() {
 }
 
 #[test]
-fn tight_batch_degenerates_to_sequential_serving() {
-    let b = backend();
-    let server = Server::new(b, ServerConfig { max_batch: 1, kv_slots: 1 });
-    let requests: Vec<Request> =
-        (0..3u64).map(|id| Request::new(id, vec![2, 4, 6], 4)).collect();
-    let report = serve_all(&server, requests).expect("serve");
-    assert_eq!(report.requests, 3);
-    assert_eq!(report.total_tokens, 12);
-}
-
-#[test]
 fn served_tokens_match_direct_generation() {
-    // The scheduler must not perturb per-sequence results: interleaved
+    // The scheduler must not perturb per-sequence results: batched
     // decoding of many sequences produces exactly what Backend::generate
     // produces for each prompt alone (KV state is threaded correctly).
     let b = backend();
@@ -104,14 +138,14 @@ fn served_tokens_match_direct_generation() {
     let direct: Vec<Vec<i32>> =
         prompts.iter().map(|p| b.generate(p, 4).unwrap()).collect();
 
-    let server = Server::new(b, ServerConfig { max_batch: 3, kv_slots: 3 });
-    let (req_tx, req_rx) = std::sync::mpsc::channel();
-    let (res_tx, res_rx) = std::sync::mpsc::channel();
-    for (id, p) in prompts.iter().enumerate() {
-        req_tx.send(Request::new(id as u64, p.clone(), 4)).unwrap();
-    }
-    drop(req_tx);
-    server.run(req_rx, res_tx).expect("serve");
+    let server = Server::new(b, cfg(3, 3, 1)).expect("config");
+    let requests: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, p)| Request::new(id as u64, p.clone(), 4))
+        .collect();
+    let (res_tx, res_rx) = channel();
+    server.run_preloaded(requests, res_tx).expect("serve");
     let mut served: Vec<(u64, Vec<i32>)> = res_rx
         .into_iter()
         .map(|r| (r.id, r.tokens))
@@ -119,6 +153,190 @@ fn served_tokens_match_direct_generation() {
     served.sort_by_key(|(id, _)| *id);
     for (id, tokens) in served {
         assert_eq!(tokens, direct[id as usize], "request {id}");
+    }
+}
+
+#[test]
+fn decode_batch_is_token_identical_to_serialized_batch1() {
+    // Determinism of the batched surface over a whole generation: the
+    // same prompts stepped through decode_batch rounds yield
+    // token-for-token what the serialized batch-1 path (generate)
+    // yields.
+    let b = backend();
+    let prompts: Vec<Vec<i32>> = vec![vec![4, 1], vec![2, 7, 1], vec![11; 5], vec![3]];
+    let n_new = 6usize;
+    let direct: Vec<Vec<i32>> =
+        prompts.iter().map(|p| b.generate(p, n_new).unwrap()).collect();
+
+    let p = b.config().prefill_len;
+    let mut tokens: Vec<Vec<i32>> = Vec::new();
+    let mut caches = Vec::new();
+    let mut positions: Vec<i32> = Vec::new();
+    for prompt in &prompts {
+        let mut padded = vec![0i32; p];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let step = b.prefill(&padded, prompt.len() as i32).unwrap();
+        tokens.push(vec![step.next_token]);
+        caches.push(step.cache);
+        positions.push(prompt.len() as i32);
+    }
+    for _ in 1..n_new {
+        let steps = {
+            let items: Vec<BatchItem<'_, _>> = (0..prompts.len())
+                .map(|i| BatchItem {
+                    token: *tokens[i].last().unwrap(),
+                    pos: positions[i],
+                    cache: &caches[i],
+                })
+                .collect();
+            b.decode_batch(&items).unwrap()
+        };
+        for (i, step) in steps.into_iter().enumerate() {
+            tokens[i].push(step.next_token);
+            caches[i] = step.cache;
+            positions[i] += 1;
+        }
+    }
+    assert_eq!(tokens, direct, "batched decode diverged from batch-1");
+}
+
+#[test]
+fn multi_worker_e2e_merges_lane_clocks() {
+    // All requests retire across 3 lanes, and the merged virtual clock
+    // is the slowest lane (≤ the sum of per-lane clocks).
+    let b = backend();
+    let prompts: Vec<Vec<i32>> =
+        (0..9).map(|i| vec![1 + i, 2, 3 + (i % 4)]).collect();
+    let direct: Vec<Vec<i32>> =
+        prompts.iter().map(|pr| b.generate(pr, 5).unwrap()).collect();
+
+    let server = Server::new(b, cfg(2, 2, 3)).expect("config");
+    let requests: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, pr)| Request::new(id as u64, pr.clone(), 5))
+        .collect();
+    let (res_tx, res_rx) = channel();
+    let report = server.run_preloaded(requests, res_tx).expect("serve");
+
+    assert_eq!(report.requests, 9, "every request must retire");
+    let mut served: Vec<(u64, Vec<i32>)> =
+        res_rx.into_iter().map(|r| (r.id, r.tokens)).collect();
+    served.sort_by_key(|(id, _)| *id);
+    assert_eq!(served.len(), 9);
+    for (id, tokens) in served {
+        assert_eq!(tokens, direct[id as usize], "request {id}");
+    }
+
+    assert_eq!(report.lanes.len(), 3);
+    assert_eq!(report.lanes.iter().map(|l| l.requests).sum::<usize>(), 9);
+    let max_clock = report
+        .lanes
+        .iter()
+        .map(|l| l.clock_s)
+        .fold(0.0f64, f64::max);
+    assert!(
+        (report.wall_s - max_clock).abs() <= max_clock * 1e-12,
+        "merged timeline must be the slowest lane"
+    );
+    assert!(
+        report.wall_s <= report.lane_clock_sum_s * (1.0 + 1e-12),
+        "merged clock {} exceeds lane sum {}",
+        report.wall_s,
+        report.lane_clock_sum_s
+    );
+    // 9 requests round-robined over 3 lanes: every lane did real work.
+    for l in &report.lanes {
+        assert_eq!(l.requests, 3, "lane {} shard", l.lane);
+        assert!(l.clock_s > 0.0);
+        assert!(l.utilization > 0.0 && l.utilization <= 1.0 + 1e-12);
+    }
+}
+
+#[test]
+fn sharded_batched_serving_beats_single_lane_batch1() {
+    // The acceptance workload: the same request set served at
+    // --workers 4 with batched decode must report a strictly lower
+    // simulated makespan than --workers 1 batch-1, with identical
+    // generated tokens per request.
+    let prompts: Vec<Vec<i32>> = (0..8).map(|i| vec![2 + i, 5, 9 - (i % 3)]).collect();
+    let max_new = 6usize;
+    let serve = |config: ServerConfig| {
+        let server = Server::new(backend(), config).expect("config");
+        let requests: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(id, pr)| Request::new(id as u64, pr.clone(), max_new))
+            .collect();
+        let (res_tx, res_rx) = channel();
+        let report = server.run_preloaded(requests, res_tx).expect("serve");
+        let mut served: Vec<(u64, Vec<i32>)> =
+            res_rx.into_iter().map(|r| (r.id, r.tokens)).collect();
+        served.sort_by_key(|(id, _)| *id);
+        (report, served)
+    };
+
+    let (serial, tokens_serial) = serve(cfg(1, 1, 1));
+    let (sharded, tokens_sharded) = serve(cfg(4, 4, 4));
+
+    assert_eq!(tokens_serial, tokens_sharded, "sharding changed tokens");
+    assert!(
+        sharded.wall_s < serial.wall_s,
+        "sharded batched makespan {} not below batch-1 single-lane {}",
+        sharded.wall_s,
+        serial.wall_s
+    );
+    assert_eq!(sharded.lanes.len(), 4);
+}
+
+#[test]
+fn idle_lanes_do_not_pollute_the_merged_clock() {
+    // More lanes than requests: unused lanes count zero busy time (a
+    // lane clock is busy time, never blocked real time), so the merged
+    // makespan is exactly the one busy lane's clock.
+    let b = backend();
+    let server = Server::new(b, cfg(2, 2, 3)).expect("config");
+    let report =
+        serve_all(&server, vec![Request::new(0, vec![1, 2, 3], 4)]).expect("serve");
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.lanes.len(), 3);
+    assert!(report.lanes[0].clock_s > 0.0);
+    assert_eq!(report.lanes[1].clock_s, 0.0);
+    assert_eq!(report.lanes[2].clock_s, 0.0);
+    assert!(
+        (report.wall_s - report.lanes[0].clock_s).abs() <= report.wall_s * 1e-12,
+        "makespan must be the busy lane's clock"
+    );
+    assert!(
+        (report.lane_clock_sum_s - report.wall_s).abs() <= report.wall_s * 1e-12,
+        "idle lanes must not add busy time"
+    );
+}
+
+#[test]
+fn metrics_sink_streams_one_record_per_request() {
+    let b = backend();
+    let (rec_tx, rec_rx) = channel::<RequestRecord>();
+    let server = Server::new(b, cfg(2, 2, 2))
+        .expect("config")
+        .with_metrics_sink(rec_tx);
+    let requests: Vec<Request> =
+        (0..5u64).map(|id| Request::new(id, vec![1 + id as i32, 4], 3)).collect();
+    let report = serve_all(&server, requests).expect("serve");
+    drop(server); // close the sink's last sender
+    let mut records: Vec<RequestRecord> = rec_rx.into_iter().collect();
+    records.sort_by_key(|r| r.id);
+
+    assert_eq!(report.requests, 5);
+    assert_eq!(records.len(), 5, "one record per retired request");
+    for (i, rec) in records.iter().enumerate() {
+        assert_eq!(rec.id, i as u64);
+        assert!(rec.lane < 2);
+        assert_eq!(rec.tokens, 3);
+        assert!(rec.prefill_s > 0.0 && rec.decode_s > 0.0);
+        assert!(rec.total_s >= rec.prefill_s + rec.decode_s - 1e-12);
+        let plan = rec.plan.as_deref().expect("SimBackend exposes its plan");
+        assert!(plan.contains("ffn-gate-up"), "plan {plan:?}");
     }
 }
 
@@ -132,7 +350,7 @@ fn max_seq_guard_caps_generation() {
         SimBackendConfig { prefill_len: 8, max_seq: 10, threads: 0, seed: 3 },
     )
     .unwrap();
-    let server = Server::new(b, ServerConfig { max_batch: 1, kv_slots: 1 });
+    let server = Server::new(b, cfg(1, 1, 1)).expect("config");
     let report =
         serve_all(&server, vec![Request::new(0, vec![1, 2, 3], 50)]).expect("serve");
     assert_eq!(report.requests, 1);
