@@ -13,6 +13,14 @@ cargo build --release
 cargo test -q
 
 echo
+echo "== native kernel: scalar fallback forced (portable path) =="
+# Tier-1 above already ran native_differential on the *detected* path
+# (AVX2 on capable hosts); this run pins the portable fallback.  The
+# host-tuned AVX2 build (-C target-cpu=native) runs in the dedicated
+# native-kernel CI job, not here, to avoid duplicate work.
+TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test native_differential
+
+echo
 echo "== clippy (required) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -1,8 +1,9 @@
 //! Bench: ablation studies (A1 decomposition-vs-placement, A2/A3 block
 //! size × dataflow, A4 sparsity skipping, A5 NEON/RVV retargeting).
 
-fn main() {
+fn main() -> tsar::Result<()> {
     let t0 = std::time::Instant::now();
-    tsar::bench::ablations::all();
+    tsar::bench::ablations::all()?;
     println!("\n[ablations] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
 }

@@ -2,15 +2,15 @@
 //! (1a), TLUT request share across model sizes (1c), footprint-vs-share
 //! contrast (2c) and the baseline GEMV time breakdown (2d).
 
-fn main() {
+fn main() -> tsar::Result<()> {
     let t0 = std::time::Instant::now();
     tsar::bench::fig1a();
     println!();
     let shares = tsar::bench::fig1c();
     println!();
-    let (fp_share, req_share) = tsar::bench::fig2c();
+    let (fp_share, req_share) = tsar::bench::fig2c()?;
     println!();
-    let mem_frac = tsar::bench::fig2d();
+    let mem_frac = tsar::bench::fig2d()?;
 
     println!();
     println!(
@@ -25,4 +25,5 @@ fn main() {
     );
     println!("[fig2d] memory share {:.1}% (paper: 91.6%)", mem_frac * 100.0);
     println!("[fig1]  harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
 }

@@ -1,0 +1,68 @@
+//! Bench: measured native (AVX2/scalar) ternary GEMV throughput next to
+//! the §III-D modeled cost of the same shape — the cross-check the
+//! native path exists for (DESIGN.md §2, "native vs. modeled ISA").
+//!
+//! "GB/s" is the packed-weight stream rate (packed bytes / wall time):
+//! decode GEMV is weight-bandwidth-bound, so this is the figure of
+//! merit the paper argues about.
+
+use tsar::config::platforms::Platform;
+use tsar::config::IsaConfig;
+use tsar::kernels::native::NativeGemv;
+use tsar::kernels::{select_tsar_kernel, TernaryKernel};
+use tsar::sim::GemmShape;
+use tsar::util::rng::Rng;
+use tsar::util::stats::time_it;
+
+fn main() -> tsar::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(0x6E47);
+    let plat = Platform::workstation();
+    // The Fig. 10 decode shapes plus a square projection.
+    for shape in [
+        GemmShape::new(1, 2560, 6912),
+        GemmShape::new(1, 6912, 2560),
+        GemmShape::new(1, 2560, 2560),
+    ] {
+        let (modeled_kern, modeled) = select_tsar_kernel(shape, &plat, 1);
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let gemv = NativeGemv::new(isa)?;
+            let acts = rng.int8_acts(shape.k);
+            let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+            let packed = gemv.pack(&w, shape.m, shape.k)?;
+            let mut out = vec![0i32; shape.m];
+            let (_mean_s, min_s, runs) = time_it(
+                || {
+                    gemv.gemv(&acts, &packed, &mut out)
+                        .expect("bench shapes are valid");
+                    std::hint::black_box(&out);
+                },
+                10,
+                0.3,
+            );
+            let bytes = packed.packed_bytes() as f64;
+            println!(
+                "[native] {}x{}x{} {:<22} path={:<6} min {:>8.3} ms  \
+                 {:>6.2} GB/s weights  {:>8.1} M MAC/s  ({} runs)",
+                shape.n,
+                shape.k,
+                shape.m,
+                isa.name(),
+                gemv.path().name(),
+                min_s * 1e3,
+                bytes / min_s / 1e9,
+                shape.macs() / min_s / 1e6,
+                runs
+            );
+        }
+        println!(
+            "[native]   §III-D modeled pick for this shape: {:<28} {:>8.3} ms  \
+             {:>6.2} GB/s requests",
+            modeled_kern.name(),
+            modeled.seconds * 1e3,
+            modeled.request_bytes / modeled.seconds / 1e9
+        );
+    }
+    println!("[native] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,8 +1,9 @@
 //! Bench: regenerate Table III (cross-platform decode throughput and
 //! energy per token vs the Jetson AGX Orin model).
 
-fn main() {
+fn main() -> tsar::Result<()> {
     let t0 = std::time::Instant::now();
-    tsar::bench::table3();
+    tsar::bench::table3()?;
     println!("[table3] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
 }

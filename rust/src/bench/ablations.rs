@@ -17,6 +17,7 @@ use crate::config::platforms::Platform;
 use crate::config::IsaConfig;
 use crate::kernels::{Dataflow, TernaryKernel, Tl2Kernel, TsarKernel};
 use crate::sim::{simulate, GemmShape, KernelProfile, Stream};
+use crate::util::error::{Context, Result};
 use crate::util::table::Table;
 
 /// A1: hypothetical kernel with T-SAR's compressed binary LUTs kept in
@@ -150,9 +151,10 @@ pub fn ablation_sparsity() -> Vec<(f64, f64, f64)> {
 
 /// A5: ISA-family retargeting (footnote 1): decode tok/s per family on
 /// BitNet-2B-4T, with per-family register budgets and issue scaling.
-pub fn ablation_isa_family() -> Vec<(&'static str, f64)> {
+pub fn ablation_isa_family() -> Result<Vec<(&'static str, f64)>> {
     println!("== A5: ISA family retargeting (BitNet-2B-4T decode, Workstation-class core) ==");
-    let spec = crate::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let spec = crate::model::zoo::by_name("BitNet-2B-4T")
+        .context("A5 ISA-family ablation requested unknown model \"BitNet-2B-4T\"")?;
     let mut tab = Table::new(vec!["family", "config", "regs for LUTs", "tok/s"]);
     let mut out = Vec::new();
     for fam in ALL_FAMILIES {
@@ -177,17 +179,18 @@ pub fn ablation_isa_family() -> Vec<(&'static str, f64)> {
     }
     tab.print();
     println!("(decode is bandwidth-bound: the narrower NEON datapath costs little — the paper's portability claim)");
-    out
+    Ok(out)
 }
 
-pub fn all() {
+pub fn all() -> Result<()> {
     ablation_decomposition();
     println!();
     ablation_config_dataflow();
     println!();
     ablation_sparsity();
     println!();
-    ablation_isa_family();
+    ablation_isa_family()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -221,7 +224,7 @@ mod tests {
 
     #[test]
     fn a5_all_families_run() {
-        let rows = ablation_isa_family();
+        let rows = ablation_isa_family().unwrap();
         assert_eq!(rows.len(), 3);
         for (fam, tps) in &rows {
             assert!(*tps > 0.0, "{fam} produced no throughput");

@@ -16,6 +16,7 @@ use crate::kernels::{select_tsar_kernel, TernaryKernel, Tl2Kernel};
 use crate::model::zoo::{fig9_models, ModelSpec, MODEL_ZOO};
 use crate::model::Workload;
 use crate::sim::{simulate, GemmShape, SimResult};
+use crate::util::error::{Context, Result};
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 use crate::util::fmt_bytes;
@@ -104,10 +105,11 @@ pub fn fig1c() -> Vec<(String, f64)> {
 }
 
 /// Fig. 2(c): footprint-vs-accesses contrast for BitNet-2B-4T.
-pub fn fig2c() -> (f64, f64) {
+pub fn fig2c() -> Result<(f64, f64)> {
     println!("== Fig. 2(c): BitNet-2B-4T TLUT footprint vs access share ==");
     let plat = Platform::workstation();
-    let spec = crate::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let spec = crate::model::zoo::by_name("BitNet-2B-4T")
+        .context("Fig. 2(c) requested unknown model \"BitNet-2B-4T\"")?;
     let wl = Workload::decode(spec);
     let kernel = Tl2Kernel::new();
     let (mut lut_req, mut total_req, mut lut_fp) = (0.0, 0.0, 0.0f64);
@@ -129,14 +131,15 @@ pub fn fig2c() -> (f64, f64) {
         fmt_bytes(ram)
     );
     println!("TLUT share of memory requests: {:.1}%", req_share * 100.0);
-    (fp_share, req_share)
+    Ok((fp_share, req_share))
 }
 
 /// Fig. 2(d): baseline GEMV execution-time breakdown (memory vs compute).
-pub fn fig2d() -> f64 {
+pub fn fig2d() -> Result<f64> {
     println!("== Fig. 2(d): TL-2 BitLinear GEMV time breakdown ==");
     let plat = Platform::workstation();
-    let spec = crate::model::zoo::by_name("BitNet-2B-4T").unwrap();
+    let spec = crate::model::zoo::by_name("BitNet-2B-4T")
+        .context("Fig. 2(d) requested unknown model \"BitNet-2B-4T\"")?;
     let wl = Workload::decode(spec);
     let kernel = Tl2Kernel::new();
     let mut mem_weighted = 0.0;
@@ -148,7 +151,7 @@ pub fn fig2d() -> f64 {
     }
     let frac = mem_weighted / total;
     println!("memory R/W share of execution: {:.1}%", frac * 100.0);
-    frac
+    Ok(frac)
 }
 
 // ---------------------------------------------------------------------------
@@ -384,10 +387,11 @@ pub fn table2() {
     );
 }
 
-pub fn table3() {
+pub fn table3() -> Result<()> {
     println!("== Table III: cross-platform decode throughput & energy ==");
     for name in ["Llama-b1.58-8B", "Falcon3-b1.58-10B"] {
-        let spec = crate::model::zoo::by_name(name).unwrap();
+        let spec = crate::model::zoo::by_name(name)
+            .with_context(|| format!("Table III requested unknown model {name:?}"))?;
         println!("-- {name} --");
         let rows = energy::table3_rows(spec);
         let mut t = Table::new(vec!["Platform", "node", "tokens/s", "J/token"]);
@@ -400,16 +404,46 @@ pub fn table3() {
             ]);
         }
         t.print();
-        let jetson = rows.last().unwrap();
-        for r in &rows[..3] {
+        for (platform, tps_ratio, eff_ratio) in table3_comparisons(&rows)? {
             println!(
-                "{:<14} vs Jetson: {:.1}x tokens/s, {:.1}x energy efficiency",
-                r.platform.split(' ').next().unwrap(),
-                r.tokens_per_s / jetson.tokens_per_s,
-                jetson.joules_per_token / r.joules_per_token
+                "{platform:<14} vs Jetson: {tps_ratio:.1}x tokens/s, \
+                 {eff_ratio:.1}x energy efficiency"
             );
         }
     }
+    Ok(())
+}
+
+/// Baseline-relative Table III comparisons: `(short platform name,
+/// tokens/s ratio, energy-efficiency ratio)` per CPU row.
+///
+/// The Jetson baseline is selected *by platform name*, never by
+/// position, so a shuffled, reordered or extended platform list cannot
+/// silently change the denominator (the old code assumed the baseline
+/// was the final row), and malformed rows return errors instead of
+/// panicking.
+pub fn table3_comparisons(
+    rows: &[energy::CrossPlatformRow],
+) -> Result<Vec<(String, f64, f64)>> {
+    let jetson = rows
+        .iter()
+        .find(|r| r.platform.contains("Jetson"))
+        .context("Table III rows are missing the Jetson baseline row")?;
+    let mut out = Vec::new();
+    for r in rows.iter().filter(|r| !r.platform.contains("Jetson")) {
+        let short = r.platform.split_whitespace().next().with_context(|| {
+            format!(
+                "Table III row with empty platform name ({:.2} tokens/s)",
+                r.tokens_per_s
+            )
+        })?;
+        out.push((
+            short.to_string(),
+            r.tokens_per_s / jetson.tokens_per_s,
+            jetson.joules_per_token / r.joules_per_token,
+        ));
+    }
+    Ok(out)
 }
 
 /// §IV-C LLC hit-rate shifts.
@@ -441,14 +475,14 @@ pub fn llc_report() {
 }
 
 /// Everything, in paper order.
-pub fn report_all() {
+pub fn report_all() -> Result<()> {
     fig1a();
     println!();
     fig1c();
     println!();
-    fig2c();
+    fig2c()?;
     println!();
-    fig2d();
+    fig2d()?;
     println!();
     fig8();
     println!();
@@ -460,9 +494,10 @@ pub fn report_all() {
     println!();
     table2();
     println!();
-    table3();
+    table3()?;
     println!();
     llc_report();
+    Ok(())
 }
 
 #[cfg(test)]
@@ -496,6 +531,70 @@ mod tests {
     fn fig2d_memory_dominates_baseline() {
         // Paper: 91.6%.  Our model is charitable to the baseline's
         // compute overlap; require a clear memory-dominated majority.
-        assert!(fig2d() > 0.65);
+        assert!(fig2d().unwrap() > 0.65);
+    }
+
+    fn row(platform: &str, tps: f64, jpt: f64) -> energy::CrossPlatformRow {
+        energy::CrossPlatformRow {
+            platform: platform.to_string(),
+            node: "test",
+            tokens_per_s: tps,
+            joules_per_token: jpt,
+        }
+    }
+
+    #[test]
+    fn table3_baseline_found_by_name_in_shuffled_order() {
+        // Regression: the baseline used to be `rows.last()`; pin that a
+        // shuffled platform list yields identical comparisons.
+        let ordered = vec![
+            row("Workstation CPU (X, T-SAR)", 20.0, 1.0),
+            row("Laptop CPU (Y, T-SAR)", 10.0, 2.0),
+            row("Jetson AGX Orin GPU (llama.cpp)", 5.0, 4.0),
+        ];
+        let shuffled = vec![ordered[2].clone(), ordered[0].clone(), ordered[1].clone()];
+        let mut a = table3_comparisons(&ordered).unwrap();
+        let mut b = table3_comparisons(&shuffled).unwrap();
+        a.sort_by(|x, y| x.0.cmp(&y.0));
+        b.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(a.len(), 2);
+        for ((pa, ta, ea), (pb, tb, eb)) in a.iter().zip(&b) {
+            assert_eq!(pa, pb);
+            assert!((ta - tb).abs() < 1e-12 && (ea - eb).abs() < 1e-12);
+        }
+        // Ratios are against the Jetson row, wherever it sits.
+        let ws = a.iter().find(|r| r.0 == "Workstation").unwrap();
+        assert!((ws.1 - 4.0).abs() < 1e-12, "tokens/s ratio {}", ws.1);
+        assert!((ws.2 - 4.0).abs() < 1e-12, "efficiency ratio {}", ws.2);
+    }
+
+    #[test]
+    fn table3_malformed_rows_error_instead_of_panicking() {
+        // No Jetson baseline at all.
+        let no_jetson = vec![row("Workstation CPU", 20.0, 1.0)];
+        let e = table3_comparisons(&no_jetson).unwrap_err();
+        assert!(e.to_string().contains("Jetson"), "{e}");
+        // Empty platform name on a CPU row.
+        let empty_name = vec![
+            row("", 20.0, 1.0),
+            row("Jetson AGX Orin GPU (llama.cpp)", 5.0, 4.0),
+        ];
+        let e = table3_comparisons(&empty_name).unwrap_err();
+        assert!(e.to_string().contains("empty platform name"), "{e}");
+    }
+
+    #[test]
+    fn table3_real_rows_pin_jetson_by_name() {
+        // The real generator appends Jetson last today; reverse it to
+        // prove selection no longer depends on that.
+        let spec = crate::model::zoo::by_name("Llama-b1.58-8B").unwrap();
+        let mut rows = energy::table3_rows(spec);
+        rows.reverse();
+        let cmps = table3_comparisons(&rows).unwrap();
+        assert_eq!(cmps.len(), rows.len() - 1);
+        assert!(cmps.iter().all(|c| !c.0.contains("Jetson")));
+        // Workstation beats Jetson in throughput (Table III headline).
+        let ws = cmps.iter().find(|c| c.0 == "Workstation").unwrap();
+        assert!(ws.1 > 1.0);
     }
 }

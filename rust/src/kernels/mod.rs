@@ -15,6 +15,7 @@
 //! justification for each (DESIGN.md §2's substitution table).
 
 pub mod fp16;
+pub mod native;
 pub mod params;
 pub mod tl2;
 pub mod tmac;
@@ -28,6 +29,7 @@ pub use tsar::{Dataflow, TsarKernel};
 pub use tl2::Tl2Kernel;
 pub use tmac::TmacKernel;
 pub use fp16::Fp16Kernel;
+pub use native::{NativeGemv, NativeKernel, NativePath};
 
 /// A ternary matmul kernel: `(N×K) int8 · (M×K) ternary → (N×M) int32`.
 pub trait TernaryKernel {

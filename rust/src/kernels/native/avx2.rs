@@ -1,0 +1,272 @@
+//! AVX2 (`std::arch::x86_64`) execution of the OP-dataflow ternary GEMV
+//! over the [`PshufbPacked`] layout (DESIGN.md §2, "native vs. modeled
+//! ISA").
+//!
+//! The paper's TLUT/TGEMV pair maps onto stock AVX2 as:
+//!
+//! * **TLUT** — per k-slice the dense/sparse LUT entries are built once
+//!   (16-bit entries, split into lo/hi byte planes so `pshufb`'s 8-bit
+//!   lanes can gather them) and broadcast to both 128-bit lanes.
+//! * **TGEMV gather** — `_mm256_shuffle_epi8` pulls both byte planes of
+//!   16 entries per shuffle straight off the pre-arranged index stream;
+//!   `unpack{lo,hi}_epi8` re-interleaves the planes into 16-bit values.
+//! * **Adder tree** — `_mm256_sub_epi16` applies the dense−sparse
+//!   correction, then either `_mm256_madd_epi16` against ones (c=2: the
+//!   `vpmaddwd` 2:1 adder-tree stage the paper reuses, §III-C) or a
+//!   16-bit block accumulation widened by `_mm256_cvtepi16_epi32` (c=4)
+//!   reduces into 32-bit accumulators.  `_mm256_maddubs_epi16` does not
+//!   fit: it multiplies *unsigned* by signed bytes, and the
+//!   dense−sparse differences are signed 16-bit values.
+//!
+//! Exactness: with int8 activations, |LUT entry| ≤ c·127 ≤ 508, so a
+//! dense−sparse difference fits i16 with headroom (≤ 1016) and one
+//! slice's 4-block sum stays ≤ 4064 — every 16-bit intermediate is
+//! exact, and the i32 accumulation matches the modeled ISA (and the
+//! scalar reference) bit for bit.  The differential-fuzz suite
+//! (`tests/native_differential.rs`) enforces this against `tsar::exec`.
+//!
+//! Accumulator grouping follows the OP register budget (§III-D): LUTs
+//! are rebuilt once per (accumulator group, k-slice) with `m_acc` = 96
+//! outputs for c=2 and 48 for c=4 — the same amortization
+//! `TsarKernel::m_acc` models.
+
+use core::arch::x86_64::*;
+
+use crate::quant::pack::{PSHUFB_TILE_OUTS, PSHUFB_TILE_SLICE_BYTES};
+
+use super::lut_entry;
+
+/// Lo/hi byte planes of one c=2 slice's LUTs: the whole slice (4 blocks
+/// × 4 entries, 16-bit) fits one 16-byte lane per plane, entry (b, p)
+/// at byte `4b + p` — matching the pre-offset index bytes of the pack.
+struct C2Tables {
+    dense_lo: [u8; 16],
+    dense_hi: [u8; 16],
+    sparse_lo: [u8; 16],
+    sparse_hi: [u8; 16],
+}
+
+fn c2_tables(a: &[i8]) -> C2Tables {
+    debug_assert_eq!(a.len(), 8);
+    let mut t = C2Tables {
+        dense_lo: [0; 16],
+        dense_hi: [0; 16],
+        sparse_lo: [0; 16],
+        sparse_hi: [0; 16],
+    };
+    for b in 0..4 {
+        let blk = &a[2 * b..2 * b + 2];
+        for p in 0..4usize {
+            let (dense, sparse) = lut_entry(blk, p);
+            let i = 4 * b + p;
+            t.dense_lo[i] = (dense as u16 & 0xFF) as u8;
+            t.dense_hi[i] = ((dense as u16) >> 8) as u8;
+            t.sparse_lo[i] = (sparse as u16 & 0xFF) as u8;
+            t.sparse_hi[i] = ((sparse as u16) >> 8) as u8;
+        }
+    }
+    t
+}
+
+/// Lo/hi byte planes of one c=4 slice's LUTs: one 16-entry LUT per
+/// block and plane fills a full 16-byte lane.
+struct C4Tables {
+    dense_lo: [[u8; 16]; 4],
+    dense_hi: [[u8; 16]; 4],
+    sparse_lo: [[u8; 16]; 4],
+    sparse_hi: [[u8; 16]; 4],
+}
+
+fn c4_tables(a: &[i8]) -> C4Tables {
+    debug_assert_eq!(a.len(), 16);
+    let mut t = C4Tables {
+        dense_lo: [[0; 16]; 4],
+        dense_hi: [[0; 16]; 4],
+        sparse_lo: [[0; 16]; 4],
+        sparse_hi: [[0; 16]; 4],
+    };
+    for b in 0..4 {
+        let blk = &a[4 * b..4 * b + 4];
+        for p in 0..16usize {
+            let (dense, sparse) = lut_entry(blk, p);
+            t.dense_lo[b][p] = (dense as u16 & 0xFF) as u8;
+            t.dense_hi[b][p] = ((dense as u16) >> 8) as u8;
+            t.sparse_lo[b][p] = (sparse as u16 & 0xFF) as u8;
+            t.sparse_hi[b][p] = ((sparse as u16) >> 8) as u8;
+        }
+    }
+    t
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn broadcast16(bytes: &[u8; 16]) -> __m256i {
+    _mm256_broadcastsi128_si256(_mm_loadu_si128(bytes.as_ptr() as *const __m128i))
+}
+
+/// One GEMV row, c=2 (`TLUT_2×4 + TGEMV_8×16`).  `acts` is the padded
+/// activation row (`slices · 8`), `out` the padded output row
+/// (`tiles · 16`, zeroed by the caller).
+///
+/// # Safety
+/// Caller must have verified AVX2 support at runtime.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemv_row_c2(
+    data: &[u8],
+    tiles: usize,
+    slices: usize,
+    acts: &[i8],
+    out: &mut [i32],
+) {
+    debug_assert_eq!(acts.len(), slices * 8);
+    debug_assert_eq!(out.len(), tiles * PSHUFB_TILE_OUTS);
+    debug_assert_eq!(data.len(), tiles * slices * PSHUFB_TILE_SLICE_BYTES);
+    let ones = _mm256_set1_epi16(1);
+    // m_acc = 96 outputs: 6 tiles share each TLUT rebuild (§III-D OP).
+    const GROUP: usize = 6;
+    let mut tile0 = 0usize;
+    while tile0 < tiles {
+        let group = GROUP.min(tiles - tile0);
+        let mut acc = [[_mm256_setzero_si256(); 4]; GROUP];
+        for slice in 0..slices {
+            let t = c2_tables(&acts[slice * 8..slice * 8 + 8]);
+            let tdl = broadcast16(&t.dense_lo);
+            let tdh = broadcast16(&t.dense_hi);
+            let tsl = broadcast16(&t.sparse_lo);
+            let tsh = broadcast16(&t.sparse_hi);
+            for (g, acc_g) in acc.iter_mut().enumerate().take(group) {
+                let rec = data
+                    .as_ptr()
+                    .add(((tile0 + g) * slices + slice) * PSHUFB_TILE_SLICE_BYTES);
+                // Two 32-byte index vectors per half: dense then sparse.
+                for (half, acc_pair) in acc_g.chunks_mut(2).enumerate() {
+                    let d_idx = _mm256_loadu_si256(rec.add(half * 64) as *const __m256i);
+                    let s_idx =
+                        _mm256_loadu_si256(rec.add(half * 64 + 32) as *const __m256i);
+                    let d_lo = _mm256_shuffle_epi8(tdl, d_idx);
+                    let d_hi = _mm256_shuffle_epi8(tdh, d_idx);
+                    let s_lo = _mm256_shuffle_epi8(tsl, s_idx);
+                    let s_hi = _mm256_shuffle_epi8(tsh, s_idx);
+                    // Re-interleave byte planes into 16-bit entries, then
+                    // dense − sparse per (output, block).
+                    let diff_a = _mm256_sub_epi16(
+                        _mm256_unpacklo_epi8(d_lo, d_hi),
+                        _mm256_unpacklo_epi8(s_lo, s_hi),
+                    );
+                    let diff_b = _mm256_sub_epi16(
+                        _mm256_unpackhi_epi8(d_lo, d_hi),
+                        _mm256_unpackhi_epi8(s_lo, s_hi),
+                    );
+                    // vpmaddwd against ones: each output's four adjacent
+                    // block-diff lanes fold 2:1 into i32 pairs — the
+                    // reused dot-product adder tree.
+                    acc_pair[0] =
+                        _mm256_add_epi32(acc_pair[0], _mm256_madd_epi16(diff_a, ones));
+                    acc_pair[1] =
+                        _mm256_add_epi32(acc_pair[1], _mm256_madd_epi16(diff_b, ones));
+                }
+            }
+        }
+        for (g, acc_g) in acc.iter().enumerate().take(group) {
+            flush_c2(acc_g, &mut out[(tile0 + g) * 16..(tile0 + g) * 16 + 16]);
+        }
+        tile0 += group;
+    }
+}
+
+/// Fold the 2-lane-per-output i32 partials into the 16 tile outputs.
+///
+/// Lane order per accumulator vector v (from the unpack/madd pipeline):
+/// `[oA·p0, oA·p1, oA+1·p0, oA+1·p1 | oA+4·p0, oA+4·p1, oA+5·p0,
+/// oA+5·p1]` with `oA` = 0, 2, 8, 10 for the four vectors.
+#[target_feature(enable = "avx2")]
+unsafe fn flush_c2(acc: &[__m256i; 4], out: &mut [i32]) {
+    debug_assert_eq!(out.len(), 16);
+    let mut buf = [0i32; 8];
+    for (v, base) in acc.iter().zip([0usize, 2, 8, 10]) {
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, *v);
+        out[base] = buf[0] + buf[1];
+        out[base + 1] = buf[2] + buf[3];
+        out[base + 4] = buf[4] + buf[5];
+        out[base + 5] = buf[6] + buf[7];
+    }
+}
+
+/// One GEMV row, c=4 (`TLUT_4×4 + TGEMV_16×16`).
+///
+/// # Safety
+/// Caller must have verified AVX2 support at runtime.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemv_row_c4(
+    data: &[u8],
+    tiles: usize,
+    slices: usize,
+    acts: &[i8],
+    out: &mut [i32],
+) {
+    debug_assert_eq!(acts.len(), slices * 16);
+    debug_assert_eq!(out.len(), tiles * PSHUFB_TILE_OUTS);
+    debug_assert_eq!(data.len(), tiles * slices * PSHUFB_TILE_SLICE_BYTES);
+    // m_acc = 48 outputs: 3 tiles per TLUT rebuild (§III-D OP).
+    const GROUP: usize = 3;
+    let mut tile0 = 0usize;
+    while tile0 < tiles {
+        let group = GROUP.min(tiles - tile0);
+        let mut acc_lo = [_mm256_setzero_si256(); GROUP];
+        let mut acc_hi = [_mm256_setzero_si256(); GROUP];
+        for slice in 0..slices {
+            let t = c4_tables(&acts[slice * 16..slice * 16 + 16]);
+            let mut tdl = [_mm_setzero_si128(); 4];
+            let mut tdh = [_mm_setzero_si128(); 4];
+            let mut tsl = [_mm_setzero_si128(); 4];
+            let mut tsh = [_mm_setzero_si128(); 4];
+            for b in 0..4 {
+                tdl[b] = _mm_loadu_si128(t.dense_lo[b].as_ptr() as *const __m128i);
+                tdh[b] = _mm_loadu_si128(t.dense_hi[b].as_ptr() as *const __m128i);
+                tsl[b] = _mm_loadu_si128(t.sparse_lo[b].as_ptr() as *const __m128i);
+                tsh[b] = _mm_loadu_si128(t.sparse_hi[b].as_ptr() as *const __m128i);
+            }
+            for g in 0..group {
+                let rec = data
+                    .as_ptr()
+                    .add(((tile0 + g) * slices + slice) * PSHUFB_TILE_SLICE_BYTES);
+                // 16-bit per-output accumulator across the slice's 4
+                // blocks (|sum| ≤ 4·1016: exact).
+                let mut slice_acc = _mm256_setzero_si256();
+                for b in 0..4 {
+                    let d_idx = _mm_loadu_si128(rec.add(b * 32) as *const __m128i);
+                    let s_idx = _mm_loadu_si128(rec.add(b * 32 + 16) as *const __m128i);
+                    let d_lo = _mm_shuffle_epi8(tdl[b], d_idx);
+                    let d_hi = _mm_shuffle_epi8(tdh[b], d_idx);
+                    let s_lo = _mm_shuffle_epi8(tsl[b], s_idx);
+                    let s_hi = _mm_shuffle_epi8(tsh[b], s_idx);
+                    let dense = _mm256_set_m128i(
+                        _mm_unpackhi_epi8(d_lo, d_hi),
+                        _mm_unpacklo_epi8(d_lo, d_hi),
+                    );
+                    let sparse = _mm256_set_m128i(
+                        _mm_unpackhi_epi8(s_lo, s_hi),
+                        _mm_unpacklo_epi8(s_lo, s_hi),
+                    );
+                    slice_acc =
+                        _mm256_add_epi16(slice_acc, _mm256_sub_epi16(dense, sparse));
+                }
+                // Widen the slice total into the 32-bit accumulators.
+                acc_lo[g] = _mm256_add_epi32(
+                    acc_lo[g],
+                    _mm256_cvtepi16_epi32(_mm256_castsi256_si128(slice_acc)),
+                );
+                acc_hi[g] = _mm256_add_epi32(
+                    acc_hi[g],
+                    _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(slice_acc)),
+                );
+            }
+        }
+        for g in 0..group {
+            let o = (tile0 + g) * 16;
+            _mm256_storeu_si256(out.as_mut_ptr().add(o) as *mut __m256i, acc_lo[g]);
+            _mm256_storeu_si256(out.as_mut_ptr().add(o + 8) as *mut __m256i, acc_hi[g]);
+        }
+        tile0 += group;
+    }
+}

@@ -1,0 +1,382 @@
+//! Native (host-SIMD) execution of the OP-dataflow ternary GEMV — the
+//! first rung from "paper-faithful simulator" to a real CPU hot path
+//! (ROADMAP "Real AVX2 intrinsics path"; DESIGN.md §2 "native vs.
+//! modeled ISA").
+//!
+//! Three layers:
+//!
+//! * [`detect_path`] — runtime dispatch: `is_x86_feature_detected!`
+//!   picks the [`avx2`] kernels on capable hosts; everything else (and
+//!   `TSAR_NATIVE_FORCE_SCALAR=1`, which CI uses to prove the fallback
+//!   on AVX2 machines) takes the portable scalar path.  The crate
+//!   builds and tests on any architecture.
+//! * [`NativeGemv`] — pack ([`PshufbPacked`]) + execute, both paths
+//!   operating on the *same* byte layout so the pack is covered
+//!   everywhere.
+//! * [`NativeKernel`] — the [`TernaryKernel`] face: `run` executes for
+//!   real, `profile` reports the modeled OP cost so measured and
+//!   §III-D numbers sit side by side (`benches/native_gemv.rs`).
+//!
+//! Correctness contract: outputs are bit-identical to the modeled ISA
+//! ([`crate::tsar::exec`] driven by [`TsarKernel`]) — enforced by
+//! `tests/native_differential.rs` across randomized shapes and configs.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+use std::sync::OnceLock;
+
+use crate::config::IsaConfig;
+use crate::config::platforms::Platform;
+use crate::quant::encode_indices;
+use crate::quant::pack::{PshufbPacked, PSHUFB_TILE_OUTS};
+use crate::sim::{GemmShape, KernelProfile};
+use crate::util::error::Result;
+
+use super::{Dataflow, TernaryKernel, TsarKernel};
+
+/// Which implementation executes the GEMV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativePath {
+    /// `std::arch::x86_64` pshufb kernels (AVX2 detected at runtime).
+    Avx2,
+    /// Portable fallback over the same packed layout.
+    Scalar,
+}
+
+impl NativePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NativePath::Avx2 => "avx2",
+            NativePath::Scalar => "scalar",
+        }
+    }
+}
+
+#[allow(unreachable_code)]
+fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return is_x86_feature_detected!("avx2");
+    }
+    false
+}
+
+/// The best path this host supports, detected once.
+/// `TSAR_NATIVE_FORCE_SCALAR=1` pins the portable fallback.
+pub fn detect_path() -> NativePath {
+    static PATH: OnceLock<NativePath> = OnceLock::new();
+    *PATH.get_or_init(|| {
+        if std::env::var_os("TSAR_NATIVE_FORCE_SCALAR").is_some() {
+            return NativePath::Scalar;
+        }
+        if avx2_supported() {
+            NativePath::Avx2
+        } else {
+            NativePath::Scalar
+        }
+    })
+}
+
+/// Pack-and-execute surface for the native ternary GEMV.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeGemv {
+    isa: IsaConfig,
+    path: NativePath,
+}
+
+impl NativeGemv {
+    /// Build for `isa` on the detected best path.
+    pub fn new(isa: IsaConfig) -> Result<NativeGemv> {
+        NativeGemv::with_path(isa, detect_path())
+    }
+
+    /// Build with an explicit path (tests/CI force the scalar fallback
+    /// this way on AVX2 hosts).
+    pub fn with_path(isa: IsaConfig, path: NativePath) -> Result<NativeGemv> {
+        crate::ensure!(
+            isa == IsaConfig::C2 || isa == IsaConfig::C4,
+            "native kernels implement the paper's AVX2 configs (C2/C4), got {}",
+            isa.name()
+        );
+        if path == NativePath::Avx2 {
+            crate::ensure!(
+                avx2_supported(),
+                "AVX2 path requested but the host does not report AVX2"
+            );
+        }
+        Ok(NativeGemv { isa, path })
+    }
+
+    pub fn isa(&self) -> IsaConfig {
+        self.isa
+    }
+
+    pub fn path(&self) -> NativePath {
+        self.path
+    }
+
+    /// Compile-time side: pad, encode (Fig. 5) and repack a row-major
+    /// ternary (M × K) matrix into the pshufb execution layout.
+    pub fn pack(&self, w_t: &[i8], m: usize, k: usize) -> Result<PshufbPacked> {
+        crate::ensure!(m >= 1 && k >= 1, "empty weight matrix");
+        crate::ensure!(
+            w_t.len() == m * k,
+            "weight buffer holds {} values, expected m*k = {}",
+            w_t.len(),
+            m * k
+        );
+        let cfg = &self.isa;
+        let k_pad = k.div_ceil(cfg.k) * cfg.k;
+        let m_pad = m.div_ceil(PSHUFB_TILE_OUTS) * PSHUFB_TILE_OUTS;
+        let mut w = vec![0i8; m_pad * k_pad];
+        for j in 0..m {
+            w[j * k_pad..j * k_pad + k].copy_from_slice(&w_t[j * k..(j + 1) * k]);
+        }
+        let enc = encode_indices(&w, m_pad, k_pad, cfg.c);
+        PshufbPacked::from_encoded(&enc, cfg.s, m, k)
+    }
+
+    /// One GEMV: `acts` has `packed.k` int8 activations, `out` receives
+    /// `packed.m` int32 results.
+    pub fn gemv(&self, acts: &[i8], packed: &PshufbPacked, out: &mut [i32]) -> Result<()> {
+        self.gemm(acts, packed, 1, out)
+    }
+
+    /// Row-major GEMM over `n` activation rows (each row runs the GEMV
+    /// kernel; decode is n = 1).
+    pub fn gemm(
+        &self,
+        acts: &[i8],
+        packed: &PshufbPacked,
+        n: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
+        crate::ensure!(
+            packed.c == self.isa.c && packed.s == self.isa.s,
+            "packed layout is c={} s={}, kernel wants {}",
+            packed.c,
+            packed.s,
+            self.isa.name()
+        );
+        crate::ensure!(
+            acts.len() == n * packed.k,
+            "activations hold {} values, expected n*k = {}",
+            acts.len(),
+            n * packed.k
+        );
+        crate::ensure!(
+            out.len() == n * packed.m,
+            "output holds {} slots, expected n*m = {}",
+            out.len(),
+            n * packed.m
+        );
+        let mut a_pad = vec![0i8; packed.k_pad];
+        let mut o_pad = vec![0i32; packed.m_pad];
+        for row in 0..n {
+            a_pad[..packed.k].copy_from_slice(&acts[row * packed.k..(row + 1) * packed.k]);
+            o_pad.fill(0);
+            self.run_row(&a_pad, packed, &mut o_pad);
+            out[row * packed.m..(row + 1) * packed.m].copy_from_slice(&o_pad[..packed.m]);
+        }
+        Ok(())
+    }
+
+    fn run_row(&self, acts: &[i8], packed: &PshufbPacked, out: &mut [i32]) {
+        match self.path {
+            #[cfg(target_arch = "x86_64")]
+            NativePath::Avx2 => {
+                // Safety: `path` is only Avx2 when runtime detection
+                // reported AVX2 (enforced in `with_path`).
+                unsafe {
+                    if packed.c == 2 {
+                        avx2::gemv_row_c2(&packed.data, packed.tiles, packed.slices, acts, out);
+                    } else {
+                        avx2::gemv_row_c4(&packed.data, packed.tiles, packed.slices, acts, out);
+                    }
+                }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            NativePath::Avx2 => scalar_row(&self.isa, packed, acts, out),
+            NativePath::Scalar => scalar_row(&self.isa, packed, acts, out),
+        }
+    }
+}
+
+/// Dense/sparse LUT entry `p` over a `c`-activation block — the single
+/// subset-sum definition (semantics of `tsar::exec::tlut`) shared by
+/// the scalar fallback and the AVX2 table builders, so a semantics
+/// change cannot diverge per execution path.
+pub(crate) fn lut_entry(block: &[i8], p: usize) -> (i16, i16) {
+    let mut dense = 0i16;
+    let mut sparse = 0i16;
+    for (i, &av) in block.iter().enumerate() {
+        let av = av as i16;
+        if p >> i & 1 == 1 {
+            dense = dense.wrapping_add(av);
+            sparse = sparse.wrapping_add(av);
+        } else {
+            dense = dense.wrapping_sub(av);
+        }
+    }
+    (dense, sparse)
+}
+
+/// Portable fallback: the same TLUT-build + gather + dense−sparse +
+/// adder-tree semantics over the same [`PshufbPacked`] bytes, in plain
+/// Rust.  Intermediate widths mirror the modeled ISA (16-bit entries
+/// and differences, 32-bit accumulation), so results are bit-identical
+/// on every host.
+fn scalar_row(isa: &IsaConfig, packed: &PshufbPacked, acts: &[i8], out: &mut [i32]) {
+    let (c, s) = (isa.c, isa.s);
+    let entries = 1usize << c;
+    let mut dense = vec![0i16; s * entries];
+    let mut sparse = vec![0i16; s * entries];
+    for slice in 0..packed.slices {
+        let a = &acts[slice * isa.k..(slice + 1) * isa.k];
+        for b in 0..s {
+            let blk = &a[b * c..(b + 1) * c];
+            for p in 0..entries {
+                let (d, sp) = lut_entry(blk, p);
+                dense[b * entries + p] = d;
+                sparse[b * entries + p] = sp;
+            }
+        }
+        for tile in 0..packed.tiles {
+            let base = tile * PSHUFB_TILE_OUTS;
+            for o in 0..PSHUFB_TILE_OUTS {
+                let mut acc = 0i32;
+                for b in 0..s {
+                    let (dp, spn) = packed.indices(tile, slice, o, b);
+                    let diff = dense[b * entries + dp as usize]
+                        .wrapping_sub(sparse[b * entries + spn as usize]);
+                    acc += diff as i32;
+                }
+                out[base + o] += acc;
+            }
+        }
+    }
+}
+
+/// [`TernaryKernel`] face of the native path: `run` executes on host
+/// SIMD (or the portable fallback), `profile` reports the §III-D
+/// modeled OP cost so native and modeled numbers are comparable in the
+/// same tables.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeKernel {
+    gemv: NativeGemv,
+}
+
+impl NativeKernel {
+    pub fn new(isa: IsaConfig) -> Result<NativeKernel> {
+        Ok(NativeKernel { gemv: NativeGemv::new(isa)? })
+    }
+
+    pub fn gemv(&self) -> &NativeGemv {
+        &self.gemv
+    }
+}
+
+impl TernaryKernel for NativeKernel {
+    fn name(&self) -> String {
+        format!("native-{}/{}/OP", self.gemv.path.name(), self.gemv.isa.name())
+    }
+
+    fn run(&self, acts: &[i8], w_t: &[i8], shape: GemmShape) -> Vec<i32> {
+        let GemmShape { n, k, m } = shape;
+        assert_eq!(acts.len(), n * k);
+        assert_eq!(w_t.len(), m * k);
+        let packed = self.gemv.pack(w_t, m, k).expect("shape asserted above");
+        let mut out = vec![0i32; n * m];
+        self.gemv
+            .gemm(acts, &packed, n, &mut out)
+            .expect("buffers sized above");
+        out
+    }
+
+    fn profile(&self, shape: GemmShape, plat: &Platform, threads: usize) -> KernelProfile {
+        let mut p = TsarKernel::new(self.gemv.isa, Dataflow::Op).profile(shape, plat, threads);
+        p.kernel = self.name();
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::scalar_gemm;
+    use crate::util::rng::Rng;
+
+    fn check(gemv: &NativeGemv, shape: GemmShape, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
+        let want = scalar_gemm(&acts, &w, shape);
+        let packed = gemv.pack(&w, shape.m, shape.k).unwrap();
+        let mut out = vec![0i32; shape.n * shape.m];
+        gemv.gemm(&acts, &packed, shape.n, &mut out).unwrap();
+        assert_eq!(out, want, "{} {:?} {shape:?}", gemv.isa().name(), gemv.path());
+    }
+
+    #[test]
+    fn scalar_path_matches_reference_both_configs() {
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let gemv = NativeGemv::with_path(isa, NativePath::Scalar).unwrap();
+            // Aligned, unaligned, multi-row, and multi-group-M shapes.
+            check(&gemv, GemmShape::new(1, 2 * isa.k, 16), 50);
+            check(&gemv, GemmShape::new(1, 37, 19), 51);
+            check(&gemv, GemmShape::new(3, 53, 45), 52);
+            check(&gemv, GemmShape::new(1, 4 * isa.k, 7 * 16 + 5), 53);
+        }
+    }
+
+    #[test]
+    fn detected_path_matches_reference_both_configs() {
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let gemv = NativeGemv::new(isa).unwrap();
+            check(&gemv, GemmShape::new(1, 96, 130), 60);
+            check(&gemv, GemmShape::new(2, 41, 33), 61);
+        }
+    }
+
+    #[test]
+    fn kernel_face_matches_reference() {
+        let mut rng = Rng::new(62);
+        let shape = GemmShape::new(2, 72, 40);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.4);
+        let want = scalar_gemm(&acts, &w, shape);
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let kern = NativeKernel::new(isa).unwrap();
+            assert_eq!(kern.run(&acts, &w, shape), want, "{}", kern.name());
+            assert!(kern.name().starts_with("native-"));
+        }
+    }
+
+    #[test]
+    fn profile_reports_modeled_op_cost_under_native_name() {
+        let plat = Platform::workstation();
+        let kern = NativeKernel::new(IsaConfig::C2).unwrap();
+        let p = kern.profile(GemmShape::new(1, 2560, 6912), &plat, 1);
+        let q = TsarKernel::new(IsaConfig::C2, Dataflow::Op).profile(
+            GemmShape::new(1, 2560, 6912),
+            &plat,
+            1,
+        );
+        assert_eq!(p.kernel, kern.name());
+        assert_eq!(p.simd_uops, q.simd_uops);
+        assert_eq!(p.streams.len(), q.streams.len());
+    }
+
+    #[test]
+    fn rejects_non_paper_configs_and_bad_buffers() {
+        assert!(NativeGemv::new(IsaConfig::new(2, 8, 16, 16)).is_err());
+        let gemv = NativeGemv::with_path(IsaConfig::C2, NativePath::Scalar).unwrap();
+        assert!(gemv.pack(&[0i8; 7], 2, 4).is_err());
+        let packed = gemv.pack(&[0i8; 8], 2, 4).unwrap();
+        let mut out = vec![0i32; 2];
+        assert!(gemv.gemv(&[0i8; 3], &packed, &mut out).is_err());
+        let c4 = NativeGemv::with_path(IsaConfig::C4, NativePath::Scalar).unwrap();
+        assert!(c4.gemv(&[0i8; 4], &packed, &mut out).is_err());
+    }
+}

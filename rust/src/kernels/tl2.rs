@@ -82,7 +82,7 @@ impl TernaryKernel for Tl2Kernel {
             for j in 0..m {
                 let mut acc = 0i32;
                 for g in 0..groups {
-                    let code = packed.codes[j * groups + g] as usize;
+                    let code = packed.code(j, g) as usize;
                     acc += tables[g][code];
                 }
                 out[row * m + j] = acc;

@@ -10,10 +10,11 @@ use std::sync::mpsc::channel;
 
 use tsar::bench;
 use tsar::config::platforms::{Platform, PlatformKind};
+use tsar::config::IsaConfig;
 use tsar::coordinator::{select_plan, Request, Server, ServerConfig};
 use tsar::kernels::all_kernels;
 use tsar::model::zoo;
-use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
+use tsar::runtime::{Backend, NativeBackend, SimBackend, SimBackendConfig};
 use tsar::sim::{simulate, GemmShape};
 use tsar::util::error::{Context, Result};
 use tsar::util::rng::Rng;
@@ -27,9 +28,17 @@ USAGE:
   tsar-cli plan --model <name> [--platform P] [--n N]
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
+                 [--backend sim|native] [--isa c2|c4]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
+
+`serve --backend native` executes every decode step's BitLinear GEMVs
+through the host AVX2 pshufb kernels (scalar fallback elsewhere) and
+reports measured wall-clock latency; tokens are bit-identical to the
+default simulator backend.  The native weight layout costs ~1 B/weight,
+so it defaults to BitNet-125M — pass --model explicitly to serve the
+billion-parameter zoo entries natively.
 ";
 
 fn main() -> Result<()> {
@@ -75,10 +84,10 @@ fn report(which: &str) -> Result<()> {
             bench::fig1c();
         }
         "fig2c" => {
-            bench::fig2c();
+            bench::fig2c()?;
         }
         "fig2d" => {
-            bench::fig2d();
+            bench::fig2d()?;
         }
         "fig8" => {
             bench::fig8();
@@ -91,13 +100,13 @@ fn report(which: &str) -> Result<()> {
         }
         "table1" => bench::table1(),
         "table2" => bench::table2(),
-        "table3" => bench::table3(),
+        "table3" => bench::table3()?,
         "llc" => bench::llc_report(),
-        "ablations" => bench::ablations::all(),
+        "ablations" => bench::ablations::all()?,
         "all" => {
-            bench::report_all();
+            bench::report_all()?;
             println!();
-            bench::ablations::all();
+            bench::ablations::all()?;
         }
         other => tsar::bail!("unknown report {other:?}"),
     }
@@ -198,26 +207,61 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         return serve_pjrt(&dir, args, n_req, max_new, batch, workers);
     }
 
-    let model = flag(args, "--model").unwrap_or_else(|| "BitNet-2B-4T".into());
+    let model = flag(args, "--model");
     let plat = parse_platform(args);
     let threads: usize = parse_flag(args, "--threads", 0)?;
     let prefill_len: usize = parse_flag(args, "--prefill-len", 32)?;
     tsar::ensure!(prefill_len >= 1, "--prefill-len must be >= 1");
-    let backend = SimBackend::by_name(
-        &model,
-        plat,
-        SimBackendConfig {
-            prefill_len,
-            max_seq: prefill_len + max_new + 8,
-            threads,
-            ..SimBackendConfig::default()
-        },
-    )?;
-    println!("adaptive decode plan (§III-D):");
-    for l in &backend.decode_plan().layers {
-        println!("  {}", l.describe());
+    let bcfg = SimBackendConfig {
+        prefill_len,
+        max_seq: prefill_len + max_new + 8,
+        threads,
+        ..SimBackendConfig::default()
+    };
+
+    match flag(args, "--backend").as_deref().unwrap_or("sim") {
+        "sim" => {
+            let model = model.unwrap_or_else(|| "BitNet-2B-4T".into());
+            let backend = SimBackend::by_name(&model, plat, bcfg)?;
+            println!("adaptive decode plan (§III-D):");
+            for l in &backend.decode_plan().layers {
+                println!("  {}", l.describe());
+            }
+            drive(backend, n_req, max_new, batch, workers)
+        }
+        "native" => {
+            // Native execution packs weights at ~1 B/weight and really
+            // runs every GEMV, so the default model is the small end of
+            // the zoo — the multi-billion-parameter entries need real
+            // RAM and real patience and must be opted into explicitly.
+            let model = model.unwrap_or_else(|| {
+                println!("(no --model given: native backend defaults to BitNet-125M)");
+                "BitNet-125M".into()
+            });
+            // The native path executes on the host CPU; the simulator's
+            // platform/thread knobs do not apply.
+            if flag(args, "--platform").is_some() || flag(args, "--threads").is_some() {
+                eprintln!(
+                    "warning: --platform/--threads model the simulator and are \
+                     ignored by --backend native (runs single-threaded on this host)"
+                );
+            }
+            let isa = match flag(args, "--isa").as_deref() {
+                Some("c4") => IsaConfig::C4,
+                Some("c2") | None => IsaConfig::C2,
+                Some(other) => tsar::bail!("--isa must be c2 or c4, got {other:?}"),
+            };
+            println!("packing {model} for native execution ({}) ...", isa.name());
+            let backend = NativeBackend::by_name(&model, isa, bcfg)?;
+            println!(
+                "native path: {} ({:.1} MB packed weights)",
+                backend.path().name(),
+                backend.packed_bytes() as f64 / 1e6
+            );
+            drive(backend, n_req, max_new, batch, workers)
+        }
+        other => tsar::bail!("--backend must be sim or native, got {other:?}"),
     }
-    drive(backend, n_req, max_new, batch, workers)
 }
 
 #[cfg(feature = "pjrt")]

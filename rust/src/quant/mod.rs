@@ -9,7 +9,7 @@
 
 pub mod pack;
 
-pub use pack::{Tl2Packed, TmacPacked, TsarEncoded};
+pub use pack::{PshufbPacked, Tl2Packed, TmacPacked, TsarEncoded};
 
 /// Absmean ternarization: `scale = mean(|w|)`,
 /// `w_t = clip(round(w/scale), -1, 1)` (BitNet b1.58).

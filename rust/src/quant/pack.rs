@@ -2,6 +2,11 @@
 //! T-MAC grouped 4-bit indices.  The *storage density* difference matters
 //! for Fig. 9 (TL-2's denser packing limits T-SAR's GEMM-side memory
 //! reduction — paper footnote 1: ~20% more static weight RAM for T-SAR).
+//!
+//! [`PshufbPacked`] is the *execution-layout* repack of [`TsarEncoded`]
+//! consumed by the native AVX2 kernels (`kernels::native`): index bytes
+//! pre-arranged per `_mm256_shuffle_epi8`'s 128-bit lane-crossing rules
+//! so the hot loop issues shuffles straight off the weight stream.
 
 /// T-SAR compile-time encoding: per block of `c` weights, one dense index
 /// (bit per weight: +1 after densification) and one sparse index (bit per
@@ -31,15 +36,21 @@ impl TsarEncoded {
 }
 
 /// BitNet.cpp TL-2-style packing: 3 ternary weights → 5 bits (3^3 = 27 ≤
-/// 2^5 = 32), i.e. 1.67 bits/weight.  We store the base-3 digit group in
-/// a byte-aligned 5-bit stream.
+/// 2^5 = 32), i.e. 1.67 bits/weight.  Codes are bit-packed into a true
+/// 5-bit stream (rows byte-aligned), so [`Tl2Packed::packed_bytes`]
+/// reports the bytes the buffer actually occupies — footprint
+/// comparisons in the benches see the real density, not a nominal one.
 #[derive(Debug, Clone)]
 pub struct Tl2Packed {
     pub m: usize,
     pub k: usize,
-    /// 5-bit codes, one per 3-weight group, padded to bytes per row.
+    /// Bit-packed 5-bit codes: group `g` of row `r` occupies bits
+    /// `[g*5, g*5+5)` of row `r`'s `row_bytes`-byte slice (rows start on
+    /// byte boundaries).  Read through [`Tl2Packed::code`].
     pub codes: Vec<u8>,
     pub groups_per_row: usize,
+    /// Bytes per row of the packed stream: ⌈groups·5 / 8⌉.
+    pub row_bytes: usize,
 }
 
 pub const TL2_BITS_PER_WEIGHT: f64 = 5.0 / 3.0;
@@ -50,7 +61,8 @@ impl Tl2Packed {
     pub fn pack(w_t: &[i8], m: usize, k: usize) -> Tl2Packed {
         assert_eq!(w_t.len(), m * k);
         let groups = k.div_ceil(3);
-        let mut codes = vec![0u8; m * groups];
+        let row_bytes = (groups * 5).div_ceil(8);
+        let mut codes = vec![0u8; m * row_bytes];
         for row in 0..m {
             for g in 0..groups {
                 let mut code = 0u16;
@@ -60,27 +72,48 @@ impl Tl2Packed {
                     code = code * 3 + (w + 1) as u16; // base-3 digit in {0,1,2}
                 }
                 debug_assert!(code < 27);
-                codes[row * groups + g] = code as u8;
+                let code = code as u8;
+                let bit = g * 5;
+                let byte = row * row_bytes + bit / 8;
+                let sh = bit % 8;
+                codes[byte] |= code << sh;
+                if sh >= 4 {
+                    // The 5-bit code straddles the byte boundary.
+                    codes[byte + 1] |= code >> (8 - sh);
+                }
             }
         }
-        Tl2Packed { m, k, codes, groups_per_row: groups }
+        Tl2Packed { m, k, codes, groups_per_row: groups, row_bytes }
+    }
+
+    /// The 5-bit code of group `g` in row `row`.
+    pub fn code(&self, row: usize, g: usize) -> u8 {
+        debug_assert!(row < self.m && g < self.groups_per_row);
+        let bit = g * 5;
+        let byte = row * self.row_bytes + bit / 8;
+        let sh = bit % 8;
+        let mut v = self.codes[byte] >> sh;
+        if sh >= 4 {
+            v |= self.codes[byte + 1] << (8 - sh);
+        }
+        v & 0x1F
     }
 
     pub fn unpack(&self) -> Vec<i8> {
         let mut w = vec![0i8; self.m * self.k];
         for row in 0..self.m {
             for g in 0..self.groups_per_row {
-                let mut code = self.codes[row * self.groups_per_row + g] as i16;
+                let mut code = self.code(row, g) as i16;
                 // Digits come out most-significant-first.
                 let mut digits = [0i8; 3];
                 for i in (0..3).rev() {
                     digits[i] = (code % 3) as i8 - 1;
                     code /= 3;
                 }
-                for i in 0..3 {
+                for (i, &d) in digits.iter().enumerate() {
                     let col = g * 3 + i;
                     if col < self.k {
-                        w[row * self.k + col] = digits[i];
+                        w[row * self.k + col] = d;
                     }
                 }
             }
@@ -88,9 +121,10 @@ impl Tl2Packed {
         w
     }
 
-    /// In-memory footprint at the nominal 5-bit/group density.
+    /// In-memory footprint of the packed stream (true 5-bit density,
+    /// rows byte-aligned) — exactly `codes.len()`.
     pub fn packed_bytes(&self) -> usize {
-        (self.m * self.groups_per_row * 5).div_ceil(8)
+        self.codes.len()
     }
 }
 
@@ -113,10 +147,12 @@ pub struct TmacPacked {
 pub const TMAC_BITS_PER_WEIGHT: f64 = 2.0;
 
 impl TmacPacked {
+    /// Pack a row-major ternary matrix; K not divisible by the group
+    /// size is padded with zeros (zero-plane bit set), so any K packs.
     pub fn pack(w_t: &[i8], m: usize, k: usize, g: usize) -> TmacPacked {
         assert_eq!(w_t.len(), m * k);
-        assert_eq!(k % g, 0);
-        let groups = k / g;
+        assert!((1..=8).contains(&g), "group index must fit a byte");
+        let groups = k.div_ceil(g);
         let mut sign_idx = vec![0u8; m * groups];
         let mut zero_idx = vec![0u8; m * groups];
         for row in 0..m {
@@ -124,7 +160,8 @@ impl TmacPacked {
                 let mut s = 0u8;
                 let mut z = 0u8;
                 for i in 0..g {
-                    let w = w_t[row * k + grp * g + i];
+                    let col = grp * g + i;
+                    let w = if col < k { w_t[row * k + col] } else { 0 };
                     if w > 0 {
                         s |= 1 << i;
                     }
@@ -140,15 +177,18 @@ impl TmacPacked {
     }
 
     pub fn unpack(&self) -> Vec<i8> {
-        let groups = self.k / self.g;
+        let groups = self.k.div_ceil(self.g);
         let mut w = vec![0i8; self.m * self.k];
         for row in 0..self.m {
             for grp in 0..groups {
                 let s = self.sign_idx[row * groups + grp];
                 let z = self.zero_idx[row * groups + grp];
                 for i in 0..self.g {
-                    let col = row * self.k + grp * self.g + i;
-                    w[col] = if z >> i & 1 == 1 {
+                    let col = grp * self.g + i;
+                    if col >= self.k {
+                        continue;
+                    }
+                    w[row * self.k + col] = if z >> i & 1 == 1 {
                         0
                     } else if s >> i & 1 == 1 {
                         1
@@ -163,6 +203,155 @@ impl TmacPacked {
 
     pub fn packed_bytes(&self) -> usize {
         (self.m * self.k * 2).div_ceil(8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pshufb-ready execution layout for the native AVX2 kernels
+// ---------------------------------------------------------------------------
+
+/// Outputs per native tile: one tile's gathers fill complete YMM vectors
+/// (both paper configs have TGEMV m = 16).
+pub const PSHUFB_TILE_OUTS: usize = 16;
+
+/// Bytes of one (tile, k-slice) record.  Both supported configs land on
+/// 128 B: c=2 stores four 32-byte shuffle-index vectors (dense/sparse ×
+/// output halves), c=4 stores four blocks × (16 dense + 16 sparse) index
+/// bytes.
+pub const PSHUFB_TILE_SLICE_BYTES: usize = 128;
+
+/// [`TsarEncoded`] repacked for `_mm256_shuffle_epi8` consumption
+/// (`kernels::native`): per (16-output tile, k-slice) record, the
+/// dense/sparse LUT-entry indices are pre-arranged so the kernel loads
+/// them straight into shuffle index operands — no per-iteration index
+/// arithmetic on the hot path.
+///
+/// `pshufb` shuffles bytes *within each 128-bit lane*, so the layout
+/// follows the lane-crossing rules the kernels rely on:
+///
+/// * **c=2**: the whole slice's dense LUT (4 blocks × 4 entries) fits
+///   one 16-byte lane, so index bytes are stored pre-offset as
+///   `4·block + entry` and grouped `[dense o0..o7 | sparse o0..o7 |
+///   dense o8..o15 | sparse o8..o15]` (32 B each, outputs 0..3 in lane
+///   0 and 4..7 in lane 1 of each vector, four consecutive block-bytes
+///   per output so `vpmaddwd` reduces adjacent lanes of one output).
+/// * **c=4**: one block's 16-entry LUT fills a full lane (split into
+///   lo/hi byte planes by the kernel), so records hold per-block groups
+///   `[dense o0..o15 | sparse o0..o15]` (raw entry indices).
+#[derive(Debug, Clone)]
+pub struct PshufbPacked {
+    /// ISA block size (activations per LUT), 2 or 4.
+    pub c: usize,
+    /// Blocks per k-slice (both paper configs use 4).
+    pub s: usize,
+    /// Logical (unpadded) output / input-channel counts.
+    pub m: usize,
+    pub k: usize,
+    /// Padded geometry: `m_pad = tiles·16`, `k_pad = slices·c·s`.
+    pub m_pad: usize,
+    pub k_pad: usize,
+    pub tiles: usize,
+    pub slices: usize,
+    /// `tiles × slices` records of [`PSHUFB_TILE_SLICE_BYTES`],
+    /// tile-major (`record(tile, slice) = tile·slices + slice`).
+    pub data: Vec<u8>,
+}
+
+impl PshufbPacked {
+    /// Repack an encoded (already padded) matrix.  `m`/`k` are the
+    /// logical dims before padding; `enc` must be padded to whole tiles
+    /// and slices (`enc.m % 16 == 0`, `enc.k % (c·s) == 0`).
+    pub fn from_encoded(
+        enc: &TsarEncoded,
+        s: usize,
+        m: usize,
+        k: usize,
+    ) -> crate::util::error::Result<PshufbPacked> {
+        crate::ensure!(
+            enc.c == 2 || enc.c == 4,
+            "pshufb layout supports c in {{2,4}}, got {}",
+            enc.c
+        );
+        crate::ensure!(s == 4, "pshufb layout assumes s = 4 blocks per slice, got {s}");
+        crate::ensure!(
+            enc.m % PSHUFB_TILE_OUTS == 0,
+            "encoded M {} not padded to whole 16-output tiles",
+            enc.m
+        );
+        crate::ensure!(
+            enc.k % (enc.c * s) == 0,
+            "encoded K {} not padded to whole k-slices of {}",
+            enc.k,
+            enc.c * s
+        );
+        crate::ensure!(m <= enc.m && k <= enc.k, "logical dims exceed encoded dims");
+        let nb_row = enc.k / enc.c; // encoded blocks per row
+        let tiles = enc.m / PSHUFB_TILE_OUTS;
+        let slices = enc.k / (enc.c * s);
+        let mut data = vec![0u8; tiles * slices * PSHUFB_TILE_SLICE_BYTES];
+        for tile in 0..tiles {
+            for slice in 0..slices {
+                let rec = &mut data[(tile * slices + slice) * PSHUFB_TILE_SLICE_BYTES..]
+                    [..PSHUFB_TILE_SLICE_BYTES];
+                for o in 0..PSHUFB_TILE_OUTS {
+                    let row = tile * PSHUFB_TILE_OUTS + o;
+                    for b in 0..s {
+                        let blk = slice * s + b;
+                        let d = enc.wd[row * nb_row + blk];
+                        let sp = enc.ws[row * nb_row + blk];
+                        debug_assert!((d as usize) < 1 << enc.c);
+                        debug_assert!((sp as usize) < 1 << enc.c);
+                        match enc.c {
+                            2 => {
+                                let half = (o / 8) * 64;
+                                rec[half + (o % 8) * 4 + b] = (4 * b) as u8 + d;
+                                rec[half + 32 + (o % 8) * 4 + b] = (4 * b) as u8 + sp;
+                            }
+                            _ => {
+                                rec[b * 32 + o] = d;
+                                rec[b * 32 + 16 + o] = sp;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(PshufbPacked {
+            c: enc.c,
+            s,
+            m,
+            k,
+            m_pad: enc.m,
+            k_pad: enc.k,
+            tiles,
+            slices,
+            data,
+        })
+    }
+
+    /// Decode the (dense, sparse) LUT-entry indices of tile-local output
+    /// `o`, block `b` of one record — the layout contract shared by the
+    /// packer, the portable fallback kernel and the AVX2 shuffles.
+    pub fn indices(&self, tile: usize, slice: usize, o: usize, b: usize) -> (u8, u8) {
+        let rec = &self.data[(tile * self.slices + slice) * PSHUFB_TILE_SLICE_BYTES..]
+            [..PSHUFB_TILE_SLICE_BYTES];
+        match self.c {
+            2 => {
+                let half = (o / 8) * 64;
+                (
+                    rec[half + (o % 8) * 4 + b] - (4 * b) as u8,
+                    rec[half + 32 + (o % 8) * 4 + b] - (4 * b) as u8,
+                )
+            }
+            _ => (rec[b * 32 + o], rec[b * 32 + 16 + o]),
+        }
+    }
+
+    /// Bytes the execution layout occupies (1 byte per weight for c=2,
+    /// 0.5 for c=4 — a deliberate space-for-shuffle-throughput trade
+    /// over [`TsarEncoded::BITS_PER_WEIGHT`]'s 2 b/w storage form).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
     }
 }
 
@@ -214,5 +403,89 @@ mod tests {
         // Paper fn.1: TL-2's packing is ~20% denser than T-SAR's 1+1-bit.
         let ratio = TsarEncoded::BITS_PER_WEIGHT / TL2_BITS_PER_WEIGHT;
         assert!((ratio - 1.2).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn tl2_packed_bytes_reports_true_bitstream_density() {
+        // 8 groups/row = 40 bits = 5 bytes — the honest footprint, not
+        // the old 1-byte-per-group storage.
+        let w = Rng::new(6).ternary_matrix(3, 24, 0.3);
+        let p = Tl2Packed::pack(&w, 3, 24);
+        assert_eq!(p.groups_per_row, 8);
+        assert_eq!(p.row_bytes, 5);
+        assert_eq!(p.packed_bytes(), 15);
+        assert_eq!(p.packed_bytes(), p.codes.len());
+        let bits_per_weight = p.packed_bytes() as f64 * 8.0 / (3.0 * 24.0);
+        assert!((bits_per_weight - TL2_BITS_PER_WEIGHT).abs() < 1e-9);
+        assert_eq!(p.unpack(), w);
+    }
+
+    #[test]
+    fn tl2_codes_survive_byte_straddling() {
+        // Groups 1, 2, 4, 5... straddle byte boundaries; every code must
+        // read back exactly.
+        let w = Rng::new(7).ternary_matrix(2, 30, 0.4);
+        let p = Tl2Packed::pack(&w, 2, 30);
+        for row in 0..2 {
+            for g in 0..p.groups_per_row {
+                assert!(p.code(row, g) < 27, "row {row} group {g}");
+            }
+        }
+        assert_eq!(p.unpack(), w);
+    }
+
+    #[test]
+    fn tmac_pads_unaligned_k() {
+        let w = vec![1i8, -1, 0, 1, 1, -1, 0];
+        let p = TmacPacked::pack(&w, 1, 7, 4);
+        assert_eq!(p.sign_idx.len(), 2);
+        assert_eq!(p.unpack(), w);
+    }
+
+    #[test]
+    fn pshufb_layout_round_trips_indices() {
+        let mut rng = Rng::new(8);
+        for &c in &[2usize, 4] {
+            let s = 4;
+            let (m_pad, k_pad) = (32, 2 * c * s);
+            let w = rng.ternary_matrix(m_pad, k_pad, 0.33);
+            let enc = crate::quant::encode_indices(&w, m_pad, k_pad, c);
+            let p = PshufbPacked::from_encoded(&enc, s, 30, k_pad - c).unwrap();
+            assert_eq!(p.tiles, 2);
+            assert_eq!(p.slices, 2);
+            assert_eq!(p.data.len(), 2 * 2 * PSHUFB_TILE_SLICE_BYTES);
+            let nb_row = k_pad / c;
+            for tile in 0..p.tiles {
+                for slice in 0..p.slices {
+                    for o in 0..PSHUFB_TILE_OUTS {
+                        for b in 0..s {
+                            let (d, sp) = p.indices(tile, slice, o, b);
+                            let row = tile * PSHUFB_TILE_OUTS + o;
+                            let blk = slice * s + b;
+                            assert_eq!(d, enc.wd[row * nb_row + blk], "c={c}");
+                            assert_eq!(sp, enc.ws[row * nb_row + blk], "c={c}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pshufb_c2_index_bytes_stay_in_lane_range() {
+        // pshufb zeroes lanes whose index byte has the high bit set; the
+        // pre-offset c=2 bytes must all stay within 0..16.
+        let mut rng = Rng::new(9);
+        let w = rng.ternary_matrix(16, 16, 0.5);
+        let enc = crate::quant::encode_indices(&w, 16, 16, 2);
+        let p = PshufbPacked::from_encoded(&enc, 4, 16, 16).unwrap();
+        assert!(p.data.iter().all(|&b| b < 16));
+    }
+
+    #[test]
+    fn pshufb_rejects_unpadded_encodings() {
+        let w = vec![0i8; 8 * 8];
+        let enc = crate::quant::encode_indices(&w, 8, 8, 2);
+        assert!(PshufbPacked::from_encoded(&enc, 4, 8, 8).is_err());
     }
 }

@@ -9,6 +9,11 @@
 //! * [`SimBackend`] (default) — functional token steps costed by the
 //!   §III-D adaptive kernel plan through the `sim` timing engine; the
 //!   whole serving stack runs offline with zero dependencies.
+//! * [`NativeBackend`] — the same functional token stream, but every
+//!   decode step *executes* the model's BitLinear GEMVs through the
+//!   native AVX2/scalar kernels (`kernels::native`) and reports no
+//!   simulated cost, so the server times real wall-clock decode
+//!   (`tsar-cli serve --backend native`).
 //! * [`ModelRuntime`] (`--features pjrt`) — the PJRT CPU client
 //!   executing AOT HLO-text artifacts from `python/compile/aot.py`
 //!   (DESIGN.md §4).  The `xla`/`anyhow` crates are only reachable
@@ -20,6 +25,7 @@
 
 pub mod backend;
 pub mod manifest;
+pub mod native_backend;
 pub mod sim_backend;
 
 #[cfg(feature = "pjrt")]
@@ -27,7 +33,21 @@ pub mod pjrt;
 
 pub use backend::{Backend, BatchItem, Step};
 pub use manifest::{DType, EntryPoint, Manifest, ModelConfig, ParamMeta};
+pub use native_backend::NativeBackend;
 pub use sim_backend::{SimBackend, SimBackendConfig, SimKvCache};
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::{KvCache, ModelRuntime, StepOut};
+
+/// Deterministic synthetic next token shared by [`SimBackend`] and
+/// [`NativeBackend`]: an FNV-1a fold of the token history seeds one
+/// PRNG draw, so same (seed, history) → same token on every backend —
+/// the property the native/sim serve cross-check relies on.
+pub(crate) fn synthetic_next_token(seed: u64, history: &[i32], vocab: usize) -> i32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for &t in history {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut rng = crate::util::rng::Rng::new(h);
+    rng.below(vocab as u64) as i32
+}

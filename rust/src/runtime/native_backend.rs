@@ -1,0 +1,281 @@
+//! Real-execution backend over the native pshufb kernels
+//! (`kernels::native`): `tsar-cli serve --backend native`.
+//!
+//! Token *values* come from the same deterministic synthetic stream as
+//! [`super::SimBackend`] (shared [`super::synthetic_next_token`]), so a
+//! native serve produces bit-identical tokens to a simulated serve with
+//! the same seed — the cross-check the differential suite asserts.
+//! Step *costs* differ in kind: every prefill/decode step executes the
+//! model's full BitLinear decode workload (each site's GEMV through the
+//! native AVX2 or scalar-fallback kernel, once per layer) and reports
+//! `cost_s: None`, so the coordinator's lanes fall back to measured
+//! wall-clock time — real silicon numbers next to the simulator's
+//! modeled ones.
+//!
+//! Weights are synthesized per layer site (seeded ternary, like the
+//! model zoo's checkpoints) and packed once at load time into the
+//! [`PshufbPacked`] execution layout; activations are regenerated per
+//! step so the memory system sees fresh operands.  Note the execution
+//! layout costs 1 byte/weight (c=2) — loading the multi-billion
+//! parameter zoo entries natively takes real RAM; the serve demo and
+//! tests use the small end of the zoo.
+
+use crate::config::IsaConfig;
+use crate::kernels::native::{NativeGemv, NativePath};
+use crate::model::zoo::{self, ModelSpec};
+use crate::model::Workload;
+use crate::quant::pack::PshufbPacked;
+use crate::sim::GemmShape;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::backend::{Backend, Step};
+use super::manifest::ModelConfig;
+use super::sim_backend::{SimBackendConfig, SimKvCache};
+use super::synthetic_next_token;
+
+/// One BitLinear site's packed weights.
+struct NativeLayer {
+    site: &'static str,
+    shape: GemmShape,
+    /// Invocations per forward pass (layer count; 1 for the LM head).
+    count: usize,
+    packed: PshufbPacked,
+}
+
+/// [`Backend`] that spends real CPU time: decode-shaped GEMVs execute
+/// through the native kernels on every step.
+pub struct NativeBackend {
+    spec: &'static ModelSpec,
+    config: ModelConfig,
+    seed: u64,
+    gemv: NativeGemv,
+    layers: Vec<NativeLayer>,
+}
+
+impl NativeBackend {
+    /// Load `spec`: synthesize + pack every decode-workload site for
+    /// the given ISA config on the detected native path.
+    pub fn new(
+        spec: &'static ModelSpec,
+        isa: IsaConfig,
+        cfg: SimBackendConfig,
+    ) -> Result<NativeBackend> {
+        crate::ensure!(cfg.prefill_len >= 1, "prefill window must be at least 1");
+        crate::ensure!(
+            cfg.max_seq > cfg.prefill_len,
+            "max_seq must exceed the prefill window"
+        );
+        let gemv = NativeGemv::new(isa)?;
+        let wl = Workload::decode(spec);
+        let mut rng = Rng::new(cfg.seed ^ 0x7EA1_0000_0000_0001);
+        let mut layers = Vec::with_capacity(wl.ops.len());
+        for op in &wl.ops {
+            let w = rng.ternary_matrix(op.shape.m, op.shape.k, 0.33);
+            let packed = gemv.pack(&w, op.shape.m, op.shape.k)?;
+            layers.push(NativeLayer {
+                site: op.site,
+                shape: op.shape,
+                count: op.count,
+                packed,
+            });
+        }
+        let config = ModelConfig {
+            vocab: spec.vocab,
+            d_model: spec.d_model,
+            n_layers: spec.layers,
+            n_heads: spec.n_heads,
+            ffn_dim: spec.ffn_dim,
+            max_seq: cfg.max_seq,
+            prefill_len: cfg.prefill_len,
+        };
+        Ok(NativeBackend { spec, config, seed: cfg.seed, gemv, layers })
+    }
+
+    /// Look up `name` in the model zoo and load it natively.
+    pub fn by_name(name: &str, isa: IsaConfig, cfg: SimBackendConfig) -> Result<NativeBackend> {
+        let spec = zoo::by_name(name)
+            .ok_or_else(|| crate::err!("unknown model {name:?} (see `tsar-cli models`)"))?;
+        NativeBackend::new(spec, isa, cfg)
+    }
+
+    pub fn spec(&self) -> &'static ModelSpec {
+        self.spec
+    }
+
+    pub fn path(&self) -> NativePath {
+        self.gemv.path()
+    }
+
+    pub fn isa(&self) -> IsaConfig {
+        self.gemv.isa()
+    }
+
+    /// Packed bytes the loaded weights occupy in the execution layout.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed.packed_bytes()).sum()
+    }
+
+    fn next_token(&self, history: &[i32]) -> i32 {
+        synthetic_next_token(self.seed, history, self.config.vocab)
+    }
+
+    /// One real forward pass (N = 1): every site's GEMV executes
+    /// `count` times with fresh synthetic activations.  `step_tag`
+    /// varies the activation stream per step.
+    fn forward_pass(&self, step_tag: u64) -> Result<()> {
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut acts = vec![0i8; layer.shape.k];
+            let mut out = vec![0i32; layer.shape.m];
+            for rep in 0..layer.count {
+                let mut rng = Rng::new(
+                    step_tag ^ ((li as u64) << 40) ^ (rep as u64).wrapping_mul(0x9E37_79B9),
+                );
+                for v in acts.iter_mut() {
+                    *v = rng.range_i64(-127, 127) as i8;
+                }
+                self.gemv.gemv(&acts, &layer.packed, &mut out)?;
+                // Keep the kernel's work observable to the optimizer.
+                std::hint::black_box(&out);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for NativeBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native:{} ({} path, {}, {} sites packed)",
+            self.spec.name,
+            self.gemv.path().name(),
+            self.gemv.isa().name(),
+            self.layers.len()
+        )
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        let p = self.config.prefill_len;
+        crate::ensure!(tokens.len() == p, "expected {p} padded tokens");
+        crate::ensure!(
+            prompt_len >= 1 && prompt_len as usize <= p,
+            "prompt_len {prompt_len} outside the prefill window"
+        );
+        let history: Vec<i32> = tokens[..prompt_len as usize].to_vec();
+        self.forward_pass(0x5EED ^ history.len() as u64)?;
+        let next_token = self.next_token(&history);
+        Ok(Step {
+            next_token,
+            cache: SimKvCache { history },
+            cost_s: None, // real backend: the lane measures wall-clock
+        })
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        crate::ensure!(
+            (pos as usize) < self.config.max_seq,
+            "KV cache exhausted at pos {pos}"
+        );
+        let mut history = cache.history.clone();
+        history.push(token);
+        self.forward_pass(((pos as u64) << 32) ^ token as u32 as u64)?;
+        let next_token = self.next_token(&history);
+        Ok(Step {
+            next_token,
+            cache: SimKvCache { history },
+            cost_s: None,
+        })
+    }
+
+    fn plan_summary(&self) -> Option<String> {
+        let sites: Vec<String> = self
+            .layers
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}:native-{}/{}",
+                    l.site,
+                    self.gemv.path().name(),
+                    self.gemv.isa().name()
+                )
+            })
+            .collect();
+        Some(sites.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::platforms::Platform;
+    use crate::runtime::SimBackend;
+
+    /// Tiny synthetic architecture: real native execution stays cheap
+    /// enough for debug-mode tests.
+    static TINY: ModelSpec = ModelSpec {
+        name: "Tiny-Native-Test",
+        layers: 2,
+        d_model: 64,
+        n_heads: 4,
+        n_kv_heads: 4,
+        ffn_dim: 128,
+        vocab: 512,
+    };
+
+    fn cfg() -> SimBackendConfig {
+        SimBackendConfig { prefill_len: 4, max_seq: 16, threads: 0, seed: 0xBEE5 }
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let e = NativeBackend::by_name("NoSuchNet", IsaConfig::C2, cfg()).unwrap_err();
+        assert!(e.to_string().contains("NoSuchNet"));
+    }
+
+    #[test]
+    fn tokens_match_sim_backend_exactly() {
+        let native = NativeBackend::new(&TINY, IsaConfig::C2, cfg()).unwrap();
+        let sim = SimBackend::new(&TINY, Platform::workstation(), cfg());
+        let a = native.generate(&[3, 1, 4], 4).unwrap();
+        let b = sim.generate(&[3, 1, 4], 4).unwrap();
+        assert_eq!(a, b, "native and sim token streams diverged");
+        assert!(a.iter().all(|&t| t >= 0 && (t as usize) < TINY.vocab));
+    }
+
+    #[test]
+    fn steps_report_wall_clock_not_simulated_cost() {
+        let native = NativeBackend::new(&TINY, IsaConfig::C4, cfg()).unwrap();
+        let p = native.config().prefill_len;
+        let s = native.prefill(&vec![1i32; p], 2).unwrap();
+        assert_eq!(s.cost_s, None);
+        let d = native.decode(s.next_token, 2, &s.cache).unwrap();
+        assert_eq!(d.cost_s, None);
+        assert_eq!(d.cache.len(), s.cache.len() + 1);
+    }
+
+    #[test]
+    fn kv_exhaustion_errors() {
+        let native = NativeBackend::new(&TINY, IsaConfig::C2, cfg()).unwrap();
+        let p = native.config().prefill_len;
+        let s = native.prefill(&vec![1i32; p], 2).unwrap();
+        let max = native.config().max_seq as i32;
+        assert!(native.decode(0, max, &s.cache).is_err());
+    }
+
+    #[test]
+    fn plan_summary_names_every_site() {
+        let native = NativeBackend::new(&TINY, IsaConfig::C2, cfg()).unwrap();
+        let summary = native.plan_summary().unwrap();
+        for site in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
+            assert!(summary.contains(site), "{site} missing from {summary:?}");
+        }
+        assert!(summary.contains("native-"));
+        assert!(native.packed_bytes() > 0);
+    }
+}

@@ -21,7 +21,6 @@ use crate::coordinator::selector::{select_plan, ModelPlan};
 use crate::kernels::TernaryKernel;
 use crate::model::zoo::{self, ModelSpec};
 use crate::util::error::Result;
-use crate::util::rng::Rng;
 
 use super::backend::{Backend, BatchItem, Step};
 use super::manifest::ModelConfig;
@@ -49,9 +48,11 @@ impl Default for SimBackendConfig {
 }
 
 /// Per-sequence state: the token history (prompt + generated tokens).
+/// Shared with [`super::NativeBackend`] — both backends' KV state *is*
+/// the history, so the native/sim token-parity contract is structural.
 #[derive(Debug, Clone)]
 pub struct SimKvCache {
-    history: Vec<i32>,
+    pub(crate) history: Vec<i32>,
 }
 
 impl SimKvCache {
@@ -165,16 +166,12 @@ impl SimBackend {
     }
 
     /// Deterministic next token from a history: FNV-1a fold of the
-    /// tokens seeds one PRNG draw.  Same (seed, history) → same token,
-    /// which gives the PJRT path's determinism and padding-invariance
-    /// properties for free.
+    /// tokens seeds one PRNG draw (shared with [`super::NativeBackend`]
+    /// via [`super::synthetic_next_token`]).  Same (seed, history) →
+    /// same token, which gives the PJRT path's determinism and
+    /// padding-invariance properties for free.
     fn next_token(&self, history: &[i32]) -> i32 {
-        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
-        for &t in history {
-            h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01B3);
-        }
-        let mut rng = Rng::new(h);
-        rng.below(self.config.vocab as u64) as i32
+        super::synthetic_next_token(self.seed, history, self.config.vocab)
     }
 }
 

@@ -1,0 +1,137 @@
+//! Differential fuzz: the native GEMV (AVX2 pshufb kernels, or the
+//! portable scalar fallback) must be **bit-identical** to the modeled
+//! ISA (`tsar::exec` semantics driven through `TsarKernel`) across
+//! randomized shapes and ISA configs — and, through the serving stack,
+//! `--backend native` must emit exactly the tokens `SimBackend` emits.
+//!
+//! CI runs this suite twice on AVX2 runners: once with
+//! `RUSTFLAGS="-C target-cpu=native"` (exercising the AVX2 path) and
+//! once with `TSAR_NATIVE_FORCE_SCALAR=1` (proving the fallback), and
+//! scalar-only on every other architecture.
+
+use std::sync::mpsc::channel;
+
+use tsar::config::platforms::Platform;
+use tsar::config::IsaConfig;
+use tsar::coordinator::{Request, Server, ServerConfig};
+use tsar::kernels::native::{detect_path, NativeGemv, NativePath};
+use tsar::kernels::{scalar_gemm, Dataflow, TernaryKernel, TsarKernel};
+use tsar::model::zoo::ModelSpec;
+use tsar::runtime::{Backend, NativeBackend, SimBackend, SimBackendConfig};
+use tsar::sim::GemmShape;
+use tsar::util::rng::Rng;
+
+/// Run `cases` randomized (shape, IsaConfig, sparsity) comparisons of
+/// the native path against the modeled ISA and the scalar reference.
+fn fuzz_against_modeled(path: NativePath, cases: usize, seed0: u64) {
+    assert!(cases >= 100, "acceptance demands >= 100 randomized cases");
+    for case in 0..cases {
+        let mut rng = Rng::new(seed0 + case as u64);
+        let isa = if rng.f64() < 0.5 { IsaConfig::C2 } else { IsaConfig::C4 };
+        let n = rng.range_i64(1, 3) as usize;
+        let k = rng.range_i64(1, 180) as usize;
+        let m = rng.range_i64(1, 70) as usize;
+        let shape = GemmShape::new(n, k, m);
+        let acts = rng.int8_acts(n * k);
+        let zero_frac = rng.f64();
+        let w = rng.ternary_matrix(m, k, zero_frac);
+
+        // Ground truth 1: the modeled ISA (TLUT/TGEMV on the Ymm
+        // register-file model).  Ground truth 2: the scalar dot product.
+        let modeled = TsarKernel::new(isa, Dataflow::Op).run(&acts, &w, shape);
+        assert_eq!(
+            modeled,
+            scalar_gemm(&acts, &w, shape),
+            "case {case}: modeled ISA drifted from the scalar reference"
+        );
+
+        let gemv = NativeGemv::with_path(isa, path).unwrap();
+        let packed = gemv.pack(&w, m, k).unwrap();
+        let mut out = vec![0i32; n * m];
+        gemv.gemm(&acts, &packed, n, &mut out).unwrap();
+        assert_eq!(
+            out,
+            modeled,
+            "case {case}: native {} != modeled ISA for {} {shape:?} (zeros {zero_frac:.2})",
+            path.name(),
+            isa.name()
+        );
+    }
+}
+
+#[test]
+fn native_matches_modeled_isa_on_randomized_cases() {
+    // Whatever the host supports: AVX2 where available, else scalar.
+    fuzz_against_modeled(detect_path(), 120, 0xD1FF_0000);
+}
+
+#[test]
+fn scalar_fallback_matches_modeled_isa_on_randomized_cases() {
+    // The portable path must hold everywhere, including AVX2 hosts.
+    fuzz_against_modeled(NativePath::Scalar, 120, 0xD1FF_9999);
+}
+
+// ---------------------------------------------------------------------------
+// Serving-stack parity: `tsar-cli serve --backend native` ≡ SimBackend
+// ---------------------------------------------------------------------------
+
+/// Tiny architecture so real native execution stays cheap in debug CI.
+static TINY: ModelSpec = ModelSpec {
+    name: "Tiny-Native-E2E",
+    layers: 2,
+    d_model: 64,
+    n_heads: 4,
+    n_kv_heads: 4,
+    ffn_dim: 128,
+    vocab: 512,
+};
+
+fn serve_tokens<B: Backend + Sync>(backend: B) -> Vec<(u64, Vec<i32>)> {
+    let server = Server::new(
+        backend,
+        ServerConfig { max_batch: 2, kv_slots: 2, workers: 1 },
+    )
+    .unwrap();
+    let requests: Vec<Request> = (0..3u64)
+        .map(|id| Request::new(id, vec![2 + id as i32, 7], 2))
+        .collect();
+    let (tx, rx) = channel();
+    server.run_preloaded(requests, tx).unwrap();
+    let mut results: Vec<(u64, Vec<i32>)> =
+        rx.try_iter().map(|r| (r.id, r.tokens)).collect();
+    results.sort_by_key(|(id, _)| *id);
+    results
+}
+
+#[test]
+fn native_serve_produces_identical_tokens_to_sim_serve() {
+    let cfg = SimBackendConfig { prefill_len: 4, max_seq: 16, threads: 0, seed: 0xBEE5 };
+    let sim = SimBackend::new(&TINY, Platform::workstation(), cfg);
+    let native = NativeBackend::new(&TINY, IsaConfig::C2, cfg).unwrap();
+
+    // Direct generation parity first (isolates backend from scheduler).
+    let a = sim.generate(&[3, 1, 4], 3).unwrap();
+    let b = native.generate(&[3, 1, 4], 3).unwrap();
+    assert_eq!(a, b, "generate() token streams diverged");
+
+    // Then through the coordinator, exactly as `tsar-cli serve` drives
+    // both backends.
+    let sim_tokens = serve_tokens(sim);
+    let native_tokens = serve_tokens(native);
+    assert_eq!(sim_tokens.len(), 3);
+    assert_eq!(
+        sim_tokens, native_tokens,
+        "served tokens diverged between --backend sim and --backend native"
+    );
+}
+
+#[test]
+fn native_serve_parity_holds_for_c4_too() {
+    let cfg = SimBackendConfig { prefill_len: 4, max_seq: 16, threads: 0, seed: 0x7E54 };
+    let sim = SimBackend::new(&TINY, Platform::workstation(), cfg);
+    let native = NativeBackend::new(&TINY, IsaConfig::C4, cfg).unwrap();
+    assert_eq!(
+        sim.generate(&[9, 9], 4).unwrap(),
+        native.generate(&[9, 9], 4).unwrap()
+    );
+}

@@ -77,6 +77,42 @@ fn prop_tl2_tmac_roundtrip() {
 }
 
 #[test]
+fn prop_packings_roundtrip_with_unaligned_k() {
+    // K deliberately *not* a multiple of the group size: TL-2's 3-weight
+    // groups and T-MAC's g-weight groups must both pad internally and
+    // still round-trip the logical matrix exactly.
+    for_all_seeds("packings round-trip on unaligned K", |rng| {
+        let m = rng.range_i64(1, 8) as usize;
+        let g = if rng.f64() < 0.5 { 2usize } else { 4 };
+        // Force k % g != 0 (and usually k % 3 != 0 too).
+        let k = (g * rng.range_i64(1, 9) as usize) + rng.range_i64(1, g as i64 - 1).max(1) as usize;
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        let tl2 = Tl2Packed::pack(&w, m, k);
+        assert_eq!(tl2.unpack(), w, "TL-2 m={m} k={k}");
+        assert_ne!(k % g, 0, "generator must produce unaligned K");
+        let tmac = TmacPacked::pack(&w, m, k, g);
+        assert_eq!(tmac.unpack(), w, "T-MAC m={m} k={k} g={g}");
+    });
+}
+
+#[test]
+fn prop_tl2_packed_bytes_match_bitstream() {
+    // The footprint a bench would report must equal the physical
+    // 5-bit-packed buffer, row-aligned: m * ceil(groups*5/8).
+    for_all_seeds("TL-2 packed_bytes is the real bitstream size", |rng| {
+        let m = rng.range_i64(1, 8) as usize;
+        let k = rng.range_i64(1, 40) as usize;
+        let zf = rng.f64();
+        let w = rng.ternary_matrix(m, k, zf);
+        let p = Tl2Packed::pack(&w, m, k);
+        assert_eq!(p.packed_bytes(), p.codes.len());
+        assert_eq!(p.packed_bytes(), m * (p.groups_per_row * 5).div_ceil(8));
+        assert_eq!(p.unpack(), w);
+    });
+}
+
+#[test]
 fn prop_act_quant_bounds() {
     for_all_seeds("absmax quant stays in [-127,127] and scales back", |rng| {
         let n = rng.range_i64(1, 128) as usize;
