@@ -37,6 +37,10 @@ else
 fi
 
 echo
+echo "== rustdoc (required): public API docs must stay warning-free =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo
 echo "== pjrt feature build (best-effort) =="
 # The xla/anyhow dependencies are commented out in rust/Cargo.toml for
 # offline builds, so this fails unless they have been enabled on a

@@ -1,8 +1,9 @@
-//! End-to-end serving driver (DESIGN.md §6): serve a Poisson stream of
-//! batched requests through the sharded coordinator (`TSAR_WORKERS`
-//! lanes, batched decode rounds per lane) and report
-//! latency/throughput, including the per-lane breakdown and the
-//! streamed request-level metrics records.
+//! End-to-end serving driver (DESIGN.md §6): drive a Poisson stream of
+//! requests through the session-based streaming Engine (`TSAR_WORKERS`
+//! lanes, batched decode rounds per lane): every submission returns a
+//! `Ticket` immediately, tokens stream over the ticket's event channel
+//! as decode rounds land, and the run ends with the merged serve
+//! report plus the per-request metrics records.
 //!
 //! Default build — the simulator-costed backend (no dependencies, no
 //! artifacts): BitNet shapes + §III-D kernel plans through the timing
@@ -26,7 +27,9 @@ use std::sync::mpsc::channel;
 use std::time::Duration;
 
 use tsar::config::platforms::Platform;
-use tsar::coordinator::{Request, RequestRecord, RequestResult, Server, ServerConfig};
+use tsar::coordinator::{
+    Engine, GenerationRequest, RequestRecord, ServerConfig, Ticket, TokenEvent,
+};
 use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
 use tsar::util::error::Result;
 use tsar::util::rng::Rng;
@@ -108,11 +111,14 @@ fn pjrt_main(dir: &str, n_requests: usize, max_new: usize, workers: usize) -> Re
     drive(rt, n_requests, max_new, workers)
 }
 
-/// The generic serving loop: Poisson arrivals (open-loop) with mixed
-/// prompt lengths, a collector thread printing completions, a metrics
-/// sink draining the streamed per-request records, and the sharded
-/// engine (dispatcher + worker lanes) on the main thread.
-fn drive<B: Backend + Sync>(
+/// The generic serving loop over the streaming Engine API: the main
+/// thread plays the open-loop client (Poisson arrivals, mixed prompt
+/// lengths, one `submit` per request — each returning its `Ticket`
+/// before any model work runs), a collector thread drains every
+/// ticket's event stream and prints the completion lines, a metrics
+/// sink drains the streamed per-request records, and `shutdown`
+/// returns the merged report.
+fn drive<B: Backend + Send + Sync + 'static>(
     backend: B,
     n_requests: usize,
     max_new: usize,
@@ -121,18 +127,16 @@ fn drive<B: Backend + Sync>(
     let vocab = backend.config().vocab as u64;
     let window = backend.config().prefill_len;
     let (rec_tx, rec_rx) = channel::<RequestRecord>();
-    let server = Server::new(
+    let handle = Engine::start_with_sink(
         backend,
         ServerConfig { max_batch: 4, kv_slots: 4, workers },
-    )?
-    .with_metrics_sink(rec_tx);
-
-    let lambda_per_s = 4.0;
-    let (req_tx, req_rx) = channel::<Request>();
-    let (res_tx, res_rx) = channel::<RequestResult>();
+        Some(rec_tx),
+    )?;
 
     // The scrape-endpoint stand-in: drain the request-record stream as
-    // it arrives (one record per retired request, any lane).
+    // it arrives (one record per retired request, any lane).  See
+    // `coordinator::Exporter` (and `tsar-cli serve --metrics`) for the
+    // JSONL file/stdout endpoint over this same channel.
     let sink = std::thread::spawn(move || {
         let mut records: Vec<RequestRecord> = Vec::new();
         while let Ok(rec) = rec_rx.recv() {
@@ -141,44 +145,60 @@ fn drive<B: Backend + Sync>(
         records
     });
 
-    let producer = std::thread::spawn(move || {
-        let mut rng_p = Rng::new(7);
-        for id in 0..n_requests as u64 {
-            let wait = rng_p.exp(lambda_per_s);
-            std::thread::sleep(Duration::from_secs_f64(wait.min(0.5)));
-            let plen = 3 + rng_p.below((window as u64 / 2).max(1)) as usize;
-            let prompt: Vec<i32> =
-                (0..plen).map(|_| rng_p.below(vocab) as i32).collect();
-            if req_tx.send(Request::new(id, prompt, max_new)).is_err() {
-                break;
-            }
-        }
-    });
-
+    // Collector: consume each ticket's live event stream in submission
+    // order, counting streamed tokens and printing the terminal result.
+    let (ticket_tx, ticket_rx) = channel::<Ticket>();
     let collector = std::thread::spawn(move || {
         let mut done = 0usize;
-        while let Ok(res) = res_rx.recv() {
-            done += 1;
-            println!(
-                "  req {:>2}: {:>2} tokens | queue {:>6.1} ms | prefill {:>6.1} ms | decode {:>6.1} tok/s",
-                res.id,
-                res.tokens.len(),
-                res.queue_s * 1e3,
-                res.prefill_s * 1e3,
-                res.decode_tokens_per_s()
-            );
+        while let Ok(ticket) = ticket_rx.recv() {
+            let id = ticket.id();
+            let mut streamed = 0usize;
+            while let Some(ev) = ticket.recv() {
+                match ev {
+                    TokenEvent::Prefilled { .. } | TokenEvent::Token { .. } => streamed += 1,
+                    TokenEvent::Retired(res)
+                    | TokenEvent::Cancelled(res)
+                    | TokenEvent::Failed(res) => {
+                        assert_eq!(streamed, res.tokens.len(), "stream/result mismatch");
+                        done += 1;
+                        println!(
+                            "  req {:>2}: {:>2} tokens ({}) | queue {:>6.1} ms | \
+                             prefill {:>6.1} ms | decode {:>6.1} tok/s",
+                            id,
+                            res.tokens.len(),
+                            res.finish.label(),
+                            res.queue_s * 1e3,
+                            res.prefill_s * 1e3,
+                            res.decode_tokens_per_s()
+                        );
+                    }
+                }
+            }
         }
         done
     });
 
-    let report = server.run(req_rx, res_tx)?;
-    producer.join().unwrap();
+    // Open-loop client on the main thread: Poisson arrivals.
+    let lambda_per_s = 4.0;
+    let mut rng = Rng::new(7);
+    for _ in 0..n_requests {
+        let wait = rng.exp(lambda_per_s);
+        std::thread::sleep(Duration::from_secs_f64(wait.min(0.5)));
+        let plen = 3 + rng.below((window as u64 / 2).max(1)) as usize;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        let ticket = handle.submit(GenerationRequest::new(prompt, max_new));
+        if ticket_tx.send(ticket).is_err() {
+            break;
+        }
+    }
+    drop(ticket_tx); // no more sessions: the collector drains and exits
+
+    // Graceful shutdown: drains every in-flight sequence, joins the
+    // lanes, merges the per-lane clocks.  Dropping the handle's record
+    // sender also closes the metrics sink.
+    let report = handle.shutdown()?;
     let done = collector.join().unwrap();
     assert_eq!(done, n_requests);
-
-    // Drop the server (and with it the sink's last sender) so the
-    // record stream closes and the sink thread drains out.
-    drop(server);
     let records = sink.join().unwrap();
     assert_eq!(records.len(), n_requests);
 
@@ -188,12 +208,13 @@ fn drive<B: Backend + Sync>(
     for rec in records.iter().take(3) {
         println!(
             "  req {:>2} via lane {}: queue {:>6.1} ms  prefill {:>6.1} ms  \
-             decode {:>7.1} ms  plan [{}]",
+             decode {:>7.1} ms  finish {}  plan [{}]",
             rec.id,
-            rec.lane,
+            rec.lane.map_or_else(|| "-".into(), |l| l.to_string()),
             rec.queue_s * 1e3,
             rec.prefill_s * 1e3,
             rec.decode_s * 1e3,
+            rec.finish.label(),
             rec.plan.as_deref().unwrap_or("n/a")
         );
     }

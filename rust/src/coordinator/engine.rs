@@ -1,0 +1,379 @@
+//! The session-based streaming serving engine (DESIGN.md §3).
+//!
+//! [`Engine::start`] spawns the worker lanes in the background and
+//! returns an [`EngineHandle`]; from then on the engine is a live
+//! service: [`EngineHandle::submit`] hands in a
+//! [`GenerationRequest`] and returns a [`Ticket`] *immediately* —
+//! before prefill, let alone decode, has run.  The ticket is the
+//! per-request session: a live [`TokenEvent`] stream
+//! ([`Ticket::recv`]/[`Ticket::try_recv`]), [`Ticket::cancel`] to stop
+//! generation at the next round boundary, and a blocking
+//! [`Ticket::join`] that drains the stream into the final
+//! [`RequestResult`].  [`EngineHandle::shutdown`] closes admission,
+//! drains every in-flight sequence, joins the lanes, and merges the
+//! per-lane virtual clocks into the run's [`ServeReport`].
+//!
+//! Admission control happens at submit time: a request whose prompt
+//! does not fit the prefill window, or whose `prompt_len +
+//! max_new_tokens` exceeds the backend's KV capacity
+//! (`ModelConfig::max_seq`), resolves to a clean `Failed` ticket
+//! without ever reaching a lane — instead of erroring mid-decode when
+//! the KV cache actually runs out.
+//!
+//! The pre-Engine blocking surface ([`super::Server::run`],
+//! [`super::Server::run_preloaded`], [`super::serve_all`]) is a thin
+//! wrapper over this module: same lanes, same clocks, bit-identical
+//! tokens and makespans for non-cancelled workloads.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::Backend;
+use crate::util::error::Result;
+
+use super::lane::{lane_loop, LaneOutcome};
+use super::metrics::{RequestRecord, ServeReport};
+use super::request::{
+    FinishReason, GenerationRequest, Request, RequestId, RequestResult, TokenEvent,
+};
+use super::serve::ServerConfig;
+
+/// Entry point of the streaming serving API.  `Engine` itself is a
+/// namespace: all state lives on the [`EngineHandle`] that
+/// [`Engine::start`] returns.
+pub struct Engine;
+
+impl Engine {
+    /// Validate `cfg`, spawn the worker lanes in the background, and
+    /// return the submission handle.  The calling thread never blocks
+    /// on serving; the lanes share `backend` through an `Arc`.
+    pub fn start<B>(backend: B, cfg: ServerConfig) -> Result<EngineHandle<B>>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        Engine::start_inner(Arc::new(backend), cfg, None, None, false)
+    }
+
+    /// [`Engine::start`] over an already shared backend (the legacy
+    /// `Server` wrappers use this so `&self` methods can start runs).
+    pub fn start_shared<B>(backend: Arc<B>, cfg: ServerConfig) -> Result<EngineHandle<B>>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        Engine::start_inner(backend, cfg, None, None, false)
+    }
+
+    /// [`Engine::start`] with a metrics sink attached: every retired
+    /// request streams one [`RequestRecord`] over `record_tx` while
+    /// the engine is live (the channel the JSONL
+    /// [`super::Exporter`] sits on).
+    pub fn start_with_sink<B>(
+        backend: B,
+        cfg: ServerConfig,
+        record_tx: Option<Sender<RequestRecord>>,
+    ) -> Result<EngineHandle<B>>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        Engine::start_inner(Arc::new(backend), cfg, record_tx, None, false)
+    }
+
+    /// Full-control start used by the compatibility wrappers:
+    /// `record_tx` streams per-request metrics records, `results_tx`
+    /// mirrors every completion onto a legacy result channel, and
+    /// `gated` holds the lanes at a start gate so a fixed request list
+    /// can be sharded deterministically before any lane runs
+    /// ([`EngineHandle::open_gate`]).
+    pub(crate) fn start_inner<B>(
+        backend: Arc<B>,
+        cfg: ServerConfig,
+        record_tx: Option<Sender<RequestRecord>>,
+        results_tx: Option<Sender<RequestResult>>,
+        gated: bool,
+    ) -> Result<EngineHandle<B>>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        crate::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        crate::ensure!(cfg.workers >= 1, "workers must be >= 1");
+        crate::ensure!(
+            cfg.kv_slots >= cfg.max_batch,
+            "kv_slots ({}) must cover max_batch ({}) on every lane",
+            cfg.kv_slots,
+            cfg.max_batch
+        );
+        let results_tx = results_tx.unwrap_or_else(|| {
+            // No legacy channel: results flow through ticket events
+            // only.  Lane sends are best-effort, so a dropped receiver
+            // is fine.
+            channel().0
+        });
+        let mut lane_txs = Vec::with_capacity(cfg.workers);
+        let mut gate_txs = Vec::with_capacity(cfg.workers);
+        let mut lanes = Vec::with_capacity(cfg.workers);
+        for lane_id in 0..cfg.workers {
+            let (lane_tx, lane_rx) = channel::<Request>();
+            let (gate_tx, gate_rx) = channel::<()>();
+            lane_txs.push(lane_tx);
+            if gated {
+                gate_txs.push(gate_tx);
+            }
+            let backend = Arc::clone(&backend);
+            let cfg = cfg.clone();
+            let res_tx = results_tx.clone();
+            let sink = record_tx.clone();
+            lanes.push(std::thread::spawn(move || {
+                if gated {
+                    // Held until the handle opens the gate (dropping
+                    // the sender); an error is the open signal.
+                    let _ = gate_rx.recv();
+                }
+                lane_loop(&*backend, &cfg, lane_id, lane_rx, res_tx, sink)
+            }));
+        }
+        Ok(EngineHandle {
+            backend,
+            cfg,
+            lane_txs,
+            gate_txs,
+            lanes,
+            next_lane: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            record_tx,
+            rejected: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        })
+    }
+}
+
+/// Live handle over a started engine: submit sessions, then shut down
+/// for the merged report.  The handle is `Sync` — client threads can
+/// share it by reference and submit concurrently.
+pub struct EngineHandle<B: Backend> {
+    backend: Arc<B>,
+    cfg: ServerConfig,
+    lane_txs: Vec<Sender<Request>>,
+    gate_txs: Vec<Sender<()>>,
+    lanes: Vec<JoinHandle<Result<LaneOutcome>>>,
+    next_lane: AtomicUsize,
+    next_id: AtomicU64,
+    /// Metrics sink, kept so submit-time rejections are streamed too.
+    record_tx: Option<Sender<RequestRecord>>,
+    /// Results of submissions rejected at admission (they never reach
+    /// a lane); merged into the shutdown report.
+    rejected: Mutex<Vec<RequestResult>>,
+    started: Instant,
+}
+
+impl<B: Backend> EngineHandle<B> {
+    /// The shared backend the lanes serve on.
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Submit one generation request; returns its [`Ticket`]
+    /// immediately (before any model work runs).  Admission-time
+    /// validation failures resolve the ticket to a `Failed` terminal
+    /// event instead of reaching a lane.
+    pub fn submit(&self, req: GenerationRequest) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (ev_tx, ev_rx) = channel::<TokenEvent>();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let ticket = Ticket { id, events: ev_rx, cancel: Arc::clone(&cancel) };
+        if let Err(reason) = self.admit_check(&req) {
+            self.reject(id, &ev_tx, reason);
+            return ticket;
+        }
+        let request = Request::with_plumbing(id, req, ev_tx.clone(), cancel);
+        if self.shard(request).is_err() {
+            // A lane died before its join was observed; surface it as a
+            // failed session rather than losing the ticket.
+            self.reject(id, &ev_tx, "engine lane is gone".into());
+        }
+        ticket
+    }
+
+    /// Legacy escape hatch: shard a pre-built [`Request`] (caller-owned
+    /// id, optional plumbing) without admission-time validation — the
+    /// pre-Engine batch surface, which caps generation at the KV window
+    /// instead of rejecting up front.  Send failures mean the engine is
+    /// shutting down; the request is dropped.
+    pub fn submit_request(&self, request: Request) {
+        let _ = self.shard(request);
+    }
+
+    /// Round-robin one request across the lane channels.
+    fn shard(&self, request: Request) -> std::result::Result<(), ()> {
+        let lane = self.next_lane.fetch_add(1, Ordering::Relaxed) % self.lane_txs.len();
+        self.lane_txs[lane].send(request).map_err(|_| ())
+    }
+
+    /// Per-request admission limits against the backend's window
+    /// (DESIGN.md §3): the prompt must be non-empty and fit the prefill
+    /// window, and `prompt_len + max_new_tokens` must fit the KV
+    /// capacity — rejecting at submit time what would otherwise die
+    /// mid-decode on KV exhaustion.
+    fn admit_check(&self, req: &GenerationRequest) -> std::result::Result<(), String> {
+        let cfg = self.backend.config();
+        cfg.validate_request(req.prompt.len(), req.params.max_new_tokens)
+            .map_err(|e| e.to_string())
+    }
+
+    /// Resolve a ticket as `Failed` without involving a lane, and keep
+    /// the rejection observable engine-wide: the result joins the
+    /// shutdown report's `failed` count and, when a metrics sink is
+    /// attached, a `RequestRecord` with `lane: None` streams out.
+    fn reject(&self, id: RequestId, ev_tx: &Sender<TokenEvent>, reason: String) {
+        let res = RequestResult {
+            id,
+            tokens: Vec::new(),
+            finish: FinishReason::Failed,
+            error: Some(reason),
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            total_s: 0.0,
+        };
+        let _ = ev_tx.send(TokenEvent::Failed(res.clone()));
+        if let Some(sink) = &self.record_tx {
+            let _ = sink.send(RequestRecord {
+                id,
+                lane: None,
+                queue_s: 0.0,
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                total_s: 0.0,
+                tokens: 0,
+                finish: FinishReason::Failed,
+                plan: None,
+            });
+        }
+        self.rejected.lock().expect("rejected list poisoned").push(res);
+    }
+
+    /// Release the start gate of a [`Engine::start_inner`]-gated
+    /// engine; a no-op otherwise.  Until released, lanes hold before
+    /// their first pull, so everything submitted beforehand is sharded
+    /// deterministically.
+    pub(crate) fn open_gate(&mut self) {
+        self.gate_txs.clear();
+    }
+
+    /// Graceful shutdown: close admission, let every lane drain its
+    /// shard (in-flight sequences run to their natural or cancelled
+    /// end), join the lanes, and merge the per-lane virtual clocks —
+    /// plus any submit-time rejections — into the run's
+    /// [`ServeReport`].  Errs when nothing was ever submitted.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        self.open_gate();
+        self.lane_txs.clear(); // close the shard channels: lanes drain and exit
+        let outcomes: Vec<Result<LaneOutcome>> = self
+            .lanes
+            .drain(..)
+            .map(|h| h.join().expect("lane thread panicked"))
+            .collect();
+        let rejected =
+            std::mem::take(&mut *self.rejected.lock().expect("rejected list poisoned"));
+        merge_outcomes(outcomes, rejected, self.started)
+    }
+}
+
+/// Merge-at-retire: reconcile the lane outcomes (and submit-time
+/// rejections, which carry no lane or clock) into one report.  Lanes
+/// are concurrent engines over disjoint shards, so the global simulated
+/// timeline is the slowest lane's clock; real backends report elapsed
+/// wall time instead.
+pub(crate) fn merge_outcomes(
+    outcomes: Vec<Result<LaneOutcome>>,
+    rejected: Vec<RequestResult>,
+    started: Instant,
+) -> Result<ServeReport> {
+    let mut results: Vec<RequestResult> = rejected;
+    let mut lanes = Vec::with_capacity(outcomes.len());
+    let mut sim_timed = false;
+    for outcome in outcomes {
+        let outcome = outcome?;
+        sim_timed |= outcome.sim_timed;
+        results.extend(outcome.results);
+        lanes.push(outcome.stats);
+    }
+    let wall_s = if sim_timed {
+        lanes.iter().map(|l| l.clock_s).fold(0.0f64, f64::max)
+    } else {
+        started.elapsed().as_secs_f64()
+    };
+    results.sort_by_key(|r| r.id);
+    ServeReport::from_lanes(&results, wall_s, lanes)
+        .ok_or_else(|| crate::err!("no requests served"))
+}
+
+/// One submitted session: a live event stream plus cancellation and a
+/// blocking join.
+pub struct Ticket {
+    id: RequestId,
+    events: Receiver<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl Ticket {
+    /// The engine-assigned request id (also on every event's result).
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the stream is closed
+    /// (after the terminal event, or if the engine died).
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking poll of the event stream.
+    pub fn try_recv(&self) -> Option<TokenEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// The raw event receiver, for `select`-style integration or
+    /// iteration (`for ev in ticket.events()`).
+    pub fn events(&self) -> &Receiver<TokenEvent> {
+        &self.events
+    }
+
+    /// Request cancellation: the serving lane retires the sequence at
+    /// the next round boundary (admission or between decode rounds),
+    /// freeing its KV slot immediately.  The ticket then receives a
+    /// `Cancelled` terminal event carrying the tokens generated so far.
+    /// Idempotent; a no-op if the request already retired.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the request leaves the engine and return its final
+    /// result, draining any events not yet consumed.  If the terminal
+    /// event was already taken off the stream by [`Ticket::recv`], or
+    /// the engine died before retiring the request, a synthesized
+    /// `Failed` result is returned.
+    pub fn join(self) -> RequestResult {
+        while let Ok(ev) = self.events.recv() {
+            if let Some(res) = ev.result() {
+                return res.clone();
+            }
+        }
+        RequestResult {
+            id: self.id,
+            tokens: Vec::new(),
+            finish: FinishReason::Failed,
+            error: Some("ticket stream closed without a terminal event".into()),
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            total_s: 0.0,
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! The request-level metrics endpoint (ROADMAP item, export half):
+//! [`Exporter`] sits on the receiving side of the server's
+//! [`RequestRecord`] channel and writes one JSON line per retired
+//! request to a file or stdout, while the run is still in flight —
+//! `tsar-cli serve --metrics <path|->` wires it up.
+//!
+//! The exporter runs on its own thread so a slow disk never back-
+//! pressures the serving lanes (the record channel is unbounded and
+//! sends are best-effort).  Drop every sender (server/engine included)
+//! and call [`Exporter::finish`] to flush and get the record count.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::mpsc::Receiver;
+use std::thread::JoinHandle;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::metrics::RequestRecord;
+
+/// Serialize one record as a flat JSON object (stable keys, seconds as
+/// f64, `finish` as its lower-case label, `lane` null for submissions
+/// rejected before reaching a lane).
+pub fn record_to_json(rec: &RequestRecord) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".into(), Json::Num(rec.id as f64));
+    obj.insert(
+        "lane".into(),
+        match rec.lane {
+            Some(l) => Json::Num(l as f64),
+            None => Json::Null,
+        },
+    );
+    obj.insert("queue_s".into(), Json::Num(rec.queue_s));
+    obj.insert("prefill_s".into(), Json::Num(rec.prefill_s));
+    obj.insert("decode_s".into(), Json::Num(rec.decode_s));
+    obj.insert("total_s".into(), Json::Num(rec.total_s));
+    obj.insert("tokens".into(), Json::Num(rec.tokens as f64));
+    obj.insert("finish".into(), Json::Str(rec.finish.label().into()));
+    obj.insert(
+        "plan".into(),
+        match &rec.plan {
+            Some(p) => Json::Str(p.clone()),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(obj)
+}
+
+/// Background JSONL writer over a [`RequestRecord`] channel.
+pub struct Exporter {
+    worker: JoinHandle<Result<usize>>,
+}
+
+impl Exporter {
+    /// Spawn an exporter writing to `target`: `"-"` means stdout,
+    /// anything else is created/truncated as a file.  Returns once the
+    /// sink (and, for files, the handle) is ready, so a bad path fails
+    /// here and not mid-run.
+    pub fn spawn(rx: Receiver<RequestRecord>, target: &str) -> Result<Exporter> {
+        let writer: Box<dyn Write + Send> = if target == "-" {
+            Box::new(std::io::stdout())
+        } else {
+            let file = std::fs::File::create(target)
+                .with_context(|| format!("cannot create metrics file {target:?}"))?;
+            Box::new(std::io::BufWriter::new(file))
+        };
+        Ok(Exporter::spawn_to(rx, writer))
+    }
+
+    /// Spawn over any writer (tests use an in-memory buffer).
+    pub fn spawn_to(rx: Receiver<RequestRecord>, mut writer: Box<dyn Write + Send>) -> Exporter {
+        let worker = std::thread::spawn(move || {
+            let mut written = 0usize;
+            while let Ok(rec) = rx.recv() {
+                let line = record_to_json(&rec).to_string();
+                writeln!(writer, "{line}").context("metrics write failed")?;
+                written += 1;
+            }
+            writer.flush().context("metrics flush failed")?;
+            Ok(written)
+        });
+        Exporter { worker }
+    }
+
+    /// Join the writer thread (blocks until every sender of the record
+    /// channel is dropped) and return how many records were written.
+    pub fn finish(self) -> Result<usize> {
+        self.worker.join().expect("metrics exporter thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+    use std::sync::{Arc, Mutex};
+
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    /// `Write` into a shared Vec so the test can inspect what the
+    /// exporter thread produced.
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn record(id: u64, finish: FinishReason) -> RequestRecord {
+        RequestRecord {
+            id,
+            lane: Some(1),
+            queue_s: 0.25,
+            prefill_s: 0.5,
+            decode_s: 1.5,
+            total_s: 2.25,
+            tokens: 4,
+            finish,
+            plan: Some("wqkv:TSAR".into()),
+        }
+    }
+
+    #[test]
+    fn writes_one_json_line_per_record() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel();
+        let exporter = Exporter::spawn_to(rx, Box::new(SharedBuf(Arc::clone(&buf))));
+        tx.send(record(0, FinishReason::Length)).unwrap();
+        tx.send(record(1, FinishReason::Cancelled)).unwrap();
+        drop(tx);
+        assert_eq!(exporter.finish().unwrap(), 2);
+
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).expect("valid JSON");
+        assert_eq!(first.get("id").and_then(Json::as_usize), Some(0));
+        assert_eq!(first.get("lane").and_then(Json::as_usize), Some(1));
+        assert_eq!(first.get("tokens").and_then(Json::as_usize), Some(4));
+        assert_eq!(
+            first.get("finish").and_then(Json::as_str),
+            Some("length")
+        );
+        assert_eq!(
+            first.get("plan").and_then(Json::as_str),
+            Some("wqkv:TSAR")
+        );
+        let second = Json::parse(lines[1]).expect("valid JSON");
+        assert_eq!(
+            second.get("finish").and_then(Json::as_str),
+            Some("cancelled")
+        );
+    }
+
+    #[test]
+    fn file_target_round_trips_and_bad_path_errors() {
+        let path = std::env::temp_dir().join("tsar_exporter_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let (tx, rx) = channel();
+        let exporter = Exporter::spawn(rx, &path_s).unwrap();
+        tx.send(record(7, FinishReason::Stop)).unwrap();
+        drop(tx);
+        assert_eq!(exporter.finish().unwrap(), 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rec = Json::parse(text.trim()).unwrap();
+        assert_eq!(rec.get("id").and_then(Json::as_usize), Some(7));
+        assert_eq!(rec.get("finish").and_then(Json::as_str), Some("stop"));
+        std::fs::remove_file(&path).ok();
+
+        let (_tx2, rx2) = channel();
+        assert!(Exporter::spawn(rx2, "/nonexistent-dir/x/metrics.jsonl").is_err());
+    }
+}

@@ -6,6 +6,17 @@
 //! over its active set through [`Backend::decode_batch`], and retires
 //! finished sequences — freeing slots immediately, vLLM-style.
 //!
+//! Streaming: every step emits a [`TokenEvent`] on the request's ticket
+//! channel as it lands (`Prefilled` after the prefill step, `Token` per
+//! decode step, one terminal event at retire), so clients observe
+//! generation mid-round instead of after the sequence retires.
+//! Cancellation and per-request deadlines are honored at *round
+//! boundaries* (admission time and between decode rounds): a cancelled
+//! or expired sequence retires immediately — its KV slot and batch slot
+//! free up for the next pending request — with the tokens generated so
+//! far and a `Cancelled` terminal event.  Stop tokens retire a sequence
+//! the moment one is emitted.
+//!
 //! Timing: backends that model execution report per-step simulated
 //! costs; the lane accumulates them on its local clock (steps within a
 //! lane are serialized, so lane-simulated time is their sum).  Backends
@@ -15,12 +26,14 @@
 //! can reconcile the lane clocks into one global timeline: lanes run
 //! concurrently over disjoint shards, so the merged makespan is the
 //! slowest lane's clock (`max`), while the sum of lane clocks is
-//! aggregate busy time.
+//! aggregate busy time.  Cancellation checks spend no virtual time, so
+//! tokens and clocks of non-cancelled runs are bit-identical to the
+//! pre-streaming engine.
 //!
-//! Fault isolation: a failing prefill drops that request; a failing
-//! batched round falls back to serialized batch-1 steps so one poisoned
-//! sequence retires with partial output instead of taking down its
-//! whole round.
+//! Fault isolation: a failing prefill retires that request with a
+//! `Failed` result; a failing batched round falls back to serialized
+//! batch-1 steps so one poisoned sequence retires (`Failed`, partial
+//! output) instead of taking down its whole round.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -32,7 +45,7 @@ use crate::util::error::Result;
 use super::batcher::Batcher;
 use super::kvpool::{KvSlotPool, SlotId};
 use super::metrics::{LaneStats, RequestRecord};
-use super::request::{Request, RequestId, RequestResult};
+use super::request::{FinishReason, Request, RequestId, RequestResult, TokenEvent};
 use super::serve::ServerConfig;
 
 /// An active sequence's decode state, generic over the backend's KV
@@ -47,6 +60,30 @@ struct Active<C> {
     decode_s: f64,
     /// Lane-clock reading at admission (simulated backends).
     admit_clock: f64,
+    /// Terminal condition, once known (stop token, budget, KV window,
+    /// backend failure).  Cancellation/deadline are decided at round
+    /// boundaries, not stored here.
+    finish: Option<FinishReason>,
+    /// Backend error text accompanying `FinishReason::Failed`.
+    error: Option<String>,
+}
+
+impl<C> Active<C> {
+    /// After a token landed: record stop-token / budget / KV-window
+    /// terminal conditions.  Stop tokens win over the length cap when a
+    /// single token triggers both.
+    fn note_terminal(&mut self, token: i32, max_seq: usize) {
+        if self.finish.is_some() {
+            return;
+        }
+        if self.req.params.stop_tokens.contains(&token) {
+            self.finish = Some(FinishReason::Stop);
+        } else if self.tokens.len() >= self.req.params.max_new_tokens
+            || (self.pos as usize) >= max_seq - 1
+        {
+            self.finish = Some(FinishReason::Length);
+        }
+    }
 }
 
 /// Everything a lane hands back to the merge step.
@@ -58,16 +95,12 @@ pub(crate) struct LaneOutcome {
     pub sim_timed: bool,
 }
 
-/// Has `seq` hit its token budget or the KV window?
-fn seq_done<C>(seq: &Active<C>, max_seq: usize) -> bool {
-    seq.tokens.len() >= seq.req.max_new_tokens || (seq.pos as usize) >= max_seq - 1
-}
-
 /// Apply one decode step to `seq`, accounting its cost (simulated, or
-/// `wall_s` measured busy seconds) on the lane clock; returns whether
-/// the sequence is now done.  The clock accumulates *busy* time in both
-/// modes — an idle lane's clock stays at zero, so the merge never mixes
-/// blocked real time into a simulated timeline.
+/// `wall_s` measured busy seconds) on the lane clock, streaming the
+/// token to the ticket, and recording any terminal condition.  The
+/// clock accumulates *busy* time in both modes — an idle lane's clock
+/// stays at zero, so the merge never mixes blocked real time into a
+/// simulated timeline.
 fn apply_step<C>(
     seq: &mut Active<C>,
     step: Step<C>,
@@ -75,7 +108,7 @@ fn apply_step<C>(
     max_seq: usize,
     clock: &mut f64,
     sim_timed: &mut bool,
-) -> bool {
+) {
     let cost = match step.cost_s {
         Some(c) => {
             *sim_timed = true;
@@ -85,10 +118,59 @@ fn apply_step<C>(
     };
     *clock += cost;
     seq.decode_s += cost;
+    let index = seq.tokens.len();
     seq.tokens.push(step.next_token);
     seq.cache = step.cache;
     seq.pos += 1;
-    seq_done(seq, max_seq)
+    seq.req.emit(TokenEvent::Token { token: step.next_token, index });
+    seq.note_terminal(step.next_token, max_seq);
+}
+
+/// Retire one request: emit the terminal ticket event matching its
+/// finish reason, stream the metrics record, and push the result to the
+/// completion channel and the lane's result list.
+#[allow(clippy::too_many_arguments)]
+fn finish_request(
+    req: &Request,
+    res: RequestResult,
+    lane_id: usize,
+    plan: &Option<String>,
+    tx: &Sender<RequestResult>,
+    sink: &Option<Sender<RequestRecord>>,
+    results: &mut Vec<RequestResult>,
+    stats: &mut LaneStats,
+) {
+    // The terminal event clones the full result (token vector
+    // included); skip building it entirely for legacy batch requests
+    // that have no ticket stream.
+    if req.events.is_some() {
+        let event = match res.finish {
+            FinishReason::Length | FinishReason::Stop => TokenEvent::Retired(res.clone()),
+            FinishReason::Cancelled | FinishReason::DeadlineExpired => {
+                TokenEvent::Cancelled(res.clone())
+            }
+            FinishReason::Failed => TokenEvent::Failed(res.clone()),
+        };
+        req.emit(event);
+    }
+    if let Some(sink) = sink {
+        // The sink is best-effort: a hung-up scraper must not stall
+        // serving.
+        let _ = sink.send(RequestRecord {
+            id: res.id,
+            lane: Some(lane_id),
+            queue_s: res.queue_s,
+            prefill_s: res.prefill_s,
+            decode_s: res.decode_s,
+            total_s: res.total_s,
+            tokens: res.tokens.len(),
+            finish: res.finish,
+            plan: plan.clone(),
+        });
+    }
+    let _ = tx.send(res.clone());
+    stats.requests += 1;
+    results.push(res);
 }
 
 /// Drain `rx` on lane `lane_id`, pushing completions into `tx` (and
@@ -152,6 +234,31 @@ pub(crate) fn lane_loop<B: Backend>(
             let Some(req) = batcher.admit() else { break };
             let slot = pool.allocate().expect("available() said so");
             let queue_s = req.arrival.elapsed().as_secs_f64();
+            // Cancellation/deadline at the admission boundary: the
+            // request retires before spending any prefill work.
+            if req.cancel_requested() || req.deadline_expired() {
+                let finish = if req.cancel_requested() {
+                    FinishReason::Cancelled
+                } else {
+                    FinishReason::DeadlineExpired
+                };
+                batcher.finish(req.id)?;
+                pool.release(slot)?;
+                let res = RequestResult {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish,
+                    error: None,
+                    queue_s,
+                    prefill_s: 0.0,
+                    decode_s: 0.0,
+                    total_s: queue_s,
+                };
+                finish_request(
+                    &req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats,
+                );
+                continue;
+            }
             let p = backend.config().prefill_len;
             let mut padded = vec![0i32; p];
             let plen = req.prompt.len().min(p);
@@ -162,11 +269,24 @@ pub(crate) fn lane_loop<B: Backend>(
                 Ok(out) => out,
                 Err(e) => {
                     // One malformed request must not take down the
-                    // lane or the rest of the batch: drop it, free its
-                    // slots, keep serving.
+                    // lane or the rest of the batch: retire it with a
+                    // Failed result, free its slots, keep serving.
                     eprintln!("lane {lane_id}: request {}: prefill failed: {e}", req.id);
                     batcher.finish(req.id)?;
                     pool.release(slot)?;
+                    let res = RequestResult {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        finish: FinishReason::Failed,
+                        error: Some(format!("prefill failed: {e}")),
+                        queue_s,
+                        prefill_s: 0.0,
+                        decode_s: 0.0,
+                        total_s: queue_s,
+                    };
+                    finish_request(
+                        &req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats,
+                    );
                     continue;
                 }
             };
@@ -178,25 +298,27 @@ pub(crate) fn lane_loop<B: Backend>(
                 None => t0.elapsed().as_secs_f64(),
             };
             clock += prefill_s;
-            active.insert(
-                req.id,
-                (
-                    Active {
-                        pos: plen as i32,
-                        tokens: vec![out.next_token],
-                        cache: out.cache,
-                        req,
-                        queue_s,
-                        prefill_s,
-                        decode_s: 0.0,
-                        admit_clock,
-                    },
-                    slot,
-                ),
-            );
+            req.emit(TokenEvent::Prefilled { token: out.next_token });
+            let mut seq = Active {
+                pos: plen as i32,
+                tokens: vec![out.next_token],
+                cache: out.cache,
+                req,
+                queue_s,
+                prefill_s,
+                decode_s: 0.0,
+                admit_clock,
+                finish: None,
+                error: None,
+            };
+            seq.note_terminal(out.next_token, backend.config().max_seq);
+            active.insert(seq.req.id, (seq, slot));
         }
 
-        // 2. One batched decode round over the active set.
+        // 2. One batched decode round over the active set.  The round
+        // boundary is also where cancellation and deadlines take
+        // effect: a flagged sequence joins the retire list instead of
+        // the round.
         let order: Vec<RequestId> = (0..batcher.active_len())
             .filter_map(|_| batcher.next_decode())
             .collect();
@@ -204,8 +326,14 @@ pub(crate) fn lane_loop<B: Backend>(
         let mut retired: Vec<RequestId> = Vec::new();
         let mut ready: Vec<RequestId> = Vec::new();
         for id in &order {
-            let Some((seq, _slot)) = active.get(id) else { continue };
-            if seq_done(seq, max_seq) {
+            let Some((seq, _slot)) = active.get_mut(id) else { continue };
+            if seq.finish.is_some() {
+                retired.push(*id);
+            } else if seq.req.cancel_requested() {
+                seq.finish = Some(FinishReason::Cancelled);
+                retired.push(*id);
+            } else if seq.req.deadline_expired() {
+                seq.finish = Some(FinishReason::DeadlineExpired);
                 retired.push(*id);
             } else {
                 ready.push(*id);
@@ -236,8 +364,8 @@ pub(crate) fn lane_loop<B: Backend>(
                     for (id, step) in ready.iter().zip(steps) {
                         let (seq, _slot) =
                             active.get_mut(id).expect("ready ids are active");
-                        if apply_step(seq, step, wall_share, max_seq, &mut clock, &mut sim_timed)
-                        {
+                        apply_step(seq, step, wall_share, max_seq, &mut clock, &mut sim_timed);
+                        if seq.finish.is_some() {
                             retired.push(*id);
                         }
                     }
@@ -262,14 +390,10 @@ pub(crate) fn lane_loop<B: Backend>(
                             Ok(step) => {
                                 stats.record_round(1);
                                 let wall = t1.elapsed().as_secs_f64();
-                                if apply_step(
-                                    seq,
-                                    step,
-                                    wall,
-                                    max_seq,
-                                    &mut clock,
-                                    &mut sim_timed,
-                                ) {
+                                apply_step(
+                                    seq, step, wall, max_seq, &mut clock, &mut sim_timed,
+                                );
+                                if seq.finish.is_some() {
                                     retired.push(*id);
                                 }
                             }
@@ -279,6 +403,8 @@ pub(crate) fn lane_loop<B: Backend>(
                                      retiring with partial output",
                                     seq.req.id
                                 );
+                                seq.finish = Some(FinishReason::Failed);
+                                seq.error = Some(format!("decode failed: {e}"));
                                 retired.push(*id);
                             }
                         }
@@ -287,7 +413,8 @@ pub(crate) fn lane_loop<B: Backend>(
             }
         }
 
-        // 3. Retire.
+        // 3. Retire: free the batch and KV slots immediately, then emit
+        // the terminal event/result.
         for id in retired {
             let (seq, slot) = active.remove(&id).expect("retired ids are active");
             batcher.finish(id)?;
@@ -299,31 +426,18 @@ pub(crate) fn lane_loop<B: Backend>(
             } else {
                 seq.req.arrival.elapsed().as_secs_f64()
             };
+            let Active { req, tokens, queue_s, prefill_s, decode_s, finish, error, .. } = seq;
             let res = RequestResult {
                 id,
+                tokens,
+                finish: finish.unwrap_or(FinishReason::Length),
+                error,
+                queue_s,
+                prefill_s,
+                decode_s,
                 total_s,
-                tokens: seq.tokens,
-                queue_s: seq.queue_s,
-                prefill_s: seq.prefill_s,
-                decode_s: seq.decode_s,
             };
-            if let Some(sink) = &sink {
-                // The sink is best-effort: a hung-up scraper must not
-                // stall serving.
-                let _ = sink.send(RequestRecord {
-                    id,
-                    lane: lane_id,
-                    queue_s: res.queue_s,
-                    prefill_s: res.prefill_s,
-                    decode_s: res.decode_s,
-                    total_s: res.total_s,
-                    tokens: res.tokens.len(),
-                    plan: plan.clone(),
-                });
-            }
-            let _ = tx.send(res.clone());
-            stats.requests += 1;
-            results.push(res);
+            finish_request(&req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats);
         }
     }
 

@@ -4,7 +4,7 @@
 
 use crate::util::stats::{geomean, max, mean, percentile};
 
-use super::request::{RequestId, RequestResult};
+use super::request::{FinishReason, RequestId, RequestResult};
 
 /// Latency summary over a set of samples (seconds).
 #[derive(Debug, Clone)]
@@ -46,14 +46,18 @@ impl LatencyStats {
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: RequestId,
-    /// Worker lane that served the request.
-    pub lane: usize,
+    /// Worker lane that served the request; `None` for submissions
+    /// rejected at admission, which never reached a lane.
+    pub lane: Option<usize>,
     pub queue_s: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
     /// Generated tokens (prefill token included).
     pub tokens: usize,
+    /// How the request left the engine (completed / cancelled /
+    /// failed).
+    pub finish: FinishReason,
     /// The backend's chosen §III-D kernel plan, `None` for backends
     /// that don't model one (PJRT).
     pub plan: Option<String>,
@@ -131,6 +135,13 @@ impl LaneStats {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: usize,
+    /// Requests that completed normally (token budget, KV window, or a
+    /// stop token).
+    pub completed: usize,
+    /// Requests cancelled by the client or by deadline expiry.
+    pub cancelled: usize,
+    /// Requests rejected at admission or failed in the backend.
+    pub failed: usize,
     pub total_tokens: usize,
     /// Merged timeline: max over the lanes' virtual clocks (the lanes
     /// run concurrently, so the simulated makespan is the slowest
@@ -167,9 +178,50 @@ impl ServeReport {
             return None;
         }
         let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
-        let prefill: Vec<f64> = results.iter().map(|r| r.prefill_s).collect();
-        let e2e: Vec<f64> = results.iter().map(|r| r.total_s).collect();
-        let queue: Vec<f64> = results.iter().map(|r| r.queue_s).collect();
+        let completed = results.iter().filter(|r| r.finish.is_success()).count();
+        let cancelled = results
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r.finish,
+                    FinishReason::Cancelled | FinishReason::DeadlineExpired
+                )
+            })
+            .count();
+        let failed = results
+            .iter()
+            .filter(|r| r.finish == FinishReason::Failed)
+            .count();
+        // Prefill latency is only meaningful for requests whose prefill
+        // actually ran (cancelled-at-admission and failed requests
+        // report zero and would skew the percentiles).
+        let prefill: Vec<f64> = results
+            .iter()
+            .filter(|r| !r.tokens.is_empty())
+            .map(|r| r.prefill_s)
+            .collect();
+        let prefill = if prefill.is_empty() {
+            vec![0.0]
+        } else {
+            prefill
+        };
+        // Likewise e2e/queue: submit-time rejections never enter a
+        // lane and carry exactly-zero timings (every request that did
+        // enter has total_s > 0 — real queue wait and/or virtual
+        // residency); including their zeros would drag the percentiles
+        // toward 0 ms.
+        let in_lane: Vec<&RequestResult> =
+            results.iter().filter(|r| r.total_s > 0.0).collect();
+        let e2e: Vec<f64> = if in_lane.is_empty() {
+            vec![0.0]
+        } else {
+            in_lane.iter().map(|r| r.total_s).collect()
+        };
+        let queue: Vec<f64> = if in_lane.is_empty() {
+            vec![0.0]
+        } else {
+            in_lane.iter().map(|r| r.queue_s).collect()
+        };
         let tps: Vec<f64> = results
             .iter()
             .map(|r| r.decode_tokens_per_s())
@@ -182,6 +234,9 @@ impl ServeReport {
         }
         Some(ServeReport {
             requests: results.len(),
+            completed,
+            cancelled,
+            failed,
             total_tokens,
             wall_s,
             prefill: LatencyStats::from(&prefill)?,
@@ -196,6 +251,12 @@ impl ServeReport {
 
     pub fn print(&self) {
         println!("requests        : {}", self.requests);
+        if self.cancelled > 0 || self.failed > 0 {
+            println!(
+                "outcomes        : {} completed  {} cancelled  {} failed",
+                self.completed, self.cancelled, self.failed
+            );
+        }
         println!("generated tokens: {}", self.total_tokens);
         println!("wall time       : {:.2} s", self.wall_s);
         println!("throughput      : {:.1} tok/s aggregate", self.tokens_per_s);
@@ -237,6 +298,8 @@ mod tests {
         RequestResult {
             id: 0,
             tokens: vec![1; n],
+            finish: FinishReason::Length,
+            error: None,
             queue_s: 0.01,
             prefill_s: prefill,
             decode_s: decode,
@@ -249,11 +312,28 @@ mod tests {
         let rs = vec![result(0.1, 1.0, 11), result(0.2, 2.0, 21)];
         let rep = ServeReport::from(&rs, 4.0).unwrap();
         assert_eq!(rep.requests, 2);
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.cancelled + rep.failed, 0);
         assert_eq!(rep.total_tokens, 32);
         assert!((rep.tokens_per_s - 8.0).abs() < 1e-12);
         assert!((rep.per_request_tps_geomean - 10.0).abs() < 1e-9);
         assert!((rep.prefill.p50 - 0.15).abs() < 1e-12);
         assert!(rep.lanes.is_empty());
+    }
+
+    #[test]
+    fn outcome_counts_and_prefill_filtering() {
+        let mut cancelled = result(0.0, 0.0, 0);
+        cancelled.finish = FinishReason::Cancelled;
+        let mut failed = result(0.0, 0.0, 0);
+        failed.finish = FinishReason::Failed;
+        let mut stopped = result(0.3, 0.5, 4);
+        stopped.finish = FinishReason::Stop;
+        let rep = ServeReport::from(&[cancelled, failed, stopped], 1.0).unwrap();
+        assert_eq!((rep.completed, rep.cancelled, rep.failed), (1, 1, 1));
+        // Zero-token (never-prefilled) results must not skew prefill
+        // latency percentiles.
+        assert!((rep.prefill.mean - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -2,13 +2,18 @@
 //!
 //! The paper's system contribution is the kernel/ISA layer, so the
 //! coordinator is the serving harness a deployment wraps around it
-//! (DESIGN.md §3): a request queue feeding a dispatcher that shards
-//! sequences across worker lanes, each lane a continuous batcher +
-//! KV-slot pool driving *batched* decode rounds against any
+//! (DESIGN.md §3): a session-based streaming **engine**
+//! ([`Engine::start`] → [`EngineHandle::submit`] → [`Ticket`]) that
+//! shards sequences across worker lanes, each lane a continuous
+//! batcher + KV-slot pool driving *batched* decode rounds against any
 //! [`crate::runtime::Backend`] (the simulator-costed `SimBackend` by
 //! default, PJRT behind the `pjrt` feature), and the paper's §III-D
 //! *adaptive kernel selector* that picks the AP/OP dataflow per layer
-//! at compile (model-load) time.
+//! at compile (model-load) time.  Requests carry per-request
+//! generation parameters ([`GenParams`]: token budget, stop tokens,
+//! deadline), tickets stream [`TokenEvent`]s as tokens land and can
+//! cancel mid-generation, and the blocking [`Server`] surface remains
+//! as a thin compatibility wrapper.
 //!
 //! Threading: std::thread + mpsc channels (tokio is not in the offline
 //! crate cache).  The dispatcher runs on the calling thread; each lane
@@ -19,6 +24,8 @@
 //! would have, with the async reactor replaced by blocking queues.
 
 pub mod batcher;
+pub mod engine;
+pub mod export;
 pub mod kvpool;
 mod lane;
 pub mod metrics;
@@ -27,8 +34,12 @@ pub mod selector;
 pub mod serve;
 
 pub use batcher::Batcher;
+pub use engine::{Engine, EngineHandle, Ticket};
+pub use export::Exporter;
 pub use kvpool::KvSlotPool;
 pub use metrics::{LaneStats, LatencyStats, RequestRecord, ServeReport};
-pub use request::{Request, RequestId, RequestResult};
+pub use request::{
+    FinishReason, GenParams, GenerationRequest, Request, RequestId, RequestResult, TokenEvent,
+};
 pub use selector::{select_plan, LayerPlan, ModelPlan};
-pub use serve::{Server, ServerConfig};
+pub use serve::{serve_all, Server, ServerConfig};

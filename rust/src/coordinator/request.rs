@@ -1,23 +1,222 @@
-//! Request/response types of the serving API.
+//! Request/response types of the serving API: per-request generation
+//! parameters ([`GenParams`]), the submission payload
+//! ([`GenerationRequest`]), the per-token event stream
+//! ([`TokenEvent`]), and the completed-request record
+//! ([`RequestResult`]).
+//!
+//! [`Request`] is the *internal* envelope the dispatcher shards to the
+//! lanes: a [`GenerationRequest`] plus the engine-assigned id, arrival
+//! timestamp, the ticket's event sender, and the shared cancellation
+//! flag.  Legacy callers build it directly with [`Request::new`]
+//! (defaulted params, no event stream) — the pre-Engine batch surface.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub type RequestId = u64;
 
-/// One inference request: a prompt and a generation budget.
+/// Per-request generation parameters carried by every submission
+/// (DESIGN.md §3 "per-request control").
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    /// Token budget: generation retires after this many tokens
+    /// (prefill token included) unless a stop token, cancellation, or
+    /// the KV window ends it first.
+    pub max_new_tokens: usize,
+    /// Stop-token set: generation retires as soon as any of these is
+    /// emitted (the stop token itself is kept in the output).
+    pub stop_tokens: Vec<i32>,
+    /// Optional wall-clock deadline: the serving lane cancels the
+    /// request at the first admission or decode-round boundary past
+    /// this instant.
+    pub deadline: Option<Instant>,
+}
+
+impl GenParams {
+    pub fn new(max_new_tokens: usize) -> GenParams {
+        GenParams { max_new_tokens, stop_tokens: Vec::new(), deadline: None }
+    }
+
+    pub fn with_stop_tokens(mut self, stop: Vec<i32>) -> GenParams {
+        self.stop_tokens = stop;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> GenParams {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// What a client submits to [`crate::coordinator::EngineHandle::submit`]:
+/// a prompt plus its generation parameters.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> GenerationRequest {
+        GenerationRequest { prompt, params: GenParams::new(max_new_tokens) }
+    }
+
+    pub fn with_params(prompt: Vec<i32>, params: GenParams) -> GenerationRequest {
+        GenerationRequest { prompt, params }
+    }
+}
+
+/// Why a request left the engine (carried on [`RequestResult`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget or the backend's KV window.
+    Length,
+    /// Emitted a token from its stop-token set.
+    Stop,
+    /// Cancelled through [`crate::coordinator::Ticket::cancel`].
+    Cancelled,
+    /// Its per-request deadline expired at a round boundary.
+    DeadlineExpired,
+    /// Rejected at admission or failed in the backend (see
+    /// [`RequestResult::error`]).
+    Failed,
+}
+
+impl FinishReason {
+    /// Stable lower-case label (used by the JSONL metrics exporter).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExpired => "deadline",
+            FinishReason::Failed => "failed",
+        }
+    }
+
+    /// Did the request complete normally (budget or stop token)?
+    pub fn is_success(&self) -> bool {
+        matches!(self, FinishReason::Length | FinishReason::Stop)
+    }
+}
+
+/// One event on a ticket's stream.  Ordering guarantee per request
+/// (DESIGN.md §3): zero or one `Prefilled`, then zero or more `Token`s
+/// with strictly increasing `index`, then exactly one terminal event
+/// (`Retired`, `Cancelled`, or `Failed`), after which the stream
+/// closes.  The tokens carried by `Prefilled` + `Token` events, in
+/// order, equal the terminal result's `tokens`.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// Prefill completed; `token` is the first generated token
+    /// (index 0 of the output).
+    Prefilled { token: i32 },
+    /// One decode step landed; `index` counts from 1 (0 is the
+    /// prefill token).
+    Token { token: i32, index: usize },
+    /// Terminal: the request completed (budget, KV window, or stop
+    /// token — see [`RequestResult::finish`]).
+    Retired(RequestResult),
+    /// Terminal: cancelled by the client or by deadline expiry; the
+    /// result carries any tokens generated before the cancellation.
+    Cancelled(RequestResult),
+    /// Terminal: rejected at admission or failed in the backend.
+    Failed(RequestResult),
+}
+
+impl TokenEvent {
+    /// The terminal result, if this is a terminal event.
+    pub fn result(&self) -> Option<&RequestResult> {
+        match self {
+            TokenEvent::Retired(r) | TokenEvent::Cancelled(r) | TokenEvent::Failed(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    /// The token this event carries, if it is a token event.
+    pub fn token(&self) -> Option<i32> {
+        match self {
+            TokenEvent::Prefilled { token } | TokenEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        }
+    }
+}
+
+/// One inference request as the lanes see it: the client payload plus
+/// the engine-side plumbing (id, arrival clock, event sender,
+/// cancellation flag).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
+    pub params: GenParams,
     pub arrival: Instant,
+    /// The ticket's event stream; `None` for legacy batch submissions.
+    pub(crate) events: Option<Sender<TokenEvent>>,
+    /// Shared with the ticket: set means "cancel at the next round
+    /// boundary".  `None` for legacy batch submissions (never
+    /// cancellable).
+    pub(crate) cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Request {
+    /// Legacy batch constructor: defaulted params, no event stream, not
+    /// cancellable.  The pre-Engine serving surface
+    /// ([`crate::coordinator::serve_all`] and friends) is built on this.
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(max_new_tokens >= 1);
-        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            params: GenParams::new(max_new_tokens),
+            arrival: Instant::now(),
+            events: None,
+            cancel: None,
+        }
+    }
+
+    /// Full constructor used by the engine's submit path.
+    pub(crate) fn with_plumbing(
+        id: RequestId,
+        req: GenerationRequest,
+        events: Sender<TokenEvent>,
+        cancel: Arc<AtomicBool>,
+    ) -> Request {
+        Request {
+            id,
+            prompt: req.prompt,
+            params: req.params,
+            arrival: Instant::now(),
+            events: Some(events),
+            cancel: Some(cancel),
+        }
+    }
+
+    /// Token budget (sugar over `params`; the field the legacy surface
+    /// exposed directly).
+    pub fn max_new_tokens(&self) -> usize {
+        self.params.max_new_tokens
+    }
+
+    /// Has the ticket's cancel flag been raised?
+    pub(crate) fn cancel_requested(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+
+    /// Has the per-request deadline passed?
+    pub(crate) fn deadline_expired(&self) -> bool {
+        self.params.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Best-effort event emission (a dropped ticket must never stall a
+    /// lane).
+    pub(crate) fn emit(&self, ev: TokenEvent) {
+        if let Some(tx) = &self.events {
+            let _ = tx.send(ev);
+        }
     }
 }
 
@@ -26,6 +225,11 @@ impl Request {
 pub struct RequestResult {
     pub id: RequestId,
     pub tokens: Vec<i32>,
+    /// Why the request left the engine.
+    pub finish: FinishReason,
+    /// Backend/admission error text when `finish` is
+    /// [`FinishReason::Failed`].
+    pub error: Option<String>,
     /// Queue wait before prefill started.
     pub queue_s: f64,
     /// Prefill execution time.
@@ -55,6 +259,8 @@ mod tests {
         let r = RequestResult {
             id: 1,
             tokens: vec![1, 2, 3, 4, 5],
+            finish: FinishReason::Length,
+            error: None,
             queue_s: 0.0,
             prefill_s: 0.1,
             decode_s: 2.0,
@@ -67,5 +273,42 @@ mod tests {
     #[should_panic]
     fn empty_prompt_rejected() {
         Request::new(1, vec![], 4);
+    }
+
+    #[test]
+    fn legacy_request_is_never_cancelled() {
+        let r = Request::new(1, vec![1], 4);
+        assert!(!r.cancel_requested());
+        assert!(!r.deadline_expired());
+        assert_eq!(r.max_new_tokens(), 4);
+        r.emit(TokenEvent::Prefilled { token: 1 }); // no stream: a no-op
+    }
+
+    #[test]
+    fn deadline_in_the_past_reads_expired() {
+        let mut r = Request::new(1, vec![1], 4);
+        r.params.deadline = Some(Instant::now());
+        assert!(r.deadline_expired());
+    }
+
+    #[test]
+    fn event_accessors() {
+        let res = RequestResult {
+            id: 0,
+            tokens: vec![7],
+            finish: FinishReason::Stop,
+            error: None,
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            total_s: 0.0,
+        };
+        assert_eq!(TokenEvent::Prefilled { token: 7 }.token(), Some(7));
+        assert_eq!(TokenEvent::Token { token: 9, index: 1 }.token(), Some(9));
+        assert!(TokenEvent::Retired(res.clone()).result().is_some());
+        assert!(TokenEvent::Retired(res).token().is_none());
+        assert!(FinishReason::Stop.is_success());
+        assert!(!FinishReason::Cancelled.is_success());
+        assert_eq!(FinishReason::DeadlineExpired.label(), "deadline");
     }
 }

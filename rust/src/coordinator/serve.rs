@@ -1,34 +1,37 @@
-//! The sharded serving engine: admitted sequences are sharded across N
-//! worker lanes (std::thread + mpsc channels), each lane driving
-//! *batched* decode rounds against a shared backend and keeping its own
-//! virtual clock; clients submit requests over a channel.
+//! The blocking batch surface over the streaming engine
+//! ([`super::Engine`], DESIGN.md §3): `Server` owns a backend and a
+//! validated config, and its `run`/`run_preloaded`/[`serve_all`] calls
+//! are thin compatibility wrappers that start an engine, feed it, and
+//! block until the merged [`ServeReport`] is ready.
 //!
-//! Topology per [`Server::run`]:
+//! Topology per run (all inside the engine):
 //!
-//!   1. the calling thread becomes the **dispatcher**: it drains the
-//!      request channel and shards arrivals round-robin across lanes,
-//!   2. each **lane** (scoped worker thread) runs admission → prefill →
+//!   1. requests are sharded round-robin across `workers` lanes,
+//!   2. each **lane** (background thread) runs admission → prefill →
 //!      batched decode rounds → retire over its shard (the `lane`
-//!      module), sharing the backend by reference — every [`Backend`]
-//!      method takes `&self`, so `B: Sync` is all that is required,
-//!   3. when the request channel closes, the lane channels close, the
-//!      lanes drain and exit, and the **merge-at-retire** step
-//!      reconciles the per-lane virtual clocks into one global
-//!      simulated timeline for the [`ServeReport`].
+//!      module), sharing the backend through an `Arc` — every
+//!      [`Backend`] method takes `&self`, so `B: Sync` is all that is
+//!      required,
+//!   3. on shutdown the lanes drain and exit, and the
+//!      **merge-at-retire** step reconciles the per-lane virtual
+//!      clocks into one global simulated timeline for the
+//!      [`ServeReport`].
 //!
 //! Clock-merge rule: lanes run concurrently over disjoint shards, so
 //! the merged makespan is the *slowest lane's* clock (`max` over
 //! lanes), while Σ lane clocks is aggregate busy time — both are
-//! reported.  Backends that really execute (PJRT) report no step costs
-//! and the engine falls back to wall-clock timing.
+//! reported.  Backends that really execute report no step costs and
+//! the engine falls back to wall-clock timing.  Tokens and clocks are
+//! bit-identical to serving the same workload through the streaming
+//! API: the wrappers add no model work and no virtual time.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use crate::runtime::Backend;
 use crate::util::error::Result;
 
-use super::lane::{lane_loop, LaneOutcome};
+use super::engine::Engine;
 use super::metrics::{RequestRecord, ServeReport};
 use super::request::{Request, RequestResult};
 
@@ -50,15 +53,16 @@ impl Default for ServerConfig {
     }
 }
 
-/// The serving engine. Owns the backend; `run` drains a request stream.
+/// The blocking serving surface. Owns the backend; `run` drains a
+/// request stream to completion.
 pub struct Server<B: Backend> {
-    backend: B,
+    backend: Arc<B>,
     cfg: ServerConfig,
     record_tx: Option<Sender<RequestRecord>>,
 }
 
 impl<B: Backend> Server<B> {
-    /// Validate `cfg` and build the engine.  Library code must not
+    /// Validate `cfg` and build the server.  Library code must not
     /// abort the caller on bad config, so every constraint is an `Err`,
     /// never a panic.
     pub fn new(backend: B, cfg: ServerConfig) -> Result<Server<B>> {
@@ -70,13 +74,15 @@ impl<B: Backend> Server<B> {
             cfg.kv_slots,
             cfg.max_batch
         );
-        Ok(Server { backend, cfg, record_tx: None })
+        Ok(Server { backend: Arc::new(backend), cfg, record_tx: None })
     }
 
     /// Attach a metrics sink: every retired request streams one
     /// [`RequestRecord`] (queue/prefill/decode seconds, lane id, chosen
-    /// kernel plan) over `tx` while the run is in flight.  Sends are
-    /// best-effort — a dropped receiver never stalls serving.
+    /// kernel plan) over `tx` while a run is in flight.  Sends are
+    /// best-effort — a dropped receiver never stalls serving.  (See
+    /// [`super::Exporter`] for the JSONL endpoint that sits on the
+    /// receiving side.)
     pub fn with_metrics_sink(mut self, tx: Sender<RequestRecord>) -> Server<B> {
         self.record_tx = Some(tx);
         self
@@ -90,126 +96,72 @@ impl<B: Backend> Server<B> {
         &self.backend
     }
 
+    /// Recover the backend.  Panics if a run is still holding a clone
+    /// of the shared backend (impossible once every `run*` call has
+    /// returned — the blocking wrappers join their lanes).
     pub fn into_backend(self) -> B {
-        self.backend
+        let Server { backend, .. } = self;
+        match Arc::try_unwrap(backend) {
+            Ok(b) => b,
+            Err(_) => panic!("into_backend while a serve run is still live"),
+        }
     }
 }
 
-/// How `run_inner` is fed: a live request stream (open-loop serving,
-/// the dispatcher shards arrivals as they come) or a preloaded list
-/// (sharded up front, so lane assignment and batched round widths are
-/// deterministic — no dispatch/lane-startup race).
-enum Feed {
-    Stream(Receiver<Request>),
-    Preloaded(Vec<Request>),
-}
-
-impl<B: Backend + Sync> Server<B> {
+impl<B: Backend + Send + Sync + 'static> Server<B> {
     /// Serve every request from `rx` until the channel closes and all
-    /// work drains; completed results go out through `tx`.
+    /// work drains; completed results go out through `tx`.  Blocks the
+    /// caller for the whole run (the engine's lanes do the serving).
     pub fn run(
         &self,
         rx: Receiver<Request>,
         tx: Sender<RequestResult>,
     ) -> Result<ServeReport> {
-        self.run_inner(Feed::Stream(rx), tx)
+        let handle = Engine::start_inner(
+            Arc::clone(&self.backend),
+            self.cfg.clone(),
+            self.record_tx.clone(),
+            Some(tx),
+            false,
+        )?;
+        while let Ok(req) = rx.recv() {
+            handle.submit_request(req);
+        }
+        handle.shutdown()
     }
 
     /// Serve a fixed request list: the whole list is sharded
-    /// round-robin across the lanes before any lane starts, so the
-    /// schedule (lane assignment, batched round widths, virtual clocks)
-    /// is a pure function of the list — the mode batch jobs and
-    /// integration tests want.
+    /// round-robin across the lanes before any lane starts (the engine
+    /// holds its lanes at a start gate), so the schedule (lane
+    /// assignment, batched round widths, virtual clocks) is a pure
+    /// function of the list — the mode batch jobs and integration
+    /// tests want.
     pub fn run_preloaded(
         &self,
         requests: Vec<Request>,
         tx: Sender<RequestResult>,
     ) -> Result<ServeReport> {
-        self.run_inner(Feed::Preloaded(requests), tx)
-    }
-
-    fn run_inner(&self, feed: Feed, tx: Sender<RequestResult>) -> Result<ServeReport> {
-        let start = Instant::now();
-        let workers = self.cfg.workers;
-        let outcomes: Vec<Result<LaneOutcome>> = std::thread::scope(|s| {
-            let mut lane_txs: Vec<Sender<Request>> = Vec::with_capacity(workers);
-            let mut lane_rxs = Vec::with_capacity(workers);
-            for _ in 0..workers {
-                let (lane_tx, lane_rx) = channel::<Request>();
-                lane_txs.push(lane_tx);
-                lane_rxs.push(lane_rx);
-            }
-            // Preloaded work is sharded (and the shard channels closed)
-            // before the lanes spawn, so every lane sees its whole
-            // shard at its first pull.
-            let feed = match feed {
-                Feed::Preloaded(requests) => {
-                    for (i, req) in requests.into_iter().enumerate() {
-                        let _ = lane_txs[i % workers].send(req);
-                    }
-                    lane_txs.clear();
-                    None
-                }
-                Feed::Stream(rx) => Some(rx),
-            };
-            let mut handles = Vec::with_capacity(workers);
-            for (lane_id, lane_rx) in lane_rxs.into_iter().enumerate() {
-                let backend = &self.backend;
-                let cfg = &self.cfg;
-                let res_tx = tx.clone();
-                let sink = self.record_tx.clone();
-                handles.push(s.spawn(move || {
-                    lane_loop(backend, cfg, lane_id, lane_rx, res_tx, sink)
-                }));
-            }
-            // Dispatcher: shard live arrivals round-robin across the
-            // lanes.  A send only fails if a lane died early; stop
-            // feeding and surface that lane's error through its join.
-            if let Some(rx) = feed {
-                let mut next = 0usize;
-                while let Ok(req) = rx.recv() {
-                    if lane_txs[next % workers].send(req).is_err() {
-                        break;
-                    }
-                    next += 1;
-                }
-            }
-            drop(lane_txs); // close the shard channels: lanes drain and exit
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("lane thread panicked"))
-                .collect()
-        });
-
-        let mut results: Vec<RequestResult> = Vec::new();
-        let mut lanes = Vec::with_capacity(workers);
-        let mut sim_timed = false;
-        for outcome in outcomes {
-            let outcome = outcome?;
-            sim_timed |= outcome.sim_timed;
-            results.extend(outcome.results);
-            lanes.push(outcome.stats);
+        let mut handle = Engine::start_inner(
+            Arc::clone(&self.backend),
+            self.cfg.clone(),
+            self.record_tx.clone(),
+            Some(tx),
+            true,
+        )?;
+        for req in requests {
+            handle.submit_request(req);
         }
-        // Merge at retire: lanes are concurrent engines over disjoint
-        // shards, so the global simulated timeline is the slowest
-        // lane's clock; real backends report elapsed wall time instead.
-        let wall_s = if sim_timed {
-            lanes.iter().map(|l| l.clock_s).fold(0.0f64, f64::max)
-        } else {
-            start.elapsed().as_secs_f64()
-        };
-        results.sort_by_key(|r| r.id);
-        ServeReport::from_lanes(&results, wall_s, lanes)
-            .ok_or_else(|| crate::err!("no requests served"))
+        handle.open_gate();
+        handle.shutdown()
     }
 }
 
 /// Convenience: serve a fixed list of requests synchronously with
 /// deterministic sharding (used by the examples and integration tests).
-pub fn serve_all<B: Backend + Sync>(
+pub fn serve_all<B: Backend + Send + Sync + 'static>(
     server: &Server<B>,
     requests: Vec<Request>,
 ) -> Result<ServeReport> {
-    let (res_tx, _res_rx) = channel();
+    let (res_tx, _res_rx) = std::sync::mpsc::channel();
     server.run_preloaded(requests, res_tx)
 }

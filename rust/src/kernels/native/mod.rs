@@ -29,7 +29,7 @@ use std::sync::OnceLock;
 use crate::config::IsaConfig;
 use crate::config::platforms::Platform;
 use crate::quant::encode_indices;
-use crate::quant::pack::{PshufbPacked, PSHUFB_TILE_OUTS};
+use crate::quant::pack::{PshufbPacked, PSHUFB_TILE_OUTS, PSHUFB_TILE_SLICE_BYTES};
 use crate::sim::{GemmShape, KernelProfile};
 use crate::util::error::Result;
 
@@ -83,10 +83,14 @@ pub fn detect_path() -> NativePath {
 pub struct NativeGemv {
     isa: IsaConfig,
     path: NativePath,
+    /// Worker threads a GEMV's output rows are chunked across (1 =
+    /// single-threaded; the layout is tile-major, so each worker owns a
+    /// contiguous run of 16-output tiles).
+    threads: usize,
 }
 
 impl NativeGemv {
-    /// Build for `isa` on the detected best path.
+    /// Build for `isa` on the detected best path, single-threaded.
     pub fn new(isa: IsaConfig) -> Result<NativeGemv> {
         NativeGemv::with_path(isa, detect_path())
     }
@@ -105,7 +109,26 @@ impl NativeGemv {
                 "AVX2 path requested but the host does not report AVX2"
             );
         }
-        Ok(NativeGemv { isa, path })
+        Ok(NativeGemv { isa, path, threads: 1 })
+    }
+
+    /// Chunk every GEMV's output rows across `threads` scoped workers
+    /// (ROADMAP "multi-threaded native GEMV").  Each worker executes
+    /// the unchanged kernel over a contiguous tile range of the
+    /// tile-major layout, so results are bit-identical to the
+    /// single-threaded path (i32 accumulation is exact and every
+    /// output is computed by exactly one worker).
+    ///
+    /// Workers are scoped threads spawned *per GEMV call* (tens of µs
+    /// of overhead each), so threading pays off on the large zoo
+    /// entries' matrices, not on toy shapes; each worker is given at
+    /// least two tiles and the count is clamped accordingly.  A
+    /// persistent worker pool to amortize the spawn cost is a ROADMAP
+    /// follow-up.
+    pub fn with_threads(mut self, threads: usize) -> Result<NativeGemv> {
+        crate::ensure!(threads >= 1, "threads must be >= 1");
+        self.threads = threads;
+        Ok(self)
     }
 
     pub fn isa(&self) -> IsaConfig {
@@ -114,6 +137,10 @@ impl NativeGemv {
 
     pub fn path(&self) -> NativePath {
         self.path
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Compile-time side: pad, encode (Fig. 5) and repack a row-major
@@ -183,22 +210,64 @@ impl NativeGemv {
     }
 
     fn run_row(&self, acts: &[i8], packed: &PshufbPacked, out: &mut [i32]) {
+        // Spawning a scoped worker costs tens of µs; give each at
+        // least two tiles so a tiny matrix never pays more in spawns
+        // than it saves in compute.
+        let workers = self.threads.clamp(1, (packed.tiles / 2).max(1));
+        if workers == 1 {
+            self.run_tile_range(&packed.data, packed.tiles, packed.slices, acts, out);
+            return;
+        }
+        // Chunk the tile-major layout into `workers` contiguous tile
+        // runs (first `rem` chunks one tile wider), each worker owning
+        // disjoint slices of `data` and `out` — no synchronization on
+        // the hot path, bit-identical results by construction.
+        let base = packed.tiles / workers;
+        let rem = packed.tiles % workers;
+        std::thread::scope(|s| {
+            let mut data_rest = &packed.data[..];
+            let mut out_rest = &mut out[..];
+            for w in 0..workers {
+                let tiles_w = base + usize::from(w < rem);
+                let (data_w, dr) =
+                    data_rest.split_at(tiles_w * packed.slices * PSHUFB_TILE_SLICE_BYTES);
+                let (out_w, or) = out_rest.split_at_mut(tiles_w * PSHUFB_TILE_OUTS);
+                data_rest = dr;
+                out_rest = or;
+                s.spawn(move || {
+                    self.run_tile_range(data_w, tiles_w, packed.slices, acts, out_w);
+                });
+            }
+        });
+    }
+
+    /// Execute the GEMV over a contiguous tile range: `data` holds
+    /// `tiles · slices` records, `out` the matching `tiles · 16`
+    /// output slots.
+    fn run_tile_range(
+        &self,
+        data: &[u8],
+        tiles: usize,
+        slices: usize,
+        acts: &[i8],
+        out: &mut [i32],
+    ) {
         match self.path {
             #[cfg(target_arch = "x86_64")]
             NativePath::Avx2 => {
                 // Safety: `path` is only Avx2 when runtime detection
                 // reported AVX2 (enforced in `with_path`).
                 unsafe {
-                    if packed.c == 2 {
-                        avx2::gemv_row_c2(&packed.data, packed.tiles, packed.slices, acts, out);
+                    if self.isa.c == 2 {
+                        avx2::gemv_row_c2(data, tiles, slices, acts, out);
                     } else {
-                        avx2::gemv_row_c4(&packed.data, packed.tiles, packed.slices, acts, out);
+                        avx2::gemv_row_c4(data, tiles, slices, acts, out);
                     }
                 }
             }
             #[cfg(not(target_arch = "x86_64"))]
-            NativePath::Avx2 => scalar_row(&self.isa, packed, acts, out),
-            NativePath::Scalar => scalar_row(&self.isa, packed, acts, out),
+            NativePath::Avx2 => scalar_range(&self.isa, data, tiles, slices, acts, out),
+            NativePath::Scalar => scalar_range(&self.isa, data, tiles, slices, acts, out),
         }
     }
 }
@@ -224,15 +293,23 @@ pub(crate) fn lut_entry(block: &[i8], p: usize) -> (i16, i16) {
 
 /// Portable fallback: the same TLUT-build + gather + dense−sparse +
 /// adder-tree semantics over the same [`PshufbPacked`] bytes, in plain
-/// Rust.  Intermediate widths mirror the modeled ISA (16-bit entries
-/// and differences, 32-bit accumulation), so results are bit-identical
-/// on every host.
-fn scalar_row(isa: &IsaConfig, packed: &PshufbPacked, acts: &[i8], out: &mut [i32]) {
+/// Rust, over a contiguous tile range (`data` = `tiles · slices`
+/// records).  Intermediate widths mirror the modeled ISA (16-bit
+/// entries and differences, 32-bit accumulation), so results are
+/// bit-identical on every host.
+fn scalar_range(
+    isa: &IsaConfig,
+    data: &[u8],
+    tiles: usize,
+    slices: usize,
+    acts: &[i8],
+    out: &mut [i32],
+) {
     let (c, s) = (isa.c, isa.s);
     let entries = 1usize << c;
     let mut dense = vec![0i16; s * entries];
     let mut sparse = vec![0i16; s * entries];
-    for slice in 0..packed.slices {
+    for slice in 0..slices {
         let a = &acts[slice * isa.k..(slice + 1) * isa.k];
         for b in 0..s {
             let blk = &a[b * c..(b + 1) * c];
@@ -242,12 +319,14 @@ fn scalar_row(isa: &IsaConfig, packed: &PshufbPacked, acts: &[i8], out: &mut [i3
                 sparse[b * entries + p] = sp;
             }
         }
-        for tile in 0..packed.tiles {
+        for tile in 0..tiles {
+            let rec = &data[(tile * slices + slice) * PSHUFB_TILE_SLICE_BYTES..]
+                [..PSHUFB_TILE_SLICE_BYTES];
             let base = tile * PSHUFB_TILE_OUTS;
             for o in 0..PSHUFB_TILE_OUTS {
                 let mut acc = 0i32;
                 for b in 0..s {
-                    let (dp, spn) = packed.indices(tile, slice, o, b);
+                    let (dp, spn) = PshufbPacked::record_indices(c, rec, o, b);
                     let diff = dense[b * entries + dp as usize]
                         .wrapping_sub(sparse[b * entries + spn as usize]);
                     acc += diff as i32;
@@ -366,6 +445,43 @@ mod tests {
         assert_eq!(p.kernel, kern.name());
         assert_eq!(p.simd_uops, q.simd_uops);
         assert_eq!(p.streams.len(), q.streams.len());
+    }
+
+    #[test]
+    fn threaded_chunking_matches_single_threaded_bit_for_bit() {
+        // The threads knob distributes output tiles across scoped
+        // workers; every output is computed by exactly one worker with
+        // exact i32 accumulation, so any thread count must reproduce
+        // the single-threaded result bit for bit — including more
+        // workers than tiles.
+        let mut rng = Rng::new(77);
+        let shape = GemmShape::new(2, 53, 7 * 16 + 5);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.3);
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            for gemv in [
+                NativeGemv::with_path(isa, NativePath::Scalar).unwrap(),
+                NativeGemv::new(isa).unwrap(), // detected best path
+            ] {
+                let packed = gemv.pack(&w, shape.m, shape.k).unwrap();
+                let mut single = vec![0i32; shape.n * shape.m];
+                gemv.gemm(&acts, &packed, shape.n, &mut single).unwrap();
+                for threads in [2, 3, 64] {
+                    let threaded = gemv.with_threads(threads).unwrap();
+                    assert_eq!(threaded.threads(), threads);
+                    let mut out = vec![0i32; shape.n * shape.m];
+                    threaded.gemm(&acts, &packed, shape.n, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        single,
+                        "threads={threads} diverged ({} {:?})",
+                        gemv.isa().name(),
+                        gemv.path()
+                    );
+                }
+            }
+        }
+        assert!(NativeGemv::new(IsaConfig::C2).unwrap().with_threads(0).is_err());
     }
 
     #[test]

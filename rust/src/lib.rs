@@ -30,9 +30,11 @@
 //!   `SimBackend`, and the PJRT CPU client (`ModelRuntime`, behind the
 //!   `pjrt` cargo feature) that loads the AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py` and executes them.
-//! * [`coordinator`] — the serving layer: request queue, continuous
-//!   batcher, prefill/decode scheduler, KV-slot manager and the paper's
-//!   adaptive AP/OP kernel selector (§III-D).
+//! * [`coordinator`] — the serving layer: the session-based streaming
+//!   engine (submit/stream/cancel tickets, per-request generation
+//!   params, JSONL metrics exporter), continuous batcher, prefill/decode
+//!   scheduler, KV-slot manager and the paper's adaptive AP/OP kernel
+//!   selector (§III-D).
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`util`] — in-tree errors, JSON, PRNG, statistics (offline

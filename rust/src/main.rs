@@ -11,7 +11,10 @@ use std::sync::mpsc::channel;
 use tsar::bench;
 use tsar::config::platforms::{Platform, PlatformKind};
 use tsar::config::IsaConfig;
-use tsar::coordinator::{select_plan, Request, Server, ServerConfig};
+use tsar::coordinator::{
+    select_plan, Engine, Exporter, GenerationRequest, Request, Server, ServerConfig, Ticket,
+    TokenEvent,
+};
 use tsar::kernels::all_kernels;
 use tsar::model::zoo;
 use tsar::runtime::{Backend, NativeBackend, SimBackend, SimBackendConfig};
@@ -29,16 +32,25 @@ USAGE:
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
                  [--backend sim|native] [--isa c2|c4]
+                 [--metrics <path|->] [--stream]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
 
+`serve --metrics <path|->` attaches the request-level metrics exporter:
+one JSON line per retired request (queue/prefill/decode seconds, lane,
+finish reason, kernel plan) to the file, or to stdout for `-`.
+`serve --stream` drives the session-based streaming Engine API instead
+of the blocking batch surface: tokens print as their decode rounds
+land, per ticket.
+
 `serve --backend native` executes every decode step's BitLinear GEMVs
 through the host AVX2 pshufb kernels (scalar fallback elsewhere) and
 reports measured wall-clock latency; tokens are bit-identical to the
-default simulator backend.  The native weight layout costs ~1 B/weight,
-so it defaults to BitNet-125M — pass --model explicitly to serve the
-billion-parameter zoo entries natively.
+default simulator backend.  `--threads T` chunks each GEMV's output
+rows across T host threads (bit-identical results).  The native weight
+layout costs ~1 B/weight, so it defaults to BitNet-125M — pass --model
+explicitly to serve the billion-parameter zoo entries natively.
 ";
 
 fn main() -> Result<()> {
@@ -202,9 +214,19 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     tsar::ensure!(max_new >= 1, "--max-new must be >= 1");
     tsar::ensure!(batch >= 1, "--batch must be >= 1");
     tsar::ensure!(workers >= 1, "--workers must be >= 1");
+    let opts = ServeOpts {
+        metrics: flag(args, "--metrics"),
+        stream: args.iter().any(|a| a == "--stream"),
+    };
+    // Both --stream token output and `--metrics -` write stdout; the
+    // interleaving would corrupt the JSONL stream.
+    tsar::ensure!(
+        !(opts.stream && opts.metrics.as_deref() == Some("-")),
+        "--stream prints tokens on stdout; use --metrics <file> with --stream"
+    );
 
     if let Some(dir) = flag(args, "--artifacts") {
-        return serve_pjrt(&dir, args, n_req, max_new, batch, workers);
+        return serve_pjrt(&dir, args, n_req, max_new, batch, workers, opts);
     }
 
     let model = flag(args, "--model");
@@ -227,7 +249,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
             for l in &backend.decode_plan().layers {
                 println!("  {}", l.describe());
             }
-            drive(backend, n_req, max_new, batch, workers)
+            drive(backend, n_req, max_new, batch, workers, opts)
         }
         "native" => {
             // Native execution packs weights at ~1 B/weight and really
@@ -239,11 +261,12 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 "BitNet-125M".into()
             });
             // The native path executes on the host CPU; the simulator's
-            // platform/thread knobs do not apply.
-            if flag(args, "--platform").is_some() || flag(args, "--threads").is_some() {
+            // platform knob does not apply (--threads does: it chunks
+            // every GEMV's output rows across host worker threads).
+            if flag(args, "--platform").is_some() {
                 eprintln!(
-                    "warning: --platform/--threads model the simulator and are \
-                     ignored by --backend native (runs single-threaded on this host)"
+                    "warning: --platform models the simulator and is ignored by \
+                     --backend native (runs on this host)"
                 );
             }
             let isa = match flag(args, "--isa").as_deref() {
@@ -258,7 +281,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 backend.path().name(),
                 backend.packed_bytes() as f64 / 1e6
             );
-            drive(backend, n_req, max_new, batch, workers)
+            drive(backend, n_req, max_new, batch, workers, opts)
         }
         other => tsar::bail!("--backend must be sim or native, got {other:?}"),
     }
@@ -272,11 +295,12 @@ fn serve_pjrt(
     max_new: usize,
     batch: usize,
     workers: usize,
+    opts: ServeOpts,
 ) -> Result<()> {
     let variant = flag(args, "--variant").unwrap_or_else(|| "tsar".into());
     println!("loading artifacts from {dir} (variant {variant}) ...");
     let rt = tsar::runtime::ModelRuntime::load(dir, &variant)?;
-    drive(rt, n_req, max_new, batch, workers)
+    drive(rt, n_req, max_new, batch, workers, opts)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -287,6 +311,7 @@ fn serve_pjrt(
     _max_new: usize,
     _batch: usize,
     _workers: usize,
+    _opts: ServeOpts,
 ) -> Result<()> {
     tsar::bail!(
         "--artifacts needs the PJRT runtime; rebuild with `cargo build --features pjrt` \
@@ -295,15 +320,27 @@ fn serve_pjrt(
     )
 }
 
+/// Serve-mode options shared by every backend path.
+struct ServeOpts {
+    /// `--metrics <path|->`: JSONL request-record exporter target.
+    metrics: Option<String>,
+    /// `--stream`: drive the streaming Engine API (per-token output)
+    /// instead of the blocking batch surface.
+    stream: bool,
+}
+
 /// Drive any backend through the coordinator with a synthetic request
 /// mix and print the serve report (per-lane breakdown included when
-/// serving with more than one worker).
-fn drive<B: Backend + Sync>(
+/// serving with more than one worker).  `--stream` submits the same
+/// mix through the session-based Engine API and prints tokens as they
+/// land; `--metrics` attaches the JSONL exporter either way.
+fn drive<B: Backend + Send + Sync + 'static>(
     backend: B,
     n_req: usize,
     max_new: usize,
     batch: usize,
     workers: usize,
+    opts: ServeOpts,
 ) -> Result<()> {
     let cfg = backend.config().clone();
     println!("serving on {}", backend.describe());
@@ -313,25 +350,82 @@ fn drive<B: Backend + Sync>(
         cfg.prefill_len, cfg.max_seq, cfg.vocab
     );
 
-    let server =
-        Server::new(backend, ServerConfig { max_batch: batch, kv_slots: batch, workers })?;
+    let scfg = ServerConfig { max_batch: batch, kv_slots: batch, workers };
     let mut rng = Rng::new(7);
-    let requests: Vec<Request> = (0..n_req as u64)
-        .map(|id| {
+    let prompts: Vec<Vec<i32>> = (0..n_req)
+        .map(|_| {
             let hi = (cfg.prefill_len as i64 - 1).max(3);
             let plen = rng.range_i64(3, hi) as usize;
-            let prompt: Vec<i32> =
-                (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-            Request::new(id, prompt, max_new)
+            (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect()
         })
         .collect();
 
-    // Preloaded mode shards the fixed list before the lanes start, so
-    // repeated runs (e.g. --workers 1 vs --workers 4 comparisons) are
-    // schedule-deterministic.
-    let (res_tx, res_rx) = channel();
-    let report = server.run_preloaded(requests, res_tx)?;
-    drop(res_rx);
+    // The metrics endpoint: a JSONL exporter draining the request-
+    // record channel while the run is in flight.
+    let (rec_tx, exporter) = match opts.metrics.as_deref() {
+        Some(target) => {
+            let (tx, rx) = channel();
+            (Some(tx), Some(Exporter::spawn(rx, target)?))
+        }
+        None => (None, None),
+    };
+
+    let report = if opts.stream {
+        // The streaming path: a live engine, one ticket per request,
+        // tokens printed as their decode rounds land.
+        let handle = Engine::start_with_sink(backend, scfg, rec_tx)?;
+        let tickets: Vec<Ticket> = prompts
+            .into_iter()
+            .map(|p| handle.submit(GenerationRequest::new(p, max_new)))
+            .collect();
+        for ticket in tickets {
+            use std::io::Write;
+            print!("  req {:>2} |", ticket.id());
+            while let Some(ev) = ticket.recv() {
+                match ev {
+                    TokenEvent::Prefilled { token } | TokenEvent::Token { token, .. } => {
+                        // Flush per token: line-buffered stdout would
+                        // otherwise hold the whole line until retire,
+                        // defeating the live stream.
+                        print!(" {token}");
+                        let _ = std::io::stdout().flush();
+                    }
+                    TokenEvent::Retired(r) => {
+                        println!("  [{} | {:.1} tok/s]", r.finish.label(), r.decode_tokens_per_s());
+                    }
+                    TokenEvent::Cancelled(r) | TokenEvent::Failed(r) => {
+                        println!("  [{}]", r.finish.label());
+                    }
+                }
+            }
+        }
+        handle.shutdown()?
+    } else {
+        // Preloaded mode shards the fixed list before the lanes start,
+        // so repeated runs (e.g. --workers 1 vs --workers 4
+        // comparisons) are schedule-deterministic.
+        let mut server = Server::new(backend, scfg)?;
+        if let Some(tx) = rec_tx {
+            server = server.with_metrics_sink(tx);
+        }
+        let requests: Vec<Request> = prompts
+            .into_iter()
+            .enumerate()
+            .map(|(id, prompt)| Request::new(id as u64, prompt, max_new))
+            .collect();
+        let (res_tx, res_rx) = channel();
+        let report = server.run_preloaded(requests, res_tx)?;
+        drop(res_rx);
+        drop(server); // release the metrics sender so the exporter drains
+        report
+    };
     report.print();
+    if let Some(exporter) = exporter {
+        let n = exporter.finish()?;
+        println!(
+            "metrics: {n} JSONL record(s) exported to {}",
+            opts.metrics.as_deref().unwrap_or("-")
+        );
+    }
     Ok(())
 }

@@ -335,7 +335,15 @@ impl PshufbPacked {
     pub fn indices(&self, tile: usize, slice: usize, o: usize, b: usize) -> (u8, u8) {
         let rec = &self.data[(tile * self.slices + slice) * PSHUFB_TILE_SLICE_BYTES..]
             [..PSHUFB_TILE_SLICE_BYTES];
-        match self.c {
+        PshufbPacked::record_indices(self.c, rec, o, b)
+    }
+
+    /// [`PshufbPacked::indices`] over one raw record — lets kernels
+    /// that operate on a contiguous tile *sub-range* of `data` (the
+    /// multi-threaded row chunks) decode without the full struct.
+    pub fn record_indices(c: usize, rec: &[u8], o: usize, b: usize) -> (u8, u8) {
+        debug_assert_eq!(rec.len(), PSHUFB_TILE_SLICE_BYTES);
+        match c {
             2 => {
                 let half = (o / 8) * 64;
                 (

@@ -95,6 +95,16 @@ pub trait Backend {
 
     /// Greedy generation: prefill + `n_new - 1` decode steps.
     fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        self.generate_until(prompt, n_new, &[])
+    }
+
+    /// Greedy generation honoring a stop-token set: prefill + up to
+    /// `n_new - 1` decode steps, returning early (stop token included
+    /// in the output) as soon as any of `stop` is emitted.  This is
+    /// the batch-1 reference for the serving engine's per-request
+    /// generation parameters — streamed tokens of a non-cancelled
+    /// ticket are bit-identical to this.
+    fn generate_until(&self, prompt: &[i32], n_new: usize, stop: &[i32]) -> Result<Vec<i32>> {
         let p = self.config().prefill_len;
         crate::ensure!(prompt.len() <= p, "prompt longer than prefill window");
         crate::ensure!(n_new >= 1, "n_new must be >= 1");
@@ -102,6 +112,9 @@ pub trait Backend {
         padded[..prompt.len()].copy_from_slice(prompt);
         let step = self.prefill(&padded, prompt.len() as i32)?;
         let mut toks = vec![step.next_token];
+        if stop.contains(&step.next_token) {
+            return Ok(toks);
+        }
         let mut cache = step.cache;
         let mut pos = prompt.len() as i32;
         for _ in 1..n_new {
@@ -113,6 +126,9 @@ pub trait Backend {
             toks.push(s.next_token);
             cache = s.cache;
             pos += 1;
+            if stop.contains(toks.last().unwrap()) {
+                break;
+            }
         }
         Ok(toks)
     }

@@ -70,6 +70,35 @@ pub struct ModelConfig {
     pub prefill_len: usize,
 }
 
+impl ModelConfig {
+    /// Admission-time validation of one generation request against this
+    /// model's serving window: the prompt must be non-empty and fit the
+    /// prefill window, the budget must be at least one token, and
+    /// `prompt_len + max_new_tokens` must fit the KV capacity
+    /// (`max_seq`) — rejecting at submit time what would otherwise
+    /// error mid-decode with "KV cache exhausted".
+    pub fn validate_request(
+        &self,
+        prompt_len: usize,
+        max_new_tokens: usize,
+    ) -> crate::util::error::Result<()> {
+        crate::ensure!(prompt_len >= 1, "empty prompt");
+        crate::ensure!(
+            prompt_len <= self.prefill_len,
+            "prompt of {prompt_len} tokens exceeds the prefill window ({})",
+            self.prefill_len
+        );
+        crate::ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        crate::ensure!(
+            prompt_len + max_new_tokens <= self.max_seq,
+            "prompt ({prompt_len}) + max_new_tokens ({max_new_tokens}) exceeds the KV \
+             capacity (max_seq = {})",
+            self.max_seq
+        );
+        Ok(())
+    }
+}
+
 /// Golden generation recorded by aot.py (ref path, greedy).
 #[derive(Debug, Clone)]
 pub struct Golden {

@@ -56,6 +56,9 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Load `spec`: synthesize + pack every decode-workload site for
     /// the given ISA config on the detected native path.
+    /// `cfg.threads` (0 → 1) chunks each GEMV's output rows across that
+    /// many host worker threads — results stay bit-identical to the
+    /// single-threaded path (the tile chunks are disjoint and exact).
     pub fn new(
         spec: &'static ModelSpec,
         isa: IsaConfig,
@@ -66,7 +69,7 @@ impl NativeBackend {
             cfg.max_seq > cfg.prefill_len,
             "max_seq must exceed the prefill window"
         );
-        let gemv = NativeGemv::new(isa)?;
+        let gemv = NativeGemv::new(isa)?.with_threads(cfg.threads.max(1))?;
         let wl = Workload::decode(spec);
         let mut rng = Rng::new(cfg.seed ^ 0x7EA1_0000_0000_0001);
         let mut layers = Vec::with_capacity(wl.ops.len());
@@ -152,10 +155,11 @@ impl Backend for NativeBackend {
 
     fn describe(&self) -> String {
         format!(
-            "native:{} ({} path, {}, {} sites packed)",
+            "native:{} ({} path, {}, {} thread(s), {} sites packed)",
             self.spec.name,
             self.gemv.path().name(),
             self.gemv.isa().name(),
+            self.gemv.threads(),
             self.layers.len()
         )
     }

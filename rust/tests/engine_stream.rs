@@ -1,0 +1,368 @@
+//! End-to-end tests of the session-based streaming Engine API
+//! (DESIGN.md §3): submit/stream/cancel tickets over the sharded
+//! server, per-request generation params, admission-time validation,
+//! and token/clock parity with the legacy blocking wrappers.
+
+use std::time::{Duration, Instant};
+
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{
+    serve_all, Engine, FinishReason, GenParams, GenerationRequest, Request, Server,
+    ServerConfig, TokenEvent,
+};
+use tsar::runtime::{
+    Backend, BatchItem, ModelConfig, SimBackend, SimBackendConfig, SimKvCache, Step,
+};
+use tsar::util::error::Result;
+
+fn sim_cfg() -> SimBackendConfig {
+    SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 }
+}
+
+fn backend() -> SimBackend {
+    SimBackend::by_name("BitNet-2B-4T", Platform::workstation(), sim_cfg()).expect("zoo model")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers }
+}
+
+/// A backend that spends real wall time per step (on top of the
+/// simulator's virtual costs), so tests can observe and interrupt
+/// generation mid-stream deterministically.
+struct SlowBackend {
+    inner: SimBackend,
+    step: Duration,
+}
+
+impl SlowBackend {
+    fn new(step_ms: u64) -> SlowBackend {
+        SlowBackend { inner: backend(), step: Duration::from_millis(step_ms) }
+    }
+}
+
+impl Backend for SlowBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+
+    fn plan_summary(&self) -> Option<String> {
+        self.inner.plan_summary()
+    }
+}
+
+/// The acceptance workload: two concurrent tickets stream tokens,
+/// one is cancelled mid-generation (freeing its KV slot for a later
+/// request), and the survivor's tokens are bit-identical to
+/// `Backend::generate`.
+#[test]
+fn concurrent_tickets_cancel_one_mid_stream() {
+    let prompt_a = vec![3, 1, 4, 1, 5];
+    let prompt_b = vec![2, 7, 1, 8];
+    let prompt_c = vec![9, 9, 2];
+    let max_new = 12usize;
+    let reference = backend();
+    let direct_a = reference.generate(&prompt_a, max_new).unwrap();
+    let direct_b = reference.generate(&prompt_b, max_new).unwrap();
+    let direct_c = reference.generate(&prompt_c, 4).unwrap();
+
+    // One lane, two KV slots: A and B occupy the whole pool, so C can
+    // only be admitted once a slot frees up.  15 ms per round leaves
+    // generous scheduling headroom between "cancel sent" and "budget
+    // reached" even on a loaded CI machine.
+    let handle = Engine::start(SlowBackend::new(15), cfg(2, 2, 1)).unwrap();
+    let ticket_a = handle.submit(GenerationRequest::new(prompt_a, max_new));
+    let ticket_b = handle.submit(GenerationRequest::new(prompt_b, max_new));
+
+    // submit() returned before decode completed: nothing terminal can
+    // have been emitted yet (the backend sleeps per step).
+    if let Some(ev) = ticket_a.try_recv() {
+        assert!(ev.result().is_none(), "terminal event before decode ran: {ev:?}");
+    }
+
+    // Stream A until a few tokens landed, then cancel it mid-flight.
+    let mut streamed_a: Vec<i32> = Vec::new();
+    while let Some(ev) = ticket_a.recv() {
+        if let Some(tok) = ev.token() {
+            streamed_a.push(tok);
+        }
+        if streamed_a.len() == 3 {
+            break;
+        }
+    }
+    ticket_a.cancel();
+
+    // A's KV slot frees at the next round boundary: C gets admitted
+    // and retires even though A+B saturated the pool.
+    let ticket_c = handle.submit(GenerationRequest::new(prompt_c, 4));
+    let res_c = ticket_c.join();
+    assert_eq!(res_c.finish, FinishReason::Length);
+    assert_eq!(res_c.tokens, direct_c, "later request after a cancel must be unperturbed");
+
+    let res_a = ticket_a.join();
+    assert_eq!(res_a.finish, FinishReason::Cancelled);
+    assert!(
+        res_a.tokens.len() >= 3 && res_a.tokens.len() < max_new,
+        "cancelled mid-generation, got {} tokens",
+        res_a.tokens.len()
+    );
+    assert_eq!(
+        res_a.tokens[..],
+        direct_a[..res_a.tokens.len()],
+        "cancelled ticket's partial tokens must be a prefix of the direct generation"
+    );
+
+    let res_b = ticket_b.join();
+    assert_eq!(res_b.finish, FinishReason::Length);
+    assert_eq!(
+        res_b.tokens, direct_b,
+        "survivor's tokens must be bit-identical to Backend::generate"
+    );
+
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.cancelled, 1);
+}
+
+#[test]
+fn streamed_token_order_equals_join_result() {
+    let handle = Engine::start(backend(), cfg(2, 2, 2)).unwrap();
+    let ticket = handle.submit(GenerationRequest::new(vec![5, 6, 7], 6));
+
+    // Drain the stream manually: Prefilled first (index 0), then
+    // strictly increasing Token indices, then exactly one terminal.
+    let mut streamed: Vec<i32> = Vec::new();
+    let mut terminal = None;
+    while let Some(ev) = ticket.recv() {
+        match ev {
+            TokenEvent::Prefilled { token } => {
+                assert!(streamed.is_empty(), "Prefilled must be the first event");
+                streamed.push(token);
+            }
+            TokenEvent::Token { token, index } => {
+                assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                streamed.push(token);
+            }
+            ev => {
+                assert!(terminal.is_none(), "more than one terminal event");
+                terminal = Some(ev.result().expect("terminal carries the result").clone());
+            }
+        }
+    }
+    let result = terminal.expect("stream must end with a terminal event");
+    assert_eq!(result.finish, FinishReason::Length);
+    assert_eq!(streamed, result.tokens, "streamed order must equal the joined result");
+    assert_eq!(streamed, backend().generate(&[5, 6, 7], 6).unwrap());
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn stop_tokens_end_generation_early() {
+    let b = backend();
+    let full = b.generate(&[4, 4, 8], 10).unwrap();
+    let stop = full[3]; // stop on the 4th generated token
+    // (or its first occurrence, should the stream repeat it earlier)
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+    let expected = full[..=cut].to_vec();
+    let until = b.generate_until(&[4, 4, 8], 10, &[stop]).unwrap();
+    assert_eq!(until, expected, "generate_until keeps the stop token");
+
+    let handle = Engine::start(backend(), cfg(2, 2, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::with_params(
+        vec![4, 4, 8],
+        GenParams::new(10).with_stop_tokens(vec![stop]),
+    ));
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::Stop);
+    assert_eq!(res.tokens, until, "served stop-token stream must match generate_until");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn expired_deadline_cancels_at_admission() {
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::with_params(
+        vec![1, 2, 3],
+        GenParams::new(8).with_deadline(Instant::now()),
+    ));
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::DeadlineExpired);
+    assert!(res.tokens.is_empty(), "expired before prefill: no tokens");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.cancelled, 1);
+}
+
+#[test]
+fn deadline_expiry_cancels_mid_generation() {
+    // 10 ms per round against an 80 ms deadline and a 50-token budget
+    // (≥ 500 ms of work): the deadline must fire at a round boundary
+    // long before the budget is reached, and the 80 ms headroom lets
+    // prefill land first even on a loaded CI machine.
+    let b = SlowBackend::new(10);
+    let handle = Engine::start(b, cfg(1, 1, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::with_params(
+        vec![2, 3],
+        GenParams::new(50).with_deadline(Instant::now() + Duration::from_millis(80)),
+    ));
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::DeadlineExpired);
+    assert!(
+        !res.tokens.is_empty() && res.tokens.len() < 50,
+        "deadline should interrupt mid-generation, got {} tokens",
+        res.tokens.len()
+    );
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn admission_validation_rejects_oversized_requests_at_submit() {
+    let handle = Engine::start(backend(), cfg(2, 2, 1)).unwrap();
+
+    // prompt_len + max_new_tokens > max_seq (= 64): clean Failed at
+    // submit time instead of a mid-decode KV-exhaustion error.
+    let res = handle.submit(GenerationRequest::new(vec![1; 10], 60)).join();
+    assert_eq!(res.finish, FinishReason::Failed);
+    let err = res.error.expect("admission rejection carries the reason");
+    assert!(err.contains("KV capacity"), "got {err:?}");
+    assert!(res.tokens.is_empty());
+
+    // Prompt longer than the prefill window.
+    let res = handle.submit(GenerationRequest::new(vec![1; 17], 4)).join();
+    assert_eq!(res.finish, FinishReason::Failed);
+    assert!(res.error.unwrap().contains("prefill window"));
+
+    // Empty prompt: an error, not a panic.
+    let res = handle.submit(GenerationRequest::new(vec![], 4)).join();
+    assert_eq!(res.finish, FinishReason::Failed);
+
+    // An exactly-fitting request still passes and the engine serves it.
+    let fit = handle.submit(GenerationRequest::new(vec![1; 10], 54)).join();
+    assert_eq!(fit.finish, FinishReason::Length);
+    assert_eq!(fit.tokens.len(), 54);
+
+    // Rejected submissions never reach a lane but still count in the
+    // report's failed outcomes alongside the one served request.
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 4);
+    assert_eq!(report.failed, 3);
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.total_tokens, 54);
+    // The rejections' zeroed timings must not drag the latency
+    // percentiles to 0 ms — only the served request counts.
+    assert!(report.e2e.p50 > 0.0 && report.prefill.p50 > 0.0);
+}
+
+#[test]
+fn engine_and_legacy_wrapper_agree_on_tokens_and_clock() {
+    // Mixed workload (varying prompts and budgets) at batch 1 on one
+    // lane: round widths are always 1, so the virtual clock is a pure
+    // sum of step costs — the engine (live arrivals) and the legacy
+    // preloaded wrapper must agree exactly on tokens and makespan.
+    let prompts: Vec<(Vec<i32>, usize)> = vec![
+        (vec![1, 2, 3], 5),
+        (vec![9, 8], 3),
+        (vec![5, 5, 5, 5], 7),
+        (vec![11, 3], 4),
+    ];
+
+    let legacy_server = Server::new(backend(), cfg(1, 1, 1)).unwrap();
+    let requests: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, (p, n))| Request::new(id as u64, p.clone(), *n))
+        .collect();
+    let legacy_report = serve_all(&legacy_server, requests).unwrap();
+
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let tickets: Vec<_> = prompts
+        .iter()
+        .map(|(p, n)| handle.submit(GenerationRequest::new(p.clone(), *n)))
+        .collect();
+    let engine_results: Vec<_> = tickets.into_iter().map(|t| t.join()).collect();
+    let engine_report = handle.shutdown().unwrap();
+
+    let reference = backend();
+    for (res, (p, n)) in engine_results.iter().zip(&prompts) {
+        assert_eq!(res.finish, FinishReason::Length);
+        assert_eq!(&res.tokens, &reference.generate(p, *n).unwrap());
+    }
+    assert_eq!(engine_report.requests, legacy_report.requests);
+    assert_eq!(engine_report.total_tokens, legacy_report.total_tokens);
+    assert!(
+        (engine_report.wall_s - legacy_report.wall_s).abs()
+            <= legacy_report.wall_s * 1e-12,
+        "engine makespan {} != legacy makespan {}",
+        engine_report.wall_s,
+        legacy_report.wall_s
+    );
+}
+
+#[test]
+fn legacy_run_still_drains_a_live_request_stream() {
+    // The wrappers delegate to the engine; `Server::run` (the live
+    // dispatcher path) must still drain a closed request channel to
+    // completion with correct per-request tokens.  (Exact virtual
+    // clocks are pinned for the deterministic preloaded path in
+    // serve_sim.rs; the live path's round widths depend on arrival
+    // timing, as they always did.)
+    let b = backend();
+    let reference = backend();
+    let server = Server::new(b, cfg(3, 3, 1)).unwrap();
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (res_tx, res_rx) = std::sync::mpsc::channel();
+    let prompts: Vec<Vec<i32>> =
+        (0..6).map(|i| vec![1 + i as i32, 2, 3]).collect();
+    for (id, p) in prompts.iter().enumerate() {
+        req_tx.send(Request::new(id as u64, p.clone(), 5)).unwrap();
+    }
+    drop(req_tx);
+    let report = server.run(req_rx, res_tx).unwrap();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.total_tokens, 30);
+    assert!(report.wall_s > 0.0);
+    let mut served: Vec<(u64, Vec<i32>)> =
+        res_rx.into_iter().map(|r| (r.id, r.tokens)).collect();
+    served.sort_by_key(|(id, _)| *id);
+    assert_eq!(served.len(), 6);
+    for (id, tokens) in served {
+        assert_eq!(tokens, reference.generate(&prompts[id as usize], 5).unwrap());
+    }
+}
+
+#[test]
+fn shutdown_with_no_requests_is_an_error() {
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    assert!(handle.shutdown().is_err(), "nothing served: report must be an Err");
+}
+
+#[test]
+fn bad_engine_config_is_an_error() {
+    assert!(Engine::start(backend(), cfg(4, 2, 1)).is_err());
+    assert!(Engine::start(backend(), cfg(0, 1, 1)).is_err());
+    assert!(Engine::start(backend(), cfg(1, 1, 0)).is_err());
+}

@@ -71,6 +71,38 @@ fn scalar_fallback_matches_modeled_isa_on_randomized_cases() {
     fuzz_against_modeled(NativePath::Scalar, 120, 0xD1FF_9999);
 }
 
+#[test]
+fn threaded_gemv_matches_single_threaded_on_randomized_cases() {
+    // The `threads` knob chunks output tiles across scoped workers;
+    // every chunking must reproduce the single-threaded result bit for
+    // bit (disjoint tiles, exact i32 accumulation) on whatever path the
+    // host detects.
+    for case in 0..40u64 {
+        let mut rng = Rng::new(0x7117_0000 + case);
+        let isa = if rng.f64() < 0.5 { IsaConfig::C2 } else { IsaConfig::C4 };
+        let n = rng.range_i64(1, 2) as usize;
+        let k = rng.range_i64(1, 160) as usize;
+        let m = rng.range_i64(1, 200) as usize;
+        let shape = GemmShape::new(n, k, m);
+        let acts = rng.int8_acts(n * k);
+        let zero_frac = rng.f64();
+        let w = rng.ternary_matrix(m, k, zero_frac);
+        let gemv = NativeGemv::with_path(isa, detect_path()).unwrap();
+        let packed = gemv.pack(&w, m, k).unwrap();
+        let mut single = vec![0i32; n * m];
+        gemv.gemm(&acts, &packed, n, &mut single).unwrap();
+        let threads = rng.range_i64(2, 6) as usize;
+        let threaded = gemv.with_threads(threads).unwrap();
+        let mut out = vec![0i32; n * m];
+        threaded.gemm(&acts, &packed, n, &mut out).unwrap();
+        assert_eq!(
+            out, single,
+            "case {case}: threads={threads} diverged for {} {shape:?}",
+            isa.name()
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Serving-stack parity: `tsar-cli serve --backend native` ≡ SimBackend
 // ---------------------------------------------------------------------------
@@ -86,7 +118,7 @@ static TINY: ModelSpec = ModelSpec {
     vocab: 512,
 };
 
-fn serve_tokens<B: Backend + Sync>(backend: B) -> Vec<(u64, Vec<i32>)> {
+fn serve_tokens<B: Backend + Send + Sync + 'static>(backend: B) -> Vec<(u64, Vec<i32>)> {
     let server = Server::new(
         backend,
         ServerConfig { max_batch: 2, kv_slots: 2, workers: 1 },

@@ -7,7 +7,9 @@
 use std::sync::mpsc::channel;
 
 use tsar::config::platforms::Platform;
-use tsar::coordinator::{serve::serve_all, Request, RequestRecord, Server, ServerConfig};
+use tsar::coordinator::{
+    serve_all, FinishReason, Request, RequestRecord, Server, ServerConfig,
+};
 use tsar::kernels::Dataflow;
 use tsar::runtime::{Backend, BatchItem, SimBackend, SimBackendConfig};
 
@@ -73,6 +75,8 @@ fn server_runs_admission_prefill_decode_retire() {
         .collect();
     let report = serve_all(&server, requests).expect("serve");
     assert_eq!(report.requests, 6);
+    assert_eq!(report.completed, 6, "all requests complete normally");
+    assert_eq!(report.cancelled + report.failed, 0);
     assert_eq!(report.total_tokens, 30);
     assert!(report.tokens_per_s > 0.0);
     assert!(report.prefill.p95 >= report.prefill.p50);
@@ -331,8 +335,9 @@ fn metrics_sink_streams_one_record_per_request() {
     assert_eq!(records.len(), 5, "one record per retired request");
     for (i, rec) in records.iter().enumerate() {
         assert_eq!(rec.id, i as u64);
-        assert!(rec.lane < 2);
+        assert!(rec.lane.is_some_and(|l| l < 2), "served records carry their lane");
         assert_eq!(rec.tokens, 3);
+        assert_eq!(rec.finish, FinishReason::Length);
         assert!(rec.prefill_s > 0.0 && rec.decode_s > 0.0);
         assert!(rec.total_s >= rec.prefill_s + rec.decode_s - 1e-12);
         let plan = rec.plan.as_deref().expect("SimBackend exposes its plan");
