@@ -21,6 +21,12 @@ echo "== native kernel: scalar fallback forced (portable path) =="
 TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test native_differential
 
 echo
+echo "== HTTP front-end: integration tests over raw TcpStream clients =="
+# Tier-1 runs these too; the named step keeps a serving-surface
+# regression visible on its own line.
+cargo test -q --test http_serve
+
+echo
 echo "== clippy (required) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

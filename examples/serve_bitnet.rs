@@ -22,13 +22,25 @@
 //!   make artifacts && cargo run --release --features pjrt --example serve_bitnet -- artifacts
 //!
 //! Both paths drive the same generic loop over `runtime::Backend`.
+//!
+//! HTTP mode — put the zero-dependency HTTP front-end over the engine
+//! and exercise it with raw `TcpStream` clients against our own
+//! listener (one thread per request, chunked NDJSON token streams),
+//! then scrape `GET /metrics` before shutting down:
+//!
+//!   TSAR_HTTP=1 cargo run --release --example serve_bitnet          # 127.0.0.1:0
+//!   TSAR_HTTP=127.0.0.1:8080 cargo run --release --example serve_bitnet
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
 use tsar::config::platforms::Platform;
 use tsar::coordinator::{
-    Engine, GenerationRequest, RequestRecord, ServerConfig, Ticket, TokenEvent,
+    Engine, GenerationRequest, HttpConfig, HttpServer, PromAggregator, RequestRecord,
+    ServerConfig, Ticket, TokenEvent,
 };
 use tsar::runtime::{Backend, SimBackend, SimBackendConfig};
 use tsar::util::error::Result;
@@ -46,6 +58,10 @@ fn main() -> Result<()> {
     let workers = env_usize("TSAR_WORKERS", 2);
     let dir = std::env::args().nth(1);
 
+    if let Ok(addr) = std::env::var("TSAR_HTTP") {
+        return http_main(&addr, n_requests, max_new, workers);
+    }
+
     #[cfg(feature = "pjrt")]
     if let Some(d) = dir.as_deref() {
         return pjrt_main(d, n_requests, max_new, workers);
@@ -58,6 +74,108 @@ fn main() -> Result<()> {
         );
     }
     sim_main(n_requests, max_new, workers)
+}
+
+/// HTTP mode: the same SimBackend engine behind the zero-dependency
+/// HTTP front-end, self-driven by raw `TcpStream` clients so the
+/// walkthrough needs no second terminal.
+fn http_main(addr_env: &str, n_requests: usize, max_new: usize, workers: usize) -> Result<()> {
+    let addr = if addr_env == "1" { "127.0.0.1:0" } else { addr_env };
+    let model = std::env::var("TSAR_MODEL").unwrap_or_else(|_| "BitNet-2B-4T".into());
+    let backend = SimBackend::by_name(
+        &model,
+        Platform::workstation(),
+        SimBackendConfig {
+            prefill_len: 32,
+            max_seq: 32 + max_new + 8,
+            ..SimBackendConfig::default()
+        },
+    )?;
+    println!("== T-SAR HTTP serving ({}) ==", backend.describe());
+    let vocab = backend.config().vocab as u64;
+
+    // Engine records feed the Prometheus aggregator behind /metrics.
+    let (rec_tx, rec_rx) = channel::<RequestRecord>();
+    let aggregator = PromAggregator::spawn(rec_rx);
+    let handle = Arc::new(Engine::start_with_sink(
+        backend,
+        ServerConfig { max_batch: 4, kv_slots: 4, workers },
+        Some(rec_tx),
+    )?);
+    let http = HttpServer::start(
+        addr,
+        Arc::clone(&handle),
+        aggregator.counters(),
+        HttpConfig::default(),
+    )?;
+    let bound = http.local_addr();
+    println!("listening on {bound}: POST /v1/generate, GET /metrics, GET /healthz\n");
+
+    // One client thread per request, each a plain TcpStream speaking
+    // HTTP/1.1 — exactly what curl -N does.
+    let mut rng = Rng::new(7);
+    let clients: Vec<_> = (0..n_requests)
+        .map(|id| {
+            let plen = 3 + rng.below(13) as usize;
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            std::thread::spawn(move || http_generate(bound, id, &prompt, max_new))
+        })
+        .collect();
+    for client in clients {
+        client.join().expect("client thread panicked")?;
+    }
+
+    println!("\n== GET /metrics (scrape) ==");
+    let scrape = http_get(bound, "/metrics")?;
+    for line in scrape.lines().filter(|l| !l.starts_with('#')) {
+        println!("  {line}");
+    }
+
+    http.stop();
+    let handle = Arc::try_unwrap(handle)
+        .map_err(|_| tsar::err!("HTTP workers still hold the engine"))?;
+    let report = handle.shutdown()?;
+    println!("\n== serve report ==");
+    report.print();
+    println!("prometheus aggregator observed {} record(s)", aggregator.finish());
+    Ok(())
+}
+
+/// POST one generation and consume its chunked NDJSON stream.
+fn http_generate(addr: SocketAddr, id: usize, prompt: &[i32], max_new: usize) -> Result<()> {
+    let body = format!("{{\"prompt\":{prompt:?},\"max_new_tokens\":{max_new}}}");
+    let mut conn = TcpStream::connect(addr)?;
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: tsar\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut response = String::new();
+    conn.read_to_string(&mut response)?;
+    tsar::ensure!(response.starts_with("HTTP/1.1 200"), "client {id}: got {response:?}");
+    let tokens = response.matches("\"event\":\"token\"").count()
+        + response.matches("\"event\":\"prefilled\"").count();
+    let finish = response
+        .rsplit("\"finish\":\"")
+        .next()
+        .and_then(|rest| rest.split('"').next())
+        .unwrap_or("?");
+    println!("  client {id:>2}: {tokens:>2} tokens streamed, finish {finish}");
+    Ok(())
+}
+
+/// One plain GET, returning the response body.
+fn http_get(addr: SocketAddr, path: &str) -> Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: tsar\r\nConnection: close\r\n\r\n")?;
+    let mut response = String::new();
+    conn.read_to_string(&mut response)?;
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok(body)
 }
 
 /// Default path: the simulator-costed backend.

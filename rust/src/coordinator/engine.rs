@@ -25,6 +25,7 @@
 //! wrapper over this module: same lanes, same clocks, bit-identical
 //! tokens and makespans for non-cancelled workloads.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -186,7 +187,12 @@ impl<B: Backend> EngineHandle<B> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (ev_tx, ev_rx) = channel::<TokenEvent>();
         let cancel = Arc::new(AtomicBool::new(false));
-        let ticket = Ticket { id, events: ev_rx, cancel: Arc::clone(&cancel) };
+        let ticket = Ticket {
+            id,
+            events: ev_rx,
+            cancel: Arc::clone(&cancel),
+            terminal: RefCell::new(None),
+        };
         if let Err(reason) = self.admit_check(&req) {
             self.reject(id, &ev_tx, reason);
             return ticket;
@@ -270,18 +276,43 @@ impl<B: Backend> EngineHandle<B> {
     /// shard (in-flight sequences run to their natural or cancelled
     /// end), join the lanes, and merge the per-lane virtual clocks —
     /// plus any submit-time rejections — into the run's
-    /// [`ServeReport`].  Errs when nothing was ever submitted.
+    /// [`ServeReport`].  A lane that panicked (or returned an error)
+    /// becomes an entry in [`ServeReport::lane_errors`] while every
+    /// surviving lane's results are kept — one poisoned backend must
+    /// not erase the rest of the run.  Errs only when *nothing* can be
+    /// reported: no request was ever submitted, or every lane failed
+    /// before retiring anything.
     pub fn shutdown(mut self) -> Result<ServeReport> {
         self.open_gate();
         self.lane_txs.clear(); // close the shard channels: lanes drain and exit
         let outcomes: Vec<Result<LaneOutcome>> = self
             .lanes
             .drain(..)
-            .map(|h| h.join().expect("lane thread panicked"))
+            .map(|h| match h.join() {
+                Ok(outcome) => outcome,
+                // A panicking backend must not panic shutdown with it:
+                // surface the lane's death as a failed lane outcome and
+                // let the merge keep the survivors.
+                Err(payload) => {
+                    Err(crate::err!("lane thread panicked: {}", panic_text(payload.as_ref())))
+                }
+            })
             .collect();
         let rejected =
             std::mem::take(&mut *self.rejected.lock().expect("rejected list poisoned"));
         merge_outcomes(outcomes, rejected, self.started)
+    }
+}
+
+/// Best-effort text of a thread's panic payload (`&str` and `String`
+/// payloads cover `panic!`/`expect`/`assert!`).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -290,6 +321,13 @@ impl<B: Backend> EngineHandle<B> {
 /// are concurrent engines over disjoint shards, so the global simulated
 /// timeline is the slowest lane's clock; real backends report elapsed
 /// wall time instead.
+///
+/// A failed lane (panic or error) does *not* abort the merge: its
+/// error text joins [`ServeReport::lane_errors`] and the surviving
+/// lanes' results and stats are reported as usual.  Requests that were
+/// in flight on a failed lane carry no terminal result — their ticket
+/// streams simply close (and [`Ticket::join`] synthesizes a `Failed`
+/// result client-side).
 pub(crate) fn merge_outcomes(
     outcomes: Vec<Result<LaneOutcome>>,
     rejected: Vec<RequestResult>,
@@ -297,12 +335,17 @@ pub(crate) fn merge_outcomes(
 ) -> Result<ServeReport> {
     let mut results: Vec<RequestResult> = rejected;
     let mut lanes = Vec::with_capacity(outcomes.len());
+    let mut lane_errors: Vec<String> = Vec::new();
     let mut sim_timed = false;
     for outcome in outcomes {
-        let outcome = outcome?;
-        sim_timed |= outcome.sim_timed;
-        results.extend(outcome.results);
-        lanes.push(outcome.stats);
+        match outcome {
+            Ok(outcome) => {
+                sim_timed |= outcome.sim_timed;
+                results.extend(outcome.results);
+                lanes.push(outcome.stats);
+            }
+            Err(e) => lane_errors.push(e.to_string()),
+        }
     }
     let wall_s = if sim_timed {
         lanes.iter().map(|l| l.clock_s).fold(0.0f64, f64::max)
@@ -310,8 +353,14 @@ pub(crate) fn merge_outcomes(
         started.elapsed().as_secs_f64()
     };
     results.sort_by_key(|r| r.id);
-    ServeReport::from_lanes(&results, wall_s, lanes)
-        .ok_or_else(|| crate::err!("no requests served"))
+    match ServeReport::from_lanes(&results, wall_s, lanes) {
+        Some(mut report) => {
+            report.lane_errors = lane_errors;
+            Ok(report)
+        }
+        None if lane_errors.is_empty() => Err(crate::err!("no requests served")),
+        None => Err(crate::err!("no lane survived: {}", lane_errors.join("; "))),
+    }
 }
 
 /// One submitted session: a live event stream plus cancellation and a
@@ -320,6 +369,12 @@ pub struct Ticket {
     id: RequestId,
     events: Receiver<TokenEvent>,
     cancel: Arc<AtomicBool>,
+    /// Terminal result seen by [`Ticket::recv`]/[`Ticket::try_recv`],
+    /// kept so a later [`Ticket::join`] returns the real result instead
+    /// of synthesizing a phantom failure (the stream closes right after
+    /// the terminal event, so without this cache a client that streamed
+    /// to the end had already consumed the only copy).
+    terminal: RefCell<Option<RequestResult>>,
 }
 
 impl Ticket {
@@ -331,18 +386,32 @@ impl Ticket {
     /// Block for the next event; `None` once the stream is closed
     /// (after the terminal event, or if the engine died).
     pub fn recv(&self) -> Option<TokenEvent> {
-        self.events.recv().ok()
+        let ev = self.events.recv().ok()?;
+        self.note_terminal(&ev);
+        Some(ev)
     }
 
     /// Non-blocking poll of the event stream.
     pub fn try_recv(&self) -> Option<TokenEvent> {
-        self.events.try_recv().ok()
+        let ev = self.events.try_recv().ok()?;
+        self.note_terminal(&ev);
+        Some(ev)
     }
 
     /// The raw event receiver, for `select`-style integration or
-    /// iteration (`for ev in ticket.events()`).
+    /// iteration (`for ev in ticket.events()`).  Events consumed
+    /// through the raw receiver bypass the terminal cache that
+    /// [`Ticket::join`] falls back on — prefer [`Ticket::recv`] when a
+    /// later `join` must see the real result.
     pub fn events(&self) -> &Receiver<TokenEvent> {
         &self.events
+    }
+
+    /// Cache the terminal result as it passes through a receive call.
+    fn note_terminal(&self, ev: &TokenEvent) {
+        if let Some(res) = ev.result() {
+            *self.terminal.borrow_mut() = Some(res.clone());
+        }
     }
 
     /// Request cancellation: the serving lane retires the sequence at
@@ -356,14 +425,20 @@ impl Ticket {
 
     /// Block until the request leaves the engine and return its final
     /// result, draining any events not yet consumed.  If the terminal
-    /// event was already taken off the stream by [`Ticket::recv`], or
-    /// the engine died before retiring the request, a synthesized
-    /// `Failed` result is returned.
+    /// event was already taken off the stream by [`Ticket::recv`]/
+    /// [`Ticket::try_recv`], the cached copy of that result is
+    /// returned — stream-then-join sees the same result as join-only.
+    /// Only when the engine died before retiring the request (its lane
+    /// panicked, so the stream closed without a terminal event) is a
+    /// synthesized `Failed` result returned.
     pub fn join(self) -> RequestResult {
         while let Ok(ev) = self.events.recv() {
             if let Some(res) = ev.result() {
                 return res.clone();
             }
+        }
+        if let Some(res) = self.terminal.borrow_mut().take() {
+            return res;
         }
         RequestResult {
             id: self.id,
@@ -375,5 +450,84 @@ impl Ticket {
             decode_s: 0.0,
             total_s: 0.0,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::LaneStats;
+
+    fn completed(id: RequestId) -> RequestResult {
+        RequestResult {
+            id,
+            tokens: vec![1, 2, 3],
+            finish: FinishReason::Length,
+            error: None,
+            queue_s: 0.01,
+            prefill_s: 0.1,
+            decode_s: 0.4,
+            total_s: 0.51,
+        }
+    }
+
+    fn healthy_lane(lane: usize, clock_s: f64, ids: &[RequestId]) -> LaneOutcome {
+        let mut stats = LaneStats::new(lane, 2);
+        stats.requests = ids.len();
+        stats.clock_s = clock_s;
+        LaneOutcome {
+            results: ids.iter().map(|&id| completed(id)).collect(),
+            stats,
+            sim_timed: true,
+        }
+    }
+
+    #[test]
+    fn merge_keeps_survivors_and_carries_lane_errors() {
+        // Pre-fix, the first lane `Err` made the whole merge bail with
+        // `?`, discarding the healthy lanes' results and stats.
+        let outcomes: Vec<Result<LaneOutcome>> = vec![
+            Ok(healthy_lane(0, 2.0, &[0, 2])),
+            Err(crate::err!("lane thread panicked: injected")),
+            Ok(healthy_lane(2, 1.5, &[1])),
+        ];
+        let report = merge_outcomes(outcomes, Vec::new(), Instant::now()).unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.lanes.len(), 2, "only surviving lanes carry stats");
+        assert!((report.wall_s - 2.0).abs() < 1e-12, "makespan = slowest survivor");
+        assert_eq!(report.lane_errors, vec!["lane thread panicked: injected".to_string()]);
+    }
+
+    #[test]
+    fn merge_with_no_survivors_reports_the_lane_errors() {
+        let outcomes: Vec<Result<LaneOutcome>> =
+            vec![Err(crate::err!("boom 0")), Err(crate::err!("boom 1"))];
+        let err = merge_outcomes(outcomes, Vec::new(), Instant::now()).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("boom 0") && text.contains("boom 1"), "got {text}");
+    }
+
+    #[test]
+    fn merge_keeps_rejections_alongside_a_dead_lane() {
+        // Submit-time rejections must stay observable even when a lane
+        // died: they never reached a lane, so they cannot have been
+        // lost with it.
+        let mut rejected = completed(7);
+        rejected.finish = FinishReason::Failed;
+        rejected.tokens = Vec::new();
+        rejected.total_s = 0.0;
+        let outcomes: Vec<Result<LaneOutcome>> = vec![Err(crate::err!("gone"))];
+        let report = merge_outcomes(outcomes, vec![rejected], Instant::now()).unwrap();
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.lane_errors, vec!["gone".to_string()]);
+    }
+
+    #[test]
+    fn panic_payload_text_is_extracted() {
+        assert_eq!(panic_text(&"static str"), "static str");
+        assert_eq!(panic_text(&String::from("owned")), "owned");
+        assert_eq!(panic_text(&42u32), "non-string panic payload");
     }
 }

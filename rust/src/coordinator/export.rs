@@ -11,13 +11,31 @@
 
 use std::collections::BTreeMap;
 use std::io::Write;
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 use super::metrics::RequestRecord;
+
+/// Fan one [`RequestRecord`] channel out to two sinks — e.g. the JSONL
+/// [`Exporter`] *and* the Prometheus [`super::PromAggregator`] at the
+/// same time (`tsar-cli serve --http ... --metrics ...`).  Forwarding
+/// is best-effort like every record send: a dropped sink never stalls
+/// the other, and the thread exits when the input channel closes.
+pub fn tee_records(
+    rx: Receiver<RequestRecord>,
+    a: Sender<RequestRecord>,
+    b: Sender<RequestRecord>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Ok(rec) = rx.recv() {
+            let _ = a.send(rec.clone());
+            let _ = b.send(rec);
+        }
+    })
+}
 
 /// Serialize one record as a flat JSON object (stable keys, seconds as
 /// f64, `finish` as its lower-case label, `lane` null for submissions
@@ -176,5 +194,22 @@ mod tests {
 
         let (_tx2, rx2) = channel();
         assert!(Exporter::spawn(rx2, "/nonexistent-dir/x/metrics.jsonl").is_err());
+    }
+
+    #[test]
+    fn tee_feeds_both_sinks_and_survives_a_dropped_one() {
+        let (in_tx, in_rx) = channel();
+        let (a_tx, a_rx) = channel();
+        let (b_tx, b_rx) = channel();
+        let tee = tee_records(in_rx, a_tx, b_tx);
+        in_tx.send(record(0, FinishReason::Length)).unwrap();
+        assert_eq!(a_rx.recv().unwrap().id, 0);
+        assert_eq!(b_rx.recv().unwrap().id, 0);
+        // One sink hangs up: the other must keep receiving.
+        drop(a_rx);
+        in_tx.send(record(1, FinishReason::Stop)).unwrap();
+        assert_eq!(b_rx.recv().unwrap().id, 1);
+        drop(in_tx);
+        tee.join().unwrap();
     }
 }

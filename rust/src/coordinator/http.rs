@@ -1,0 +1,619 @@
+//! Zero-dependency HTTP/1.1 front-end over the streaming engine
+//! (DESIGN.md §3): a `std::net::TcpListener` accept loop feeding a
+//! small worker-thread pool, turning network clients into engine
+//! sessions.  No external crates — the offline build constraint that
+//! shaped the rest of the stack applies to the serving surface too.
+//!
+//! Routes:
+//!
+//! * `POST /v1/generate` — JSON body `{"prompt": [i32...],
+//!   "max_new_tokens": N, "stop_tokens": [i32...]?, "deadline_ms": M?}`
+//!   is submitted through [`EngineHandle::submit`]; the response
+//!   streams **one JSON line per [`TokenEvent`]** (NDJSON over chunked
+//!   transfer-encoding) as decode rounds land, ending with the terminal
+//!   event (`retired` / `cancelled` / `failed`, carrying the full
+//!   [`super::RequestResult`] fields).  A client that disconnects
+//!   mid-stream cancels its session ([`Ticket::cancel`]) at the next
+//!   round boundary, freeing the KV/batch slot for the next request.
+//! * `GET /metrics` — the Prometheus text exposition rendered from the
+//!   shared [`PromCounters`] (see [`super::prom`] for the schema).
+//! * `GET /healthz` — liveness probe (`200 ok`).
+//!
+//! Lifecycle: [`HttpServer::start`] binds and spawns the acceptor plus
+//! `threads` connection workers; [`HttpServer::stop`] closes admission
+//! (no new connections) and joins the workers, draining in-flight
+//! streams to their terminal events.  The engine handle is shared as
+//! an `Arc` so that, after `stop`, the caller can unwrap it and run
+//! [`EngineHandle::shutdown`] for the merged [`super::ServeReport`] —
+//! the scrape counters and the report agree on outcome counts by
+//! construction (both fold the same retirement stream).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Backend;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::engine::{EngineHandle, Ticket};
+use super::prom::PromCounters;
+use super::request::{GenParams, GenerationRequest, TokenEvent};
+
+/// Tunables of the HTTP front-end.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Connection worker threads (each handles one connection at a
+    /// time; a streaming generation occupies its worker until the
+    /// terminal event).
+    pub threads: usize,
+    /// Request-head cap (request line + headers).
+    pub max_head_bytes: usize,
+    /// Request-body cap.
+    pub max_body_bytes: usize,
+    /// Per-connection read timeout (a silent client must not pin a
+    /// worker forever).
+    pub read_timeout: Duration,
+    /// Accepted connections waiting for a free worker.  When every
+    /// worker is busy and the backlog is full, further connections are
+    /// answered `503` and dropped instead of queueing file descriptors
+    /// without bound.
+    pub backlog: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            threads: 4,
+            max_head_bytes: 16 * 1024,
+            max_body_bytes: 1024 * 1024,
+            read_timeout: Duration::from_secs(30),
+            backlog: 64,
+        }
+    }
+}
+
+/// A running HTTP front-end: the acceptor thread, its connection
+/// workers, and the bound address.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`; port `0` picks a free
+    /// port — see [`HttpServer::local_addr`]) and start serving the
+    /// engine behind `engine`.  `counters` backs `GET /metrics`; keep
+    /// the [`super::PromAggregator`] that owns them draining the
+    /// engine's record channel, or the scrape stays at zero.
+    pub fn start<B>(
+        addr: &str,
+        engine: Arc<EngineHandle<B>>,
+        counters: Arc<PromCounters>,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer>
+    where
+        B: Backend + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("cannot bind HTTP listener on {addr:?}"))?;
+        let local_addr = listener.local_addr().context("listener has no local address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let workers = (0..cfg.threads.max(1))
+            .map(|_| {
+                let conn_rx = Arc::clone(&conn_rx);
+                let engine = Arc::clone(&engine);
+                let counters = Arc::clone(&counters);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || worker_loop(&conn_rx, &engine, &counters, &cfg))
+            })
+            .collect();
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break; // the stop() wake-up connection lands here
+                    }
+                    match conn {
+                        Ok(stream) => match conn_tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(mut stream)) => {
+                                // Every worker busy, backlog full: shed
+                                // load instead of queueing fds without
+                                // bound.
+                                let _ = write_response(
+                                    &mut stream,
+                                    503,
+                                    TEXT_PLAIN,
+                                    "server busy\n",
+                                );
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        },
+                        Err(_) => {
+                            // accept() can fail persistently (EMFILE
+                            // under fd exhaustion): back off instead
+                            // of busy-spinning the acceptor core.
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                }
+                // conn_tx drops here: idle workers see a closed queue
+                // and exit.
+            })
+        };
+        Ok(HttpServer { local_addr, stop, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves the port when started on port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting connections and join the workers.  In-flight
+    /// streaming responses run to their terminal event first — stopping
+    /// the front-end never truncates a generation mid-stream.
+    pub fn stop(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor's blocking accept with a throwaway
+        // connection; it observes the flag before handling it.  Bound
+        // with a timeout, and via loopback when the listener sits on a
+        // wildcard address — connecting to 0.0.0.0 hangs or errors on
+        // some platforms.
+        let woke =
+            TcpStream::connect_timeout(&wake_addr(self.local_addr), Duration::from_secs(1))
+                .is_ok();
+        if woke {
+            if let Some(acceptor) = self.acceptor.take() {
+                let _ = acceptor.join();
+            }
+            for worker in self.workers.drain(..) {
+                let _ = worker.join();
+            }
+        } else {
+            // The wake-up never landed (e.g. a firewalled interface):
+            // the acceptor is still blocked in accept() and the workers
+            // on its queue.  Detach them rather than hang the caller —
+            // they exit with the process.
+            let _ = self.acceptor.take();
+            self.workers.clear();
+        }
+    }
+}
+
+/// Where to connect to wake the acceptor: the bound address, with
+/// wildcard IPs (`0.0.0.0` / `::`) rewritten to the matching loopback.
+fn wake_addr(bound: SocketAddr) -> SocketAddr {
+    let mut addr = bound;
+    if addr.ip().is_unspecified() {
+        addr.set_ip(match addr.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    addr
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One worker: pull connections off the shared queue until the
+/// acceptor closes it.  The queue mutex is held only while blocked on
+/// `recv`, so handling a long streaming response never starves the
+/// other workers of the queue.
+fn worker_loop<B: Backend>(
+    conn_rx: &Mutex<Receiver<TcpStream>>,
+    engine: &EngineHandle<B>,
+    counters: &PromCounters,
+    cfg: &HttpConfig,
+) {
+    loop {
+        let conn = {
+            let queue = conn_rx.lock().expect("http connection queue poisoned");
+            queue.recv()
+        };
+        match conn {
+            Ok(stream) => handle_connection(stream, engine, counters, cfg),
+            Err(_) => break, // acceptor gone: server is stopping
+        }
+    }
+}
+
+/// Everything parsed from one request: the line, the path without its
+/// query string, and the body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Serve one connection: parse the request, route it, respond, close
+/// (`Connection: close` — one exchange per connection keeps the
+/// zero-dependency parser honest; streaming responses hold the
+/// connection for the whole generation anyway).
+fn handle_connection<B: Backend>(
+    mut stream: TcpStream,
+    engine: &EngineHandle<B>,
+    counters: &PromCounters,
+    cfg: &HttpConfig,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let request = match read_request(&mut stream, cfg) {
+        Ok(request) => request,
+        Err(e) => {
+            let _ = write_response(&mut stream, 400, TEXT_PLAIN, &format!("bad request: {e}\n"));
+            return;
+        }
+    };
+    match (request.method.as_str(), request.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = write_response(&mut stream, 200, TEXT_PLAIN, "ok\n");
+        }
+        ("GET", "/metrics") => {
+            let _ = write_response(&mut stream, 200, PROM_TEXT, &counters.render());
+        }
+        ("POST", "/v1/generate") => handle_generate(stream, engine, counters, &request.body),
+        (_, "/healthz") | (_, "/metrics") => {
+            let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use GET\n");
+        }
+        (_, "/v1/generate") => {
+            let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use POST\n");
+        }
+        _ => {
+            let _ = write_response(&mut stream, 404, TEXT_PLAIN, "not found\n");
+        }
+    }
+}
+
+/// `POST /v1/generate`: submit and stream the session.
+fn handle_generate<B: Backend>(
+    mut stream: TcpStream,
+    engine: &EngineHandle<B>,
+    counters: &PromCounters,
+    body: &[u8],
+) {
+    let request = match parse_generate(body) {
+        Ok(request) => request,
+        Err(e) => {
+            let _ = write_response(&mut stream, 400, TEXT_PLAIN, &format!("bad request: {e}\n"));
+            return;
+        }
+    };
+    counters.note_submitted();
+    let ticket = engine.submit(request);
+    if write_stream_head(&mut stream).is_err() {
+        cancel_and_drain(&ticket);
+        return;
+    }
+    let mut wrote_terminal = false;
+    while let Some(ev) = ticket.recv() {
+        let terminal = ev.result().is_some();
+        let mut line = event_json(&ev).to_string();
+        line.push('\n');
+        if write_chunk(&mut stream, line.as_bytes()).is_err() {
+            // The client went away mid-stream: stop paying for tokens
+            // nobody reads.  The lane retires the session (Cancelled,
+            // KV slot freed) at the next round boundary.
+            cancel_and_drain(&ticket);
+            return;
+        }
+        if terminal {
+            wrote_terminal = true;
+            break;
+        }
+    }
+    if !wrote_terminal {
+        // The ticket stream closed without a terminal event (the
+        // serving lane died mid-session).  The response contract is
+        // one terminal line per stream, so emit the same synthesized
+        // `Failed` result `Ticket::join` reports for this case.
+        let mut line = event_json(&TokenEvent::Failed(ticket.join())).to_string();
+        line.push('\n');
+        if write_chunk(&mut stream, line.as_bytes()).is_err() {
+            return;
+        }
+    }
+    let _ = write_last_chunk(&mut stream);
+}
+
+/// Cancel a session whose client disconnected and drain its stream so
+/// the terminal event is consumed (and counted by the record sink)
+/// before the worker moves on.
+fn cancel_and_drain(ticket: &Ticket) {
+    ticket.cancel();
+    while ticket.recv().is_some() {}
+}
+
+/// Parse the `POST /v1/generate` body into a [`GenerationRequest`].
+fn parse_generate(body: &[u8]) -> Result<GenerationRequest> {
+    let text = std::str::from_utf8(body).map_err(|_| crate::err!("body is not UTF-8"))?;
+    let json = Json::parse(text).map_err(|e| crate::err!("body is not valid JSON: {e}"))?;
+    let prompt = json
+        .req("prompt")?
+        .as_arr()
+        .context("\"prompt\" must be an array of token ids")?
+        .iter()
+        .map(|t| {
+            t.as_f64()
+                .map(|v| v as i32)
+                .context("\"prompt\" entries must be numbers")
+        })
+        .collect::<Result<Vec<i32>>>()?;
+    let max_new_tokens = match json.get("max_new_tokens") {
+        Some(v) => v.as_usize().context("\"max_new_tokens\" must be a number")?,
+        None => 16,
+    };
+    let mut params = GenParams::new(max_new_tokens);
+    if let Some(stop) = json.get("stop_tokens") {
+        let stop_tokens = stop
+            .as_arr()
+            .context("\"stop_tokens\" must be an array of token ids")?
+            .iter()
+            .map(|t| {
+                t.as_f64()
+                    .map(|v| v as i32)
+                    .context("\"stop_tokens\" entries must be numbers")
+            })
+            .collect::<Result<Vec<i32>>>()?;
+        params = params.with_stop_tokens(stop_tokens);
+    }
+    if let Some(ms) = json.get("deadline_ms") {
+        let ms = ms.as_f64().context("\"deadline_ms\" must be a number")?;
+        crate::ensure!(ms >= 0.0, "\"deadline_ms\" must be non-negative");
+        params = params.with_deadline(Instant::now() + Duration::from_millis(ms as u64));
+    }
+    Ok(GenerationRequest::with_params(prompt, params))
+}
+
+/// One [`TokenEvent`] as a flat JSON object (one NDJSON line of the
+/// streaming response).  Token events carry `event`/`token`/`index`;
+/// the terminal event adds the full result fields.
+fn event_json(ev: &TokenEvent) -> Json {
+    let mut obj = BTreeMap::new();
+    match ev {
+        TokenEvent::Prefilled { token } => {
+            obj.insert("event".into(), Json::Str("prefilled".into()));
+            obj.insert("token".into(), Json::Num(f64::from(*token)));
+            obj.insert("index".into(), Json::Num(0.0));
+        }
+        TokenEvent::Token { token, index } => {
+            obj.insert("event".into(), Json::Str("token".into()));
+            obj.insert("token".into(), Json::Num(f64::from(*token)));
+            obj.insert("index".into(), Json::Num(*index as f64));
+        }
+        TokenEvent::Retired(res) | TokenEvent::Cancelled(res) | TokenEvent::Failed(res) => {
+            let kind = match ev {
+                TokenEvent::Retired(_) => "retired",
+                TokenEvent::Cancelled(_) => "cancelled",
+                _ => "failed",
+            };
+            obj.insert("event".into(), Json::Str(kind.into()));
+            obj.insert("id".into(), Json::Num(res.id as f64));
+            obj.insert("finish".into(), Json::Str(res.finish.label().into()));
+            obj.insert(
+                "tokens".into(),
+                Json::Arr(res.tokens.iter().map(|&t| Json::Num(f64::from(t))).collect()),
+            );
+            obj.insert(
+                "error".into(),
+                match &res.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            );
+            obj.insert("queue_s".into(), Json::Num(res.queue_s));
+            obj.insert("prefill_s".into(), Json::Num(res.prefill_s));
+            obj.insert("decode_s".into(), Json::Num(res.decode_s));
+            obj.insert("total_s".into(), Json::Num(res.total_s));
+        }
+    }
+    Json::Obj(obj)
+}
+
+// -- wire-level helpers ----------------------------------------------------
+
+const TEXT_PLAIN: &str = "text/plain; charset=utf-8";
+/// Prometheus text exposition format 0.0.4.
+const PROM_TEXT: &str = "text/plain; version=0.0.4; charset=utf-8";
+const NDJSON: &str = "application/x-ndjson";
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Read and parse one request (line, headers, `Content-Length` body).
+fn read_request(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<HttpRequest> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i + 4;
+        }
+        crate::ensure!(buf.len() <= cfg.max_head_bytes, "request head too large");
+        let n = stream.read(&mut tmp)?;
+        crate::ensure!(n > 0, "connection closed before the request head ended");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| crate::err!("request head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method in request line")?.to_string();
+    let target = parts.next().context("missing path in request line")?;
+    crate::ensure!(
+        parts.next().is_some_and(|v| v.starts_with("HTTP/1.")),
+        "not an HTTP/1.x request"
+    );
+    // Route on the path only; a query string is accepted and ignored.
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| crate::err!("bad Content-Length {value:?}"))?;
+            }
+        }
+    }
+    crate::ensure!(
+        content_length <= cfg.max_body_bytes,
+        "body of {content_length} bytes exceeds the {} byte cap",
+        cfg.max_body_bytes
+    );
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        crate::ensure!(n > 0, "connection closed before the body ended");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+/// One complete fixed-length response (status + body), then done.
+fn write_response(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        status_text(code),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Response head of the chunked NDJSON token stream.
+fn write_stream_head(stream: &mut TcpStream) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: {NDJSON}\r\nTransfer-Encoding: chunked\r\n\
+         Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// One chunk of a chunked response, flushed immediately so clients see
+/// tokens as their decode rounds land.
+fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// The zero-length chunk terminating a chunked response.
+fn write_last_chunk(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{FinishReason, RequestResult};
+
+    #[test]
+    fn generate_body_parses_params() {
+        let req = parse_generate(
+            br#"{"prompt": [3, 1, 4], "max_new_tokens": 9, "stop_tokens": [7], "deadline_ms": 50}"#,
+        )
+        .unwrap();
+        assert_eq!(req.prompt, vec![3, 1, 4]);
+        assert_eq!(req.params.max_new_tokens, 9);
+        assert_eq!(req.params.stop_tokens, vec![7]);
+        assert!(req.params.deadline.is_some());
+
+        let defaulted = parse_generate(br#"{"prompt": [1]}"#).unwrap();
+        assert_eq!(defaulted.params.max_new_tokens, 16);
+        assert!(defaulted.params.stop_tokens.is_empty());
+        assert!(defaulted.params.deadline.is_none());
+    }
+
+    #[test]
+    fn generate_body_rejects_malformed_input() {
+        assert!(parse_generate(b"{not json").is_err());
+        assert!(parse_generate(br#"{"max_new_tokens": 4}"#).is_err(), "prompt is required");
+        assert!(parse_generate(br#"{"prompt": "text"}"#).is_err());
+        assert!(parse_generate(br#"{"prompt": [1], "max_new_tokens": "x"}"#).is_err());
+        assert!(parse_generate(&[0xff, 0xfe]).is_err(), "non-UTF-8 body");
+    }
+
+    #[test]
+    fn event_lines_are_valid_json() {
+        let line = event_json(&TokenEvent::Token { token: 42, index: 3 }).to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("event").and_then(Json::as_str), Some("token"));
+        assert_eq!(parsed.get("token").and_then(Json::as_usize), Some(42));
+        assert_eq!(parsed.get("index").and_then(Json::as_usize), Some(3));
+
+        let res = RequestResult {
+            id: 5,
+            tokens: vec![1, 2],
+            finish: FinishReason::Stop,
+            error: None,
+            queue_s: 0.0,
+            prefill_s: 0.1,
+            decode_s: 0.2,
+            total_s: 0.3,
+        };
+        let line = event_json(&TokenEvent::Retired(res)).to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("event").and_then(Json::as_str), Some("retired"));
+        assert_eq!(parsed.get("finish").and_then(Json::as_str), Some("stop"));
+        assert_eq!(parsed.get("tokens").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(parsed.get("error"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn status_lines_cover_the_routes() {
+        assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(405), "Method Not Allowed");
+        assert_eq!(status_text(503), "Service Unavailable");
+        assert_eq!(status_text(500), "Internal Server Error");
+    }
+
+    #[test]
+    fn wake_addr_rewrites_wildcard_binds_to_loopback() {
+        let v4: SocketAddr = "0.0.0.0:8080".parse().unwrap();
+        assert_eq!(wake_addr(v4), "127.0.0.1:8080".parse().unwrap());
+        let v6: SocketAddr = "[::]:8080".parse().unwrap();
+        assert_eq!(wake_addr(v6), "[::1]:8080".parse().unwrap());
+        let bound: SocketAddr = "192.168.1.5:80".parse().unwrap();
+        assert_eq!(wake_addr(bound), bound, "concrete binds are kept as-is");
+    }
+}

@@ -72,6 +72,14 @@ impl<C> Active<C> {
     /// After a token landed: record stop-token / budget / KV-window
     /// terminal conditions.  Stop tokens win over the length cap when a
     /// single token triggers both.
+    ///
+    /// The KV cutoff is aligned with both the backend's decode guard
+    /// (`pos < max_seq`, see [`Backend::generate_until`]) and
+    /// admission-time `validate_request` (`prompt_len + max_new_tokens
+    /// <= max_seq`): `self.pos` is the position the *next* decode step
+    /// would consume, so the window ends exactly when `pos` reaches
+    /// `max_seq` — never a token earlier, and without the `max_seq - 1`
+    /// underflow on a degenerate zero-token window.
     fn note_terminal(&mut self, token: i32, max_seq: usize) {
         if self.finish.is_some() {
             return;
@@ -79,7 +87,7 @@ impl<C> Active<C> {
         if self.req.params.stop_tokens.contains(&token) {
             self.finish = Some(FinishReason::Stop);
         } else if self.tokens.len() >= self.req.params.max_new_tokens
-            || (self.pos as usize) >= max_seq - 1
+            || (self.pos as usize) >= max_seq
         {
             self.finish = Some(FinishReason::Length);
         }

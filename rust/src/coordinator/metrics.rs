@@ -160,6 +160,11 @@ pub struct ServeReport {
     /// Σ lane clocks: aggregate busy time across the lanes (≥ `wall_s`
     /// whenever more than one lane did work).
     pub lane_clock_sum_s: f64,
+    /// Errors of lanes that did not survive the run (a panicked or
+    /// failed lane thread).  Results served by those lanes before they
+    /// died are lost with them; the surviving lanes' results are merged
+    /// as usual.  Empty on a healthy run.
+    pub lane_errors: Vec<String>,
 }
 
 impl ServeReport {
@@ -246,6 +251,7 @@ impl ServeReport {
             per_request_tps_geomean: if tps.is_empty() { 0.0 } else { geomean(&tps) },
             lanes,
             lane_clock_sum_s,
+            lane_errors: Vec::new(),
         })
     }
 
@@ -256,6 +262,15 @@ impl ServeReport {
                 "outcomes        : {} completed  {} cancelled  {} failed",
                 self.completed, self.cancelled, self.failed
             );
+        }
+        if !self.lane_errors.is_empty() {
+            println!(
+                "lane errors     : {} (results on those lanes were lost)",
+                self.lane_errors.len()
+            );
+            for e in &self.lane_errors {
+                println!("  ! {e}");
+            }
         }
         println!("generated tokens: {}", self.total_tokens);
         println!("wall time       : {:.2} s", self.wall_s);

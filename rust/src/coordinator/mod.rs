@@ -13,7 +13,11 @@
 //! generation parameters ([`GenParams`]: token budget, stop tokens,
 //! deadline), tickets stream [`TokenEvent`]s as tokens land and can
 //! cancel mid-generation, and the blocking [`Server`] surface remains
-//! as a thin compatibility wrapper.
+//! as a thin compatibility wrapper.  The network surface is the
+//! zero-dependency HTTP front-end ([`http::HttpServer`]: streaming
+//! `POST /v1/generate`, Prometheus `GET /metrics` backed by
+//! [`prom::PromAggregator`], `GET /healthz`), wired as
+//! `tsar-cli serve --http <addr>`.
 //!
 //! Threading: std::thread + mpsc channels (tokio is not in the offline
 //! crate cache).  The dispatcher runs on the calling thread; each lane
@@ -26,18 +30,22 @@
 pub mod batcher;
 pub mod engine;
 pub mod export;
+pub mod http;
 pub mod kvpool;
 mod lane;
 pub mod metrics;
+pub mod prom;
 pub mod request;
 pub mod selector;
 pub mod serve;
 
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineHandle, Ticket};
-pub use export::Exporter;
+pub use export::{tee_records, Exporter};
+pub use http::{HttpConfig, HttpServer};
 pub use kvpool::KvSlotPool;
 pub use metrics::{LaneStats, LatencyStats, RequestRecord, ServeReport};
+pub use prom::{PromAggregator, PromCounters};
 pub use request::{
     FinishReason, GenParams, GenerationRequest, Request, RequestId, RequestResult, TokenEvent,
 };

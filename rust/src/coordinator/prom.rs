@@ -1,0 +1,258 @@
+//! The scrape half of the request-level metrics endpoint (ROADMAP
+//! item; the export half is the JSONL [`super::Exporter`]):
+//! [`PromAggregator`] drains the engine's [`RequestRecord`] channel in
+//! the background and folds every record into a shared set of
+//! Prometheus-style counters ([`PromCounters`]), which
+//! `GET /metrics` on the HTTP front-end ([`super::http`]) renders in
+//! the Prometheus text exposition format.
+//!
+//! The aggregator can *tee* alongside the JSONL exporter: feed the
+//! engine one sender and fan the records out with
+//! [`super::export::tee_records`] so both sinks see every record.
+//!
+//! Exposed series (all prefixed `tsar_`):
+//!
+//! | series | type | meaning |
+//! |---|---|---|
+//! | `tsar_requests_total{finish=...}` | counter | retired requests by finish reason (`length`, `stop`, `cancelled`, `deadline`, `failed`) |
+//! | `tsar_tokens_emitted_total` | counter | tokens emitted by retired requests (prefill token included) |
+//! | `tsar_lane_busy_seconds_total` | counter | busy seconds accumulated by the lanes (Σ prefill + decode over retired requests — simulated seconds for modeled backends, measured for real ones) |
+//! | `tsar_queue_depth` | gauge | sessions submitted (via [`PromCounters::note_submitted`]) and not yet retired |
+//!
+//! Counters are relaxed atomics: scrapes race retirements by at most
+//! one in-flight record, which Prometheus' pull model tolerates by
+//! design.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::metrics::RequestRecord;
+use super::request::FinishReason;
+
+/// Shared Prometheus-style counter set over the serving engine.
+///
+/// Writers are the aggregator thread ([`PromCounters::observe`], one
+/// call per retired [`RequestRecord`]) and the HTTP submit path
+/// ([`PromCounters::note_submitted`]); readers call
+/// [`PromCounters::render`] for the text exposition.
+#[derive(Debug, Default)]
+pub struct PromCounters {
+    /// Sessions submitted through the front-end (feeds the queue-depth
+    /// gauge together with the retirement counters).
+    submitted: AtomicU64,
+    length: AtomicU64,
+    stop: AtomicU64,
+    cancelled: AtomicU64,
+    deadline: AtomicU64,
+    failed: AtomicU64,
+    /// Tokens emitted by retired requests (prefill token included).
+    tokens: AtomicU64,
+    /// Σ (prefill_s + decode_s) over retired requests, in microseconds
+    /// (an integer so it can live in an atomic; rendered as seconds).
+    busy_us: AtomicU64,
+}
+
+impl PromCounters {
+    pub fn new() -> PromCounters {
+        PromCounters::default()
+    }
+
+    /// Count one submitted session (the HTTP front-end calls this per
+    /// accepted `POST /v1/generate`).
+    pub fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one retired request's record into the counters.
+    pub fn observe(&self, rec: &RequestRecord) {
+        self.by_reason(rec.finish).fetch_add(1, Ordering::Relaxed);
+        self.tokens.fetch_add(rec.tokens as u64, Ordering::Relaxed);
+        let busy_us = ((rec.prefill_s + rec.decode_s) * 1e6).max(0.0) as u64;
+        self.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+    }
+
+    fn by_reason(&self, finish: FinishReason) -> &AtomicU64 {
+        match finish {
+            FinishReason::Length => &self.length,
+            FinishReason::Stop => &self.stop,
+            FinishReason::Cancelled => &self.cancelled,
+            FinishReason::DeadlineExpired => &self.deadline,
+            FinishReason::Failed => &self.failed,
+        }
+    }
+
+    /// Requests retired so far (any finish reason).
+    pub fn retired(&self) -> u64 {
+        [&self.length, &self.stop, &self.cancelled, &self.deadline, &self.failed]
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Sessions submitted and not yet retired.  Reads zero when
+    /// retirements outnumber submissions (records can also flow from
+    /// sessions submitted outside the front-end).
+    pub fn queue_depth(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed).saturating_sub(self.retired())
+    }
+
+    /// Tokens emitted by retired requests so far.
+    pub fn tokens_emitted(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    /// Busy seconds accumulated by the lanes so far.
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Render the Prometheus text exposition (format version 0.0.4):
+    /// `# HELP`/`# TYPE` headers plus one sample line per series, every
+    /// finish-reason label always present so rates are well-defined
+    /// from the first scrape.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# HELP tsar_requests_total Requests retired, by finish reason.\n");
+        out.push_str("# TYPE tsar_requests_total counter\n");
+        let by_finish = [
+            ("length", &self.length),
+            ("stop", &self.stop),
+            ("cancelled", &self.cancelled),
+            ("deadline", &self.deadline),
+            ("failed", &self.failed),
+        ];
+        for (label, counter) in by_finish {
+            out.push_str(&format!(
+                "tsar_requests_total{{finish=\"{label}\"}} {}\n",
+                counter.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str(
+            "# HELP tsar_tokens_emitted_total Tokens emitted by retired requests \
+             (prefill token included).\n",
+        );
+        out.push_str("# TYPE tsar_tokens_emitted_total counter\n");
+        out.push_str(&format!("tsar_tokens_emitted_total {}\n", self.tokens_emitted()));
+        out.push_str(
+            "# HELP tsar_lane_busy_seconds_total Busy seconds accumulated by the serving \
+             lanes (prefill + decode of retired requests).\n",
+        );
+        out.push_str("# TYPE tsar_lane_busy_seconds_total counter\n");
+        out.push_str(&format!("tsar_lane_busy_seconds_total {:.6}\n", self.busy_seconds()));
+        out.push_str("# HELP tsar_queue_depth Sessions submitted and not yet retired.\n");
+        out.push_str("# TYPE tsar_queue_depth gauge\n");
+        out.push_str(&format!("tsar_queue_depth {}\n", self.queue_depth()));
+        out
+    }
+}
+
+/// Background aggregator over a [`RequestRecord`] channel: the
+/// Prometheus counterpart of the JSONL [`super::Exporter`], updating
+/// [`PromCounters`] live while the run is in flight.
+///
+/// Drop every sender of the channel (the engine handle included) and
+/// call [`PromAggregator::finish`] to join the thread and get the
+/// record count; [`PromAggregator::counters`] hands out the shared
+/// counter set to scrape handlers at any point before or after.
+pub struct PromAggregator {
+    counters: Arc<PromCounters>,
+    worker: JoinHandle<usize>,
+}
+
+impl PromAggregator {
+    /// Spawn the aggregator thread over `rx`.
+    pub fn spawn(rx: Receiver<RequestRecord>) -> PromAggregator {
+        let counters = Arc::new(PromCounters::new());
+        let shared = Arc::clone(&counters);
+        let worker = std::thread::spawn(move || {
+            let mut observed = 0usize;
+            while let Ok(rec) = rx.recv() {
+                shared.observe(&rec);
+                observed += 1;
+            }
+            observed
+        });
+        PromAggregator { counters, worker }
+    }
+
+    /// The shared counter set (what `GET /metrics` renders).
+    pub fn counters(&self) -> Arc<PromCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// Join the aggregator thread (blocks until every sender of the
+    /// record channel is dropped) and return how many records it
+    /// observed.
+    pub fn finish(self) -> usize {
+        self.worker.join().expect("prometheus aggregator thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+
+    use super::*;
+
+    fn record(finish: FinishReason, tokens: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            lane: Some(0),
+            queue_s: 0.05,
+            prefill_s: 0.25,
+            decode_s: 0.75,
+            total_s: 1.05,
+            tokens,
+            finish,
+            plan: None,
+        }
+    }
+
+    #[test]
+    fn counters_aggregate_and_render() {
+        let c = PromCounters::new();
+        c.note_submitted();
+        c.note_submitted();
+        c.note_submitted();
+        c.observe(&record(FinishReason::Length, 4));
+        c.observe(&record(FinishReason::Cancelled, 2));
+        assert_eq!(c.retired(), 2);
+        assert_eq!(c.queue_depth(), 1);
+        assert_eq!(c.tokens_emitted(), 6);
+        assert!((c.busy_seconds() - 2.0).abs() < 1e-5);
+
+        let text = c.render();
+        assert!(text.contains("# TYPE tsar_requests_total counter"));
+        assert!(text.contains("tsar_requests_total{finish=\"length\"} 1"), "got:\n{text}");
+        assert!(text.contains("tsar_requests_total{finish=\"cancelled\"} 1"));
+        assert!(text.contains("tsar_requests_total{finish=\"failed\"} 0"));
+        assert!(text.contains("tsar_tokens_emitted_total 6"));
+        assert!(text.contains("tsar_lane_busy_seconds_total 2.000000"));
+        assert!(text.contains("# TYPE tsar_queue_depth gauge"));
+        assert!(text.contains("tsar_queue_depth 1"));
+    }
+
+    #[test]
+    fn queue_depth_saturates_instead_of_underflowing() {
+        // Records from sessions that never went through note_submitted
+        // (e.g. legacy batch submissions) must not wrap the gauge.
+        let c = PromCounters::new();
+        c.observe(&record(FinishReason::Length, 1));
+        assert_eq!(c.queue_depth(), 0);
+    }
+
+    #[test]
+    fn aggregator_drains_the_channel() {
+        let (tx, rx) = channel();
+        let agg = PromAggregator::spawn(rx);
+        let counters = agg.counters();
+        tx.send(record(FinishReason::Length, 3)).unwrap();
+        tx.send(record(FinishReason::Failed, 0)).unwrap();
+        drop(tx);
+        assert_eq!(agg.finish(), 2);
+        assert_eq!(counters.retired(), 2);
+        assert_eq!(counters.tokens_emitted(), 3);
+    }
+}

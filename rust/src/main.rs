@@ -7,13 +7,14 @@
 //! serve the AOT-compiled model through PJRT instead.
 
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 use tsar::bench;
 use tsar::config::platforms::{Platform, PlatformKind};
 use tsar::config::IsaConfig;
 use tsar::coordinator::{
-    select_plan, Engine, Exporter, GenerationRequest, Request, Server, ServerConfig, Ticket,
-    TokenEvent,
+    select_plan, tee_records, Engine, Exporter, GenerationRequest, HttpConfig, HttpServer,
+    PromAggregator, Request, RequestRecord, Server, ServerConfig, Ticket, TokenEvent,
 };
 use tsar::kernels::all_kernels;
 use tsar::model::zoo;
@@ -32,7 +33,7 @@ USAGE:
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
                  [--backend sim|native] [--isa c2|c4]
-                 [--metrics <path|->] [--stream]
+                 [--metrics <path|->] [--stream] [--http ADDR]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
@@ -43,6 +44,13 @@ finish reason, kernel plan) to the file, or to stdout for `-`.
 `serve --stream` drives the session-based streaming Engine API instead
 of the blocking batch surface: tokens print as their decode rounds
 land, per ticket.
+`serve --http ADDR` (e.g. 127.0.0.1:8080) serves network clients
+instead of a synthetic workload: POST /v1/generate streams one JSON
+line per token event (chunked NDJSON; disconnecting cancels the
+session), GET /metrics exposes Prometheus counters, GET /healthz is the
+liveness probe.  Composable with --backend/--threads/--workers/--batch
+and --metrics; press Enter (or close stdin) to stop and print the
+merged serve report.
 
 `serve --backend native` executes every decode step's BitLinear GEMVs
 through the host AVX2 pshufb kernels (scalar fallback elsewhere) and
@@ -217,12 +225,25 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let opts = ServeOpts {
         metrics: flag(args, "--metrics"),
         stream: args.iter().any(|a| a == "--stream"),
+        http: flag(args, "--http"),
     };
     // Both --stream token output and `--metrics -` write stdout; the
     // interleaving would corrupt the JSONL stream.
     tsar::ensure!(
         !(opts.stream && opts.metrics.as_deref() == Some("-")),
         "--stream prints tokens on stdout; use --metrics <file> with --stream"
+    );
+    // --http serves real network clients; --stream prints a synthetic
+    // workload's tokens.  One serving mode per run.
+    tsar::ensure!(
+        !(opts.stream && opts.http.is_some()),
+        "--http serves network clients; drop --stream (clients stream over HTTP)"
+    );
+    // The HTTP mode prints status lines and the report on stdout; a
+    // stdout JSONL stream would interleave with them.
+    tsar::ensure!(
+        !(opts.http.is_some() && opts.metrics.as_deref() == Some("-")),
+        "--http prints status lines on stdout; use --metrics <file> with --http"
     );
 
     if let Some(dir) = flag(args, "--artifacts") {
@@ -327,6 +348,9 @@ struct ServeOpts {
     /// `--stream`: drive the streaming Engine API (per-token output)
     /// instead of the blocking batch surface.
     stream: bool,
+    /// `--http ADDR`: serve network clients over the HTTP front-end
+    /// instead of a synthetic workload.
+    http: Option<String>,
 }
 
 /// Drive any backend through the coordinator with a synthetic request
@@ -334,6 +358,8 @@ struct ServeOpts {
 /// serving with more than one worker).  `--stream` submits the same
 /// mix through the session-based Engine API and prints tokens as they
 /// land; `--metrics` attaches the JSONL exporter either way.
+/// `--http ADDR` dispatches to [`drive_http`] instead: no synthetic
+/// mix — network clients submit over the HTTP front-end.
 fn drive<B: Backend + Send + Sync + 'static>(
     backend: B,
     n_req: usize,
@@ -351,6 +377,13 @@ fn drive<B: Backend + Send + Sync + 'static>(
     );
 
     let scfg = ServerConfig { max_batch: batch, kv_slots: batch, workers };
+
+    if let Some(addr) = opts.http.as_deref() {
+        // HTTP mode: no synthetic workload — network clients drive the
+        // engine until stdin closes.
+        return drive_http(backend, scfg, addr, opts.metrics.as_deref());
+    }
+
     let mut rng = Rng::new(7);
     let prompts: Vec<Vec<i32>> = (0..n_req)
         .map(|_| {
@@ -426,6 +459,58 @@ fn drive<B: Backend + Send + Sync + 'static>(
             "metrics: {n} JSONL record(s) exported to {}",
             opts.metrics.as_deref().unwrap_or("-")
         );
+    }
+    Ok(())
+}
+
+/// `serve --http ADDR`: put the HTTP front-end over a live engine and
+/// block until stdin closes.  The engine's request records feed the
+/// Prometheus aggregator behind `GET /metrics` — teed into the JSONL
+/// exporter as well when `--metrics` is set — and stopping prints the
+/// merged serve report next to the final scrape.
+fn drive_http<B: Backend + Send + Sync + 'static>(
+    backend: B,
+    scfg: ServerConfig,
+    addr: &str,
+    metrics: Option<&str>,
+) -> Result<()> {
+    let (agg_tx, agg_rx) = channel::<RequestRecord>();
+    let aggregator = PromAggregator::spawn(agg_rx);
+    let counters = aggregator.counters();
+    let (engine_tx, exporter) = match metrics {
+        Some(target) => {
+            let (exp_tx, exp_rx) = channel();
+            let exporter = Exporter::spawn(exp_rx, target)?;
+            let (tee_tx, tee_rx) = channel();
+            tee_records(tee_rx, agg_tx, exp_tx);
+            (tee_tx, Some(exporter))
+        }
+        None => (agg_tx, None),
+    };
+    let handle = Arc::new(Engine::start_with_sink(backend, scfg, Some(engine_tx))?);
+    let http = HttpServer::start(addr, Arc::clone(&handle), counters, HttpConfig::default())?;
+    println!("HTTP front-end listening on {}", http.local_addr());
+    println!("  POST /v1/generate  {{\"prompt\":[..],\"max_new_tokens\":N}} -> NDJSON stream");
+    println!("  GET  /metrics      Prometheus counters    GET /healthz  liveness");
+    println!("press Enter (or close stdin) to stop ...");
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line);
+
+    println!("stopping: draining in-flight sessions ...");
+    http.stop();
+    let handle = Arc::try_unwrap(handle)
+        .map_err(|_| tsar::err!("HTTP workers still hold the engine handle"))?;
+    match handle.shutdown() {
+        Ok(report) => report.print(),
+        // A server that was never hit has nothing to report; that is
+        // not an error for a front-end run.
+        Err(e) => println!("no serve report: {e}"),
+    }
+    let observed = aggregator.finish();
+    println!("prometheus aggregator observed {observed} record(s)");
+    if let Some(exporter) = exporter {
+        let n = exporter.finish()?;
+        println!("metrics: {n} JSONL record(s) exported to {}", metrics.unwrap_or("-"));
     }
     Ok(())
 }

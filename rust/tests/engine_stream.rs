@@ -360,6 +360,245 @@ fn shutdown_with_no_requests_is_an_error() {
     assert!(handle.shutdown().is_err(), "nothing served: report must be an Err");
 }
 
+/// A backend whose decode panics once a sequence's position crosses a
+/// threshold — the deterministic stand-in for a backend bug that
+/// unwinds a lane thread mid-decode.
+struct PanickyBackend {
+    inner: SimBackend,
+    panic_at_pos: i32,
+}
+
+impl Backend for PanickyBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("panicky({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        assert!(pos < self.panic_at_pos, "injected decode panic at pos {pos}");
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        for r in reqs {
+            assert!(r.pos < self.panic_at_pos, "injected decode panic at pos {}", r.pos);
+        }
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn lane_panic_does_not_poison_shutdown() {
+    // Two lanes, round-robin sharding: the first submission lands on
+    // lane 0 and panics its backend mid-decode (its position starts at
+    // prompt length 10 and crosses the threshold after two steps); the
+    // second lands on lane 1 and stays below the threshold for its
+    // whole generation.
+    let b = PanickyBackend { inner: backend(), panic_at_pos: 12 };
+    let handle = Engine::start(b, cfg(1, 1, 2)).unwrap();
+    let doomed = handle.submit(GenerationRequest::new(vec![1; 10], 20));
+    let survivor_prompt = vec![2, 3, 4];
+    let survivor = handle.submit(GenerationRequest::new(survivor_prompt.clone(), 5));
+
+    let res = survivor.join();
+    assert_eq!(res.finish, FinishReason::Length);
+    assert_eq!(res.tokens, backend().generate(&survivor_prompt, 5).unwrap());
+
+    // The doomed ticket's stream closed without a terminal event (its
+    // lane unwound); join must synthesize a Failed result, not hang.
+    let res = doomed.join();
+    assert_eq!(res.finish, FinishReason::Failed);
+    assert!(res.error.unwrap().contains("without a terminal event"));
+
+    // Pre-fix, this shutdown re-panicked on the lane join ("lane
+    // thread panicked") and every other lane's results were lost.
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 1, "the survivor's result must be kept");
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.lane_errors.len(), 1, "the dead lane must be reported");
+    assert!(
+        report.lane_errors[0].contains("injected decode panic"),
+        "got {:?}",
+        report.lane_errors
+    );
+}
+
+#[test]
+fn stream_then_join_returns_the_real_result() {
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let prompt = vec![5, 6, 7];
+    let ticket = handle.submit(GenerationRequest::new(prompt.clone(), 6));
+
+    // Consume the whole stream — terminal event included — via recv().
+    let mut streamed: Vec<i32> = Vec::new();
+    let mut saw_terminal = false;
+    while let Some(ev) = ticket.recv() {
+        if let Some(tok) = ev.token() {
+            streamed.push(tok);
+        }
+        if ev.result().is_some() {
+            saw_terminal = true;
+        }
+    }
+    assert!(saw_terminal, "stream must end with a terminal event");
+
+    // Pre-fix, join() after the terminal event was consumed synthesized
+    // a phantom Failed result for a request that retired cleanly.
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::Length);
+    assert!(res.error.is_none(), "got phantom error {:?}", res.error);
+    assert_eq!(res.tokens, streamed);
+    assert_eq!(res.tokens, backend().generate(&prompt, 6).unwrap());
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn kv_window_exact_fit_reaches_the_full_budget() {
+    // The passing side of the boundary: prompt_len + max_new_tokens ==
+    // max_seq (= 64) is admitted, and the engine must deliver the full
+    // budget, token-identical to the direct reference.
+    let prompt = vec![7; 14];
+    let max_new = 50;
+    let direct = backend().generate(&prompt, max_new).unwrap();
+    assert_eq!(direct.len(), max_new);
+
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let res = handle.submit(GenerationRequest::new(prompt, max_new)).join();
+    assert_eq!(res.finish, FinishReason::Length);
+    assert_eq!(res.tokens, direct);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn kv_window_caps_legacy_requests_at_the_backend_capacity() {
+    // The other side: the legacy surface admits without validation and
+    // caps at the KV window.  One token past the admission limit
+    // (prompt_len + budget == max_seq + 1) still fits the backend's
+    // real decode capacity — `generate` succeeds with the full budget —
+    // so the lane must not retire it a token early (the pre-fix
+    // `max_seq - 1` cutoff did).
+    let prompt = vec![3; 5];
+    let max_new = 60; // 5 + 60 == 65 == max_seq + 1
+    let direct = backend().generate(&prompt, max_new).unwrap();
+    assert_eq!(direct.len(), max_new);
+
+    let server = Server::new(backend(), cfg(1, 1, 1)).unwrap();
+    let report = serve_all(&server, vec![Request::new(0, prompt.clone(), max_new)]).unwrap();
+    assert_eq!(report.total_tokens, max_new, "retired a token short of the window");
+
+    // Far past the window, generation caps exactly at the backend's
+    // capacity: decode positions run to max_seq - 1 inclusive, so
+    // prompt of 5 in a 64-token window yields 60 tokens.
+    let report = serve_all(&server, vec![Request::new(0, prompt, 999)]).unwrap();
+    assert_eq!(report.total_tokens, 64 - 5 + 1);
+}
+
+/// Minimal backend with a degenerate KV window, for pinning the lane's
+/// cutoff arithmetic (SimBackend itself refuses max_seq <= prefill).
+struct TinyWindowBackend {
+    config: ModelConfig,
+}
+
+impl Backend for TinyWindowBackend {
+    type Cache = ();
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn describe(&self) -> String {
+        "tiny-window stub".into()
+    }
+
+    fn prefill(&self, _tokens: &[i32], prompt_len: i32) -> Result<Step<()>> {
+        Ok(Step { next_token: prompt_len, cache: (), cost_s: Some(1e-6) })
+    }
+
+    fn decode(&self, token: i32, _pos: i32, _cache: &()) -> Result<Step<()>> {
+        Ok(Step { next_token: token + 1, cache: (), cost_s: Some(1e-6) })
+    }
+}
+
+#[test]
+fn zero_kv_window_retires_immediately_instead_of_underflowing() {
+    // max_seq == 0: the pre-fix cutoff computed `max_seq - 1` on a
+    // usize — an arithmetic underflow (a panic in debug builds).  The
+    // aligned check retires the sequence right after prefill.
+    let config = ModelConfig {
+        vocab: 100,
+        d_model: 8,
+        n_layers: 1,
+        n_heads: 1,
+        ffn_dim: 16,
+        max_seq: 0,
+        prefill_len: 4,
+    };
+    let server = Server::new(TinyWindowBackend { config }, cfg(1, 1, 1)).unwrap();
+    let report = serve_all(&server, vec![Request::new(0, vec![1, 2], 8)]).unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(
+        report.total_tokens, 1,
+        "prefill token only: a zero-token window admits no decode"
+    );
+}
+
+#[test]
+fn http_smoke_submit_over_tcp_while_a_lane_drains() {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    use tsar::coordinator::{HttpConfig, HttpServer, PromCounters};
+
+    // Occupy the single lane with a direct submission, then land an
+    // HTTP session on the same engine while that shard drains.
+    let handle = Arc::new(Engine::start(SlowBackend::new(2), cfg(2, 2, 1)).unwrap());
+    let busy = handle.submit(GenerationRequest::new(vec![1, 2, 3], 8));
+    let http = HttpServer::start(
+        "127.0.0.1:0",
+        Arc::clone(&handle),
+        Arc::new(PromCounters::new()),
+        HttpConfig::default(),
+    )
+    .unwrap();
+    let addr = http.local_addr();
+
+    let body = r#"{"prompt":[4,5,6],"max_new_tokens":5}"#;
+    let mut conn = TcpStream::connect(addr).unwrap();
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 200"), "got {response}");
+    assert!(response.contains("\"event\":\"prefilled\""), "got {response}");
+    assert!(response.contains("\"event\":\"retired\""), "got {response}");
+    assert!(response.contains("\"finish\":\"length\""), "got {response}");
+
+    assert_eq!(busy.join().finish, FinishReason::Length);
+    http.stop();
+    let handle = Arc::try_unwrap(handle).ok().expect("HTTP workers joined");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.completed, 2);
+}
+
 #[test]
 fn bad_engine_config_is_an_error() {
     assert!(Engine::start(backend(), cfg(4, 2, 1)).is_err());

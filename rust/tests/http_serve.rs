@@ -1,0 +1,449 @@
+//! In-tree integration tests of the zero-dependency HTTP front-end
+//! (`coordinator::http`, DESIGN.md §3): raw `std::net::TcpStream`
+//! clients against a live engine — streaming token parity with the
+//! direct backend, concurrent sessions, mid-stream disconnect
+//! cancellation, and a Prometheus scrape that matches the shutdown
+//! `ServeReport`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{
+    Engine, EngineHandle, HttpConfig, HttpServer, PromAggregator, ServeReport, ServerConfig,
+};
+use tsar::runtime::{
+    Backend, BatchItem, ModelConfig, SimBackend, SimBackendConfig, SimKvCache, Step,
+};
+use tsar::util::error::Result;
+use tsar::util::json::Json;
+
+fn backend() -> SimBackend {
+    SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
+    )
+    .expect("zoo model")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers }
+}
+
+/// A backend that spends real wall time per step so a client can
+/// observe (and abandon) a generation mid-stream.
+struct SlowBackend {
+    inner: SimBackend,
+    step: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+}
+
+/// Engine + aggregator + HTTP front-end on an ephemeral port.
+fn start_http<B: Backend + Send + Sync + 'static>(
+    backend: B,
+    scfg: ServerConfig,
+) -> (Arc<EngineHandle<B>>, HttpServer, PromAggregator) {
+    let (rec_tx, rec_rx) = channel();
+    let aggregator = PromAggregator::spawn(rec_rx);
+    let handle = Arc::new(Engine::start_with_sink(backend, scfg, Some(rec_tx)).unwrap());
+    let http = HttpServer::start(
+        "127.0.0.1:0",
+        Arc::clone(&handle),
+        aggregator.counters(),
+        HttpConfig::default(),
+    )
+    .unwrap();
+    (handle, http, aggregator)
+}
+
+/// Stop the front-end and shut the engine down for the merged report.
+fn finish<B: Backend>(handle: Arc<EngineHandle<B>>, http: HttpServer) -> Result<ServeReport> {
+    http.stop();
+    let handle = Arc::try_unwrap(handle).ok().expect("HTTP workers joined");
+    handle.shutdown()
+}
+
+/// One blocking HTTP/1.1 exchange over a raw `TcpStream`: returns the
+/// status line, the raw header block, and the (de-chunked) body.
+fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (String, String, String) {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    let mut raw = Vec::new();
+    conn.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("UTF-8 response");
+    let head_end = text.find("\r\n\r\n").expect("header terminator");
+    let head = text[..head_end].to_string();
+    let status = head.lines().next().unwrap_or("").to_string();
+    let payload = &text[head_end + 4..];
+    let body = if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        dechunk(payload)
+    } else {
+        payload.to_string()
+    };
+    (status, head, body)
+}
+
+/// Reassemble a chunked transfer-encoding payload.
+fn dechunk(payload: &str) -> String {
+    let mut out = String::new();
+    let mut rest = payload;
+    loop {
+        let Some(nl) = rest.find("\r\n") else { break };
+        let size = usize::from_str_radix(rest[..nl].trim(), 16).expect("chunk size");
+        if size == 0 {
+            break;
+        }
+        let start = nl + 2;
+        out.push_str(&rest[start..start + size]);
+        rest = &rest[start + size + 2..]; // skip the chunk's trailing CRLF
+    }
+    out
+}
+
+/// The terminal event's `tokens` array, as i32.
+fn terminal_tokens(line: &Json) -> Vec<i32> {
+    line.get("tokens")
+        .and_then(Json::as_arr)
+        .expect("terminal carries tokens")
+        .iter()
+        .map(|t| t.as_f64().expect("token is a number") as i32)
+        .collect()
+}
+
+#[test]
+fn generate_streams_ndjson_and_matches_the_reference() {
+    let (handle, http, aggregator) = start_http(backend(), cfg(2, 2, 1));
+    let addr = http.local_addr();
+
+    let (status, head, body) = http_request(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"prompt":[3,1,4,1,5],"max_new_tokens":6}"#,
+    );
+    assert!(status.contains("200"), "got {status}");
+    assert!(head.to_ascii_lowercase().contains("transfer-encoding: chunked"), "head: {head}");
+
+    let events: Vec<Json> =
+        body.lines().map(|l| Json::parse(l).expect("valid NDJSON line")).collect();
+    assert!(events.len() >= 2, "got {body}");
+    assert_eq!(events[0].get("event").and_then(Json::as_str), Some("prefilled"));
+    let last = events.last().unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("retired"));
+    assert_eq!(last.get("finish").and_then(Json::as_str), Some("length"));
+
+    // Streamed tokens (prefilled + per-round) == terminal result ==
+    // the direct reference generation.
+    let streamed: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e.get("event").and_then(Json::as_str) {
+            Some("prefilled") | Some("token") => {
+                e.get("token").and_then(Json::as_f64).map(|t| t as i32)
+            }
+            _ => None,
+        })
+        .collect();
+    let direct = backend().generate(&[3, 1, 4, 1, 5], 6).unwrap();
+    assert_eq!(streamed, direct);
+    assert_eq!(terminal_tokens(last), direct);
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(aggregator.finish(), 1);
+}
+
+#[test]
+fn generate_honors_stop_tokens() {
+    let reference = backend();
+    let full = reference.generate(&[4, 4, 8], 10).unwrap();
+    let stop = full[3];
+    let expected = reference.generate_until(&[4, 4, 8], 10, &[stop]).unwrap();
+
+    let (handle, http, aggregator) = start_http(backend(), cfg(1, 1, 1));
+    let addr = http.local_addr();
+    let body = format!("{{\"prompt\":[4,4,8],\"max_new_tokens\":10,\"stop_tokens\":[{stop}]}}");
+    let (status, _head, resp) = http_request(addr, "POST", "/v1/generate", &body);
+    assert!(status.contains("200"));
+    let last = Json::parse(resp.lines().last().unwrap()).unwrap();
+    assert_eq!(last.get("finish").and_then(Json::as_str), Some("stop"));
+    assert_eq!(terminal_tokens(&last), expected);
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.completed, 1);
+    assert_eq!(aggregator.finish(), 1);
+}
+
+#[test]
+fn concurrent_clients_stream_and_the_scrape_matches_the_report() {
+    let (handle, http, aggregator) = start_http(backend(), cfg(2, 2, 2));
+    let addr = http.local_addr();
+
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10, 11]];
+    let clients: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|prompt| {
+            std::thread::spawn(move || {
+                let body = format!("{{\"prompt\":{prompt:?},\"max_new_tokens\":7}}");
+                let (status, _head, resp) = http_request(addr, "POST", "/v1/generate", &body);
+                assert!(status.contains("200"), "got {status}");
+                let last = Json::parse(resp.lines().last().expect("terminal line")).unwrap();
+                assert_eq!(last.get("event").and_then(Json::as_str), Some("retired"));
+                (prompt, terminal_tokens(&last))
+            })
+        })
+        .collect();
+    let reference = backend();
+    for client in clients {
+        let (prompt, tokens) = client.join().expect("client thread");
+        assert_eq!(tokens, reference.generate(&prompt, 7).unwrap(), "prompt {prompt:?}");
+    }
+
+    // Counters race the final record sends by microseconds; poll the
+    // scrape until all four retirements landed.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let scrape = loop {
+        let (status, head, scrape) = http_request(addr, "GET", "/metrics", "");
+        assert!(status.contains("200"));
+        assert!(head.contains("text/plain"), "head: {head}");
+        if scrape.contains("tsar_requests_total{finish=\"length\"} 4") {
+            break scrape;
+        }
+        assert!(Instant::now() < deadline, "scrape never saw 4 retirements:\n{scrape}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(scrape.contains("tsar_queue_depth 0"), "scrape:\n{scrape}");
+
+    let counters = aggregator.counters();
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 4);
+    assert_eq!(report.completed, 4);
+
+    // Scrape counters and the merged report agree: outcomes, tokens,
+    // and lane busy seconds (Σ prefill+decode == Σ lane clocks, up to
+    // the microsecond truncation per record).
+    let tokens_line = scrape
+        .lines()
+        .find(|l| l.starts_with("tsar_tokens_emitted_total"))
+        .expect("tokens series");
+    let scraped_tokens: usize =
+        tokens_line.rsplit(' ').next().unwrap().parse().expect("token count");
+    assert_eq!(scraped_tokens, report.total_tokens);
+    assert!(
+        (counters.busy_seconds() - report.lane_clock_sum_s).abs() < 1e-3,
+        "busy {} vs lane clocks {}",
+        counters.busy_seconds(),
+        report.lane_clock_sum_s
+    );
+    assert_eq!(aggregator.finish(), 4);
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_the_session() {
+    let slow = SlowBackend { inner: backend(), step: Duration::from_millis(10) };
+    let (handle, http, aggregator) = start_http(slow, cfg(1, 1, 1));
+    let addr = http.local_addr();
+
+    // Hand-rolled streaming client: read a few token lines, then drop
+    // the connection mid-generation (55 tokens at 10 ms/round leave
+    // hundreds of milliseconds of stream to abandon).
+    {
+        let body = r#"{"prompt":[2,3,4],"max_new_tokens":55}"#;
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(
+            conn,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let mut token_lines = 0;
+        while token_lines < 4 {
+            line.clear();
+            if reader.read_line(&mut line).unwrap() == 0 {
+                break;
+            }
+            if line.contains("\"event\":\"prefilled\"") || line.contains("\"event\":\"token\"") {
+                token_lines += 1;
+            }
+        }
+        assert!(token_lines >= 1, "never saw a streamed token");
+        // The connection drops here, mid-stream.
+    }
+
+    // The handler notices the dead socket on a later chunk write,
+    // cancels the ticket, and the lane retires the session at a round
+    // boundary.  Wait for the retirement record to land.
+    let counters = aggregator.counters();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while counters.queue_depth() != 0 {
+        assert!(Instant::now() < deadline, "disconnect cancellation never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.cancelled, 1, "disconnect must cancel the in-flight session");
+    assert!(
+        report.total_tokens < 55,
+        "cancelled early, yet {} tokens were generated",
+        report.total_tokens
+    );
+    assert_eq!(aggregator.finish(), 1);
+}
+
+/// A backend whose decode panics past a position threshold — kills the
+/// serving lane mid-session.
+struct PanickyBackend {
+    inner: SimBackend,
+    panic_at_pos: i32,
+}
+
+impl Backend for PanickyBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("panicky({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        assert!(pos < self.panic_at_pos, "injected decode panic at pos {pos}");
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        for r in reqs {
+            assert!(r.pos < self.panic_at_pos, "injected decode panic at pos {}", r.pos);
+        }
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn lane_death_mid_stream_still_ends_with_a_terminal_line() {
+    // The serving lane panics mid-session: the ticket stream closes
+    // without a terminal event, but the NDJSON contract is one
+    // terminal line per response — the front-end must synthesize the
+    // `failed` line instead of ending the chunked body cleanly after a
+    // token event.
+    let panicky = PanickyBackend { inner: backend(), panic_at_pos: 12 };
+    let (handle, http, aggregator) = start_http(panicky, cfg(1, 1, 1));
+    let addr = http.local_addr();
+
+    let (status, _head, body) = http_request(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"prompt":[1,1,1,1,1,1,1,1,1,1],"max_new_tokens":20}"#,
+    );
+    assert!(status.contains("200"), "got {status}");
+    let last = Json::parse(body.lines().last().expect("terminal line")).unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("failed"));
+    assert_eq!(last.get("finish").and_then(Json::as_str), Some("failed"));
+    let error = last.get("error").and_then(Json::as_str).expect("failure reason");
+    assert!(error.contains("without a terminal event"), "got {error}");
+
+    http.stop();
+    let handle = Arc::try_unwrap(handle).ok().expect("HTTP workers joined");
+    // The lane died, so there is nothing to report — but shutdown must
+    // return the lane error instead of panicking.
+    let err = handle.shutdown().unwrap_err();
+    assert!(err.to_string().contains("injected decode panic"), "got {err}");
+    assert_eq!(aggregator.finish(), 0, "the dead lane never retired the session");
+}
+
+#[test]
+fn healthz_metrics_and_error_routes() {
+    let (handle, http, aggregator) = start_http(backend(), cfg(1, 1, 1));
+    let addr = http.local_addr();
+
+    let (status, _head, body) = http_request(addr, "GET", "/healthz", "");
+    assert!(status.contains("200"));
+    assert_eq!(body, "ok\n");
+
+    let (status, _head, _body) = http_request(addr, "GET", "/nope", "");
+    assert!(status.contains("404"), "got {status}");
+
+    let (status, _head, body) = http_request(addr, "POST", "/v1/generate", "{not json");
+    assert!(status.contains("400"), "got {status}");
+    assert!(body.contains("bad request"), "got {body}");
+
+    let (status, _head, _body) = http_request(addr, "GET", "/v1/generate", "");
+    assert!(status.contains("405"), "got {status}");
+
+    let (status, _head, _body) = http_request(addr, "POST", "/metrics", "");
+    assert!(status.contains("405"), "got {status}");
+
+    // A session that fails admission streams a single failed terminal
+    // event (still HTTP 200: the session itself is the failure).
+    let (status, _head, body) =
+        http_request(addr, "POST", "/v1/generate", r#"{"prompt":[1],"max_new_tokens":500}"#);
+    assert!(status.contains("200"), "got {status}");
+    let last = Json::parse(body.lines().last().unwrap()).unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("failed"));
+    let error = last.get("error").and_then(Json::as_str).expect("failure reason");
+    assert!(error.contains("KV capacity"), "got {error}");
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 1, "only the rejected session was submitted");
+    assert_eq!(report.failed, 1);
+    assert_eq!(aggregator.finish(), 1, "rejections stream a record too");
+}
