@@ -21,6 +21,19 @@ echo "== native kernel: scalar fallback forced (portable path) =="
 TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test native_differential
 
 echo
+echo "== model differential: scalar fallback forced (portable path) =="
+# The ≥100-case model-level fuzz (kernel-path transformer vs the
+# pure-scalar reference) on the portable fallback; the host-tuned AVX2
+# run lives in ci.yml's model-differential job.
+TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test model_differential
+
+echo
+echo "== model serving: real forward pass through the Engine + HTTP =="
+# Tier-1 runs these too; the named step keeps a model-serving
+# regression visible on its own line.
+cargo test -q --test model_serve
+
+echo
 echo "== HTTP front-end: integration tests over raw TcpStream clients =="
 # Tier-1 runs these too; the named step keeps a serving-surface
 # regression visible on its own line.

@@ -49,5 +49,5 @@ pub use prom::{PromAggregator, PromCounters};
 pub use request::{
     FinishReason, GenParams, GenerationRequest, Request, RequestId, RequestResult, TokenEvent,
 };
-pub use selector::{select_plan, LayerPlan, ModelPlan};
+pub use selector::{describe_site_shapes, select_plan, LayerPlan, ModelPlan};
 pub use serve::{serve_all, Server, ServerConfig};

@@ -82,6 +82,19 @@ pub fn select_plan(
     ModelPlan { model: spec.name, n, layers }
 }
 
+/// Compact per-site summary for backends that execute their BitLinear
+/// GEMVs for real and therefore carry no simulated [`ModelPlan`]
+/// timings: `site:NxKxM@engine` per site, in forward-pass order.  The
+/// request-level metrics records show this next to the simulator
+/// backends' `site:kernel` plan strings.
+pub fn describe_site_shapes(sites: &[(&str, GemmShape)], engine: &str) -> String {
+    sites
+        .iter()
+        .map(|(site, sh)| format!("{site}:{}x{}x{}@{engine}", sh.n, sh.k, sh.m))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +129,16 @@ mod tests {
         for want in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
             assert!(sites.contains(&want), "{want} missing");
         }
+    }
+
+    #[test]
+    fn site_shape_summary_format() {
+        let sites = [
+            ("wqkv", GemmShape::new(1, 64, 128)),
+            ("lm-head", GemmShape::new(1, 64, 256)),
+        ];
+        let s = describe_site_shapes(&sites, "native-avx2/c2");
+        assert_eq!(s, "wqkv:1x64x128@native-avx2/c2 lm-head:1x64x256@native-avx2/c2");
+        assert_eq!(describe_site_shapes(&[], "x"), "");
     }
 }

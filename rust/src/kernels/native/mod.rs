@@ -209,6 +209,58 @@ impl NativeGemv {
         Ok(())
     }
 
+    /// Batched BitLinear entry: per-row absmax int8 quantization of
+    /// `x` (n × k f32 activations), the packed ternary integer GEMM,
+    /// then dequantization by `scale / s_row` into `out` (n × m f32).
+    /// This is the model forward pass's one call per site per step
+    /// (`model::transformer`); the modeled-ISA engine and the scalar
+    /// reference mirror the exact same quantize/dequantize order, so
+    /// keep the three in sync.
+    ///
+    /// Exactness note: ternary×int8 partial sums stay far below 2^24
+    /// for every supported K, so `acc as f32 * deq` loses nothing —
+    /// the foundation of the model-level differential suite's
+    /// bit-identity assertions.
+    pub fn gemm_bitlinear(
+        &self,
+        x: &[f32],
+        packed: &PshufbPacked,
+        n: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        crate::ensure!(
+            x.len() == n * packed.k,
+            "activations hold {} values, expected n*k = {}",
+            x.len(),
+            n * packed.k
+        );
+        crate::ensure!(
+            out.len() == n * packed.m,
+            "output holds {} slots, expected n*m = {}",
+            out.len(),
+            n * packed.m
+        );
+        let mut acts = Vec::with_capacity(n * packed.k);
+        let mut row_scales = Vec::with_capacity(n);
+        for row in x.chunks_exact(packed.k) {
+            let (q, s) = crate::quant::absmax_quantize(row);
+            acts.extend_from_slice(&q);
+            row_scales.push(s);
+        }
+        let mut ints = vec![0i32; n * packed.m];
+        self.gemm(&acts, packed, n, &mut ints)?;
+        for ((out_row, ints_row), &s) in
+            out.chunks_exact_mut(packed.m).zip(ints.chunks_exact(packed.m)).zip(&row_scales)
+        {
+            let deq = scale / s;
+            for (o, &acc) in out_row.iter_mut().zip(ints_row) {
+                *o = acc as f32 * deq;
+            }
+        }
+        Ok(())
+    }
+
     fn run_row(&self, acts: &[i8], packed: &PshufbPacked, out: &mut [i32]) {
         // Spawning a scoped worker costs tens of µs; give each at
         // least two tiles so a tiny matrix never pays more in spawns
@@ -482,6 +534,37 @@ mod tests {
             }
         }
         assert!(NativeGemv::new(IsaConfig::C2).unwrap().with_threads(0).is_err());
+    }
+
+    #[test]
+    fn bitlinear_entry_matches_manual_quantize_gemm_dequantize() {
+        let mut rng = Rng::new(88);
+        let (n, k, m) = (3usize, 52usize, 21usize);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let w = rng.ternary_matrix(m, k, 0.35);
+        let scale = 0.17f32;
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let gemv = NativeGemv::new(isa).unwrap();
+            let packed = gemv.pack(&w, m, k).unwrap();
+            let mut out = vec![0f32; n * m];
+            gemv.gemm_bitlinear(&x, &packed, n, scale, &mut out).unwrap();
+            // Manual pipeline: quantize each row, integer GEMM, dequant.
+            for (row, (x_row, out_row)) in
+                x.chunks_exact(k).zip(out.chunks_exact(m)).enumerate()
+            {
+                let (q, s) = crate::quant::absmax_quantize(x_row);
+                let mut ints = vec![0i32; m];
+                gemv.gemv(&q, &packed, &mut ints).unwrap();
+                let deq = scale / s;
+                for (j, (&got, &acc)) in out_row.iter().zip(&ints).enumerate() {
+                    assert_eq!(got, acc as f32 * deq, "row {row} out {j} ({})", isa.name());
+                }
+            }
+            // Shape errors are loud.
+            assert!(gemv.gemm_bitlinear(&x[..k], &packed, n, scale, &mut out).is_err());
+            let mut short = vec![0f32; m];
+            assert!(gemv.gemm_bitlinear(&x, &packed, n, scale, &mut short).is_err());
+        }
     }
 
     #[test]

@@ -18,7 +18,10 @@ use tsar::coordinator::{
 };
 use tsar::kernels::all_kernels;
 use tsar::model::zoo;
-use tsar::runtime::{Backend, NativeBackend, SimBackend, SimBackendConfig};
+use tsar::model::{Checkpoint, LinearEngine, SamplerConfig, TransformerConfig};
+use tsar::runtime::{
+    Backend, ModelBackend, ModelBackendConfig, NativeBackend, SimBackend, SimBackendConfig,
+};
 use tsar::sim::{simulate, GemmShape};
 use tsar::util::error::{Context, Result};
 use tsar::util::rng::Rng;
@@ -32,8 +35,11 @@ USAGE:
   tsar-cli plan --model <name> [--platform P] [--n N]
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
-                 [--backend sim|native] [--isa c2|c4]
+                 [--backend sim|native|model] [--isa c2|c4]
                  [--metrics <path|->] [--stream] [--http ADDR]
+                 [--ckpt PATH] [--model-seed S] [--engine native|modeled]
+                 [--temperature T] [--top-k K]
+                 [--layers N] [--dim D] [--heads H] [--kv-heads H] [--ffn F] [--vocab V]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
   tsar-cli models
   tsar-cli help
@@ -59,6 +65,22 @@ default simulator backend.  `--threads T` chunks each GEMV's output
 rows across T host threads (bit-identical results).  The native weight
 layout costs ~1 B/weight, so it defaults to BitNet-125M — pass --model
 explicitly to serve the billion-parameter zoo entries natively.
+
+`serve --backend model` runs a *real* ternary transformer forward
+pass: every streamed token is sampled from logits produced by the
+checkpoint-loaded BitNet-style block stack, with true per-layer KV
+caches.  `--ckpt PATH` loads a TSARCKP1 checkpoint (if the file is
+missing a deterministic random-init one keyed by `--model-seed` is
+synthesized and saved there); with no `--ckpt` the model is
+synthesized in memory, so no weights file is ever required.  The
+architecture flags (--layers/--dim/--heads/--kv-heads/--ffn/--vocab)
+shape the synthesized model and default to the seeded toy config; a
+loaded checkpoint's header always wins.  `--engine native` (default)
+executes the BitLinear sites on the host AVX2/scalar kernels,
+`--engine modeled` replays them through the modeled T-SAR ISA
+(bit-identical, slower).  `--temperature`/`--top-k` enable seeded
+sampling (greedy by default).  Composable with
+--workers/--batch/--threads, --stream, --metrics and --http.
 ";
 
 fn main() -> Result<()> {
@@ -146,6 +168,15 @@ fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> 
     match flag(args, name) {
         Some(v) => v.parse::<T>().map_err(|_| tsar::err!("{name} expects a number, got {v:?}")),
         None => Ok(default),
+    }
+}
+
+/// `--isa c2|c4` (the paper's two AVX2 configs), defaulting to C2.
+fn parse_isa(args: &[String]) -> Result<IsaConfig> {
+    match flag(args, "--isa").as_deref() {
+        Some("c4") => Ok(IsaConfig::C4),
+        Some("c2") | None => Ok(IsaConfig::C2),
+        Some(other) => tsar::bail!("--isa must be c2 or c4, got {other:?}"),
     }
 }
 
@@ -290,11 +321,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                      --backend native (runs on this host)"
                 );
             }
-            let isa = match flag(args, "--isa").as_deref() {
-                Some("c4") => IsaConfig::C4,
-                Some("c2") | None => IsaConfig::C2,
-                Some(other) => tsar::bail!("--isa must be c2 or c4, got {other:?}"),
-            };
+            let isa = parse_isa(args)?;
             println!("packing {model} for native execution ({}) ...", isa.name());
             let backend = NativeBackend::by_name(&model, isa, bcfg)?;
             println!(
@@ -304,7 +331,77 @@ fn serve_cmd(args: &[String]) -> Result<()> {
             );
             drive(backend, n_req, max_new, batch, workers, opts)
         }
-        other => tsar::bail!("--backend must be sim or native, got {other:?}"),
+        "model" => {
+            // The real forward pass: architecture comes from the
+            // checkpoint (or the arch flags when synthesizing), not the
+            // zoo, and execution happens on this host.
+            if model.is_some() {
+                eprintln!(
+                    "warning: --model names simulator zoo specs and is ignored by \
+                     --backend model (use --ckpt or the --layers/--dim/... flags)"
+                );
+            }
+            if flag(args, "--platform").is_some() {
+                eprintln!(
+                    "warning: --platform models the simulator and is ignored by \
+                     --backend model (runs on this host)"
+                );
+            }
+            let isa = parse_isa(args)?;
+            let engine = match flag(args, "--engine").as_deref() {
+                Some("modeled") => LinearEngine::modeled(isa),
+                Some("native") | None => LinearEngine::native(isa, threads.max(1))?,
+                Some(other) => tsar::bail!("--engine must be native or modeled, got {other:?}"),
+            };
+            let toy = TransformerConfig::toy();
+            let config = TransformerConfig {
+                vocab: parse_flag(args, "--vocab", toy.vocab)?,
+                d_model: parse_flag(args, "--dim", toy.d_model)?,
+                n_layers: parse_flag(args, "--layers", toy.n_layers)?,
+                n_heads: parse_flag(args, "--heads", toy.n_heads)?,
+                n_kv_heads: parse_flag(args, "--kv-heads", toy.n_kv_heads)?,
+                ffn_dim: parse_flag(args, "--ffn", toy.ffn_dim)?,
+                ..toy
+            };
+            let seed: u64 = parse_flag(args, "--model-seed", 0x75AB)?;
+            let ckpt = match flag(args, "--ckpt") {
+                Some(path) if std::path::Path::new(&path).exists() => {
+                    println!("loading checkpoint {path} ...");
+                    Checkpoint::load(&path)?
+                }
+                Some(path) => {
+                    let ckpt = Checkpoint::synthesize(config, seed)?;
+                    ckpt.save(&path)?;
+                    println!("synthesized checkpoint (seed {seed:#x}) saved to {path}");
+                    ckpt
+                }
+                None => Checkpoint::synthesize(config, seed)?,
+            };
+            let sampler = SamplerConfig {
+                temperature: parse_flag(args, "--temperature", 0.0f32)?,
+                top_k: parse_flag(args, "--top-k", 0usize)?,
+                seed,
+            };
+            let backend = ModelBackend::new(
+                &ckpt,
+                engine,
+                ModelBackendConfig {
+                    prefill_len,
+                    max_seq: prefill_len + max_new + 8,
+                    sampler,
+                },
+            )?;
+            println!(
+                "loaded {} parameters ({:.1} KB packed BitLinear weights)",
+                ckpt.param_count(),
+                backend.weight_bytes() as f64 / 1e3
+            );
+            if let Some(plan) = backend.plan_summary() {
+                println!("BitLinear sites: {plan}");
+            }
+            drive(backend, n_req, max_new, batch, workers, opts)
+        }
+        other => tsar::bail!("--backend must be sim, native or model, got {other:?}"),
     }
 }
 

@@ -1,0 +1,490 @@
+//! The in-tree ternary checkpoint format (DESIGN.md §2 "checkpoint
+//! format"): a tiny self-describing binary container holding a
+//! transformer architecture header plus per-tensor payloads — f32 for
+//! norms/embeddings, ternary bit-planes + one f32 scale for every
+//! BitLinear site (1 + 1 bit per weight via
+//! [`crate::quant::pack_ternary_planes`]).
+//!
+//! Checkpoints are either loaded from disk ([`Checkpoint::load`]) or
+//! synthesized deterministically from a seed
+//! ([`Checkpoint::synthesize`]) — CI and the differential suite never
+//! need a weights file, exactly like the zoo's synthetic specs.  The
+//! loader is the *only* code shared between the kernel-path
+//! [`super::TernaryTransformer`] and the scalar
+//! [`super::ReferenceModel`]; everything downstream is implemented
+//! twice and pinned together by `tests/model_differential.rs`.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//! magic    8  b"TSARCKP1"
+//! vocab, d_model, n_layers, n_heads, n_kv_heads, ffn_dim   6 × u32
+//! rope_theta, norm_eps                                     2 × f32
+//! seed     u64   (synthesis seed; 0 for trained weights)
+//! n_tensors u32
+//! tensor record ×n:
+//!   name_len u16, name bytes
+//!   kind u8            0 = f32, 1 = ternary
+//!   rows u32, cols u32
+//!   f32:     rows·cols × f32
+//!   ternary: scale f32, plus-plane, minus-plane (⌈rows·cols/8⌉ bytes each)
+//! ```
+
+use std::path::Path;
+
+use crate::quant::{pack_ternary_planes, unpack_ternary_planes};
+use crate::util::error::{Context, Result};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"TSARCKP1";
+
+/// Architecture header of a checkpoint — the model-shape fields a
+/// forward pass needs (the serving-window fields live in
+/// [`crate::runtime::ModelConfig`], set at backend construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Grouped-query KV heads (divides `n_heads`).
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    /// Rotary position embedding base.
+    pub rope_theta: f32,
+    /// RMSNorm epsilon.
+    pub norm_eps: f32,
+}
+
+impl TransformerConfig {
+    /// The seeded toy architecture the quickstart and CI default to:
+    /// big enough to exercise GQA and multi-layer residuals, small
+    /// enough that debug-mode differential fuzzing stays in seconds.
+    pub fn toy() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            ffn_dim: 96,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Shape sanity: every constraint the forward pass assumes.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.vocab >= 2, "vocab must be >= 2");
+        crate::ensure!(
+            self.n_layers >= 1 && self.n_heads >= 1 && self.n_kv_heads >= 1,
+            "layers/heads must be >= 1"
+        );
+        crate::ensure!(
+            self.d_model >= 2 && self.ffn_dim >= 1,
+            "d_model/ffn_dim must be positive"
+        );
+        crate::ensure!(
+            self.d_model % self.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            self.d_model,
+            self.n_heads
+        );
+        crate::ensure!(
+            self.n_heads % self.n_kv_heads == 0,
+            "n_heads {} not divisible by n_kv_heads {}",
+            self.n_heads,
+            self.n_kv_heads
+        );
+        crate::ensure!(
+            self.head_dim() % 2 == 0,
+            "head_dim {} must be even for rotary embedding",
+            self.head_dim()
+        );
+        crate::ensure!(
+            self.rope_theta > 1.0 && self.norm_eps > 0.0,
+            "rope_theta must exceed 1 and norm_eps must be positive"
+        );
+        Ok(())
+    }
+}
+
+/// One tensor's payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    /// Full-precision (norm gains, token embedding).
+    F32(Vec<f32>),
+    /// A BitLinear site: ternary weights plus the absmean scale.
+    Ternary { scale: f32, w: Vec<i8> },
+}
+
+/// One named `rows × cols` tensor (row-major; a GEMV weight is
+/// `out_features × in_features`, vectors are `1 × n`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: TensorData,
+}
+
+/// A loaded or synthesized model checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub config: TransformerConfig,
+    /// Synthesis seed (0 when the tensors came from a trained model).
+    pub seed: u64,
+    tensors: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    /// The fixed tensor-name schedule of one model: `embed`, then per
+    /// layer `layer{i}.{attn_norm,wqkv,wo,ffn_norm,wgateup,wdown}`,
+    /// then `final_norm`, `lm_head`.
+    fn expected_names(config: &TransformerConfig) -> Vec<(String, usize, usize, bool)> {
+        let d = config.d_model;
+        let kv = config.kv_dim();
+        let f = config.ffn_dim;
+        let mut names = vec![("embed".to_string(), config.vocab, d, false)];
+        for l in 0..config.n_layers {
+            names.push((format!("layer{l}.attn_norm"), 1, d, false));
+            names.push((format!("layer{l}.wqkv"), d + 2 * kv, d, true));
+            names.push((format!("layer{l}.wo"), d, d, true));
+            names.push((format!("layer{l}.ffn_norm"), 1, d, false));
+            names.push((format!("layer{l}.wgateup"), 2 * f, d, true));
+            names.push((format!("layer{l}.wdown"), d, f, true));
+        }
+        names.push(("final_norm".to_string(), 1, d, false));
+        names.push(("lm_head".to_string(), config.vocab, d, true));
+        names
+    }
+
+    /// Deterministic random initialization: same `(config, seed)` →
+    /// bit-identical tensors on every platform.  Ternary sites draw a
+    /// ~60%-nonzero weight matrix with an absmean-style scale around
+    /// `1/sqrt(cols)` (so activations keep unit-order magnitude through
+    /// the residual stream), norms sit near 1, and the embedding is a
+    /// small-variance normal.
+    pub fn synthesize(config: TransformerConfig, seed: u64) -> Result<Checkpoint> {
+        config.validate()?;
+        let mut rng = Rng::new(seed ^ 0x7E5A_9C0D_E5EE_D001);
+        let tensors = Checkpoint::expected_names(&config)
+            .into_iter()
+            .map(|(name, rows, cols, ternary)| {
+                let data = if ternary {
+                    let w = rng.ternary_matrix(rows, cols, 0.4);
+                    let jitter = 0.75 + 0.5 * rng.f64() as f32;
+                    let scale = jitter / (cols as f32).sqrt();
+                    TensorData::Ternary { scale, w }
+                } else if name.ends_with("norm") {
+                    let g = (0..rows * cols)
+                        .map(|_| 1.0 + 0.1 * rng.normal() as f32)
+                        .collect();
+                    TensorData::F32(g)
+                } else {
+                    let e = (0..rows * cols).map(|_| 0.3 * rng.normal() as f32).collect();
+                    TensorData::F32(e)
+                };
+                Tensor { name, rows, cols, data }
+            })
+            .collect();
+        Ok(Checkpoint { config, seed, tensors })
+    }
+
+    /// Look up a tensor by name.
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| crate::err!("checkpoint has no tensor {name:?}"))
+    }
+
+    /// An f32 tensor's values, validated against the expected length.
+    pub fn f32_tensor(&self, name: &str, len: usize) -> Result<&[f32]> {
+        let t = self.tensor(name)?;
+        match &t.data {
+            TensorData::F32(v) => {
+                crate::ensure!(
+                    v.len() == len,
+                    "tensor {name:?} holds {} values, expected {len}",
+                    v.len()
+                );
+                Ok(v)
+            }
+            TensorData::Ternary { .. } => crate::bail!("tensor {name:?} is ternary, expected f32"),
+        }
+    }
+
+    /// A ternary tensor's `(weights, scale)`, validated as `rows × cols`.
+    pub fn ternary_tensor(&self, name: &str, rows: usize, cols: usize) -> Result<(&[i8], f32)> {
+        let t = self.tensor(name)?;
+        crate::ensure!(
+            t.rows == rows && t.cols == cols,
+            "tensor {name:?} is {}x{}, expected {rows}x{cols}",
+            t.rows,
+            t.cols
+        );
+        match &t.data {
+            TensorData::Ternary { scale, w } => Ok((w, *scale)),
+            TensorData::F32(_) => crate::bail!("tensor {name:?} is f32, expected ternary"),
+        }
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Total parameter count across all tensors.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.rows * t.cols).sum()
+    }
+
+    /// Serialize to the binary container format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        let c = &self.config;
+        for v in [c.vocab, c.d_model, c.n_layers, c.n_heads, c.n_kv_heads, c.ffn_dim] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&c.rope_theta.to_le_bytes());
+        out.extend_from_slice(&c.norm_eps.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            match &t.data {
+                TensorData::F32(v) => {
+                    out.push(0);
+                    out.extend_from_slice(&(t.rows as u32).to_le_bytes());
+                    out.extend_from_slice(&(t.cols as u32).to_le_bytes());
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::Ternary { scale, w } => {
+                    out.push(1);
+                    out.extend_from_slice(&(t.rows as u32).to_le_bytes());
+                    out.extend_from_slice(&(t.cols as u32).to_le_bytes());
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    let (plus, minus) = pack_ternary_planes(w);
+                    out.extend_from_slice(&plus);
+                    out.extend_from_slice(&minus);
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse the binary container, validating the header, every
+    /// tensor's size, plane disjointness, and that no trailing bytes
+    /// remain.
+    pub fn parse(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader { bytes, off: 0 };
+        let magic = r.take(8)?;
+        crate::ensure!(magic == MAGIC, "bad checkpoint magic (not a TSARCKP1 file)");
+        let vocab = r.u32()? as usize;
+        let d_model = r.u32()? as usize;
+        let n_layers = r.u32()? as usize;
+        let n_heads = r.u32()? as usize;
+        let n_kv_heads = r.u32()? as usize;
+        let ffn_dim = r.u32()? as usize;
+        let rope_theta = r.f32()?;
+        let norm_eps = r.f32()?;
+        let config = TransformerConfig {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            ffn_dim,
+            rope_theta,
+            norm_eps,
+        };
+        config.validate()?;
+        let seed = r.u64()?;
+        let n_tensors = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .map_err(|_| crate::err!("tensor name is not UTF-8"))?;
+            let kind = r.take(1)?[0];
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let n = rows
+                .checked_mul(cols)
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| crate::err!("tensor {name:?} has degenerate shape {rows}x{cols}"))?;
+            let data = match kind {
+                0 => {
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(r.f32()?);
+                    }
+                    TensorData::F32(v)
+                }
+                1 => {
+                    let scale = r.f32()?;
+                    crate::ensure!(
+                        scale.is_finite() && scale > 0.0,
+                        "tensor {name:?} has non-positive scale {scale}"
+                    );
+                    let planes = n.div_ceil(8);
+                    let plus = r.take(planes)?.to_vec();
+                    let minus = r.take(planes)?.to_vec();
+                    let w = unpack_ternary_planes(&plus, &minus, n)
+                        .with_context(|| format!("tensor {name:?}"))?;
+                    TensorData::Ternary { scale, w }
+                }
+                other => crate::bail!("tensor {name:?} has unknown kind {other}"),
+            };
+            tensors.push(Tensor { name, rows, cols, data });
+        }
+        crate::ensure!(
+            r.off == bytes.len(),
+            "{} trailing bytes after the last tensor",
+            bytes.len() - r.off
+        );
+        Ok(Checkpoint { config, seed, tensors })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Bounds-checked little-endian cursor over the container bytes.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.off + n <= self.bytes.len(),
+            "checkpoint truncated at byte {} (wanted {n} more)",
+            self.off
+        );
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_config_is_valid() {
+        TransformerConfig::toy().validate().unwrap();
+        assert_eq!(TransformerConfig::toy().head_dim(), 16);
+        assert_eq!(TransformerConfig::toy().kv_dim(), 32);
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = Checkpoint::synthesize(TransformerConfig::toy(), 42).unwrap();
+        let b = Checkpoint::synthesize(TransformerConfig::toy(), 42).unwrap();
+        assert_eq!(a, b);
+        let c = Checkpoint::synthesize(TransformerConfig::toy(), 43).unwrap();
+        assert_ne!(a, c, "different seeds must give different weights");
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_tensor() {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 7).unwrap();
+        let back = Checkpoint::parse(&ckpt.to_bytes()).unwrap();
+        assert_eq!(ckpt, back);
+    }
+
+    #[test]
+    fn tensor_schedule_covers_the_block() {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 1).unwrap();
+        for name in ["embed", "layer0.wqkv", "layer1.wdown", "final_norm", "lm_head"] {
+            assert!(ckpt.tensor(name).is_ok(), "{name} missing");
+        }
+        let cfg = ckpt.config;
+        let (w, scale) = ckpt
+            .ternary_tensor("layer0.wqkv", cfg.d_model + 2 * cfg.kv_dim(), cfg.d_model)
+            .unwrap();
+        assert!(scale > 0.0);
+        assert!(w.iter().all(|&x| (-1..=1).contains(&x)));
+        assert!(ckpt.param_count() > cfg.vocab * cfg.d_model);
+    }
+
+    #[test]
+    fn parse_rejects_corruption() {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 3).unwrap();
+        let bytes = ckpt.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::parse(&bad).is_err());
+        // Truncation.
+        assert!(Checkpoint::parse(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing junk.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Checkpoint::parse(&long).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TransformerConfig::toy();
+        c.n_heads = 3; // d_model 64 not divisible
+        assert!(Checkpoint::synthesize(c, 0).is_err());
+        let mut c = TransformerConfig::toy();
+        c.n_kv_heads = 3; // does not divide n_heads 4
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("tsar-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.tsarckp");
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 9).unwrap();
+        ckpt.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).ok();
+    }
+}

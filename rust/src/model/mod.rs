@@ -1,10 +1,23 @@
-//! Ternary-LLM architecture descriptions and per-phase workload
+//! Ternary-LLM architecture descriptions, per-phase workload
 //! extraction (paper §IV-A: BitNet models 125M–100B, Llama-b1.58-8B,
-//! Falcon3-b1.58-10B).
+//! Falcon3-b1.58-10B) — and the *executable* model: the in-tree
+//! checkpoint format ([`checkpoint`]), the kernel-path BitNet block
+//! ([`transformer`]), its pure-scalar ground truth ([`reference`]),
+//! and token sampling ([`sample`]).  The two forward-pass
+//! implementations share only the checkpoint loader and are pinned
+//! together by `tests/model_differential.rs`.
 
+pub mod checkpoint;
+pub mod reference;
+pub mod sample;
+pub mod transformer;
 pub mod workload;
 pub mod zoo;
 
+pub use checkpoint::{Checkpoint, Tensor, TensorData, TransformerConfig};
+pub use reference::ReferenceModel;
+pub use sample::{sample_token, SamplerConfig};
+pub use transformer::{LinearEngine, ModelKv, TernaryTransformer};
 pub use workload::{LayerOp, Workload};
 pub use zoo::{ModelSpec, MODEL_ZOO};
 

@@ -1,0 +1,142 @@
+//! Token sampling over model logits: greedy argmax, or seeded
+//! temperature / top-k sampling.
+//!
+//! Determinism contract (what `tests/model_serve.rs` pins): the sampled
+//! token is a pure function of `(sampler config, logits, history)` —
+//! the RNG is re-seeded per step from an FNV-1a fold of the history
+//! (the same scheme as `runtime::synthetic_next_token`), never from
+//! shared mutable state.  Worker count, batching, and scheduling order
+//! therefore cannot perturb a sequence's tokens.  Both the kernel-path
+//! [`super::TernaryTransformer`] stack and the scalar
+//! [`super::ReferenceModel`] call this one implementation, so sampling
+//! cannot be a source of differential drift.
+
+use crate::util::rng::Rng;
+
+/// Sampling parameters of one serving session.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    /// `<= 0` means greedy argmax (the default, and what the
+    /// differential/serving determinism tests run).
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest logits; `0` means the
+    /// whole vocabulary.  Ignored under greedy decoding.
+    pub top_k: usize,
+    /// Stream seed folded with the token history per step.
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+impl SamplerConfig {
+    pub fn greedy() -> SamplerConfig {
+        SamplerConfig::default()
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Greedy argmax with first-max tie-breaking — the shared deterministic
+/// rule both model implementations resolve f32 ties by.
+pub fn argmax(logits: &[f32]) -> i32 {
+    assert!(!logits.is_empty());
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Sample the next token from `logits` given the token `history` (the
+/// prompt plus everything generated so far).
+pub fn sample_token(cfg: &SamplerConfig, logits: &[f32], history: &[i32]) -> i32 {
+    assert!(!logits.is_empty());
+    if cfg.is_greedy() {
+        return argmax(logits);
+    }
+    // Candidate set: the top_k highest logits (all of them for 0 /
+    // oversized k), ties broken toward the lower index so the set is
+    // deterministic.
+    let mut order: Vec<usize> = (0..logits.len()).collect();
+    order.sort_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let k = if cfg.top_k == 0 { logits.len() } else { cfg.top_k.min(logits.len()) };
+    let cand = &order[..k];
+    // Softmax over logits / temperature (max-subtracted for stability).
+    let max = cand.iter().map(|&i| logits[i] / cfg.temperature).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> =
+        cand.iter().map(|&i| (logits[i] / cfg.temperature - max).exp()).collect();
+    let total: f32 = weights.iter().sum();
+    // One draw from a per-step RNG seeded by (seed, history): an FNV-1a
+    // fold, so the step depends only on the sequence so far.
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ cfg.seed;
+    for &t in history {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let draw = Rng::new(h).f64() as f32 * total;
+    let mut acc = 0.0f32;
+    for (&i, &w) in cand.iter().zip(&weights) {
+        acc += w;
+        if draw < acc {
+            return i as i32;
+        }
+    }
+    cand[k - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        let cfg = SamplerConfig::greedy();
+        assert_eq!(sample_token(&cfg, &[0.1, 0.9, 0.2], &[5, 6]), 1);
+    }
+
+    #[test]
+    fn sampling_is_history_deterministic() {
+        let cfg = SamplerConfig { temperature: 0.8, top_k: 3, seed: 99 };
+        let logits = [0.5f32, 1.5, -0.2, 2.0, 0.0];
+        let a = sample_token(&cfg, &logits, &[1, 2, 3]);
+        let b = sample_token(&cfg, &logits, &[1, 2, 3]);
+        assert_eq!(a, b);
+        assert!((0..5).contains(&a));
+    }
+
+    #[test]
+    fn different_histories_can_diverge() {
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 0, seed: 7 };
+        let logits: Vec<f32> = (0..64).map(|i| (i % 7) as f32 * 0.3).collect();
+        let picks: std::collections::HashSet<i32> =
+            (0..32).map(|t| sample_token(&cfg, &logits, &[t])).collect();
+        assert!(picks.len() > 1, "sampling never varied across histories");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let cfg = SamplerConfig { temperature: 0.5, top_k: 2, seed: 3 };
+        let logits = [10.0f32, -50.0, 9.0, -60.0];
+        for t in 0..50 {
+            let tok = sample_token(&cfg, &logits, &[t]);
+            assert!(tok == 0 || tok == 2, "token {tok} outside the top-2 set");
+        }
+    }
+
+    #[test]
+    fn zero_temperature_matches_argmax_everywhere() {
+        let logits: Vec<f32> = (0..17).map(|i| ((i * 31) % 13) as f32).collect();
+        let cfg = SamplerConfig { temperature: 0.0, top_k: 4, seed: 1 };
+        assert_eq!(sample_token(&cfg, &logits, &[9]), argmax(&logits));
+    }
+}

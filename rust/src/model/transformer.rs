@@ -1,0 +1,613 @@
+//! The kernel-path ternary transformer (DESIGN.md §2 "model block"):
+//! a BitNet-b1.58-style decoder block whose BitLinear GEMVs execute
+//! through the T-SAR ternary kernels — the native AVX2/scalar pshufb
+//! path ([`NativeGemv`]) or the modeled ISA ([`TsarKernel`]) — while
+//! everything around them (RMSNorm, rotary embedding, causal attention
+//! over per-sequence KV state, SiLU) runs in plain f32.
+//!
+//! Per block: `x += Wo·attn(rope(split(Wqkv·rmsnorm(x))))`, then
+//! `x += Wdown·(silu(gate)·up)` with `[gate|up] = Wgateup·rmsnorm(x)`;
+//! final RMSNorm and the ternary LM head produce the logits.
+//!
+//! ## The differential contract
+//!
+//! `tests/model_differential.rs` pins this implementation bit-for-bit
+//! against the independent scalar [`super::ReferenceModel`].  That is
+//! only meaningful because every step here is exactly reproducible:
+//!
+//! * BitLinear accumulates ternary×int8 products in exact i32 (both
+//!   kernel engines are pinned bit-identical by
+//!   `tests/native_differential.rs`), and the sums stay far below 2^24
+//!   so the f32 dequantization is exact too;
+//! * every f32 op outside the GEMVs (norm, rope, softmax, SiLU,
+//!   quantization) fixes one evaluation order, mirrored by the
+//!   reference — see the "order matters" notes on each helper.
+//!
+//! Batching is never semantic: a row of a batched GEMM runs the same
+//! kernel over the same packed bytes as a lone GEMV, so prefill over T
+//! tokens, one-token decode, and cross-sequence decode rounds
+//! ([`TernaryTransformer::decode_round`]) all emit identical numbers.
+
+use crate::config::IsaConfig;
+use crate::kernels::native::{NativeGemv, NativePath};
+use crate::kernels::{Dataflow, TernaryKernel, TsarKernel};
+use crate::quant::absmax_quantize;
+use crate::quant::pack::PshufbPacked;
+use crate::sim::GemmShape;
+use crate::util::error::Result;
+
+use super::checkpoint::{Checkpoint, TransformerConfig};
+
+/// Which ternary kernel executes the BitLinear GEMVs.
+pub enum LinearEngine {
+    /// Host-SIMD execution: AVX2 pshufb where detected, the portable
+    /// scalar fallback elsewhere (`TSAR_NATIVE_FORCE_SCALAR=1` forces
+    /// it).  `threads` chunks output tiles across scoped workers.
+    Native(NativeGemv),
+    /// The modeled T-SAR ISA (`tsar::exec` semantics, OP dataflow) —
+    /// slower, but exercises the register-file model end to end.
+    Modeled(IsaConfig),
+}
+
+impl LinearEngine {
+    /// Native engine on the detected best path.
+    pub fn native(isa: IsaConfig, threads: usize) -> Result<LinearEngine> {
+        Ok(LinearEngine::Native(NativeGemv::new(isa)?.with_threads(threads.max(1))?))
+    }
+
+    /// Modeled-ISA engine (OP dataflow).
+    pub fn modeled(isa: IsaConfig) -> LinearEngine {
+        LinearEngine::Modeled(isa)
+    }
+
+    /// Short display name for logs/describe strings.
+    pub fn name(&self) -> String {
+        match self {
+            LinearEngine::Native(g) => format!("native-{}/{}", g.path().name(), g.isa().name()),
+            LinearEngine::Modeled(isa) => format!("modeled/{}", isa.name()),
+        }
+    }
+
+    pub fn native_path(&self) -> Option<NativePath> {
+        match self {
+            LinearEngine::Native(g) => Some(g.path()),
+            LinearEngine::Modeled(_) => None,
+        }
+    }
+}
+
+/// Weight storage matching the engine: the native path keeps the
+/// pshufb execution layout, the modeled path replays raw ternary rows.
+enum LinearWeights {
+    Packed(PshufbPacked),
+    Raw(Vec<i8>),
+}
+
+/// One ternary linear site: `out = W · x` with W a `rows × cols`
+/// ternary matrix scaled by one absmean factor.
+pub struct BitLinear {
+    site: &'static str,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    weights: LinearWeights,
+}
+
+impl BitLinear {
+    fn new(
+        engine: &LinearEngine,
+        site: &'static str,
+        w: &[i8],
+        scale: f32,
+        rows: usize,
+        cols: usize,
+    ) -> Result<BitLinear> {
+        crate::ensure!(w.len() == rows * cols, "{site}: weight length mismatch");
+        let weights = match engine {
+            LinearEngine::Native(g) => LinearWeights::Packed(g.pack(w, rows, cols)?),
+            LinearEngine::Modeled(_) => LinearWeights::Raw(w.to_vec()),
+        };
+        Ok(BitLinear { site, rows, cols, scale, weights })
+    }
+
+    /// Batched BitLinear forward over `n` f32 activation rows:
+    /// per-row absmax int8 quantization, the ternary integer GEMM on
+    /// the configured engine, then exact dequantization by
+    /// `scale / s_row`.  The reference model mirrors this exact
+    /// pipeline in scalar f32 — keep the op order in sync.
+    fn forward(&self, engine: &LinearEngine, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        crate::ensure!(x.len() == n * self.cols, "{}: activation shape mismatch", self.site);
+        match (engine, &self.weights) {
+            // Native: the kernels' fused batched BitLinear entry.
+            (LinearEngine::Native(g), LinearWeights::Packed(p)) => {
+                let mut out = vec![0f32; n * self.rows];
+                g.gemm_bitlinear(x, p, n, self.scale, &mut out)?;
+                Ok(out)
+            }
+            // Modeled ISA: the same quantize → integer GEMM →
+            // dequantize pipeline, with the GEMM replayed through the
+            // register-file model.  Must mirror `gemm_bitlinear`'s op
+            // order exactly (the engines are pinned bit-identical).
+            (LinearEngine::Modeled(isa), LinearWeights::Raw(w)) => {
+                let mut acts = Vec::with_capacity(n * self.cols);
+                let mut row_scales = Vec::with_capacity(n);
+                for row in x.chunks_exact(self.cols) {
+                    let (q, s) = absmax_quantize(row);
+                    acts.extend_from_slice(&q);
+                    row_scales.push(s);
+                }
+                let ints = TsarKernel::new(*isa, Dataflow::Op).run(
+                    &acts,
+                    w,
+                    GemmShape::new(n, self.cols, self.rows),
+                );
+                let mut out = Vec::with_capacity(n * self.rows);
+                for (ints_row, &s) in ints.chunks_exact(self.rows).zip(&row_scales) {
+                    let deq = self.scale / s;
+                    out.extend(ints_row.iter().map(|&acc| acc as f32 * deq));
+                }
+                Ok(out)
+            }
+            _ => crate::bail!("{}: weight layout does not match the engine", self.site),
+        }
+    }
+}
+
+/// Per-sequence KV state: one flat key and value buffer per layer
+/// (`len` cached positions × `kv_dim` floats each).  Cloned by the
+/// backend on every step, so steps stay functional over explicit state
+/// like every other [`crate::runtime::Backend`].
+#[derive(Debug, Clone)]
+pub struct ModelKv {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl ModelKv {
+    fn new(n_layers: usize) -> ModelKv {
+        ModelKv { k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers], len: 0 }
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+struct Layer {
+    attn_norm: Vec<f32>,
+    wqkv: BitLinear,
+    wo: BitLinear,
+    ffn_norm: Vec<f32>,
+    wgateup: BitLinear,
+    wdown: BitLinear,
+}
+
+/// The kernel-path model: checkpoint weights packed for one
+/// [`LinearEngine`], driven through prefill/decode by
+/// [`crate::runtime::ModelBackend`].
+pub struct TernaryTransformer {
+    config: TransformerConfig,
+    engine: LinearEngine,
+    embed: Vec<f32>,
+    layers: Vec<Layer>,
+    final_norm: Vec<f32>,
+    lm_head: BitLinear,
+}
+
+impl TernaryTransformer {
+    /// Load (pack) every tensor of `ckpt` for `engine`.
+    pub fn from_checkpoint(ckpt: &Checkpoint, engine: LinearEngine) -> Result<TernaryTransformer> {
+        let cfg = ckpt.config;
+        cfg.validate()?;
+        let d = cfg.d_model;
+        let kv = cfg.kv_dim();
+        let f = cfg.ffn_dim;
+        let embed = ckpt.f32_tensor("embed", cfg.vocab * d)?.to_vec();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let lin = |name: &str, site, rows, cols| -> Result<BitLinear> {
+                let (w, scale) = ckpt.ternary_tensor(&format!("layer{l}.{name}"), rows, cols)?;
+                BitLinear::new(&engine, site, w, scale, rows, cols)
+            };
+            layers.push(Layer {
+                attn_norm: ckpt.f32_tensor(&format!("layer{l}.attn_norm"), d)?.to_vec(),
+                wqkv: lin("wqkv", "wqkv", d + 2 * kv, d)?,
+                wo: lin("wo", "wo", d, d)?,
+                ffn_norm: ckpt.f32_tensor(&format!("layer{l}.ffn_norm"), d)?.to_vec(),
+                wgateup: lin("wgateup", "ffn-gate-up", 2 * f, d)?,
+                wdown: lin("wdown", "ffn-down", d, f)?,
+            });
+        }
+        let final_norm = ckpt.f32_tensor("final_norm", d)?.to_vec();
+        let (w, scale) = ckpt.ternary_tensor("lm_head", cfg.vocab, d)?;
+        let lm_head = BitLinear::new(&engine, "lm-head", w, scale, cfg.vocab, d)?;
+        Ok(TernaryTransformer { config: cfg, engine, embed, layers, final_norm, lm_head })
+    }
+
+    pub fn config(&self) -> &TransformerConfig {
+        &self.config
+    }
+
+    pub fn engine(&self) -> &LinearEngine {
+        &self.engine
+    }
+
+    /// Fresh empty KV state.
+    pub fn new_kv(&self) -> ModelKv {
+        ModelKv::new(self.config.n_layers)
+    }
+
+    /// The decode-shaped (N = 1) GEMV of every BitLinear site, for
+    /// plan summaries.
+    pub fn site_shapes(&self) -> Vec<(&'static str, GemmShape)> {
+        let mut sites = Vec::new();
+        if let Some(layer) = self.layers.first() {
+            for lin in [&layer.wqkv, &layer.wo, &layer.wgateup, &layer.wdown] {
+                sites.push((lin.site, GemmShape::new(1, lin.cols, lin.rows)));
+            }
+        }
+        sites.push((self.lm_head.site, GemmShape::new(1, self.lm_head.cols, self.lm_head.rows)));
+        sites
+    }
+
+    /// Packed/raw weight bytes held by the BitLinear sites.
+    pub fn weight_bytes(&self) -> usize {
+        let lin_bytes = |l: &BitLinear| match &l.weights {
+            LinearWeights::Packed(p) => p.packed_bytes(),
+            LinearWeights::Raw(w) => w.len(),
+        };
+        self.layers
+            .iter()
+            .flat_map(|l| [&l.wqkv, &l.wo, &l.wgateup, &l.wdown])
+            .map(lin_bytes)
+            .sum::<usize>()
+            + lin_bytes(&self.lm_head)
+    }
+
+    /// Forward `tokens` (appended after `kv`'s cached positions),
+    /// returning the last position's logits.  `tokens.len() > 1` is
+    /// the batched prefill path: the BitLinear sites run one n-row
+    /// GEMM per site instead of n GEMVs — numerically identical, one
+    /// weight pass.
+    pub fn forward(&self, tokens: &[i32], kv: &mut ModelKv) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        crate::ensure!(n >= 1, "forward needs at least one token");
+        crate::ensure!(kv.k.len() == self.config.n_layers, "KV state layer count mismatch");
+        let d = self.config.d_model;
+        let base = kv.len;
+        let mut xs = vec![0.0f32; n * d];
+        for (row, &t) in xs.chunks_exact_mut(d).zip(tokens) {
+            crate::ensure!(
+                t >= 0 && (t as usize) < self.config.vocab,
+                "token {t} outside vocab {}",
+                self.config.vocab
+            );
+            row.copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.block(layer, &mut xs, n, |i| base + i, kv_at(&mut kv.k, &mut kv.v, li))?;
+        }
+        kv.len += n;
+        // Only the last position's logits are observed (sampling), so
+        // the LM head runs on that single row.
+        let last = &xs[(n - 1) * d..];
+        let mut h = vec![0.0f32; d];
+        rms_norm_row(last, &self.final_norm, self.config.norm_eps, &mut h);
+        self.lm_head.forward(&self.engine, &h, 1)
+    }
+
+    /// One cross-sequence batched decode round: advance each sequence
+    /// by its token (at its own position), stacking all sequences'
+    /// activation rows into one n-row GEMM per BitLinear site.
+    /// Returns each sequence's logits.  Token outputs are bit-identical
+    /// to serialized [`TernaryTransformer::forward`] calls — batching
+    /// is a throughput optimization, never a semantic one (the
+    /// `decode_batch` contract of [`crate::runtime::Backend`]).
+    pub fn decode_round(&self, tokens: &[i32], kvs: &mut [ModelKv]) -> Result<Vec<Vec<f32>>> {
+        let n = tokens.len();
+        crate::ensure!(n >= 1, "empty decode round");
+        crate::ensure!(kvs.len() == n, "round has {n} tokens but {} KV states", kvs.len());
+        let d = self.config.d_model;
+        let mut xs = vec![0.0f32; n * d];
+        for (row, &t) in xs.chunks_exact_mut(d).zip(tokens) {
+            crate::ensure!(
+                t >= 0 && (t as usize) < self.config.vocab,
+                "token {t} outside vocab {}",
+                self.config.vocab
+            );
+            row.copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.block_round(layer, li, &mut xs, kvs)?;
+        }
+        for kv in kvs.iter_mut() {
+            kv.len += 1;
+        }
+        let mut normed = vec![0.0f32; n * d];
+        for (out, x) in normed.chunks_exact_mut(d).zip(xs.chunks_exact(d)) {
+            rms_norm_row(x, &self.final_norm, self.config.norm_eps, out);
+        }
+        let logits = self.lm_head.forward(&self.engine, &normed, n)?;
+        Ok(logits.chunks_exact(self.config.vocab).map(|r| r.to_vec()).collect())
+    }
+
+    /// One decoder block over `n` same-sequence rows (`pos_of(i)` maps
+    /// the row index to its absolute position; rows append to one
+    /// shared layer cache in order).
+    fn block(
+        &self,
+        layer: &Layer,
+        xs: &mut [f32],
+        n: usize,
+        pos_of: impl Fn(usize) -> usize,
+        (lk, lv): (&mut Vec<f32>, &mut Vec<f32>),
+    ) -> Result<()> {
+        let cfg = &self.config;
+        let d = cfg.d_model;
+        let kvd = cfg.kv_dim();
+        let mut normed = vec![0.0f32; n * d];
+        for (out, x) in normed.chunks_exact_mut(d).zip(xs.chunks_exact(d)) {
+            rms_norm_row(x, &layer.attn_norm, cfg.norm_eps, out);
+        }
+        let qkv = layer.wqkv.forward(&self.engine, &normed, n)?;
+        let mut attn = vec![0.0f32; n * d];
+        for (i, (qkv_row, attn_row)) in
+            qkv.chunks_exact(d + 2 * kvd).zip(attn.chunks_exact_mut(d)).enumerate()
+        {
+            let pos = pos_of(i);
+            let mut q = qkv_row[..d].to_vec();
+            let mut k = qkv_row[d..d + kvd].to_vec();
+            rope_rotate(&mut q, cfg.n_heads, cfg.head_dim(), pos, cfg.rope_theta);
+            rope_rotate(&mut k, cfg.n_kv_heads, cfg.head_dim(), pos, cfg.rope_theta);
+            lk.extend_from_slice(&k);
+            lv.extend_from_slice(&qkv_row[d + kvd..]);
+            self.attend_row(&q, lk, lv, pos + 1, attn_row);
+        }
+        let wo_out = layer.wo.forward(&self.engine, &attn, n)?;
+        for (x, o) in xs.iter_mut().zip(&wo_out) {
+            *x += o;
+        }
+        self.mlp(layer, xs, n)
+    }
+
+    /// The same block over `n` independent sequences, each with its own
+    /// cache and position.
+    fn block_round(&self, layer: &Layer, li: usize, xs: &mut [f32], kvs: &mut [ModelKv]) -> Result<()> {
+        let cfg = &self.config;
+        let d = cfg.d_model;
+        let kvd = cfg.kv_dim();
+        let n = kvs.len();
+        let mut normed = vec![0.0f32; n * d];
+        for (out, x) in normed.chunks_exact_mut(d).zip(xs.chunks_exact(d)) {
+            rms_norm_row(x, &layer.attn_norm, cfg.norm_eps, out);
+        }
+        let qkv = layer.wqkv.forward(&self.engine, &normed, n)?;
+        let mut attn = vec![0.0f32; n * d];
+        for ((qkv_row, attn_row), kv) in
+            qkv.chunks_exact(d + 2 * kvd).zip(attn.chunks_exact_mut(d)).zip(kvs.iter_mut())
+        {
+            let pos = kv.len;
+            let mut q = qkv_row[..d].to_vec();
+            let mut k = qkv_row[d..d + kvd].to_vec();
+            rope_rotate(&mut q, cfg.n_heads, cfg.head_dim(), pos, cfg.rope_theta);
+            rope_rotate(&mut k, cfg.n_kv_heads, cfg.head_dim(), pos, cfg.rope_theta);
+            kv.k[li].extend_from_slice(&k);
+            kv.v[li].extend_from_slice(&qkv_row[d + kvd..]);
+            self.attend_row(&q, &kv.k[li], &kv.v[li], pos + 1, attn_row);
+        }
+        let wo_out = layer.wo.forward(&self.engine, &attn, n)?;
+        for (x, o) in xs.iter_mut().zip(&wo_out) {
+            *x += o;
+        }
+        self.mlp(layer, xs, n)
+    }
+
+    /// The gated MLP half of the block: `x += Wdown·(silu(gate)·up)`.
+    fn mlp(&self, layer: &Layer, xs: &mut [f32], n: usize) -> Result<()> {
+        let cfg = &self.config;
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        let mut normed = vec![0.0f32; n * d];
+        for (out, x) in normed.chunks_exact_mut(d).zip(xs.chunks_exact(d)) {
+            rms_norm_row(x, &layer.ffn_norm, cfg.norm_eps, out);
+        }
+        let gu = layer.wgateup.forward(&self.engine, &normed, n)?;
+        let mut act = vec![0.0f32; n * f];
+        for (act_row, gu_row) in act.chunks_exact_mut(f).zip(gu.chunks_exact(2 * f)) {
+            let (gate, up) = gu_row.split_at(f);
+            for ((a, &g), &u) in act_row.iter_mut().zip(gate).zip(up) {
+                *a = silu(g) * u;
+            }
+        }
+        let down = layer.wdown.forward(&self.engine, &act, n)?;
+        for (x, o) in xs.iter_mut().zip(&down) {
+            *x += o;
+        }
+        Ok(())
+    }
+
+    /// Causal multi-head attention for one query row whose position is
+    /// `t_len - 1`: `keys`/`vals` hold `t_len` cached kv_dim rows.
+    /// Order matters (mirrored by the reference): ascending-index dot
+    /// products, max-subtracted exp with the sum accumulated in the
+    /// same pass, then the t-outer weighted-value accumulation.
+    fn attend_row(&self, q: &[f32], keys: &[f32], vals: &[f32], t_len: usize, out: &mut [f32]) {
+        let cfg = &self.config;
+        let hd = cfg.head_dim();
+        let kvd = cfg.kv_dim();
+        let group = cfg.n_heads / cfg.n_kv_heads;
+        let inv = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0.0f32; t_len];
+        for h in 0..cfg.n_heads {
+            let kvh = h / group;
+            let qh = &q[h * hd..(h + 1) * hd];
+            for (score, key_row) in scores.iter_mut().zip(keys.chunks_exact(kvd)) {
+                let kh = &key_row[kvh * hd..(kvh + 1) * hd];
+                let mut dot = 0.0f32;
+                for (&a, &b) in qh.iter().zip(kh) {
+                    dot += a * b;
+                }
+                *score = dot * inv;
+            }
+            let max = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                sum += *s;
+            }
+            let oh = &mut out[h * hd..(h + 1) * hd];
+            oh.fill(0.0);
+            for (&p, val_row) in scores.iter().zip(vals.chunks_exact(kvd)) {
+                let w = p / sum;
+                let vh = &val_row[kvh * hd..(kvh + 1) * hd];
+                for (o, &v) in oh.iter_mut().zip(vh) {
+                    *o += w * v;
+                }
+            }
+        }
+    }
+}
+
+/// Split borrow of one layer's key/value buffers.
+fn kv_at<'a>(
+    k: &'a mut [Vec<f32>],
+    v: &'a mut [Vec<f32>],
+    li: usize,
+) -> (&'a mut Vec<f32>, &'a mut Vec<f32>) {
+    (&mut k[li], &mut v[li])
+}
+
+/// RMSNorm one row.  Order matters (mirrored by the reference):
+/// ascending sum of squares, `inv = 1/sqrt(ss/n + eps)`, then
+/// `x · inv · gain` left to right.
+fn rms_norm_row(x: &[f32], gains: &[f32], eps: f32, out: &mut [f32]) {
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / ((ss / x.len() as f32) + eps).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gains) {
+        *o = v * inv * g;
+    }
+}
+
+/// Llama-style half-split rotary embedding over `heads` contiguous
+/// heads of `head_dim` floats.  Order matters (mirrored by the
+/// reference): `freq = 1/theta^(2i/hd)`, separate `.sin()`/`.cos()`
+/// calls, rotate `(x[i], x[i+hd/2])`.
+fn rope_rotate(x: &mut [f32], heads: usize, head_dim: usize, pos: usize, theta: f32) {
+    let half = head_dim / 2;
+    for h in 0..heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let freq = 1.0f32 / theta.powf((2 * i) as f32 / head_dim as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = (ang.sin(), ang.cos());
+            let a = x[base + i];
+            let b = x[base + i + half];
+            x[base + i] = a * cos - b * sin;
+            x[base + i + half] = a * sin + b * cos;
+        }
+    }
+}
+
+/// SiLU, the BitNet MLP activation: `x / (1 + e^(-x))` (mirrored by
+/// the reference).
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model(engine: LinearEngine) -> TernaryTransformer {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 0xAB).unwrap();
+        TernaryTransformer::from_checkpoint(&ckpt, engine).unwrap()
+    }
+
+    #[test]
+    fn batched_prefill_matches_token_by_token() {
+        let m = toy_model(LinearEngine::native(IsaConfig::C2, 1).unwrap());
+        let prompt = [3i32, 19, 7, 250];
+        let mut kv_batched = m.new_kv();
+        let batched = m.forward(&prompt, &mut kv_batched).unwrap();
+        let mut kv_seq = m.new_kv();
+        let mut seq = Vec::new();
+        for &t in &prompt {
+            seq = m.forward(&[t], &mut kv_seq).unwrap();
+        }
+        assert_eq!(batched, seq, "batched prefill diverged from sequential");
+        assert_eq!(kv_batched.len(), kv_seq.len());
+        assert_eq!(kv_batched.k, kv_seq.k, "KV caches diverged");
+    }
+
+    #[test]
+    fn decode_round_matches_serialized_decode() {
+        let m = toy_model(LinearEngine::native(IsaConfig::C2, 1).unwrap());
+        // Three sequences with different histories and lengths.
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[9], &[100, 200]];
+        let mut kvs: Vec<ModelKv> = Vec::new();
+        for p in prompts {
+            let mut kv = m.new_kv();
+            m.forward(p, &mut kv).unwrap();
+            kvs.push(kv);
+        }
+        let tokens = [5i32, 6, 7];
+        let mut serial_logits = Vec::new();
+        let mut serial_kvs = kvs.clone();
+        for (kv, &t) in serial_kvs.iter_mut().zip(&tokens) {
+            serial_logits.push(m.forward(&[t], kv).unwrap());
+        }
+        let round = m.decode_round(&tokens, &mut kvs).unwrap();
+        assert_eq!(round, serial_logits, "batched round diverged from serialized decode");
+        for (a, b) in kvs.iter().zip(&serial_kvs) {
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.k, b.k, "KV state diverged between batched and serialized");
+            assert_eq!(a.v, b.v);
+        }
+    }
+
+    #[test]
+    fn native_and_modeled_engines_agree_bitwise() {
+        let native = toy_model(LinearEngine::native(IsaConfig::C2, 1).unwrap());
+        let modeled = toy_model(LinearEngine::modeled(IsaConfig::C2));
+        let prompt = [42i32, 17, 99];
+        let a = native.forward(&prompt, &mut native.new_kv()).unwrap();
+        let b = modeled.forward(&prompt, &mut modeled.new_kv()).unwrap();
+        assert_eq!(a, b, "kernel engines diverged on the same checkpoint");
+    }
+
+    #[test]
+    fn logits_are_finite_and_vocab_sized() {
+        let m = toy_model(LinearEngine::native(IsaConfig::C4, 2).unwrap());
+        let logits = m.forward(&[0, 255], &mut m.new_kv()).unwrap();
+        assert_eq!(logits.len(), m.config().vocab);
+        assert!(logits.iter().all(|l| l.is_finite()));
+        assert!(logits.iter().any(|&l| l != 0.0));
+    }
+
+    #[test]
+    fn out_of_vocab_token_rejected() {
+        let m = toy_model(LinearEngine::native(IsaConfig::C2, 1).unwrap());
+        assert!(m.forward(&[256], &mut m.new_kv()).is_err());
+        assert!(m.forward(&[-1], &mut m.new_kv()).is_err());
+    }
+
+    #[test]
+    fn site_shapes_cover_the_block() {
+        let m = toy_model(LinearEngine::native(IsaConfig::C2, 1).unwrap());
+        let sites = m.site_shapes();
+        let names: Vec<&str> = sites.iter().map(|(s, _)| *s).collect();
+        for want in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
+            assert!(names.contains(&want), "{want} missing from {names:?}");
+        }
+        assert!(m.weight_bytes() > 0);
+    }
+}

@@ -11,6 +11,8 @@ pub mod pack;
 
 pub use pack::{PshufbPacked, Tl2Packed, TmacPacked, TsarEncoded};
 
+use crate::util::error::Result;
+
 /// Absmean ternarization: `scale = mean(|w|)`,
 /// `w_t = clip(round(w/scale), -1, 1)` (BitNet b1.58).
 pub fn absmean_ternarize(w: &[f32]) -> (Vec<i8>, f32) {
@@ -75,6 +77,55 @@ pub fn encode_indices(w_t: &[i8], m: usize, k: usize, c: usize) -> TsarEncoded {
         }
     }
     TsarEncoded { m, k, c, wd, ws }
+}
+
+/// Pack a ternary buffer into two disjoint bit-planes — the checkpoint
+/// serialization of a BitLinear tensor (1 + 1 bit per weight, the §II
+/// storage density).  Bit `i % 8` of `plus[i / 8]` is set iff
+/// `w_t[i] == 1`; the `minus` plane likewise marks the −1 positions.
+/// Trailing bits of the last byte stay zero.
+pub fn pack_ternary_planes(w_t: &[i8]) -> (Vec<u8>, Vec<u8>) {
+    let bytes = w_t.len().div_ceil(8);
+    let mut plus = vec![0u8; bytes];
+    let mut minus = vec![0u8; bytes];
+    for (i, &w) in w_t.iter().enumerate() {
+        debug_assert!((-1..=1).contains(&w));
+        match w {
+            1 => plus[i / 8] |= 1 << (i % 8),
+            -1 => minus[i / 8] |= 1 << (i % 8),
+            _ => {}
+        }
+    }
+    (plus, minus)
+}
+
+/// Inverse of [`pack_ternary_planes`]: rebuild `n` ternary weights.
+/// Rejects malformed planes — wrong length, a position set in both
+/// planes, or junk in the trailing bits — so a corrupted checkpoint
+/// fails loudly at load instead of decoding to garbage weights.
+pub fn unpack_ternary_planes(plus: &[u8], minus: &[u8], n: usize) -> Result<Vec<i8>> {
+    let bytes = n.div_ceil(8);
+    crate::ensure!(
+        plus.len() == bytes && minus.len() == bytes,
+        "ternary planes hold {}/{} bytes, expected {bytes} for {n} weights",
+        plus.len(),
+        minus.len()
+    );
+    let mut w = vec![0i8; n];
+    for (i, slot) in w.iter_mut().enumerate() {
+        let p = plus[i / 8] >> (i % 8) & 1;
+        let m = minus[i / 8] >> (i % 8) & 1;
+        crate::ensure!(p & m == 0, "weight {i} is marked both +1 and -1");
+        *slot = p as i8 - m as i8;
+    }
+    if n % 8 != 0 {
+        let mask = !((1u16 << (n % 8)) as u8).wrapping_sub(1);
+        crate::ensure!(
+            plus[bytes - 1] & mask == 0 && minus[bytes - 1] & mask == 0,
+            "trailing plane bits beyond {n} weights are set"
+        );
+    }
+    Ok(w)
 }
 
 /// Dequantize helper for tests: reconstruct ternary weights from indices.
@@ -160,5 +211,32 @@ mod tests {
     #[should_panic]
     fn encode_rejects_bad_k() {
         encode_indices(&[0i8; 6], 2, 3, 2);
+    }
+
+    #[test]
+    fn plane_roundtrip_on_unaligned_lengths() {
+        let mut rng = Rng::new(4);
+        for n in [1usize, 7, 8, 9, 63, 64, 100] {
+            let w = rng.ternary_matrix(1, n, 0.4);
+            let (plus, minus) = pack_ternary_planes(&w);
+            assert_eq!(plus.len(), n.div_ceil(8));
+            assert_eq!(unpack_ternary_planes(&plus, &minus, n).unwrap(), w, "n={n}");
+        }
+    }
+
+    #[test]
+    fn plane_unpack_rejects_corruption() {
+        let w = [1i8, -1, 0, 1, 1];
+        let (plus, minus) = pack_ternary_planes(&w);
+        // Wrong length.
+        assert!(unpack_ternary_planes(&plus, &minus, 9).is_err());
+        // Both planes set at one position.
+        let mut bad = minus.clone();
+        bad[0] |= 1;
+        assert!(unpack_ternary_planes(&plus, &bad, 5).is_err());
+        // Junk past the last weight.
+        let mut tail = plus.clone();
+        tail[0] |= 1 << 7;
+        assert!(unpack_ternary_planes(&tail, &minus, 5).is_err());
     }
 }

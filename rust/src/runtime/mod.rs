@@ -14,6 +14,11 @@
 //!   native AVX2/scalar kernels (`kernels::native`) and reports no
 //!   simulated cost, so the server times real wall-clock decode
 //!   (`tsar-cli serve --backend native`).
+//! * [`ModelBackend`] — a *real* forward pass: every step samples from
+//!   logits produced by the checkpoint-loaded ternary transformer
+//!   (`model::TernaryTransformer`) with true per-layer KV caches, its
+//!   BitLinear GEMVs routed through the native or modeled kernels
+//!   (`tsar-cli serve --backend model`).
 //! * [`ModelRuntime`] (`--features pjrt`) — the PJRT CPU client
 //!   executing AOT HLO-text artifacts from `python/compile/aot.py`
 //!   (DESIGN.md §4).  The `xla`/`anyhow` crates are only reachable
@@ -25,6 +30,7 @@
 
 pub mod backend;
 pub mod manifest;
+pub mod model_backend;
 pub mod native_backend;
 pub mod sim_backend;
 
@@ -33,6 +39,7 @@ pub mod pjrt;
 
 pub use backend::{Backend, BatchItem, Step};
 pub use manifest::{DType, EntryPoint, Manifest, ModelConfig, ParamMeta};
+pub use model_backend::{ModelBackend, ModelBackendConfig, ModelKvCache};
 pub use native_backend::NativeBackend;
 pub use sim_backend::{SimBackend, SimBackendConfig, SimKvCache};
 

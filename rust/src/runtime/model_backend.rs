@@ -1,0 +1,350 @@
+//! The real-model backend: `tsar-cli serve --backend model`.
+//!
+//! Unlike [`super::SimBackend`] / [`super::NativeBackend`] — whose
+//! token *values* come from a synthetic seeded stream — every step
+//! here samples from logits produced by the checkpoint-loaded
+//! [`TernaryTransformer`] forward pass, with per-sequence KV state
+//! that is a real per-layer key/value cache rather than a token
+//! history.  Steps report `cost_s: None`, so the serving lanes time
+//! real wall-clock execution.
+//!
+//! Determinism contracts the serving tests pin
+//! (`tests/model_serve.rs`):
+//!
+//! * greedy decoding is a pure function of the prompt — worker count,
+//!   batching, and scheduling order cannot change a sequence's tokens
+//!   (sampling re-seeds per step from the token history);
+//! * [`Backend::decode_batch`] routes whole rounds through
+//!   [`TernaryTransformer::decode_round`] (one n-row GEMM per
+//!   BitLinear site) and produces per-sequence tokens *and KV state*
+//!   bit-identical to the serialized default path.
+
+use crate::model::checkpoint::Checkpoint;
+use crate::model::sample::{sample_token, SamplerConfig};
+use crate::model::transformer::{LinearEngine, ModelKv, TernaryTransformer};
+use crate::util::error::Result;
+
+use super::backend::{Backend, BatchItem, Step};
+use super::manifest::ModelConfig;
+
+/// Serving-window + sampling parameters of a [`ModelBackend`].
+#[derive(Debug, Clone, Copy)]
+pub struct ModelBackendConfig {
+    /// Padded prompt window.
+    pub prefill_len: usize,
+    /// KV capacity in tokens.
+    pub max_seq: usize,
+    /// Sampling behaviour (greedy by default).
+    pub sampler: SamplerConfig,
+}
+
+impl Default for ModelBackendConfig {
+    fn default() -> Self {
+        ModelBackendConfig {
+            prefill_len: 32,
+            max_seq: 160,
+            sampler: SamplerConfig::greedy(),
+        }
+    }
+}
+
+/// Per-sequence state: the transformer's layer KV cache plus the token
+/// history (prompt + everything fed so far) that seeds the sampler.
+#[derive(Debug, Clone)]
+pub struct ModelKvCache {
+    pub(crate) kv: ModelKv,
+    pub(crate) history: Vec<i32>,
+}
+
+impl ModelKvCache {
+    /// Cached positions (tokens the model has consumed).
+    pub fn len(&self) -> usize {
+        self.kv.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kv.is_empty()
+    }
+}
+
+/// [`Backend`] over the real ternary forward pass.
+pub struct ModelBackend {
+    model: TernaryTransformer,
+    config: ModelConfig,
+    sampler: SamplerConfig,
+    ckpt_seed: u64,
+}
+
+impl ModelBackend {
+    /// Load `ckpt` for `engine` and wrap it in the serving window of
+    /// `cfg`.
+    pub fn new(
+        ckpt: &Checkpoint,
+        engine: LinearEngine,
+        cfg: ModelBackendConfig,
+    ) -> Result<ModelBackend> {
+        crate::ensure!(cfg.prefill_len >= 1, "prefill window must be at least 1");
+        crate::ensure!(
+            cfg.max_seq > cfg.prefill_len,
+            "max_seq must exceed the prefill window"
+        );
+        let model = TernaryTransformer::from_checkpoint(ckpt, engine)?;
+        let c = model.config();
+        let config = ModelConfig {
+            vocab: c.vocab,
+            d_model: c.d_model,
+            n_layers: c.n_layers,
+            n_heads: c.n_heads,
+            ffn_dim: c.ffn_dim,
+            max_seq: cfg.max_seq,
+            prefill_len: cfg.prefill_len,
+        };
+        Ok(ModelBackend { model, config, sampler: cfg.sampler, ckpt_seed: ckpt.seed })
+    }
+
+    pub fn model(&self) -> &TernaryTransformer {
+        &self.model
+    }
+
+    pub fn sampler(&self) -> &SamplerConfig {
+        &self.sampler
+    }
+
+    /// Weight bytes held in the engine's execution layout.
+    pub fn weight_bytes(&self) -> usize {
+        self.model.weight_bytes()
+    }
+
+    fn sample(&self, logits: &[f32], history: &[i32]) -> i32 {
+        sample_token(&self.sampler, logits, history)
+    }
+}
+
+impl Backend for ModelBackend {
+    type Cache = ModelKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn describe(&self) -> String {
+        let c = self.model.config();
+        let mode = if self.sampler.is_greedy() {
+            "greedy".to_string()
+        } else {
+            format!("t={} k={}", self.sampler.temperature, self.sampler.top_k)
+        };
+        format!(
+            "model:ckpt(seed={:#x}) L={} d={} heads={}/{} ffn={} vocab={} via {} ({mode})",
+            self.ckpt_seed,
+            c.n_layers,
+            c.d_model,
+            c.n_heads,
+            c.n_kv_heads,
+            c.ffn_dim,
+            c.vocab,
+            self.model.engine().name()
+        )
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<ModelKvCache>> {
+        let p = self.config.prefill_len;
+        crate::ensure!(tokens.len() == p, "expected {p} padded tokens");
+        crate::ensure!(
+            prompt_len >= 1 && prompt_len as usize <= p,
+            "prompt_len {prompt_len} outside the prefill window"
+        );
+        let history: Vec<i32> = tokens[..prompt_len as usize].to_vec();
+        let mut kv = self.model.new_kv();
+        let logits = self.model.forward(&history, &mut kv)?;
+        let next_token = self.sample(&logits, &history);
+        Ok(Step {
+            next_token,
+            cache: ModelKvCache { kv, history },
+            cost_s: None, // real backend: the lane measures wall-clock
+        })
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &ModelKvCache) -> Result<Step<ModelKvCache>> {
+        crate::ensure!(
+            (pos as usize) < self.config.max_seq,
+            "KV cache exhausted at pos {pos}"
+        );
+        crate::ensure!(
+            pos as usize == cache.kv.len(),
+            "decode pos {pos} does not match the {} cached positions",
+            cache.kv.len()
+        );
+        let mut kv = cache.kv.clone();
+        let logits = self.model.forward(&[token], &mut kv)?;
+        let mut history = cache.history.clone();
+        history.push(token);
+        let next_token = self.sample(&logits, &history);
+        Ok(Step {
+            next_token,
+            cache: ModelKvCache { kv, history },
+            cost_s: None,
+        })
+    }
+
+    /// One real batched round: all sequences' activation rows stack
+    /// into one n-row GEMM per BitLinear site
+    /// ([`TernaryTransformer::decode_round`]).  Tokens and successor
+    /// KV state are bit-identical to the serialized default path —
+    /// `tests/model_serve.rs` carries the interleaved-batch-width
+    /// regression test.
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, ModelKvCache>],
+    ) -> Result<Vec<Step<ModelKvCache>>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut tokens = Vec::with_capacity(reqs.len());
+        let mut kvs = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            crate::ensure!(
+                (r.pos as usize) < self.config.max_seq,
+                "KV cache exhausted at pos {}",
+                r.pos
+            );
+            crate::ensure!(
+                r.pos as usize == r.cache.kv.len(),
+                "decode pos {} does not match the {} cached positions",
+                r.pos,
+                r.cache.kv.len()
+            );
+            tokens.push(r.token);
+            kvs.push(r.cache.kv.clone());
+        }
+        let all_logits = self.model.decode_round(&tokens, &mut kvs)?;
+        let mut steps = Vec::with_capacity(reqs.len());
+        for ((r, kv), logits) in reqs.iter().zip(kvs).zip(&all_logits) {
+            let mut history = r.cache.history.clone();
+            history.push(r.token);
+            let next_token = self.sample(logits, &history);
+            steps.push(Step {
+                next_token,
+                cache: ModelKvCache { kv, history },
+                cost_s: None,
+            });
+        }
+        Ok(steps)
+    }
+
+    fn plan_summary(&self) -> Option<String> {
+        Some(crate::coordinator::describe_site_shapes(
+            &self.model.site_shapes(),
+            &self.model.engine().name(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IsaConfig;
+    use crate::model::checkpoint::TransformerConfig;
+
+    fn backend() -> ModelBackend {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 0xC0FFEE).unwrap();
+        let engine = LinearEngine::native(IsaConfig::C2, 1).unwrap();
+        let cfg = ModelBackendConfig { prefill_len: 8, max_seq: 24, ..Default::default() };
+        ModelBackend::new(&ckpt, engine, cfg).unwrap()
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_in_vocab() {
+        let b = backend();
+        let a = b.generate(&[3, 5, 7], 6).unwrap();
+        let c = b.generate(&[3, 5, 7], 6).unwrap();
+        assert_eq!(a, c);
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&t| t >= 0 && (t as usize) < b.config().vocab));
+        // A different prompt diverges: these are real logits.
+        let d = b.generate(&[3, 5, 8], 6).unwrap();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn prefill_is_padding_invariant() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let mut zeros = vec![0i32; p];
+        zeros[..3].copy_from_slice(&[3, 5, 7]);
+        let mut junk = vec![11i32; p];
+        junk[..3].copy_from_slice(&[3, 5, 7]);
+        assert_eq!(
+            b.prefill(&zeros, 3).unwrap().next_token,
+            b.prefill(&junk, 3).unwrap().next_token
+        );
+    }
+
+    #[test]
+    fn decode_enforces_the_kv_contract() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let s = b.prefill(&vec![1i32; p], 2).unwrap();
+        assert_eq!(s.cache.len(), 2);
+        assert_eq!(s.cost_s, None);
+        // Wrong position: the cache holds 2 tokens, pos must be 2.
+        assert!(b.decode(s.next_token, 5, &s.cache).is_err());
+        let d = b.decode(s.next_token, 2, &s.cache).unwrap();
+        assert_eq!(d.cache.len(), 3);
+        // Exhaustion.
+        let max = b.config().max_seq as i32;
+        assert!(b.decode(0, max, &s.cache).is_err());
+    }
+
+    #[test]
+    fn decode_batch_is_bit_identical_to_serialized() {
+        let b = backend();
+        let p = b.config().prefill_len;
+        let caches: Vec<ModelKvCache> = (0..3)
+            .map(|i| {
+                let mut padded = vec![0i32; p];
+                padded[0] = 2 + i;
+                padded[1] = 5;
+                b.prefill(&padded, 2).unwrap().cache
+            })
+            .collect();
+        let items: Vec<BatchItem<'_, ModelKvCache>> = caches
+            .iter()
+            .enumerate()
+            .map(|(i, c)| BatchItem { token: 9 + i as i32, pos: 2, cache: c })
+            .collect();
+        let batched = b.decode_batch(&items).unwrap();
+        for (item, step) in items.iter().zip(&batched) {
+            let lone = b.decode(item.token, item.pos, item.cache).unwrap();
+            assert_eq!(step.next_token, lone.next_token, "batching changed a token");
+            assert_eq!(step.cache.history, lone.cache.history);
+            assert_eq!(step.cache.len(), lone.cache.len());
+        }
+    }
+
+    #[test]
+    fn plan_summary_names_every_site() {
+        let b = backend();
+        let summary = b.plan_summary().unwrap();
+        for site in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
+            assert!(summary.contains(site), "{site} missing from {summary:?}");
+        }
+        assert!(b.weight_bytes() > 0);
+        assert!(b.describe().contains("model:ckpt"));
+    }
+
+    #[test]
+    fn sampled_decoding_stays_deterministic_per_history() {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 0xC0FFEE).unwrap();
+        let engine = LinearEngine::native(IsaConfig::C2, 1).unwrap();
+        let cfg = ModelBackendConfig {
+            prefill_len: 8,
+            max_seq: 24,
+            sampler: SamplerConfig { temperature: 0.9, top_k: 12, seed: 7 },
+        };
+        let b = ModelBackend::new(&ckpt, engine, cfg).unwrap();
+        let a = b.generate(&[1, 2, 3], 6).unwrap();
+        let c = b.generate(&[1, 2, 3], 6).unwrap();
+        assert_eq!(a, c, "temperature sampling must still be a function of history");
+    }
+}

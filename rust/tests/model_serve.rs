@@ -1,0 +1,410 @@
+//! End-to-end serving tests of the real-forward-pass model backend
+//! (`runtime::ModelBackend`, DESIGN.md §2/§3): the streaming Engine,
+//! the legacy preloaded server, stop tokens / deadlines / cancellation
+//! against a real ternary transformer, interleaved batched-decode KV
+//! state, and the HTTP front-end — every token compared against
+//! `Backend::generate` on the same checkpoint.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsar::config::IsaConfig;
+use tsar::coordinator::{
+    Engine, FinishReason, GenParams, GenerationRequest, HttpConfig, HttpServer, PromCounters,
+    Request, Server, ServerConfig, TokenEvent,
+};
+use tsar::model::{Checkpoint, LinearEngine, SamplerConfig, TransformerConfig};
+use tsar::runtime::{
+    Backend, BatchItem, ModelBackend, ModelBackendConfig, ModelConfig, ModelKvCache, Step,
+};
+use tsar::util::error::Result;
+use tsar::util::json::Json;
+
+const PREFILL: usize = 8;
+const MAX_SEQ: usize = 48;
+
+/// A fresh model backend on the same seeded toy checkpoint: every call
+/// reproduces bit-identical weights, so separately built backends are
+/// valid references for each other.
+fn backend() -> ModelBackend {
+    let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 0x51ED).expect("toy checkpoint");
+    ModelBackend::new(
+        &ckpt,
+        LinearEngine::native(IsaConfig::C2, 1).expect("native engine"),
+        ModelBackendConfig {
+            prefill_len: PREFILL,
+            max_seq: MAX_SEQ,
+            sampler: SamplerConfig::greedy(),
+        },
+    )
+    .expect("model backend")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers }
+}
+
+/// The model backend with real wall time added per step, so tests can
+/// interrupt a generation mid-stream deterministically (the toy
+/// transformer itself decodes in microseconds).
+struct SlowModel {
+    inner: ModelBackend,
+    step: Duration,
+}
+
+impl Backend for SlowModel {
+    type Cache = ModelKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<ModelKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &ModelKvCache) -> Result<Step<ModelKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, ModelKvCache>],
+    ) -> Result<Vec<Step<ModelKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn engine_stream_matches_backend_generate() {
+    let prompt = vec![3, 5, 7];
+    let max_new = 6usize;
+    let direct = backend().generate(&prompt, max_new).unwrap();
+
+    let handle = Engine::start(backend(), cfg(2, 2, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::new(prompt, max_new));
+    let mut streamed: Vec<i32> = Vec::new();
+    let mut terminal = None;
+    while let Some(ev) = ticket.recv() {
+        match ev {
+            TokenEvent::Prefilled { token } => {
+                assert!(streamed.is_empty(), "Prefilled must be the first event");
+                streamed.push(token);
+            }
+            TokenEvent::Token { token, index } => {
+                assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                streamed.push(token);
+            }
+            ev => {
+                assert!(terminal.is_none(), "more than one terminal event");
+                terminal = Some(ev.result().expect("terminal carries the result").clone());
+            }
+        }
+    }
+    let result = terminal.expect("stream must end with a terminal event");
+    assert_eq!(result.finish, FinishReason::Length);
+    assert_eq!(streamed, result.tokens, "streamed order must equal the joined result");
+    assert_eq!(streamed, direct, "engine stream diverged from Backend::generate");
+
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.completed, 1);
+}
+
+/// Serve a fixed workload through the preloaded server and return the
+/// per-request token streams, sorted by request id.
+fn serve_tokens(workers: usize, prompts: &[Vec<i32>], max_new: usize) -> Vec<(u64, Vec<i32>)> {
+    let server = Server::new(backend(), cfg(2, 4, workers)).unwrap();
+    let requests: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, p)| Request::new(id as u64, p.clone(), max_new))
+        .collect();
+    let (tx, rx) = channel();
+    server.run_preloaded(requests, tx).unwrap();
+    let mut served: Vec<(u64, Vec<i32>)> = rx.try_iter().map(|r| (r.id, r.tokens)).collect();
+    served.sort_by_key(|(id, _)| *id);
+    served
+}
+
+#[test]
+fn worker_count_never_changes_greedy_model_tokens() {
+    // Sharding across lanes changes round widths and decode interleaving
+    // but must not change a single token of a greedy real-model run.
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![3, 5, 7],
+        vec![2, 4],
+        vec![9, 1, 6, 2],
+        vec![8],
+        vec![5, 5, 5],
+        vec![1, 2, 3, 4, 5],
+    ];
+    let max_new = 5usize;
+    let one = serve_tokens(1, &prompts, max_new);
+    let three = serve_tokens(3, &prompts, max_new);
+    assert_eq!(one, three, "worker count changed the served model tokens");
+
+    let reference = backend();
+    for (id, tokens) in &one {
+        let direct = reference.generate(&prompts[*id as usize], max_new).unwrap();
+        assert_eq!(tokens, &direct, "request {id} diverged from Backend::generate");
+    }
+}
+
+#[test]
+fn stop_tokens_retire_a_real_model_session() {
+    let b = backend();
+    let prompt = vec![4, 4, 8];
+    let full = b.generate(&prompt, 10).unwrap();
+    let stop = full[3]; // stop on its first occurrence in the stream
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+    let expected = full[..=cut].to_vec();
+    let until = b.generate_until(&prompt, 10, &[stop]).unwrap();
+    assert_eq!(until, expected, "generate_until keeps the stop token");
+
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::with_params(
+        prompt,
+        GenParams::new(10).with_stop_tokens(vec![stop]),
+    ));
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::Stop);
+    assert_eq!(res.tokens, until, "served stop-token stream must match generate_until");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn expired_deadline_retires_before_the_forward_pass_runs() {
+    let handle = Engine::start(backend(), cfg(1, 1, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::with_params(
+        vec![1, 2, 3],
+        GenParams::new(8).with_deadline(Instant::now()),
+    ));
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::DeadlineExpired);
+    assert!(res.tokens.is_empty(), "expired before prefill: no tokens");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.cancelled, 1);
+}
+
+#[test]
+fn cancel_interrupts_a_real_model_generation_mid_stream() {
+    // 10 ms per round against a 30-token budget: cancel after three
+    // streamed tokens lands at a round boundary long before the budget.
+    let prompt = vec![6, 2];
+    let direct = backend().generate(&prompt, 30).unwrap();
+    let slow = SlowModel { inner: backend(), step: Duration::from_millis(10) };
+    let handle = Engine::start(slow, cfg(1, 1, 1)).unwrap();
+    let ticket = handle.submit(GenerationRequest::new(prompt, 30));
+
+    let mut streamed: Vec<i32> = Vec::new();
+    while let Some(ev) = ticket.recv() {
+        if let Some(tok) = ev.token() {
+            streamed.push(tok);
+        }
+        if streamed.len() == 3 {
+            break;
+        }
+    }
+    ticket.cancel();
+    let res = ticket.join();
+    assert_eq!(res.finish, FinishReason::Cancelled);
+    assert!(
+        res.tokens.len() >= 3 && res.tokens.len() < 30,
+        "cancelled mid-generation, got {} tokens",
+        res.tokens.len()
+    );
+    assert_eq!(
+        res.tokens[..],
+        direct[..res.tokens.len()],
+        "cancelled ticket's partial tokens must be a prefix of the direct generation"
+    );
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.cancelled, 1);
+}
+
+/// One in-flight sequence under the direct `Backend` API.
+struct Seq {
+    tok: i32,
+    pos: i32,
+    cache: ModelKvCache,
+    toks: Vec<i32>,
+}
+
+fn prefill_seq(b: &ModelBackend, prompt: &[i32]) -> Seq {
+    let mut padded = vec![0i32; PREFILL];
+    padded[..prompt.len()].copy_from_slice(prompt);
+    let step = b.prefill(&padded, prompt.len() as i32).unwrap();
+    Seq {
+        tok: step.next_token,
+        pos: prompt.len() as i32,
+        cache: step.cache,
+        toks: vec![step.next_token],
+    }
+}
+
+fn advance_serial(b: &ModelBackend, s: &mut Seq) {
+    let step = b.decode(s.tok, s.pos, &s.cache).unwrap();
+    s.tok = step.next_token;
+    s.pos += 1;
+    s.cache = step.cache;
+    s.toks.push(step.next_token);
+}
+
+fn advance_batch(b: &ModelBackend, seqs: &mut [Seq], idx: &[usize]) {
+    let items: Vec<_> = idx
+        .iter()
+        .map(|&i| BatchItem { token: seqs[i].tok, pos: seqs[i].pos, cache: &seqs[i].cache })
+        .collect();
+    let steps = b.decode_batch(&items).unwrap();
+    assert_eq!(steps.len(), idx.len());
+    drop(items);
+    for (&i, step) in idx.iter().zip(steps) {
+        let s = &mut seqs[i];
+        s.tok = step.next_token;
+        s.pos += 1;
+        s.cache = step.cache;
+        s.toks.push(step.next_token);
+    }
+}
+
+#[test]
+fn interleaved_batch_widths_leave_kv_state_identical() {
+    // Regression for the batched-decode path: advancing sequences
+    // through decode_batch rounds of varying width and membership must
+    // leave every sequence's tokens and KV state identical to a purely
+    // serialized decode.
+    let b = backend();
+    let prompts: [&[i32]; 3] = [&[3, 1, 4], &[1, 5, 9, 2], &[6, 5]];
+
+    let mut serial: Vec<Seq> = prompts.iter().map(|p| prefill_seq(&b, p)).collect();
+    for _ in 0..4 {
+        for s in serial.iter_mut() {
+            advance_serial(&b, s);
+        }
+    }
+
+    let mut mixed: Vec<Seq> = prompts.iter().map(|p| prefill_seq(&b, p)).collect();
+    advance_batch(&b, &mut mixed, &[0, 1, 2]); // round 1: full width
+    advance_batch(&b, &mut mixed, &[0, 2]); // round 2: seq 1 goes alone
+    advance_serial(&b, &mut mixed[1]);
+    advance_serial(&b, &mut mixed[0]); // round 3: seq 0 goes alone
+    advance_batch(&b, &mut mixed, &[1, 2]);
+    for i in [0, 1, 2] {
+        advance_batch(&b, &mut mixed, &[i]); // round 4: width-1 batches
+    }
+
+    for (i, (s, m)) in serial.iter().zip(&mixed).enumerate() {
+        assert_eq!(s.toks, m.toks, "seq {i}: batching changed the token stream");
+        assert_eq!(s.pos, m.pos);
+        assert_eq!(
+            s.cache.len(),
+            m.cache.len(),
+            "seq {i}: batching changed the KV cache length"
+        );
+    }
+}
+
+/// One blocking HTTP/1.1 exchange over a raw `TcpStream`: status line
+/// plus the de-chunked body.
+fn http_request(addr: SocketAddr, body: &str) -> (String, String) {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    let mut raw = Vec::new();
+    conn.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("UTF-8 response");
+    let head_end = text.find("\r\n\r\n").expect("header terminator");
+    let head = &text[..head_end];
+    let status = head.lines().next().unwrap_or("").to_string();
+    let payload = &text[head_end + 4..];
+    let body = if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        dechunk(payload)
+    } else {
+        payload.to_string()
+    };
+    (status, body)
+}
+
+/// Reassemble a chunked transfer-encoding payload.
+fn dechunk(payload: &str) -> String {
+    let mut out = String::new();
+    let mut rest = payload;
+    loop {
+        let Some(nl) = rest.find("\r\n") else { break };
+        let size = usize::from_str_radix(rest[..nl].trim(), 16).expect("chunk size");
+        if size == 0 {
+            break;
+        }
+        let start = nl + 2;
+        out.push_str(&rest[start..start + size]);
+        rest = &rest[start + size + 2..]; // skip the chunk's trailing CRLF
+    }
+    out
+}
+
+#[test]
+fn http_streams_real_forward_pass_tokens() {
+    let prompt = vec![3, 5, 7];
+    let max_new = 5usize;
+    let direct = backend().generate(&prompt, max_new).unwrap();
+
+    let handle = Arc::new(Engine::start(backend(), cfg(1, 1, 1)).unwrap());
+    let http = HttpServer::start(
+        "127.0.0.1:0",
+        Arc::clone(&handle),
+        Arc::new(PromCounters::new()),
+        HttpConfig::default(),
+    )
+    .unwrap();
+    let addr = http.local_addr();
+
+    let (status, body) =
+        http_request(addr, r#"{"prompt":[3,5,7],"max_new_tokens":5}"#);
+    assert!(status.contains("200"), "got {status}");
+    let events: Vec<Json> =
+        body.lines().map(|l| Json::parse(l).expect("valid NDJSON line")).collect();
+    let last = events.last().expect("terminal line");
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("retired"));
+    assert_eq!(last.get("finish").and_then(Json::as_str), Some("length"));
+
+    let streamed: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e.get("event").and_then(Json::as_str) {
+            Some("prefilled") | Some("token") => {
+                e.get("token").and_then(Json::as_f64).map(|t| t as i32)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(streamed, direct, "HTTP stream diverged from Backend::generate");
+    let terminal: Vec<i32> = last
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("terminal carries tokens")
+        .iter()
+        .map(|t| t.as_f64().expect("token is a number") as i32)
+        .collect();
+    assert_eq!(terminal, direct);
+
+    http.stop();
+    let handle = Arc::try_unwrap(handle).ok().expect("HTTP workers joined");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.completed, 1);
+}

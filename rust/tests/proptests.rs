@@ -6,6 +6,7 @@
 use tsar::config::IsaConfig;
 use tsar::coordinator::{Batcher, KvSlotPool, Request};
 use tsar::kernels::{all_kernels, scalar_gemm, Dataflow, TernaryKernel, TsarKernel};
+use tsar::model::{reference, Checkpoint, ReferenceModel, TransformerConfig};
 use tsar::quant::{absmax_quantize, absmean_ternarize, decompose, decode_indices, encode_indices};
 use tsar::quant::pack::{Tl2Packed, TmacPacked};
 use tsar::sim::{simulate, GemmShape};
@@ -319,6 +320,97 @@ fn prop_batcher_no_request_lost_or_duplicated() {
         assert_eq!(sorted.len(), admitted.len());
         for w in admitted.windows(2) {
             assert!(w[0] < w[1], "admission must be FIFO");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Real-model invariants (checkpoint container + scalar reference)
+// ---------------------------------------------------------------------------
+
+/// A random valid toy architecture with deliberately unaligned
+/// d_model/ffn_dim (nothing rounds to the kernels' tile sizes).
+fn random_model_config(rng: &mut Rng) -> TransformerConfig {
+    let head_dim = 2 * rng.range_i64(2, 7) as usize; // 4..14, even
+    let n_heads = rng.range_i64(1, 4) as usize;
+    let divisors: Vec<usize> = (1..=n_heads).filter(|h| n_heads % h == 0).collect();
+    let n_kv_heads = divisors[rng.below(divisors.len() as u64) as usize];
+    TransformerConfig {
+        vocab: rng.range_i64(33, 120) as usize,
+        d_model: n_heads * head_dim,
+        n_layers: rng.range_i64(1, 2) as usize,
+        n_heads,
+        n_kv_heads,
+        ffn_dim: rng.range_i64(9, 45) as usize,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_on_unaligned_dims() {
+    // The TSARCKP1 container packs ternary planes at bit granularity;
+    // row lengths that are not multiples of 8 must still round-trip
+    // both the value and the byte stream exactly.
+    for_all_seeds("TSARCKP1 round-trips on unaligned dims", |rng| {
+        let config = random_model_config(rng);
+        let ckpt = Checkpoint::synthesize(config, rng.below(u64::MAX - 1) + 1).unwrap();
+        let bytes = ckpt.to_bytes();
+        let back = Checkpoint::parse(&bytes).unwrap();
+        assert_eq!(back, ckpt, "parse(to_bytes) changed the checkpoint");
+        assert_eq!(back.to_bytes(), bytes, "re-serialization is not canonical");
+    });
+}
+
+#[test]
+fn prop_rmsnorm_is_scale_invariant() {
+    // RMSNorm(c·x) == RMSNorm(x) for c > 0, up to the eps floor (the
+    // generator keeps |x| bounded away from 0 so eps stays negligible).
+    for_all_seeds("RMSNorm scale invariance", |rng| {
+        let n = rng.range_i64(1, 64) as usize;
+        let x: Vec<f32> = (0..n)
+            .map(|_| {
+                let mag = 0.5 + rng.f64() as f32 * 1.5;
+                if rng.f64() < 0.5 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        let gains: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let c = (0.25 + rng.f64() * 3.75) as f32;
+        let scaled: Vec<f32> = x.iter().map(|v| v * c).collect();
+        let a = reference::rms_norm(&x, &gains, 1e-5);
+        let b = reference::rms_norm(&scaled, &gains, 1e-5);
+        for (i, (&u, &v)) in a.iter().zip(&b).enumerate() {
+            let tol = 1e-2 * u.abs().max(1e-3);
+            assert!((u - v).abs() <= tol, "element {i}: {u} vs {v} under scale {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_reference_attention_rows_are_distributions() {
+    // Every (layer, head, position) attention row the scalar reference
+    // produces is a probability distribution: entries in [0, 1],
+    // summing to 1 — i.e. the softmax actually normalizes.
+    for_all_seeds("attention rows sum to one", |rng| {
+        let config = random_model_config(rng);
+        let ckpt = Checkpoint::synthesize(config, rng.below(u64::MAX - 1) + 1).unwrap();
+        let model = ReferenceModel::new(&ckpt).unwrap();
+        let plen = rng.range_i64(1, 5) as usize;
+        let tokens: Vec<i32> =
+            (0..plen).map(|_| rng.below(config.vocab as u64) as i32).collect();
+        let rows = model.attention_probe(&tokens).unwrap();
+        assert!(!rows.is_empty(), "probe returned no attention rows");
+        for (r, row) in rows.iter().enumerate() {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() <= 1e-5, "row {r} sums to {sum}");
+            assert!(
+                row.iter().all(|&p| (0.0..=1.0 + 1e-6).contains(&p)),
+                "row {r} has an out-of-range probability: {row:?}"
+            );
         }
     });
 }
