@@ -21,6 +21,20 @@ echo "== native kernel: scalar fallback forced (portable path) =="
 TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test native_differential
 
 echo
+echo "== batched GEMM: pool vs serialized differential (portable path) =="
+# Tier-1 already ran this suite on the *detected* path; this run pins
+# the portable row-blocked fallback against the serialized anchor.
+TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test native_gemm_batched
+
+echo
+echo "== batched GEMM bench: smoke run + artifact schema check =="
+# Regenerates BENCH_native_gemm.json with measured smoke-sized numbers
+# and re-validates it against the v1 schema.  Full Fig. 10 shapes:
+# `cargo bench --bench native_gemv` (no --smoke).
+cargo bench --bench native_gemv -- --smoke --out "$PWD/BENCH_native_gemm.json"
+cargo bench --bench native_gemv -- --validate "$PWD/BENCH_native_gemm.json"
+
+echo
 echo "== model differential: scalar fallback forced (portable path) =="
 # The ≥100-case model-level fuzz (kernel-path transformer vs the
 # pure-scalar reference) on the portable fallback; the host-tuned AVX2

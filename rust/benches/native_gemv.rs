@@ -1,68 +1,199 @@
-//! Bench: measured native (AVX2/scalar) ternary GEMV throughput next to
-//! the §III-D modeled cost of the same shape — the cross-check the
-//! native path exists for (DESIGN.md §2, "native vs. modeled ISA").
+//! Bench: batched native ternary GEMM (n ∈ {1, 4, 16, 64}) on the
+//! persistent worker pool vs the legacy per-call scoped-thread path —
+//! the first entry in the repo's machine-readable perf trajectory
+//! (`BENCH_native_gemm.json` at the repo root).
 //!
-//! "GB/s" is the packed-weight stream rate (packed bytes / wall time):
-//! decode GEMV is weight-bandwidth-bound, so this is the figure of
-//! merit the paper argues about.
+//! Per (shape, ISA, n) the harness measures:
+//!
+//! * `pool_min_s` — the row-blocked GEMM on pool-resident lanes
+//!   ([`NativeGemv::gemm`]);
+//! * `scoped_min_s` — n serialized per-row GEMVs spawning scoped
+//!   threads per call ([`NativeGemv::gemm_scoped`]), today's baseline;
+//! * `amortization_ratio` — `scoped_min_s / pool_min_s` (> 1 means the
+//!   pool + row blocking wins): at n = 1 this isolates the
+//!   spawn-amortization of the pool, at n > 1 it adds the paper's
+//!   GEMM-side weight-stream amortization;
+//! * `eff_weights_gb_s` — packed weight bytes × n / pool time (each
+//!   row logically consumes the whole matrix — decode GEMV is
+//!   weight-bandwidth-bound, so this is the paper's figure of merit);
+//! * `mac_per_s` — n·k·m MACs / pool time.
+//!
+//! Outputs are asserted bit-identical between the two paths before any
+//! timing (the differential suites fuzz this property; the bench
+//! refuses to time diverging kernels).
+//!
+//! Flags (after `cargo bench --bench native_gemv --`):
+//!   --smoke          tiny shape + minimal iterations (the CI run)
+//!   --out FILE       write the JSON artifact here
+//!                    (default: <repo root>/BENCH_native_gemm.json)
+//!   --validate FILE  schema-check an existing artifact and exit
 
-use tsar::config::platforms::Platform;
+use std::collections::BTreeMap;
+
 use tsar::config::IsaConfig;
-use tsar::kernels::native::NativeGemv;
-use tsar::kernels::{select_tsar_kernel, TernaryKernel};
+use tsar::kernels::native::{NativeGemv, GEMM_ROW_BLOCK};
 use tsar::sim::GemmShape;
+use tsar::util::json::Json;
 use tsar::util::rng::Rng;
 use tsar::util::stats::time_it;
 
-fn main() -> tsar::Result<()> {
-    let t0 = std::time::Instant::now();
-    let mut rng = Rng::new(0x6E47);
-    let plat = Platform::workstation();
-    // The Fig. 10 decode shapes plus a square projection.
-    for shape in [
-        GemmShape::new(1, 2560, 6912),
-        GemmShape::new(1, 6912, 2560),
-        GemmShape::new(1, 2560, 2560),
-    ] {
-        let (modeled_kern, modeled) = select_tsar_kernel(shape, &plat, 1);
-        for isa in [IsaConfig::C2, IsaConfig::C4] {
-            let gemv = NativeGemv::new(isa)?;
-            let acts = rng.int8_acts(shape.k);
-            let w = rng.ternary_matrix(shape.m, shape.k, 0.33);
-            let packed = gemv.pack(&w, shape.m, shape.k)?;
-            let mut out = vec![0i32; shape.m];
-            let (_mean_s, min_s, runs) = time_it(
-                || {
-                    gemv.gemv(&acts, &packed, &mut out)
-                        .expect("bench shapes are valid");
-                    std::hint::black_box(&out);
-                },
-                10,
-                0.3,
-            );
-            let bytes = packed.packed_bytes() as f64;
-            println!(
-                "[native] {}x{}x{} {:<22} path={:<6} min {:>8.3} ms  \
-                 {:>6.2} GB/s weights  {:>8.1} M MAC/s  ({} runs)",
-                shape.n,
-                shape.k,
-                shape.m,
-                isa.name(),
-                gemv.path().name(),
-                min_s * 1e3,
-                bytes / min_s / 1e9,
-                shape.macs() / min_s / 1e6,
-                runs
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Schema contract for `BENCH_native_gemm.json` — shared by the writer
+/// below and the `--validate` CI step, so a drifting artifact fails
+/// loudly instead of silently changing shape.
+fn validate(text: &str) -> tsar::Result<usize> {
+    let v = Json::parse(text).map_err(|e| tsar::err!("artifact is not JSON: {e}"))?;
+    tsar::ensure!(
+        v.req("bench")?.as_str() == Some("native_gemm"),
+        "bench name must be \"native_gemm\""
+    );
+    tsar::ensure!(
+        v.req("schema_version")?.as_f64() == Some(1.0),
+        "unknown schema_version (writer speaks v1)"
+    );
+    let measured = v.req("measured")? == &Json::Bool(true);
+    v.req("smoke")?;
+    tsar::ensure!(v.req("path")?.as_str().is_some(), "path must be a string");
+    tsar::ensure!(
+        v.req("threads")?.as_usize().is_some_and(|t| t >= 1),
+        "threads must be >= 1"
+    );
+    tsar::ensure!(
+        v.req("row_block")?.as_usize().is_some_and(|r| r >= 1),
+        "row_block must be >= 1"
+    );
+    let Some(entries) = v.req("entries")?.as_arr() else {
+        tsar::bail!("entries must be an array");
+    };
+    tsar::ensure!(!entries.is_empty(), "entries must be non-empty");
+    const ENTRY_NUM_KEYS: [&str; 5] =
+        ["pool_min_s", "scoped_min_s", "amortization_ratio", "eff_weights_gb_s", "mac_per_s"];
+    for (i, e) in entries.iter().enumerate() {
+        for key in ["n", "k", "m"] {
+            tsar::ensure!(
+                e.req(key)?.as_usize().is_some_and(|x| x >= 1),
+                "entry {i}: {key} must be a positive integer"
             );
         }
-        println!(
-            "[native]   §III-D modeled pick for this shape: {:<28} {:>8.3} ms  \
-             {:>6.2} GB/s requests",
-            modeled_kern.name(),
-            modeled.seconds * 1e3,
-            modeled.request_bytes / modeled.seconds / 1e9
-        );
+        tsar::ensure!(e.req("isa")?.as_str().is_some(), "entry {i}: isa must be a string");
+        for key in ENTRY_NUM_KEYS {
+            let x = e
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| tsar::err!("entry {i}: {key} must be a number"))?;
+            tsar::ensure!(x.is_finite() && x >= 0.0, "entry {i}: {key} must be finite and >= 0");
+            tsar::ensure!(!measured || x > 0.0, "entry {i}: measured artifact has zero {key}");
+        }
     }
+    Ok(entries.len())
+}
+
+fn main() -> tsar::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(path) = flag_value(&args, "--validate") {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| tsar::err!("cannot read {path}: {e}"))?;
+        let n = validate(&text)?;
+        println!("[native] {path}: schema v1 OK ({n} entries)");
+        return Ok(());
+    }
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = flag_value(&args, "--out")
+        .unwrap_or_else(|| format!("{}/../BENCH_native_gemm.json", env!("CARGO_MANIFEST_DIR")));
+
+    let t0 = std::time::Instant::now();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(2, 8);
+    // Fig. 10 decode shapes (full) vs a CI-sized smoke shape; both
+    // cover n past several GEMM_ROW_BLOCK boundaries.
+    let shapes: &[(usize, usize)] =
+        if smoke { &[(256, 256)] } else { &[(2560, 6912), (6912, 2560), (2560, 2560)] };
+    let n_set: &[usize] = if smoke { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let (min_runs, min_secs) = if smoke { (2, 0.0) } else { (8, 0.25) };
+
+    let mut rng = Rng::new(0x6E47);
+    let mut entries = Vec::new();
+    let mut bench_path = "scalar";
+    for &(k, m) in shapes {
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            let gemv = NativeGemv::new(isa)?.with_threads(threads)?;
+            bench_path = gemv.path().name();
+            let w = rng.ternary_matrix(m, k, 0.33);
+            let packed = gemv.pack(&w, m, k)?;
+            let bytes = packed.packed_bytes() as f64;
+            for &n in n_set {
+                let shape = GemmShape::new(n, k, m);
+                let acts = rng.int8_acts(n * k);
+                let mut out = vec![0i32; n * m];
+                let mut serial = vec![0i32; n * m];
+                gemv.gemm(&acts, &packed, n, &mut out)?;
+                gemv.gemm_scoped(&acts, &packed, n, &mut serial)?;
+                assert_eq!(out, serial, "batched/serialized divergence at n={n} {}", isa.name());
+                let (_, pool_min, runs) = time_it(
+                    || {
+                        gemv.gemm(&acts, &packed, n, &mut out).expect("bench shapes are valid");
+                        std::hint::black_box(&out);
+                    },
+                    min_runs,
+                    min_secs,
+                );
+                let (_, scoped_min, _) = time_it(
+                    || {
+                        gemv.gemm_scoped(&acts, &packed, n, &mut serial)
+                            .expect("bench shapes are valid");
+                        std::hint::black_box(&serial);
+                    },
+                    min_runs,
+                    min_secs,
+                );
+                let ratio = scoped_min / pool_min;
+                println!(
+                    "[native] n={n:<3} {k}x{m} {:<12} path={:<6} pool {:>9.3} ms  \
+                     scoped {:>9.3} ms  ratio {:>5.2}x  {:>6.2} GB/s  {:>9.1} M MAC/s  ({runs} runs)",
+                    isa.name(),
+                    gemv.path().name(),
+                    pool_min * 1e3,
+                    scoped_min * 1e3,
+                    ratio,
+                    bytes * n as f64 / pool_min / 1e9,
+                    shape.macs() / pool_min / 1e6,
+                );
+                entries.push(obj(vec![
+                    ("isa", Json::Str(isa.name())),
+                    ("n", Json::Num(n as f64)),
+                    ("k", Json::Num(k as f64)),
+                    ("m", Json::Num(m as f64)),
+                    ("pool_min_s", Json::Num(pool_min)),
+                    ("scoped_min_s", Json::Num(scoped_min)),
+                    ("amortization_ratio", Json::Num(ratio)),
+                    ("eff_weights_gb_s", Json::Num(bytes * n as f64 / pool_min / 1e9)),
+                    ("mac_per_s", Json::Num(shape.macs() / pool_min)),
+                    ("runs", Json::Num(runs as f64)),
+                ]));
+            }
+        }
+    }
+
+    let artifact = obj(vec![
+        ("bench", Json::Str("native_gemm".to_string())),
+        ("schema_version", Json::Num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("smoke", Json::Bool(smoke)),
+        ("path", Json::Str(bench_path.to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("row_block", Json::Num(GEMM_ROW_BLOCK as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let text = artifact.to_string();
+    validate(&text)?; // the writer must satisfy its own schema
+    std::fs::write(&out_path, text + "\n").map_err(|e| tsar::err!("cannot write {out_path}: {e}"))?;
+    println!("[native] wrote {out_path}");
     println!("[native] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

@@ -29,7 +29,7 @@ pub use tsar::{Dataflow, TsarKernel};
 pub use tl2::Tl2Kernel;
 pub use tmac::TmacKernel;
 pub use fp16::Fp16Kernel;
-pub use native::{NativeGemv, NativeKernel, NativePath};
+pub use native::{NativeGemv, NativeKernel, NativePath, WorkerPool, Workspace, GEMM_ROW_BLOCK};
 
 /// A ternary matmul kernel: `(N×K) int8 · (M×K) ternary → (N×M) int32`.
 pub trait TernaryKernel {

@@ -34,7 +34,45 @@ use core::arch::x86_64::*;
 
 use crate::quant::pack::{PSHUFB_TILE_OUTS, PSHUFB_TILE_SLICE_BYTES};
 
-use super::lut_entry;
+use super::{lut_entry, GEMM_ROW_BLOCK};
+
+/// Bytes per (row, slice) in the precomputed c=2 LUT buffer:
+/// `dense_lo ‖ dense_hi ‖ sparse_lo ‖ sparse_hi`, 16 bytes each.
+pub(super) const C2_TABLE_BYTES: usize = 64;
+
+/// Bytes per (row, slice) in the precomputed c=4 LUT buffer: per block
+/// `b` ∈ 0..4, the four 16-byte planes at offset `64·b`.
+pub(super) const C4_TABLE_BYTES: usize = 256;
+
+/// Precompute one activation row's c=2 LUT planes for every k-slice
+/// into `dst` (layout per [`C2_TABLE_BYTES`]).  The batched kernel
+/// re-broadcasts these from L1 per (tile, slice, row) instead of
+/// rebuilding them, so the build cost is paid once per (row, slice).
+pub(super) fn fill_c2_tables(acts: &[i8], dst: &mut [u8]) {
+    debug_assert_eq!(acts.len() / 8, dst.len() / C2_TABLE_BYTES);
+    for (chunk, a) in dst.chunks_exact_mut(C2_TABLE_BYTES).zip(acts.chunks_exact(8)) {
+        let t = c2_tables(a);
+        chunk[..16].copy_from_slice(&t.dense_lo);
+        chunk[16..32].copy_from_slice(&t.dense_hi);
+        chunk[32..48].copy_from_slice(&t.sparse_lo);
+        chunk[48..64].copy_from_slice(&t.sparse_hi);
+    }
+}
+
+/// c=4 analogue of [`fill_c2_tables`] (layout per [`C4_TABLE_BYTES`]).
+pub(super) fn fill_c4_tables(acts: &[i8], dst: &mut [u8]) {
+    debug_assert_eq!(acts.len() / 16, dst.len() / C4_TABLE_BYTES);
+    for (chunk, a) in dst.chunks_exact_mut(C4_TABLE_BYTES).zip(acts.chunks_exact(16)) {
+        let t = c4_tables(a);
+        for b in 0..4 {
+            let o = b * 64;
+            chunk[o..o + 16].copy_from_slice(&t.dense_lo[b]);
+            chunk[o + 16..o + 32].copy_from_slice(&t.dense_hi[b]);
+            chunk[o + 32..o + 48].copy_from_slice(&t.sparse_lo[b]);
+            chunk[o + 48..o + 64].copy_from_slice(&t.sparse_hi[b]);
+        }
+    }
+}
 
 /// Lo/hi byte planes of one c=2 slice's LUTs: the whole slice (4 blocks
 /// × 4 entries, 16-bit) fits one 16-byte lane per plane, entry (b, p)
@@ -102,6 +140,13 @@ fn c4_tables(a: &[i8]) -> C4Tables {
 #[target_feature(enable = "avx2")]
 unsafe fn broadcast16(bytes: &[u8; 16]) -> __m256i {
     _mm256_broadcastsi128_si256(_mm_loadu_si128(bytes.as_ptr() as *const __m128i))
+}
+
+/// [`broadcast16`] from a raw table-buffer pointer (16 valid bytes).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn broadcast16_ptr(p: *const u8) -> __m256i {
+    _mm256_broadcastsi128_si256(_mm_loadu_si128(p as *const __m128i))
 }
 
 /// One GEMV row, c=2 (`TLUT_2×4 + TGEMV_8×16`).  `acts` is the padded
@@ -182,13 +227,21 @@ pub(super) unsafe fn gemv_row_c2(
 #[target_feature(enable = "avx2")]
 unsafe fn flush_c2(acc: &[__m256i; 4], out: &mut [i32]) {
     debug_assert_eq!(out.len(), 16);
+    flush_c2_to(acc, out.as_mut_ptr());
+}
+
+/// [`flush_c2`] to a raw output pointer (16 writable slots) — the
+/// batched kernel flushes each row block straight into the strided
+/// padded output buffer.
+#[target_feature(enable = "avx2")]
+unsafe fn flush_c2_to(acc: &[__m256i; 4], out: *mut i32) {
     let mut buf = [0i32; 8];
     for (v, base) in acc.iter().zip([0usize, 2, 8, 10]) {
         _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, *v);
-        out[base] = buf[0] + buf[1];
-        out[base + 1] = buf[2] + buf[3];
-        out[base + 4] = buf[4] + buf[5];
-        out[base + 5] = buf[6] + buf[7];
+        *out.add(base) = buf[0] + buf[1];
+        *out.add(base + 1) = buf[2] + buf[3];
+        *out.add(base + 4) = buf[4] + buf[5];
+        *out.add(base + 5) = buf[6] + buf[7];
     }
 }
 
@@ -268,5 +321,156 @@ pub(super) unsafe fn gemv_row_c4(
             _mm256_storeu_si256(out.as_mut_ptr().add(o + 8) as *mut __m256i, acc_hi[g]);
         }
         tile0 += group;
+    }
+}
+
+/// Row-blocked c=2 GEMM over a contiguous tile range: `nb` ≤
+/// [`GEMM_ROW_BLOCK`] activation rows share every 128 B record's four
+/// 32-byte index loads (the batched amortization of the weight-byte
+/// stream — the paper's GEMM-side win), with per-row LUT planes read
+/// from the caller-precomputed `tables` buffer ([`fill_c2_tables`]
+/// layout, `nb · slices` entries).  Row `r`'s 16 outputs for tile `t`
+/// land at `out + r·out_stride + 16·t`.
+///
+/// Bit-identity: per (row, output) this executes the *same* shuffle /
+/// unpack / sub / madd sequence over slices in the same ascending order
+/// as [`gemv_row_c2`] — only the loop nest around it changes — so
+/// every i16/i32 intermediate is identical to the serialized path.
+///
+/// # Safety
+/// Caller must have verified AVX2 support at runtime; `out` must have
+/// `(nb-1)·out_stride + tiles·16` writable slots disjoint from `data` /
+/// `tables`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemm_rows_c2(
+    data: &[u8],
+    tiles: usize,
+    slices: usize,
+    tables: &[u8],
+    nb: usize,
+    out: *mut i32,
+    out_stride: usize,
+) {
+    debug_assert!(nb >= 1 && nb <= GEMM_ROW_BLOCK);
+    debug_assert_eq!(data.len(), tiles * slices * PSHUFB_TILE_SLICE_BYTES);
+    debug_assert!(tables.len() >= nb * slices * C2_TABLE_BYTES);
+    let ones = _mm256_set1_epi16(1);
+    for tile in 0..tiles {
+        let mut acc = [[_mm256_setzero_si256(); 4]; GEMM_ROW_BLOCK];
+        for slice in 0..slices {
+            let rec = data.as_ptr().add((tile * slices + slice) * PSHUFB_TILE_SLICE_BYTES);
+            // Load the record's index vectors ONCE for the whole row
+            // block (dense/sparse per half) — this is what n > 1 buys.
+            let idx = [
+                _mm256_loadu_si256(rec as *const __m256i),
+                _mm256_loadu_si256(rec.add(32) as *const __m256i),
+                _mm256_loadu_si256(rec.add(64) as *const __m256i),
+                _mm256_loadu_si256(rec.add(96) as *const __m256i),
+            ];
+            for (r, acc_r) in acc.iter_mut().enumerate().take(nb) {
+                let tb = tables.as_ptr().add((r * slices + slice) * C2_TABLE_BYTES);
+                let tdl = broadcast16_ptr(tb);
+                let tdh = broadcast16_ptr(tb.add(16));
+                let tsl = broadcast16_ptr(tb.add(32));
+                let tsh = broadcast16_ptr(tb.add(48));
+                for (half, acc_pair) in acc_r.chunks_mut(2).enumerate() {
+                    let d_idx = idx[half * 2];
+                    let s_idx = idx[half * 2 + 1];
+                    let d_lo = _mm256_shuffle_epi8(tdl, d_idx);
+                    let d_hi = _mm256_shuffle_epi8(tdh, d_idx);
+                    let s_lo = _mm256_shuffle_epi8(tsl, s_idx);
+                    let s_hi = _mm256_shuffle_epi8(tsh, s_idx);
+                    let diff_a = _mm256_sub_epi16(
+                        _mm256_unpacklo_epi8(d_lo, d_hi),
+                        _mm256_unpacklo_epi8(s_lo, s_hi),
+                    );
+                    let diff_b = _mm256_sub_epi16(
+                        _mm256_unpackhi_epi8(d_lo, d_hi),
+                        _mm256_unpackhi_epi8(s_lo, s_hi),
+                    );
+                    acc_pair[0] =
+                        _mm256_add_epi32(acc_pair[0], _mm256_madd_epi16(diff_a, ones));
+                    acc_pair[1] =
+                        _mm256_add_epi32(acc_pair[1], _mm256_madd_epi16(diff_b, ones));
+                }
+            }
+        }
+        for (r, acc_r) in acc.iter().enumerate().take(nb) {
+            flush_c2_to(acc_r, out.add(r * out_stride + tile * PSHUFB_TILE_OUTS));
+        }
+    }
+}
+
+/// Row-blocked c=4 GEMM (c=4 analogue of [`gemm_rows_c2`]): the eight
+/// 16-byte index vectors per record are loaded once per row block, the
+/// per-row LUT planes come from the [`fill_c4_tables`] buffer, and per
+/// (row, output) the slice-ascending 16-bit block accumulation +
+/// `cvtepi16_epi32` widening matches [`gemv_row_c4`] exactly.
+///
+/// # Safety
+/// Same contract as [`gemm_rows_c2`].
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemm_rows_c4(
+    data: &[u8],
+    tiles: usize,
+    slices: usize,
+    tables: &[u8],
+    nb: usize,
+    out: *mut i32,
+    out_stride: usize,
+) {
+    debug_assert!(nb >= 1 && nb <= GEMM_ROW_BLOCK);
+    debug_assert_eq!(data.len(), tiles * slices * PSHUFB_TILE_SLICE_BYTES);
+    debug_assert!(tables.len() >= nb * slices * C4_TABLE_BYTES);
+    for tile in 0..tiles {
+        let mut acc_lo = [_mm256_setzero_si256(); GEMM_ROW_BLOCK];
+        let mut acc_hi = [_mm256_setzero_si256(); GEMM_ROW_BLOCK];
+        for slice in 0..slices {
+            let rec = data.as_ptr().add((tile * slices + slice) * PSHUFB_TILE_SLICE_BYTES);
+            let mut d_idx = [_mm_setzero_si128(); 4];
+            let mut s_idx = [_mm_setzero_si128(); 4];
+            for b in 0..4 {
+                d_idx[b] = _mm_loadu_si128(rec.add(b * 32) as *const __m128i);
+                s_idx[b] = _mm_loadu_si128(rec.add(b * 32 + 16) as *const __m128i);
+            }
+            for r in 0..nb {
+                let tb = tables.as_ptr().add((r * slices + slice) * C4_TABLE_BYTES);
+                let mut slice_acc = _mm256_setzero_si256();
+                for b in 0..4 {
+                    let tbb = tb.add(b * 64);
+                    let tdl = _mm_loadu_si128(tbb as *const __m128i);
+                    let tdh = _mm_loadu_si128(tbb.add(16) as *const __m128i);
+                    let tsl = _mm_loadu_si128(tbb.add(32) as *const __m128i);
+                    let tsh = _mm_loadu_si128(tbb.add(48) as *const __m128i);
+                    let d_lo = _mm_shuffle_epi8(tdl, d_idx[b]);
+                    let d_hi = _mm_shuffle_epi8(tdh, d_idx[b]);
+                    let s_lo = _mm_shuffle_epi8(tsl, s_idx[b]);
+                    let s_hi = _mm_shuffle_epi8(tsh, s_idx[b]);
+                    let dense = _mm256_set_m128i(
+                        _mm_unpackhi_epi8(d_lo, d_hi),
+                        _mm_unpacklo_epi8(d_lo, d_hi),
+                    );
+                    let sparse = _mm256_set_m128i(
+                        _mm_unpackhi_epi8(s_lo, s_hi),
+                        _mm_unpacklo_epi8(s_lo, s_hi),
+                    );
+                    slice_acc =
+                        _mm256_add_epi16(slice_acc, _mm256_sub_epi16(dense, sparse));
+                }
+                acc_lo[r] = _mm256_add_epi32(
+                    acc_lo[r],
+                    _mm256_cvtepi16_epi32(_mm256_castsi256_si128(slice_acc)),
+                );
+                acc_hi[r] = _mm256_add_epi32(
+                    acc_hi[r],
+                    _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(slice_acc)),
+                );
+            }
+        }
+        for r in 0..nb {
+            let o = out.add(r * out_stride + tile * PSHUFB_TILE_OUTS);
+            _mm256_storeu_si256(o as *mut __m256i, acc_lo[r]);
+            _mm256_storeu_si256(o.add(8) as *mut __m256i, acc_hi[r]);
+        }
     }
 }

@@ -3,7 +3,7 @@
 //! (ROADMAP "Real AVX2 intrinsics path"; DESIGN.md §2 "native vs.
 //! modeled ISA").
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! * [`detect_path`] — runtime dispatch: `is_x86_feature_detected!`
 //!   picks the [`avx2`] kernels on capable hosts; everything else (and
@@ -12,18 +12,35 @@
 //!   builds and tests on any architecture.
 //! * [`NativeGemv`] — pack ([`PshufbPacked`]) + execute, both paths
 //!   operating on the *same* byte layout so the pack is covered
-//!   everywhere.
+//!   everywhere.  `gemm` row-blocks activation rows
+//!   ([`GEMM_ROW_BLOCK`]) so every 128 B weight record is streamed
+//!   once per block instead of once per row — the paper's GEMM-side
+//!   amortization — and fans tile ranges out over the persistent
+//!   [`WorkerPool`] instead of spawning scoped threads per call.
+//! * [`WorkerPool`] — parked, core-pinned worker threads created once
+//!   per process ([`WorkerPool::global`]), shared by every native
+//!   caller (`NativeGemv`, and through it `NativeBackend` /
+//!   `ModelBackend`).
 //! * [`NativeKernel`] — the [`TernaryKernel`] face: `run` executes for
 //!   real, `profile` reports the modeled OP cost so measured and
 //!   §III-D numbers sit side by side (`benches/native_gemv.rs`).
 //!
 //! Correctness contract: outputs are bit-identical to the modeled ISA
 //! ([`crate::tsar::exec`] driven by [`TsarKernel`]) — enforced by
-//! `tests/native_differential.rs` across randomized shapes and configs.
+//! `tests/native_differential.rs` across randomized shapes and
+//! configs — and the batched GEMM is bit-identical to serialized
+//! per-row GEMVs ([`NativeGemv::gemm_scoped`]) by construction: per
+//! (row, output) it executes the same slice-ascending kernel op
+//! sequence with the same i16/i32 intermediates, only the loop nest
+//! around it changes (`tests/native_gemm_batched.rs`).
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+mod pool;
 
+pub use pool::WorkerPool;
+
+use std::cell::RefCell;
 use std::sync::OnceLock;
 
 use crate::config::IsaConfig;
@@ -78,14 +95,103 @@ pub fn detect_path() -> NativePath {
     })
 }
 
+/// Activation rows per register block of the batched GEMM: each weight
+/// record's index vectors are loaded once and gathered against up to
+/// this many rows' LUTs before the stream advances.  4 rows × 4
+/// accumulator vectors fills the c=2 kernel's ymm budget.
+pub const GEMM_ROW_BLOCK: usize = 4;
+
+/// Reusable scratch behind one GEMM call: padded activations/outputs
+/// plus the per-(row, slice) LUT buffers the batched kernels gather
+/// from.  Buffers only ever grow, so steady-state decode rounds stop
+/// hitting the allocator.
+#[derive(Debug, Default)]
+struct GemmScratch {
+    a_pad: Vec<i8>,
+    o_pad: Vec<i32>,
+    /// AVX2 LUT byte planes (`avx2::fill_c2_tables` layout).
+    tables: Vec<u8>,
+    /// Scalar-path 16-bit LUT entries (`fill_scalar_tables` layout).
+    tables_i16: Vec<i16>,
+}
+
+impl GemmScratch {
+    const fn new() -> GemmScratch {
+        GemmScratch {
+            a_pad: Vec::new(),
+            o_pad: Vec::new(),
+            tables: Vec::new(),
+            tables_i16: Vec::new(),
+        }
+    }
+}
+
+/// Caller-owned scratch for the allocation-free GEMM entry points
+/// ([`NativeGemv::gemm_with`] / [`NativeGemv::gemm_bitlinear_with`]).
+/// The plain `gemm`/`gemm_bitlinear` wrappers use a thread-local one,
+/// so per-call allocation disappears either way; hold a `Workspace`
+/// yourself when you want buffer reuse pinned to a known owner (the
+/// serving backends do).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    gemm: GemmScratch,
+    /// Quantized int8 activations (bitlinear entry).
+    acts: Vec<i8>,
+    /// Integer GEMM results before dequantization (bitlinear entry).
+    ints: Vec<i32>,
+    /// Per-row absmax quantization scales (bitlinear entry).
+    row_scales: Vec<f32>,
+}
+
+impl Workspace {
+    /// An empty workspace; buffers grow on first use and are reused
+    /// after that.
+    pub const fn new() -> Workspace {
+        Workspace {
+            gemm: GemmScratch::new(),
+            acts: Vec::new(),
+            ints: Vec::new(),
+            row_scales: Vec::new(),
+        }
+    }
+}
+
+thread_local! {
+    /// Backing workspace for the plain `gemm`/`gemm_bitlinear` entry
+    /// points: per-thread, so concurrent serving lanes reuse buffers
+    /// without contending.
+    static WORKSPACE: RefCell<Workspace> = const { RefCell::new(Workspace::new()) };
+}
+
+/// Raw pointer into the padded output buffer, shared with pool tasks.
+///
+/// SAFETY (of the `Send`/`Sync` impls): every pool task derived from
+/// one of these writes only its own disjoint tile range, and the
+/// issuing call blocks until all tasks finish before the buffer is
+/// touched again — no aliasing writes, no use after free.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut i32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Contiguous tile range `(first, count)` owned by worker `w` of
+/// `workers`: near-equal chunks, the first `tiles % workers` chunks one
+/// tile wider.
+fn tile_chunk(tiles: usize, workers: usize, w: usize) -> (usize, usize) {
+    let base = tiles / workers;
+    let rem = tiles % workers;
+    (w * base + w.min(rem), base + usize::from(w < rem))
+}
+
 /// Pack-and-execute surface for the native ternary GEMV.
 #[derive(Debug, Clone, Copy)]
 pub struct NativeGemv {
     isa: IsaConfig,
     path: NativePath,
-    /// Worker threads a GEMV's output rows are chunked across (1 =
-    /// single-threaded; the layout is tile-major, so each worker owns a
-    /// contiguous run of 16-output tiles).
+    /// Worker lanes a GEMM's output tiles are chunked across on the
+    /// persistent pool (1 = single-threaded; the layout is tile-major,
+    /// so each lane owns a contiguous run of 16-output tiles).
     threads: usize,
 }
 
@@ -112,19 +218,22 @@ impl NativeGemv {
         Ok(NativeGemv { isa, path, threads: 1 })
     }
 
-    /// Chunk every GEMV's output rows across `threads` scoped workers
-    /// (ROADMAP "multi-threaded native GEMV").  Each worker executes
-    /// the unchanged kernel over a contiguous tile range of the
-    /// tile-major layout, so results are bit-identical to the
-    /// single-threaded path (i32 accumulation is exact and every
-    /// output is computed by exactly one worker).
+    /// Chunk every GEMM's output tiles across `threads` lanes of the
+    /// process-wide persistent [`WorkerPool`] (ROADMAP "batched native
+    /// GEMM + persistent worker pool").  Each lane executes the
+    /// unchanged kernel over a contiguous tile range of the tile-major
+    /// layout, so results are bit-identical to the single-threaded
+    /// path (i32 accumulation is exact and every output is computed by
+    /// exactly one lane).
     ///
-    /// Workers are scoped threads spawned *per GEMV call* (tens of µs
-    /// of overhead each), so threading pays off on the large zoo
-    /// entries' matrices, not on toy shapes; each worker is given at
-    /// least two tiles and the count is clamped accordingly.  A
-    /// persistent worker pool to amortize the spawn cost is a ROADMAP
-    /// follow-up.
+    /// Lanes are pool-resident: the pool's parked threads are created
+    /// once per process and handed tile-range descriptors per call, so
+    /// the old per-call scoped-spawn cost (tens of µs per GEMV site)
+    /// is gone.  Each lane is still given at least two tiles — the
+    /// *effective* lane count for a matrix is
+    /// [`effective_workers`](NativeGemv::effective_workers), which the
+    /// serving backends surface in `plan_summary`.  `threads = 1`
+    /// never touches the pool.
     pub fn with_threads(mut self, threads: usize) -> Result<NativeGemv> {
         crate::ensure!(threads >= 1, "threads must be >= 1");
         self.threads = threads;
@@ -141,6 +250,16 @@ impl NativeGemv {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The lane count a matrix with `tiles` output tiles actually runs
+    /// with: the `threads` knob clamped so every lane owns at least
+    /// two tiles (a tiny matrix would otherwise pay more in handoff
+    /// than it saves in compute).  `threads > tiles/2` silently
+    /// degrading used to be invisible; the serving backends now report
+    /// this per site in `plan_summary`.
+    pub fn effective_workers(&self, tiles: usize) -> usize {
+        self.threads.clamp(1, (tiles / 2).max(1))
     }
 
     /// Compile-time side: pad, encode (Fig. 5) and repack a row-major
@@ -170,14 +289,71 @@ impl NativeGemv {
         self.gemm(acts, packed, 1, out)
     }
 
-    /// Row-major GEMM over `n` activation rows (each row runs the GEMV
-    /// kernel; decode is n = 1).
+    /// Row-major GEMM over `n` activation rows, register-blocked
+    /// [`GEMM_ROW_BLOCK`] rows at a time so the packed weight stream
+    /// is read once per row block instead of once per row (decode is
+    /// n = 1 and degrades to the GEMV inner loop).  Scratch comes from
+    /// a thread-local [`Workspace`]; use [`gemm_with`] to own it.
+    ///
+    /// Bit-identity: per (row, output) the batched kernels execute the
+    /// same slice-ascending op sequence with the same i16/i32
+    /// intermediates as serialized per-row GEMVs
+    /// ([`gemm_scoped`]) — only the loop nest changes — so outputs
+    /// match bit for bit (`tests/native_gemm_batched.rs`).
+    ///
+    /// [`gemm_with`]: NativeGemv::gemm_with
+    /// [`gemm_scoped`]: NativeGemv::gemm_scoped
     pub fn gemm(
         &self,
         acts: &[i8],
         packed: &PshufbPacked,
         n: usize,
         out: &mut [i32],
+    ) -> Result<()> {
+        WORKSPACE.with(|ws| self.gemm_with(&mut ws.borrow_mut(), acts, packed, n, out))
+    }
+
+    /// [`gemm`](NativeGemv::gemm) with caller-owned scratch.
+    pub fn gemm_with(
+        &self,
+        ws: &mut Workspace,
+        acts: &[i8],
+        packed: &PshufbPacked,
+        n: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
+        self.gemm_fields(acts, packed, n, out, &mut ws.gemm)
+    }
+
+    /// Serialized per-row GEMVs on per-call scoped threads — the
+    /// pre-pool execution strategy, kept as the differential anchor
+    /// the batched path is pinned bit-identical to and as the baseline
+    /// the bench's spawn-amortization ratio is measured against.
+    pub fn gemm_scoped(
+        &self,
+        acts: &[i8],
+        packed: &PshufbPacked,
+        n: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
+        self.check_gemm(acts.len(), packed, n, out.len())?;
+        let mut a_pad = vec![0i8; packed.k_pad];
+        let mut o_pad = vec![0i32; packed.m_pad];
+        for row in 0..n {
+            a_pad[..packed.k].copy_from_slice(&acts[row * packed.k..(row + 1) * packed.k]);
+            o_pad.fill(0);
+            self.run_row(&a_pad, packed, &mut o_pad);
+            out[row * packed.m..(row + 1) * packed.m].copy_from_slice(&o_pad[..packed.m]);
+        }
+        Ok(())
+    }
+
+    fn check_gemm(
+        &self,
+        acts_len: usize,
+        packed: &PshufbPacked,
+        n: usize,
+        out_len: usize,
     ) -> Result<()> {
         crate::ensure!(
             packed.c == self.isa.c && packed.s == self.isa.s,
@@ -187,24 +363,43 @@ impl NativeGemv {
             self.isa.name()
         );
         crate::ensure!(
-            acts.len() == n * packed.k,
+            acts_len == n * packed.k,
             "activations hold {} values, expected n*k = {}",
-            acts.len(),
+            acts_len,
             n * packed.k
         );
         crate::ensure!(
-            out.len() == n * packed.m,
+            out_len == n * packed.m,
             "output holds {} slots, expected n*m = {}",
-            out.len(),
+            out_len,
             n * packed.m
         );
-        let mut a_pad = vec![0i8; packed.k_pad];
-        let mut o_pad = vec![0i32; packed.m_pad];
-        for row in 0..n {
-            a_pad[..packed.k].copy_from_slice(&acts[row * packed.k..(row + 1) * packed.k]);
-            o_pad.fill(0);
-            self.run_row(&a_pad, packed, &mut o_pad);
-            out[row * packed.m..(row + 1) * packed.m].copy_from_slice(&o_pad[..packed.m]);
+        Ok(())
+    }
+
+    /// The batched GEMM over explicit scratch fields: pad rows into
+    /// `scratch.a_pad`, run the row-blocked kernels into
+    /// `scratch.o_pad`, strip padding into `out`.
+    fn gemm_fields(
+        &self,
+        acts: &[i8],
+        packed: &PshufbPacked,
+        n: usize,
+        out: &mut [i32],
+        scratch: &mut GemmScratch,
+    ) -> Result<()> {
+        self.check_gemm(acts.len(), packed, n, out.len())?;
+        let (k, m, k_pad, m_pad) = (packed.k, packed.m, packed.k_pad, packed.m_pad);
+        scratch.a_pad.clear();
+        scratch.a_pad.resize(n * k_pad, 0);
+        for (dst, src) in scratch.a_pad.chunks_exact_mut(k_pad).zip(acts.chunks_exact(k)) {
+            dst[..k].copy_from_slice(src);
+        }
+        scratch.o_pad.clear();
+        scratch.o_pad.resize(n * m_pad, 0);
+        self.run_rows(packed, n, scratch);
+        for (dst, src) in out.chunks_exact_mut(m).zip(scratch.o_pad.chunks_exact(m_pad)) {
+            dst.copy_from_slice(&src[..m]);
         }
         Ok(())
     }
@@ -229,6 +424,24 @@ impl NativeGemv {
         scale: f32,
         out: &mut [f32],
     ) -> Result<()> {
+        WORKSPACE.with(|ws| {
+            self.gemm_bitlinear_with(&mut ws.borrow_mut(), x, packed, n, scale, out)
+        })
+    }
+
+    /// [`gemm_bitlinear`](NativeGemv::gemm_bitlinear) with caller-owned
+    /// scratch: quantized activations, integer results, and row scales
+    /// all live in `ws`, so steady-state decode rounds are
+    /// allocation-free.
+    pub fn gemm_bitlinear_with(
+        &self,
+        ws: &mut Workspace,
+        x: &[f32],
+        packed: &PshufbPacked,
+        n: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
         crate::ensure!(
             x.len() == n * packed.k,
             "activations hold {} values, expected n*k = {}",
@@ -241,17 +454,17 @@ impl NativeGemv {
             out.len(),
             n * packed.m
         );
-        let mut acts = Vec::with_capacity(n * packed.k);
-        let mut row_scales = Vec::with_capacity(n);
+        let Workspace { gemm: scratch, acts, ints, row_scales } = ws;
+        acts.clear();
+        row_scales.clear();
         for row in x.chunks_exact(packed.k) {
-            let (q, s) = crate::quant::absmax_quantize(row);
-            acts.extend_from_slice(&q);
-            row_scales.push(s);
+            row_scales.push(crate::quant::absmax_quantize_into(row, acts));
         }
-        let mut ints = vec![0i32; n * packed.m];
-        self.gemm(&acts, packed, n, &mut ints)?;
+        ints.clear();
+        ints.resize(n * packed.m, 0);
+        self.gemm_fields(acts, packed, n, ints, scratch)?;
         for ((out_row, ints_row), &s) in
-            out.chunks_exact_mut(packed.m).zip(ints.chunks_exact(packed.m)).zip(&row_scales)
+            out.chunks_exact_mut(packed.m).zip(ints.chunks_exact(packed.m)).zip(row_scales.iter())
         {
             let deq = scale / s;
             for (o, &acc) in out_row.iter_mut().zip(ints_row) {
@@ -261,11 +474,106 @@ impl NativeGemv {
         Ok(())
     }
 
+    /// Execute the row-blocked kernels over `scratch.a_pad` /
+    /// `scratch.o_pad` (both already padded and zeroed), fanning each
+    /// block's tile ranges out across the persistent pool.  Every lane
+    /// writes a disjoint contiguous tile range of every row — no
+    /// synchronization on the hot path, bit-identical by construction.
+    fn run_rows(&self, packed: &PshufbPacked, n: usize, scratch: &mut GemmScratch) {
+        let workers = self.effective_workers(packed.tiles);
+        let GemmScratch { a_pad, o_pad, tables, tables_i16 } = scratch;
+        let (k_pad, m_pad) = (packed.k_pad, packed.m_pad);
+        let (tiles, slices) = (packed.tiles, packed.slices);
+        let out_base = o_pad.as_mut_ptr();
+        let use_avx2 = cfg!(target_arch = "x86_64") && self.path == NativePath::Avx2;
+        // The AVX2 byte-plane buffer is only exercised on x86_64.
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = &tables;
+        let mut row0 = 0usize;
+        while row0 < n {
+            let nb = GEMM_ROW_BLOCK.min(n - row0);
+            let block_acts = &a_pad[row0 * k_pad..(row0 + nb) * k_pad];
+            // SAFETY: rows `row0..row0+nb` of the n·m_pad buffer.
+            let out = SendPtr(unsafe { out_base.add(row0 * m_pad) });
+            if use_avx2 {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    let c2 = self.isa.c == 2;
+                    let entry =
+                        if c2 { avx2::C2_TABLE_BYTES } else { avx2::C4_TABLE_BYTES };
+                    tables.clear();
+                    tables.resize(nb * slices * entry, 0);
+                    for (dst, src) in tables
+                        .chunks_exact_mut(slices * entry)
+                        .zip(block_acts.chunks_exact(k_pad))
+                    {
+                        if c2 {
+                            avx2::fill_c2_tables(src, dst);
+                        } else {
+                            avx2::fill_c4_tables(src, dst);
+                        }
+                    }
+                    let tables_ro: &[u8] = tables;
+                    let task = |w: usize| {
+                        let (t0, tw) = tile_chunk(tiles, workers, w);
+                        let data = packed.tile_records(t0, tw);
+                        // SAFETY: AVX2 verified in `with_path`; each
+                        // task writes its own disjoint tile range and
+                        // `run` blocks until all tasks finish.
+                        unsafe {
+                            let o = out.0.add(t0 * PSHUFB_TILE_OUTS);
+                            if c2 {
+                                avx2::gemm_rows_c2(data, tw, slices, tables_ro, nb, o, m_pad);
+                            } else {
+                                avx2::gemm_rows_c4(data, tw, slices, tables_ro, nb, o, m_pad);
+                            }
+                        }
+                    };
+                    if workers == 1 {
+                        task(0);
+                    } else {
+                        WorkerPool::global().run(workers, task);
+                    }
+                }
+            } else {
+                let isa = self.isa;
+                let stride = 2 * isa.s * (1usize << isa.c);
+                tables_i16.clear();
+                tables_i16.resize(nb * slices * stride, 0);
+                for (dst, src) in tables_i16
+                    .chunks_exact_mut(slices * stride)
+                    .zip(block_acts.chunks_exact(k_pad))
+                {
+                    fill_scalar_tables(&isa, src, dst);
+                }
+                let tables_ro: &[i16] = tables_i16;
+                let task = |w: usize| {
+                    let (t0, tw) = tile_chunk(tiles, workers, w);
+                    let data = packed.tile_records(t0, tw);
+                    // SAFETY: each task writes its own disjoint tile
+                    // range and `run` blocks until all tasks finish.
+                    unsafe {
+                        let o = out.0.add(t0 * PSHUFB_TILE_OUTS);
+                        scalar_rows(&isa, data, slices, tables_ro, nb, o, m_pad);
+                    }
+                };
+                if workers == 1 {
+                    task(0);
+                } else {
+                    WorkerPool::global().run(workers, task);
+                }
+            }
+            row0 += nb;
+        }
+    }
+
+    /// Legacy per-row execution on per-call scoped threads — only
+    /// reachable through [`gemm_scoped`](NativeGemv::gemm_scoped).
     fn run_row(&self, acts: &[i8], packed: &PshufbPacked, out: &mut [i32]) {
         // Spawning a scoped worker costs tens of µs; give each at
         // least two tiles so a tiny matrix never pays more in spawns
         // than it saves in compute.
-        let workers = self.threads.clamp(1, (packed.tiles / 2).max(1));
+        let workers = self.effective_workers(packed.tiles);
         if workers == 1 {
             self.run_tile_range(&packed.data, packed.tiles, packed.slices, acts, out);
             return;
@@ -384,6 +692,86 @@ fn scalar_range(
                     acc += diff as i32;
                 }
                 out[base + o] += acc;
+            }
+        }
+    }
+}
+
+/// Precompute one activation row's 16-bit LUT entries for every
+/// k-slice: per (row, slice), `s · 2^c` dense entries followed by
+/// `s · 2^c` sparse entries — exactly the tables [`scalar_range`]
+/// builds inline, hoisted so the batched path pays the build once per
+/// (row, slice) instead of once per (row, slice, tile-range).
+fn fill_scalar_tables(isa: &IsaConfig, acts: &[i8], dst: &mut [i16]) {
+    let (c, s) = (isa.c, isa.s);
+    let entries = 1usize << c;
+    let stride = 2 * s * entries;
+    for (t, a) in dst.chunks_exact_mut(stride).zip(acts.chunks_exact(isa.k)) {
+        let (dense, sparse) = t.split_at_mut(s * entries);
+        for b in 0..s {
+            let blk = &a[b * c..(b + 1) * c];
+            for p in 0..entries {
+                let (d, sp) = lut_entry(blk, p);
+                dense[b * entries + p] = d;
+                sparse[b * entries + p] = sp;
+            }
+        }
+    }
+}
+
+/// Row-blocked scalar GEMM over a contiguous tile range (`data` =
+/// `tiles · slices` records, tiles derived from its length): the
+/// record's index bytes are decoded once per (slice, output) and
+/// gathered against every row's precomputed tables
+/// ([`fill_scalar_tables`] layout) — the scalar mirror of the AVX2
+/// batched amortization.  Row `r`'s outputs for tile `t` land at
+/// `out + r·out_stride + 16·t`.
+///
+/// Bit-identity: per (row, output) the slice-ascending, block-ascending
+/// accumulation is exactly [`scalar_range`]'s — same i16 differences,
+/// same i32 adds in the same order.
+///
+/// # Safety
+/// `out` must have `(nb-1)·out_stride + tiles·16` zero-initialized
+/// writable slots disjoint from `data`/`tables`.
+unsafe fn scalar_rows(
+    isa: &IsaConfig,
+    data: &[u8],
+    slices: usize,
+    tables: &[i16],
+    nb: usize,
+    out: *mut i32,
+    out_stride: usize,
+) {
+    let (c, s) = (isa.c, isa.s);
+    let entries = 1usize << c;
+    let stride = 2 * s * entries;
+    let tiles = data.len() / (slices * PSHUFB_TILE_SLICE_BYTES);
+    debug_assert!(s <= 8, "paper configs keep s = 4");
+    debug_assert!(tables.len() >= nb * slices * stride);
+    for tile in 0..tiles {
+        let base = tile * PSHUFB_TILE_OUTS;
+        for slice in 0..slices {
+            let rec = &data[(tile * slices + slice) * PSHUFB_TILE_SLICE_BYTES..]
+                [..PSHUFB_TILE_SLICE_BYTES];
+            for o in 0..PSHUFB_TILE_OUTS {
+                // Decode the record's index pairs once for the whole
+                // row block — this is what n > 1 buys on this path.
+                let mut idx = [(0u8, 0u8); 8];
+                for (b, ip) in idx.iter_mut().enumerate().take(s) {
+                    *ip = PshufbPacked::record_indices(c, rec, o, b);
+                }
+                for r in 0..nb {
+                    let t = &tables[(r * slices + slice) * stride..][..stride];
+                    let (dense, sparse) = t.split_at(s * entries);
+                    let mut acc = 0i32;
+                    for (b, &(dp, sn)) in idx.iter().enumerate().take(s) {
+                        let diff = dense[b * entries + dp as usize]
+                            .wrapping_sub(sparse[b * entries + sn as usize]);
+                        acc += diff as i32;
+                    }
+                    *out.add(r * out_stride + base + o) += acc;
+                }
             }
         }
     }
@@ -565,6 +953,78 @@ mod tests {
             let mut short = vec![0f32; m];
             assert!(gemv.gemm_bitlinear(&x, &packed, n, scale, &mut short).is_err());
         }
+    }
+
+    #[test]
+    fn batched_gemm_matches_serialized_scoped_path_bit_for_bit() {
+        // The heavy randomized sweep lives in tests/native_gemm_batched.rs;
+        // this is the in-module smoke for the core identity: the
+        // row-blocked pool path ≡ serialized per-row GEMVs, bit for bit,
+        // including n that is not a multiple of GEMM_ROW_BLOCK.
+        let mut rng = Rng::new(99);
+        for isa in [IsaConfig::C2, IsaConfig::C4] {
+            for gemv in [
+                NativeGemv::with_path(isa, NativePath::Scalar).unwrap(),
+                NativeGemv::new(isa).unwrap(),
+            ] {
+                for &(n, k, m) in &[(1usize, 37usize, 19usize), (4, 53, 45), (7, 96, 130)] {
+                    let acts = rng.int8_acts(n * k);
+                    let w = rng.ternary_matrix(m, k, 0.33);
+                    let packed = gemv.pack(&w, m, k).unwrap();
+                    let mut serial = vec![0i32; n * m];
+                    gemv.gemm_scoped(&acts, &packed, n, &mut serial).unwrap();
+                    for threads in [1usize, 3] {
+                        let g = gemv.with_threads(threads).unwrap();
+                        let mut batched = vec![0i32; n * m];
+                        g.gemm(&acts, &packed, n, &mut batched).unwrap();
+                        assert_eq!(
+                            batched,
+                            serial,
+                            "n={n} threads={threads} ({} {:?})",
+                            isa.name(),
+                            g.path()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn caller_owned_workspace_matches_and_reuses_buffers() {
+        let mut rng = Rng::new(101);
+        let shape = GemmShape::new(5, 48, 37);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let w = rng.ternary_matrix(shape.m, shape.k, 0.3);
+        let gemv = NativeGemv::new(IsaConfig::C2).unwrap();
+        let packed = gemv.pack(&w, shape.m, shape.k).unwrap();
+        let mut want = vec![0i32; shape.n * shape.m];
+        gemv.gemm(&acts, &packed, shape.n, &mut want).unwrap();
+        let mut ws = Workspace::new();
+        for round in 0..3 {
+            let mut out = vec![0i32; shape.n * shape.m];
+            gemv.gemm_with(&mut ws, &acts, &packed, shape.n, &mut out).unwrap();
+            assert_eq!(out, want, "round {round}");
+        }
+        // The bitlinear entry reuses the same workspace.
+        let x: Vec<f32> = (0..shape.n * shape.k).map(|_| rng.normal() as f32).collect();
+        let mut f_plain = vec![0f32; shape.n * shape.m];
+        gemv.gemm_bitlinear(&x, &packed, shape.n, 0.2, &mut f_plain).unwrap();
+        let mut f_ws = vec![0f32; shape.n * shape.m];
+        gemv.gemm_bitlinear_with(&mut ws, &x, &packed, shape.n, 0.2, &mut f_ws).unwrap();
+        assert_eq!(f_plain, f_ws);
+    }
+
+    #[test]
+    fn effective_workers_reports_the_tile_clamp() {
+        let gemv = NativeGemv::new(IsaConfig::C2).unwrap().with_threads(8).unwrap();
+        // 40 tiles: 8 lanes fit (each ≥ 2 tiles, 40/2 = 20 max).
+        assert_eq!(gemv.effective_workers(40), 8);
+        // 6 tiles: clamped to 3 lanes; 1 tile: single-threaded.
+        assert_eq!(gemv.effective_workers(6), 3);
+        assert_eq!(gemv.effective_workers(1), 1);
+        let single = NativeGemv::new(IsaConfig::C2).unwrap();
+        assert_eq!(single.effective_workers(1000), 1);
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Persistent pinned worker pool for the native GEMM hot path
+//! (ROADMAP "Batched native GEMM + persistent NUMA-aware worker pool";
+//! DESIGN.md §2 "worker pool + row-blocked GEMM").
+//!
+//! The pre-pool implementation spawned scoped threads on *every* GEMV
+//! call — tens of µs of spawn cost per BitLinear site, paid hundreds of
+//! times per decode round.  Here workers are `std::thread`s created
+//! once and parked on a condvar; a call hands them a batch of task
+//! indices and returns when every index has executed.  The handoff is
+//! one mutex push + wakeup (~µs), independent of how many GEMMs ran
+//! before.
+//!
+//! Design points:
+//!
+//! * **Borrowed closures without `'static`** — [`WorkerPool::run`]
+//!   erases the caller's `Fn(usize) + Sync` closure to a
+//!   `(*const (), fn)` pair.  This is sound because `run` does not
+//!   return until the job's `remaining` counter hits zero, so the
+//!   closure (and everything it borrows) strictly outlives every
+//!   dereference; task indices are claimed at most once from an atomic
+//!   cursor.
+//! * **The caller is a lane** — `run` claims task indices alongside the
+//!   workers, so a pool of W workers provides W+1 execution lanes and a
+//!   pool-less (`workers = 0`) build degrades to plain inline
+//!   execution.
+//! * **Per-worker core affinity** — on Linux each worker pins itself to
+//!   core `(index + 1) % cores` via `sched_setaffinity` (leaving core 0
+//!   to callers), so lanes stop migrating under the OS scheduler;
+//!   everywhere else pinning is a recorded no-op
+//!   ([`WorkerPool::pinned_workers`] reports what actually stuck).
+//! * **Concurrent callers** — jobs queue FIFO; every caller is
+//!   guaranteed to finish its own job (it claims indices itself even if
+//!   all workers are busy elsewhere), so serving lanes can share the
+//!   [`WorkerPool::global`] pool without deadlock.
+//! * **Panic containment** — a panicking task marks the job poisoned
+//!   and keeps the counters consistent; the caller re-raises after the
+//!   job drains, matching scoped-thread semantics without wedging the
+//!   pool.
+//!
+//! Determinism: the pool executes whatever task partition the caller
+//! chose — *which* thread runs a task never changes *what* it computes,
+//! so the GEMM's bit-identity argument (disjoint output tiles, exact
+//! i32 accumulation) is untouched by scheduling.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One broadcast job: a type-erased borrowed closure plus the atomic
+/// cursors workers claim task indices from.
+struct Job {
+    /// Erased `&F` where `F: Fn(usize) + Sync`; valid until `remaining`
+    /// reaches zero (enforced by [`WorkerPool::run`] blocking).
+    func: *const (),
+    call: unsafe fn(*const (), usize),
+    tasks: usize,
+    /// Next unclaimed task index (may overshoot `tasks`).
+    next: AtomicUsize,
+    /// Tasks not yet finished executing.
+    remaining: AtomicUsize,
+    /// Set when any task panicked; the caller re-raises.
+    poisoned: AtomicBool,
+}
+
+// SAFETY: `func` points at a `Sync` closure that the issuing `run`
+// call keeps alive until `remaining` hits zero; all other fields are
+// atomics/plain data.  Sharing across worker threads is the point.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+unsafe fn call_erased<F: Fn(usize) + Sync>(func: *const (), i: usize) {
+    (*(func as *const F))(i);
+}
+
+struct State {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for jobs.
+    work_cv: Condvar,
+    /// Callers park here waiting for their job's stragglers.
+    done_cv: Condvar,
+    /// Workers whose `sched_setaffinity` call succeeded.
+    pinned: AtomicUsize,
+}
+
+/// A persistent pool of parked worker threads executing broadcast task
+/// batches (see the module docs for the design and soundness argument).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads (0 is valid: every [`run`] then
+    /// executes inline on the caller).  On Linux each worker pins
+    /// itself to core `(index + 1) % cores`; elsewhere pinning is a
+    /// no-op.
+    ///
+    /// [`run`]: WorkerPool::run
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            pinned: AtomicUsize::new(0),
+        });
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("tsar-pool-{w}"))
+                .spawn(move || {
+                    if pin_to_core((w + 1) % cores) {
+                        sh.pinned.fetch_add(1, Ordering::Relaxed);
+                    }
+                    worker_loop(&sh);
+                })
+                .expect("spawn worker-pool thread");
+            handles.push(handle);
+        }
+        WorkerPool { shared, handles }
+    }
+
+    /// The process-wide pool shared by every native GEMM call site
+    /// (`NativeGemv`, and through it `NativeBackend` / `ModelBackend`),
+    /// created on first use with `available_parallelism - 1` workers —
+    /// the caller of each `run` is the remaining lane.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(n.saturating_sub(1))
+        })
+    }
+
+    /// Worker threads resident in this pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Workers whose core pin actually took effect (0 on non-Linux).
+    pub fn pinned_workers(&self) -> usize {
+        self.shared.pinned.load(Ordering::Relaxed)
+    }
+
+    /// Execute `f(0), f(1), …, f(tasks - 1)` exactly once each, fanned
+    /// out over the pool's workers with the caller participating, and
+    /// return once **all** of them have finished.  Tasks must be safe
+    /// to run concurrently (the GEMM hands each one a disjoint output
+    /// tile range).
+    ///
+    /// Blocking until completion is what makes handing workers a
+    /// *borrowed* closure sound — see the module docs.
+    ///
+    /// # Panics
+    /// Re-raises (as a new panic) if any task panicked, after the whole
+    /// batch has drained — the pool itself stays usable.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        if tasks == 1 || self.handles.is_empty() {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            func: &f as *const F as *const (),
+            call: call_erased::<F>,
+            tasks,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(tasks),
+            poisoned: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queue.push_back(Arc::clone(&job));
+        }
+        self.shared.work_cv.notify_all();
+        // Claim and execute alongside the workers: even with every
+        // worker busy on another caller's job, this job completes.
+        execute(&self.shared, &job);
+        // Wait for straggler workers still inside claimed tasks.  The
+        // check-then-wait runs under the state mutex, and finishers
+        // notify while holding it, so the wakeup cannot be lost.
+        let mut st = self.shared.state.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        if let Some(i) = st.queue.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            st.queue.remove(i);
+        }
+        drop(st);
+        if job.poisoned.load(Ordering::Acquire) {
+            panic!("worker-pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by workers and callers.  Every
+/// finished task decrements `remaining`; whoever finishes the last one
+/// wakes the waiting caller.  Panics are contained so the counters stay
+/// consistent (the caller re-raises from the poisoned flag).
+fn execute(shared: &Shared, job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.tasks {
+            return;
+        }
+        // SAFETY: `i < tasks` indices are claimed exactly once, and the
+        // closure behind `func` outlives the job (the issuing `run`
+        // blocks until `remaining` is zero, which can only happen after
+        // this call returns and decrements).
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.func, i) })).is_ok();
+        if !ok {
+            job.poisoned.store(true, Ordering::Release);
+        }
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _st = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                // Drop fully-claimed entries (their issuing callers
+                // reap completion separately), then take the oldest
+                // job that still has unclaimed tasks.
+                while let Some(front) = st.queue.front() {
+                    if front.next.load(Ordering::Relaxed) >= front.tasks {
+                        st.queue.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(job) = st.queue.front() {
+                    break Arc::clone(job);
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        execute(shared, &job);
+    }
+}
+
+/// Pin the calling thread to `core`.  Linux only: issues
+/// `sched_setaffinity(0, …)` directly (std already links libc there —
+/// no new dependency); every other platform reports `false` and runs
+/// unpinned.
+#[cfg(target_os = "linux")]
+fn pin_to_core(core: usize) -> bool {
+    // glibc's cpu_set_t: 1024 bits.  Cores past that simply don't pin.
+    const SETSIZE_BYTES: usize = 128;
+    if core >= SETSIZE_BYTES * 8 {
+        return false;
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u8) -> i32;
+    }
+    let mut mask = [0u8; SETSIZE_BYTES];
+    mask[core / 8] |= 1 << (core % 8);
+    // SAFETY: pid 0 targets the calling thread; the mask buffer is a
+    // valid, initialized SETSIZE_BYTES-byte allocation.
+    unsafe { sched_setaffinity(0, SETSIZE_BYTES, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+
+    #[test]
+    fn runs_every_task_exactly_once_and_is_reusable() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for round in 0..4 {
+            let n = 23 + round;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(SeqCst), 1, "round {round} task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tasks_and_zero_workers_degrade_gracefully() {
+        let pool = WorkerPool::new(0);
+        pool.run(0, |_| panic!("no tasks must mean no calls"));
+        let hits = AtomicUsize::new(0);
+        pool.run(5, |_| {
+            hits.fetch_add(1, SeqCst);
+        });
+        assert_eq!(hits.load(SeqCst), 5, "workerless pool still executes inline");
+    }
+
+    #[test]
+    fn tasks_observe_borrowed_caller_state() {
+        // The soundness contract in practice: tasks read and write
+        // buffers borrowed from the caller's stack frame.
+        let pool = WorkerPool::new(2);
+        let input: Vec<usize> = (0..64).collect();
+        let out: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(64, |i| {
+            out[i].store(input[i] * 3, SeqCst);
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(SeqCst), i * 3);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_all_complete() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        pool.run(16, |_| {
+                            total.fetch_add(1, SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(SeqCst), 4 * 8 * 16);
+    }
+
+    #[test]
+    fn panicking_task_poisons_the_job_but_not_the_pool() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "a task panic must reach the caller");
+        // The pool survives and keeps executing.
+        let hits = AtomicUsize::new(0);
+        pool.run(6, |_| {
+            hits.fetch_add(1, SeqCst);
+        });
+        assert_eq!(hits.load(SeqCst), 6);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_reports_pinning() {
+        let pool = WorkerPool::global();
+        assert!(std::ptr::eq(pool, WorkerPool::global()));
+        assert!(pool.pinned_workers() <= pool.workers());
+        let hits = AtomicUsize::new(0);
+        pool.run(9, |_| {
+            hits.fetch_add(1, SeqCst);
+        });
+        assert_eq!(hits.load(SeqCst), 9);
+    }
+}

@@ -61,10 +61,13 @@ merged serve report.
 `serve --backend native` executes every decode step's BitLinear GEMVs
 through the host AVX2 pshufb kernels (scalar fallback elsewhere) and
 reports measured wall-clock latency; tokens are bit-identical to the
-default simulator backend.  `--threads T` chunks each GEMV's output
-rows across T host threads (bit-identical results).  The native weight
-layout costs ~1 B/weight, so it defaults to BitNet-125M — pass --model
-explicitly to serve the billion-parameter zoo entries natively.
+default simulator backend.  `--threads T` chunks each GEMM's output
+tiles across T lanes of a persistent, core-pinned worker pool created
+once per process (no per-call thread spawns; bit-identical results).
+Small sites clamp to fewer lanes (>= 2 tiles each) — the plan summary
+reports the effective count per site.  The native weight layout costs
+~1 B/weight, so it defaults to BitNet-125M — pass --model explicitly
+to serve the billion-parameter zoo entries natively.
 
 `serve --backend model` runs a *real* ternary transformer forward
 pass: every streamed token is sampled from logits produced by the
@@ -314,7 +317,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
             });
             // The native path executes on the host CPU; the simulator's
             // platform knob does not apply (--threads does: it chunks
-            // every GEMV's output rows across host worker threads).
+            // every GEMM's output tiles across persistent pool lanes).
             if flag(args, "--platform").is_some() {
                 eprintln!(
                     "warning: --platform models the simulator and is ignored by \

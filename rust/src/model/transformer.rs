@@ -42,7 +42,11 @@ use super::checkpoint::{Checkpoint, TransformerConfig};
 pub enum LinearEngine {
     /// Host-SIMD execution: AVX2 pshufb where detected, the portable
     /// scalar fallback elsewhere (`TSAR_NATIVE_FORCE_SCALAR=1` forces
-    /// it).  `threads` chunks output tiles across scoped workers.
+    /// it).  `threads` chunks output tiles across lanes of the
+    /// persistent process-wide worker pool
+    /// ([`crate::kernels::WorkerPool`]); batched rounds run the
+    /// row-blocked GEMM so the packed weight stream is read once per
+    /// row block.
     Native(NativeGemv),
     /// The modeled T-SAR ISA (`tsar::exec` semantics, OP dataflow) —
     /// slower, but exercises the register-file model end to end.
@@ -71,6 +75,16 @@ impl LinearEngine {
     pub fn native_path(&self) -> Option<NativePath> {
         match self {
             LinearEngine::Native(g) => Some(g.path()),
+            LinearEngine::Modeled(_) => None,
+        }
+    }
+
+    /// The underlying native GEMV when this engine runs on host SIMD —
+    /// lets serving surfaces report pool/threading facts (effective
+    /// worker counts per site) in their plan summaries.
+    pub fn native_gemv(&self) -> Option<&NativeGemv> {
+        match self {
+            LinearEngine::Native(g) => Some(g),
             LinearEngine::Modeled(_) => None,
         }
     }

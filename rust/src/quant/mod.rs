@@ -28,14 +28,21 @@ pub fn absmean_ternarize(w: &[f32]) -> (Vec<i8>, f32) {
 
 /// Per-token absmax int8 quantization. Returns (q, s) with x ≈ q / s.
 pub fn absmax_quantize(x: &[f32]) -> (Vec<i8>, f32) {
+    let mut q = Vec::new();
+    let s = absmax_quantize_into(x, &mut q);
+    (q, s)
+}
+
+/// [`absmax_quantize`] appending into a caller-owned buffer (returns
+/// the scale) — the allocation-free form the batched GEMM workspace
+/// uses per activation row.  Semantics are identical by construction:
+/// the plain entry point delegates here.
+pub fn absmax_quantize_into(x: &[f32], out: &mut Vec<i8>) -> f32 {
     assert!(!x.is_empty());
     let absmax = x.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
     let s = 127.0 / absmax;
-    let q = x
-        .iter()
-        .map(|&v| (v * s).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    (q, s)
+    out.extend(x.iter().map(|&v| (v * s).round().clamp(-127.0, 127.0) as i8));
+    s
 }
 
 /// The ternary→binary decomposition (paper §III-A):
@@ -171,6 +178,17 @@ mod tests {
         let (q, s) = absmax_quantize(&[1.0, -2.0, 0.5]);
         assert_eq!(q[1], -127);
         assert!((s - 63.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn absmax_quantize_into_appends_and_matches_allocating_form() {
+        let x = [0.3f32, -1.7, 0.0, 0.9, -0.2];
+        let (q, s) = absmax_quantize(&x);
+        let mut buf = vec![7i8; 2];
+        let s2 = absmax_quantize_into(&x, &mut buf);
+        assert_eq!(s.to_bits(), s2.to_bits(), "scales must be bit-identical");
+        assert_eq!(&buf[..2], &[7, 7], "append semantics: existing bytes kept");
+        assert_eq!(&buf[2..], &q[..]);
     }
 
     #[test]

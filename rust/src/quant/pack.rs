@@ -361,6 +361,15 @@ impl PshufbPacked {
     pub fn packed_bytes(&self) -> usize {
         self.data.len()
     }
+
+    /// The records of `tiles` consecutive tiles starting at `tile0` —
+    /// the contiguous byte range a worker lane owning that tile chunk
+    /// streams (the layout is tile-major, so a tile range is one
+    /// slice).
+    pub fn tile_records(&self, tile0: usize, tiles: usize) -> &[u8] {
+        let rec = self.slices * PSHUFB_TILE_SLICE_BYTES;
+        &self.data[tile0 * rec..(tile0 + tiles) * rec]
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +497,24 @@ mod tests {
         let enc = crate::quant::encode_indices(&w, 16, 16, 2);
         let p = PshufbPacked::from_encoded(&enc, 4, 16, 16).unwrap();
         assert!(p.data.iter().all(|&b| b < 16));
+    }
+
+    #[test]
+    fn pshufb_tile_records_cover_data_contiguously() {
+        let mut rng = Rng::new(10);
+        let w = rng.ternary_matrix(48, 16, 0.4);
+        let enc = crate::quant::encode_indices(&w, 48, 16, 2);
+        let p = PshufbPacked::from_encoded(&enc, 4, 48, 16).unwrap();
+        assert_eq!(p.tiles, 3);
+        assert_eq!(p.tile_records(0, p.tiles), &p.data[..]);
+        let rec = p.slices * PSHUFB_TILE_SLICE_BYTES;
+        let mut rebuilt = Vec::new();
+        for t in 0..p.tiles {
+            let chunk = p.tile_records(t, 1);
+            assert_eq!(chunk.len(), rec);
+            rebuilt.extend_from_slice(chunk);
+        }
+        assert_eq!(rebuilt, p.data);
     }
 
     #[test]

@@ -233,10 +233,28 @@ impl Backend for ModelBackend {
     }
 
     fn plan_summary(&self) -> Option<String> {
-        Some(crate::coordinator::describe_site_shapes(
+        let mut summary = crate::coordinator::describe_site_shapes(
             &self.model.site_shapes(),
             &self.model.engine().name(),
-        ))
+        );
+        // Native engines run on the persistent pool: surface the
+        // configured lane count and, per site, the *effective* count
+        // after the ≥2-tiles-per-lane clamp (`threads > tiles/2` used
+        // to degrade invisibly).
+        if let Some(g) = self.model.engine().native_gemv() {
+            use crate::quant::pack::PSHUFB_TILE_OUTS;
+            let sites: Vec<String> = self
+                .model
+                .site_shapes()
+                .iter()
+                .map(|(site, sh)| {
+                    let tiles = sh.m.div_ceil(PSHUFB_TILE_OUTS);
+                    format!("{site}:workers={}", g.effective_workers(tiles))
+                })
+                .collect();
+            summary = format!("{summary} | pool threads={} {}", g.threads(), sites.join(" "));
+        }
+        Some(summary)
     }
 }
 
@@ -331,6 +349,28 @@ mod tests {
         }
         assert!(b.weight_bytes() > 0);
         assert!(b.describe().contains("model:ckpt"));
+    }
+
+    #[test]
+    fn plan_summary_surfaces_pool_threads_and_effective_workers() {
+        let ckpt = Checkpoint::synthesize(TransformerConfig::toy(), 0xC0FFEE).unwrap();
+        let engine = LinearEngine::native(IsaConfig::C2, 4).unwrap();
+        let cfg = ModelBackendConfig { prefill_len: 8, max_seq: 24, ..Default::default() };
+        let b = ModelBackend::new(&ckpt, engine, cfg).unwrap();
+        let summary = b.plan_summary().unwrap();
+        assert!(summary.contains("pool threads=4"), "{summary:?}");
+        assert!(summary.contains("workers="), "{summary:?}");
+        // The toy checkpoint's sites are small: every effective count
+        // must respect the ≥2-tiles-per-lane clamp.
+        let g = b.model.engine().native_gemv().unwrap();
+        for (site, sh) in b.model.site_shapes() {
+            let tiles = sh.m.div_ceil(crate::quant::pack::PSHUFB_TILE_OUTS);
+            let want = g.effective_workers(tiles);
+            assert!(
+                summary.contains(&format!("{site}:workers={want}")),
+                "site {site} should report workers={want}: {summary:?}"
+            );
+        }
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //! parameter zoo entries natively takes real RAM; the serve demo and
 //! tests use the small end of the zoo.
 
+use std::cell::RefCell;
+
 use crate::config::IsaConfig;
-use crate::kernels::native::{NativeGemv, NativePath};
+use crate::kernels::native::{NativeGemv, NativePath, Workspace};
 use crate::model::zoo::{self, ModelSpec};
 use crate::model::Workload;
 use crate::quant::pack::PshufbPacked;
@@ -125,24 +127,36 @@ impl NativeBackend {
 
     /// One real forward pass (N = 1): every site's GEMV executes
     /// `count` times with fresh synthetic activations.  `step_tag`
-    /// varies the activation stream per step.
+    /// varies the activation stream per step.  Scratch is per-lane
+    /// (thread-local), so concurrent serving lanes reuse buffers
+    /// without allocating per site per step.
     fn forward_pass(&self, step_tag: u64) -> Result<()> {
-        for (li, layer) in self.layers.iter().enumerate() {
-            let mut acts = vec![0i8; layer.shape.k];
-            let mut out = vec![0i32; layer.shape.m];
-            for rep in 0..layer.count {
-                let mut rng = Rng::new(
-                    step_tag ^ ((li as u64) << 40) ^ (rep as u64).wrapping_mul(0x9E37_79B9),
-                );
-                for v in acts.iter_mut() {
-                    *v = rng.range_i64(-127, 127) as i8;
-                }
-                self.gemv.gemv(&acts, &layer.packed, &mut out)?;
-                // Keep the kernel's work observable to the optimizer.
-                std::hint::black_box(&out);
-            }
+        thread_local! {
+            /// (activations, outputs, kernel workspace) per lane.
+            static SCRATCH: RefCell<(Vec<i8>, Vec<i32>, Workspace)> =
+                const { RefCell::new((Vec::new(), Vec::new(), Workspace::new())) };
         }
-        Ok(())
+        SCRATCH.with(|scratch| {
+            let (acts, out, ws) = &mut *scratch.borrow_mut();
+            for (li, layer) in self.layers.iter().enumerate() {
+                acts.clear();
+                acts.resize(layer.shape.k, 0);
+                out.clear();
+                out.resize(layer.shape.m, 0);
+                for rep in 0..layer.count {
+                    let mut rng = Rng::new(
+                        step_tag ^ ((li as u64) << 40) ^ (rep as u64).wrapping_mul(0x9E37_79B9),
+                    );
+                    for v in acts.iter_mut() {
+                        *v = rng.range_i64(-127, 127) as i8;
+                    }
+                    self.gemv.gemm_with(ws, acts, &layer.packed, 1, out)?;
+                    // Keep the kernel's work observable to the optimizer.
+                    std::hint::black_box(&out);
+                }
+            }
+            Ok(())
+        })
     }
 }
 
@@ -198,15 +212,19 @@ impl Backend for NativeBackend {
     }
 
     fn plan_summary(&self) -> Option<String> {
+        // `workers=` is the *effective* lane count per site: the
+        // `--threads` knob clamped so every pool lane owns ≥ 2 output
+        // tiles — small sites silently degrading used to be invisible.
         let sites: Vec<String> = self
             .layers
             .iter()
             .map(|l| {
                 format!(
-                    "{}:native-{}/{}",
+                    "{}:native-{}/{} workers={}",
                     l.site,
                     self.gemv.path().name(),
-                    self.gemv.isa().name()
+                    self.gemv.isa().name(),
+                    self.gemv.effective_workers(l.packed.tiles)
                 )
             })
             .collect();
@@ -281,5 +299,28 @@ mod tests {
         }
         assert!(summary.contains("native-"));
         assert!(native.packed_bytes() > 0);
+    }
+
+    #[test]
+    fn plan_summary_reports_effective_workers_per_site() {
+        // threads=8 against the tiny spec: small sites clamp below 8,
+        // and the clamp is visible instead of silent.
+        let mut c = cfg();
+        c.threads = 8;
+        let native = NativeBackend::new(&TINY, IsaConfig::C2, c).unwrap();
+        let summary = native.plan_summary().unwrap();
+        assert!(summary.contains("workers="), "missing worker counts: {summary:?}");
+        for l in &native.layers {
+            let want = native.gemv.effective_workers(l.packed.tiles);
+            assert!(
+                summary.contains(&format!("{}:native-{}/{} workers={want}",
+                    l.site,
+                    native.gemv.path().name(),
+                    native.gemv.isa().name())),
+                "site {} should report workers={want}: {summary:?}",
+                l.site
+            );
+            assert!(want <= 8);
+        }
     }
 }
