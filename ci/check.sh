@@ -54,6 +54,15 @@ echo "== HTTP front-end: integration tests over raw TcpStream clients =="
 cargo test -q --test http_serve
 
 echo
+echo "== scheduler: continuous batching, work stealing, keep-alive =="
+# Tier-1 runs these too; the named step keeps a scheduling or
+# connection-multiplexing regression visible on its own line, and the
+# forced-scalar pass pins the same behaviour on the portable kernel
+# path (scheduling must be backend-agnostic).
+cargo test -q --test scheduler --test http_keepalive
+TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test scheduler --test http_keepalive
+
+echo
 echo "== clippy (required) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

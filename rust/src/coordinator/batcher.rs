@@ -9,6 +9,14 @@
 //!
 //! Invariants (property-tested): no request is lost or duplicated, FIFO
 //! admission order, the active set never exceeds `max_batch`.
+//!
+//! Mid-flight joins: `submit` and `admit` are legal at *any* round
+//! boundary, including while other sequences are mid-decode — the lane
+//! pulls from the shared admission queue between rounds and feeds new
+//! sequences in here the moment a slot frees.  Joining only appends to
+//! `active`; positions (and the round-robin cursor discipline) of the
+//! sequences already decoding are untouched, which is what keeps their
+//! per-sequence KV state (`pos == cache.len()`) unperturbed.
 
 use std::collections::VecDeque;
 
@@ -132,6 +140,23 @@ mod tests {
             seen.insert(b.next_decode().unwrap());
         }
         assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn midflight_join_leaves_running_sequences_undisturbed() {
+        let mut b = Batcher::new(3);
+        for i in 0..2 {
+            b.submit(req(i));
+            b.admit().unwrap();
+        }
+        // Two sequences are mid-decode when a third lands (a lane pull
+        // between rounds): it joins on admit without reordering them.
+        assert_eq!(b.next_decode(), Some(0));
+        b.submit(req(2));
+        assert_eq!(b.admit().unwrap().id, 2);
+        assert_eq!(b.next_decode(), Some(1), "running round-robin order is unchanged");
+        assert_eq!(b.next_decode(), Some(2), "the joiner decodes at the round's end");
+        assert_eq!(b.next_decode(), Some(0));
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! tokens and makespans for non-cancelled workloads.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -40,6 +40,7 @@ use super::metrics::{RequestRecord, ServeReport};
 use super::request::{
     FinishReason, GenerationRequest, Request, RequestId, RequestResult, TokenEvent,
 };
+use super::scheduler::Scheduler;
 use super::serve::ServerConfig;
 
 /// Entry point of the streaming serving API.  `Engine` itself is a
@@ -86,8 +87,12 @@ impl Engine {
     /// `record_tx` streams per-request metrics records, `results_tx`
     /// mirrors every completion onto a legacy result channel, and
     /// `gated` holds the lanes at a start gate so a fixed request list
-    /// can be sharded deterministically before any lane runs
-    /// ([`EngineHandle::open_gate`]).
+    /// can be queued deterministically before any lane pulls
+    /// ([`EngineHandle::open_gate`]).  Gated engines also run the
+    /// scheduler in *ordered* mode: requests are pre-assigned
+    /// round-robin and pulls are totally ordered by lane virtual
+    /// clocks, so a preloaded run's schedule (and its steals) is a
+    /// pure function of the request list.
     pub(crate) fn start_inner<B>(
         backend: Arc<B>,
         cfg: ServerConfig,
@@ -106,24 +111,26 @@ impl Engine {
             cfg.kv_slots,
             cfg.max_batch
         );
+        if let Some(cap) = cfg.queue_cap {
+            crate::ensure!(cap >= 1, "queue_cap must be >= 1 when set");
+        }
         let results_tx = results_tx.unwrap_or_else(|| {
             // No legacy channel: results flow through ticket events
             // only.  Lane sends are best-effort, so a dropped receiver
             // is fine.
             channel().0
         });
-        let mut lane_txs = Vec::with_capacity(cfg.workers);
+        let scheduler = Arc::new(Scheduler::new(cfg.workers, gated));
         let mut gate_txs = Vec::with_capacity(cfg.workers);
         let mut lanes = Vec::with_capacity(cfg.workers);
         for lane_id in 0..cfg.workers {
-            let (lane_tx, lane_rx) = channel::<Request>();
             let (gate_tx, gate_rx) = channel::<()>();
-            lane_txs.push(lane_tx);
             if gated {
                 gate_txs.push(gate_tx);
             }
             let backend = Arc::clone(&backend);
             let cfg = cfg.clone();
+            let sched = Arc::clone(&scheduler);
             let res_tx = results_tx.clone();
             let sink = record_tx.clone();
             lanes.push(std::thread::spawn(move || {
@@ -132,16 +139,16 @@ impl Engine {
                     // the sender); an error is the open signal.
                     let _ = gate_rx.recv();
                 }
-                lane_loop(&*backend, &cfg, lane_id, lane_rx, res_tx, sink)
+                lane_loop(&*backend, &cfg, lane_id, &sched, res_tx, sink)
             }));
         }
         Ok(EngineHandle {
             backend,
             cfg,
-            lane_txs,
+            scheduler,
+            preassigned: gated,
             gate_txs,
             lanes,
-            next_lane: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
             record_tx,
             rejected: Mutex::new(Vec::new()),
@@ -156,10 +163,14 @@ impl Engine {
 pub struct EngineHandle<B: Backend> {
     backend: Arc<B>,
     cfg: ServerConfig,
-    lane_txs: Vec<Sender<Request>>,
+    /// Shared admission queue the lanes pull from (continuous
+    /// batching + work stealing; see the `scheduler` module).
+    scheduler: Arc<Scheduler>,
+    /// Gated engines pre-assign round-robin for determinism; live
+    /// engines enqueue onto the shared injector.
+    preassigned: bool,
     gate_txs: Vec<Sender<()>>,
     lanes: Vec<JoinHandle<Result<LaneOutcome>>>,
-    next_lane: AtomicUsize,
     next_id: AtomicU64,
     /// Metrics sink, kept so submit-time rejections are streamed too.
     record_tx: Option<Sender<RequestRecord>>,
@@ -181,8 +192,10 @@ impl<B: Backend> EngineHandle<B> {
 
     /// Submit one generation request; returns its [`Ticket`]
     /// immediately (before any model work runs).  Admission-time
-    /// validation failures resolve the ticket to a `Failed` terminal
-    /// event instead of reaching a lane.
+    /// validation failures — and, when [`ServerConfig::queue_cap`] is
+    /// set, admission-queue overflow (backpressure shedding) — resolve
+    /// the ticket to a `Failed` terminal event instead of reaching a
+    /// lane.
     pub fn submit(&self, req: GenerationRequest) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (ev_tx, ev_rx) = channel::<TokenEvent>();
@@ -198,27 +211,33 @@ impl<B: Backend> EngineHandle<B> {
             return ticket;
         }
         let request = Request::with_plumbing(id, req, ev_tx.clone(), cancel);
-        if self.shard(request).is_err() {
-            // A lane died before its join was observed; surface it as a
-            // failed session rather than losing the ticket.
-            self.reject(id, &ev_tx, "engine lane is gone".into());
+        if !self.dispatch(request, self.cfg.queue_cap) {
+            let cap = self.cfg.queue_cap.unwrap_or(0);
+            self.reject(id, &ev_tx, format!("admission queue full (queue_cap {cap})"));
         }
         ticket
     }
 
-    /// Legacy escape hatch: shard a pre-built [`Request`] (caller-owned
+    /// Legacy escape hatch: queue a pre-built [`Request`] (caller-owned
     /// id, optional plumbing) without admission-time validation — the
     /// pre-Engine batch surface, which caps generation at the KV window
-    /// instead of rejecting up front.  Send failures mean the engine is
-    /// shutting down; the request is dropped.
+    /// instead of rejecting up front.  Backpressure never applies here:
+    /// preloaded lists must arrive whole for the deterministic
+    /// schedule.
     pub fn submit_request(&self, request: Request) {
-        let _ = self.shard(request);
+        let _ = self.dispatch(request, None);
     }
 
-    /// Round-robin one request across the lane channels.
-    fn shard(&self, request: Request) -> std::result::Result<(), ()> {
-        let lane = self.next_lane.fetch_add(1, Ordering::Relaxed) % self.lane_txs.len();
-        self.lane_txs[lane].send(request).map_err(|_| ())
+    /// Hand one request to the shared scheduler: deterministic
+    /// round-robin pre-assignment for gated (preloaded) engines, the
+    /// shared injector — any lane pulls it — for live ones.  `false`
+    /// means the admission queue is at `cap` (the request was refused).
+    fn dispatch(&self, request: Request, cap: Option<usize>) -> bool {
+        if self.preassigned {
+            self.scheduler.preassign(request, cap)
+        } else {
+            self.scheduler.enqueue(request, cap)
+        }
     }
 
     /// Per-request admission limits against the backend's window
@@ -234,8 +253,10 @@ impl<B: Backend> EngineHandle<B> {
 
     /// Resolve a ticket as `Failed` without involving a lane, and keep
     /// the rejection observable engine-wide: the result joins the
-    /// shutdown report's `failed` count and, when a metrics sink is
-    /// attached, a `RequestRecord` with `lane: None` streams out.
+    /// shutdown report's `failed` *and* `rejected` counts and, when a
+    /// metrics sink is attached, a `RequestRecord` with
+    /// `executed_lane: None` streams out (counted by
+    /// `tsar_rejections_total`, consistent with the report).
     fn reject(&self, id: RequestId, ev_tx: &Sender<TokenEvent>, reason: String) {
         let res = RequestResult {
             id,
@@ -252,12 +273,16 @@ impl<B: Backend> EngineHandle<B> {
             let _ = sink.send(RequestRecord {
                 id,
                 lane: None,
+                executed_lane: None,
                 queue_s: 0.0,
+                queue_wait_s: 0.0,
                 prefill_s: 0.0,
                 decode_s: 0.0,
                 total_s: 0.0,
                 tokens: 0,
                 finish: FinishReason::Failed,
+                stolen: false,
+                joined_midflight: false,
                 plan: None,
             });
         }
@@ -266,14 +291,14 @@ impl<B: Backend> EngineHandle<B> {
 
     /// Release the start gate of a [`Engine::start_inner`]-gated
     /// engine; a no-op otherwise.  Until released, lanes hold before
-    /// their first pull, so everything submitted beforehand is sharded
-    /// deterministically.
+    /// their first pull, so everything submitted beforehand is queued
+    /// (round-robin pre-assigned) deterministically.
     pub(crate) fn open_gate(&mut self) {
         self.gate_txs.clear();
     }
 
-    /// Graceful shutdown: close admission, let every lane drain its
-    /// shard (in-flight sequences run to their natural or cancelled
+    /// Graceful shutdown: close admission, let every lane drain the
+    /// queue (in-flight sequences run to their natural or cancelled
     /// end), join the lanes, and merge the per-lane virtual clocks —
     /// plus any submit-time rejections — into the run's
     /// [`ServeReport`].  A lane that panicked (or returned an error)
@@ -284,7 +309,7 @@ impl<B: Backend> EngineHandle<B> {
     /// before retiring anything.
     pub fn shutdown(mut self) -> Result<ServeReport> {
         self.open_gate();
-        self.lane_txs.clear(); // close the shard channels: lanes drain and exit
+        self.scheduler.close(); // close admission: lanes drain the queue and exit
         let outcomes: Vec<Result<LaneOutcome>> = self
             .lanes
             .drain(..)
@@ -301,6 +326,17 @@ impl<B: Backend> EngineHandle<B> {
         let rejected =
             std::mem::take(&mut *self.rejected.lock().expect("rejected list poisoned"));
         merge_outcomes(outcomes, rejected, self.started)
+    }
+}
+
+impl<B: Backend> Drop for EngineHandle<B> {
+    /// A handle dropped without [`EngineHandle::shutdown`] must still
+    /// let the lanes exit: close admission (idempotent) so no lane
+    /// blocks forever on an open queue.  Threads are detached, not
+    /// joined — drop must not block.
+    fn drop(&mut self) {
+        self.gate_txs.clear();
+        self.scheduler.close();
     }
 }
 
@@ -333,6 +369,7 @@ pub(crate) fn merge_outcomes(
     rejected: Vec<RequestResult>,
     started: Instant,
 ) -> Result<ServeReport> {
+    let rejected_n = rejected.len();
     let mut results: Vec<RequestResult> = rejected;
     let mut lanes = Vec::with_capacity(outcomes.len());
     let mut lane_errors: Vec<String> = Vec::new();
@@ -356,6 +393,7 @@ pub(crate) fn merge_outcomes(
     match ServeReport::from_lanes(&results, wall_s, lanes) {
         Some(mut report) => {
             report.lane_errors = lane_errors;
+            report.rejected = rejected_n;
             Ok(report)
         }
         None if lane_errors.is_empty() => Err(crate::err!("no requests served")),
@@ -437,6 +475,15 @@ impl Ticket {
                 return res.clone();
             }
         }
+        self.closed_result()
+    }
+
+    /// The result of a ticket whose stream has closed: the cached
+    /// terminal result if a receive call saw one, else a synthesized
+    /// `Failed` (the engine died before retiring the request).  Used by
+    /// [`Ticket::join`] and by the HTTP layer when a stream ends
+    /// without a terminal event.
+    pub(crate) fn closed_result(&self) -> RequestResult {
         if let Some(res) = self.terminal.borrow_mut().take() {
             return res;
         }
@@ -521,6 +568,7 @@ mod tests {
         let report = merge_outcomes(outcomes, vec![rejected], Instant::now()).unwrap();
         assert_eq!(report.requests, 1);
         assert_eq!(report.failed, 1);
+        assert_eq!(report.rejected, 1, "shed/rejection count mirrors the failed record");
         assert_eq!(report.lane_errors, vec!["gone".to_string()]);
     }
 

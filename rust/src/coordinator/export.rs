@@ -38,8 +38,9 @@ pub fn tee_records(
 }
 
 /// Serialize one record as a flat JSON object (stable keys, seconds as
-/// f64, `finish` as its lower-case label, `lane` null for submissions
-/// rejected before reaching a lane).
+/// f64, `finish` as its lower-case label, `lane`/`executed_lane` null
+/// for submissions rejected before reaching a lane; scheduler
+/// provenance as `queue_wait_s`, `stolen`, `joined_midflight`).
 pub fn record_to_json(rec: &RequestRecord) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("id".into(), Json::Num(rec.id as f64));
@@ -50,7 +51,17 @@ pub fn record_to_json(rec: &RequestRecord) -> Json {
             None => Json::Null,
         },
     );
+    obj.insert(
+        "executed_lane".into(),
+        match rec.executed_lane {
+            Some(l) => Json::Num(l as f64),
+            None => Json::Null,
+        },
+    );
     obj.insert("queue_s".into(), Json::Num(rec.queue_s));
+    obj.insert("queue_wait_s".into(), Json::Num(rec.queue_wait_s));
+    obj.insert("stolen".into(), Json::Bool(rec.stolen));
+    obj.insert("joined_midflight".into(), Json::Bool(rec.joined_midflight));
     obj.insert("prefill_s".into(), Json::Num(rec.prefill_s));
     obj.insert("decode_s".into(), Json::Num(rec.decode_s));
     obj.insert("total_s".into(), Json::Num(rec.total_s));
@@ -135,12 +146,16 @@ mod tests {
         RequestRecord {
             id,
             lane: Some(1),
+            executed_lane: Some(1),
             queue_s: 0.25,
+            queue_wait_s: 0.125,
             prefill_s: 0.5,
             decode_s: 1.5,
             total_s: 2.25,
             tokens: 4,
             finish,
+            stolen: true,
+            joined_midflight: false,
             plan: Some("wqkv:TSAR".into()),
         }
     }
@@ -161,6 +176,10 @@ mod tests {
         let first = Json::parse(lines[0]).expect("valid JSON");
         assert_eq!(first.get("id").and_then(Json::as_usize), Some(0));
         assert_eq!(first.get("lane").and_then(Json::as_usize), Some(1));
+        assert_eq!(first.get("executed_lane").and_then(Json::as_usize), Some(1));
+        assert_eq!(first.get("queue_wait_s").and_then(Json::as_f64), Some(0.125));
+        assert_eq!(first.get("stolen"), Some(&Json::Bool(true)));
+        assert_eq!(first.get("joined_midflight"), Some(&Json::Bool(false)));
         assert_eq!(first.get("tokens").and_then(Json::as_usize), Some(4));
         assert_eq!(
             first.get("finish").and_then(Json::as_str),

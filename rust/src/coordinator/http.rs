@@ -19,6 +19,19 @@
 //!   shared [`PromCounters`] (see [`super::prom`] for the schema).
 //! * `GET /healthz` — liveness probe (`200 ok`).
 //!
+//! Connections are **HTTP/1.1 keep-alive** by default: a client (e.g.
+//! a load balancer holding one multiplexed socket) issues any number
+//! of sequential requests per connection, and pipelined
+//! `POST /v1/generate` requests already buffered are submitted to the
+//! engine *together* — their generations run concurrently across the
+//! lanes while the responses stream back in request order — up to
+//! [`HttpConfig::max_streams_per_conn`] concurrent in-flight streams;
+//! excess pipelined generates are answered `503` ("too many concurrent
+//! streams").  `Connection: close` (or HTTP/1.0 without keep-alive)
+//! restores one-exchange-per-connection behavior.  A mid-stream
+//! disconnect on a keep-alive connection cancels only the affected
+//! tickets — sessions on other connections are untouched.
+//!
 //! Lifecycle: [`HttpServer::start`] binds and spawns the acceptor plus
 //! `threads` connection workers; [`HttpServer::stop`] closes admission
 //! (no new connections) and joins the workers, draining in-flight
@@ -64,6 +77,10 @@ pub struct HttpConfig {
     /// answered `503` and dropped instead of queueing file descriptors
     /// without bound.
     pub backlog: usize,
+    /// Concurrent in-flight generation streams one keep-alive
+    /// connection may multiplex: pipelined `POST /v1/generate`
+    /// requests beyond this are answered `503` instead of submitted.
+    pub max_streams_per_conn: usize,
 }
 
 impl Default for HttpConfig {
@@ -74,6 +91,7 @@ impl Default for HttpConfig {
             max_body_bytes: 1024 * 1024,
             read_timeout: Duration::from_secs(30),
             backlog: 64,
+            max_streams_per_conn: 4,
         }
     }
 }
@@ -136,6 +154,7 @@ impl HttpServer {
                                     503,
                                     TEXT_PLAIN,
                                     "server busy\n",
+                                    true,
                                 );
                             }
                             Err(TrySendError::Disconnected(_)) => break,
@@ -237,17 +256,21 @@ fn worker_loop<B: Backend>(
 }
 
 /// Everything parsed from one request: the line, the path without its
-/// query string, and the body.
+/// query string, the body, and whether the client wants the connection
+/// kept open afterwards (HTTP/1.1 defaults to keep-alive, HTTP/1.0 to
+/// close; an explicit `Connection:` header overrides either default).
 struct HttpRequest {
     method: String,
     path: String,
     body: Vec<u8>,
+    keep_alive: bool,
 }
 
-/// Serve one connection: parse the request, route it, respond, close
-/// (`Connection: close` — one exchange per connection keeps the
-/// zero-dependency parser honest; streaming responses hold the
-/// connection for the whole generation anyway).
+/// Serve one connection: a keep-alive loop of parse → route → respond.
+/// `buf` carries bytes read past the current request (pipelined
+/// requests) into the next iteration.  The loop ends when the client
+/// asks for `Connection: close`, goes away, or a framing error makes
+/// the byte stream unparseable.
 fn handle_connection<B: Backend>(
     mut stream: TcpStream,
     engine: &EngineHandle<B>,
@@ -256,64 +279,159 @@ fn handle_connection<B: Backend>(
 ) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(cfg.read_timeout));
-    let request = match read_request(&mut stream, cfg) {
-        Ok(request) => request,
-        Err(e) => {
-            let _ = write_response(&mut stream, 400, TEXT_PLAIN, &format!("bad request: {e}\n"));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut served = 0usize;
+    loop {
+        let request = match read_request(&mut stream, &mut buf, cfg) {
+            Ok(Some(request)) => request,
+            Ok(None) => return, // clean close between requests
+            Err(e) => {
+                // Garbage, an oversized head, or a read timeout.
+                // Answer 400 only when the client actually sent
+                // something on this exchange; an idle keep-alive
+                // connection timing out just closes.
+                if served == 0 || !buf.is_empty() {
+                    let _ = write_response(
+                        &mut stream,
+                        400,
+                        TEXT_PLAIN,
+                        &format!("bad request: {e}\n"),
+                        true,
+                    );
+                }
+                return;
+            }
+        };
+        let keep = request.keep_alive;
+        if request.method == "POST" && request.path == "/v1/generate" {
+            // The generate handler owns the request (and may pull more
+            // pipelined generates out of `buf`).
+            if !handle_generate(&mut stream, engine, counters, request, &mut buf, cfg) {
+                return;
+            }
+            served += 1;
+            continue;
+        }
+        match (request.method.as_str(), request.path.as_str()) {
+            ("GET", "/healthz") => {
+                let _ = write_response(&mut stream, 200, TEXT_PLAIN, "ok\n", !keep);
+            }
+            ("GET", "/metrics") => {
+                let _ = write_response(&mut stream, 200, PROM_TEXT, &counters.render(), !keep);
+            }
+            (_, "/healthz") | (_, "/metrics") => {
+                let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use GET\n", !keep);
+            }
+            (_, "/v1/generate") => {
+                let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use POST\n", !keep);
+            }
+            _ => {
+                let _ = write_response(&mut stream, 404, TEXT_PLAIN, "not found\n", !keep);
+            }
+        }
+        served += 1;
+        if !keep {
             return;
-        }
-    };
-    match (request.method.as_str(), request.path.as_str()) {
-        ("GET", "/healthz") => {
-            let _ = write_response(&mut stream, 200, TEXT_PLAIN, "ok\n");
-        }
-        ("GET", "/metrics") => {
-            let _ = write_response(&mut stream, 200, PROM_TEXT, &counters.render());
-        }
-        ("POST", "/v1/generate") => handle_generate(stream, engine, counters, &request.body),
-        (_, "/healthz") | (_, "/metrics") => {
-            let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use GET\n");
-        }
-        (_, "/v1/generate") => {
-            let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use POST\n");
-        }
-        _ => {
-            let _ = write_response(&mut stream, 404, TEXT_PLAIN, "not found\n");
         }
     }
 }
 
-/// `POST /v1/generate`: submit and stream the session.
+/// One response owed on the connection, in request order.
+enum Reply {
+    /// Malformed generate body: `400` carrying the parse error.
+    BadBody(String),
+    /// Pipelined past [`HttpConfig::max_streams_per_conn`]: `503`.
+    Shed,
+    /// An admitted session streaming its token events.
+    Stream(Ticket),
+}
+
+/// `POST /v1/generate`, keep-alive aware: gather the pipelined
+/// generates already buffered on this connection, admit up to
+/// [`HttpConfig::max_streams_per_conn`] of them (the rest are shed
+/// with `503 too many concurrent streams`), submit the admitted ones
+/// *before* streaming anything — their generations run concurrently
+/// across the lanes — then write the responses back strictly in
+/// request order.  Returns whether the connection stays open.
 fn handle_generate<B: Backend>(
-    mut stream: TcpStream,
+    stream: &mut TcpStream,
     engine: &EngineHandle<B>,
     counters: &PromCounters,
-    body: &[u8],
-) {
-    let request = match parse_generate(body) {
-        Ok(request) => request,
-        Err(e) => {
-            let _ = write_response(&mut stream, 400, TEXT_PLAIN, &format!("bad request: {e}\n"));
-            return;
+    first: HttpRequest,
+    buf: &mut Vec<u8>,
+    cfg: &HttpConfig,
+) -> bool {
+    let cap = cfg.max_streams_per_conn.max(1);
+    let mut requests = vec![first];
+    // Gathering never blocks on the socket: only requests whose bytes
+    // already arrived join the batch, so a one-at-a-time client keeps
+    // plain sequential keep-alive semantics.  `Connection: close` on a
+    // request makes it the connection's last.
+    while requests.last().is_some_and(|r| r.keep_alive) {
+        match take_buffered_generate(buf, cfg) {
+            Some(next) => requests.push(next),
+            None => break,
         }
-    };
-    counters.note_submitted();
-    let ticket = engine.submit(request);
-    if write_stream_head(&mut stream).is_err() {
-        cancel_and_drain(&ticket);
-        return;
+    }
+    let keep = requests.last().is_some_and(|r| r.keep_alive);
+    let mut admitted = 0usize;
+    let replies: Vec<Reply> = requests
+        .iter()
+        .map(|req| match parse_generate(&req.body) {
+            Ok(gen) if admitted < cap => {
+                admitted += 1;
+                counters.note_submitted();
+                Reply::Stream(engine.submit(gen))
+            }
+            Ok(_) => Reply::Shed,
+            Err(e) => Reply::BadBody(e.to_string()),
+        })
+        .collect();
+    for (i, reply) in replies.iter().enumerate() {
+        // Only the connection's very last response announces the close.
+        let close = !keep && i + 1 == replies.len();
+        let ok = match reply {
+            Reply::BadBody(e) => {
+                write_response(stream, 400, TEXT_PLAIN, &format!("bad request: {e}\n"), close)
+                    .is_ok()
+            }
+            Reply::Shed => {
+                write_response(stream, 503, TEXT_PLAIN, "too many concurrent streams\n", close)
+                    .is_ok()
+            }
+            Reply::Stream(ticket) => stream_ticket(stream, ticket, close),
+        };
+        if !ok {
+            // The client went away: stop paying for tokens nobody
+            // reads.  Cancel this stream and every session still
+            // queued behind the dead socket; the lanes retire them
+            // (Cancelled, KV slots freed) at the next round boundary.
+            // Sessions on other connections are untouched.
+            for later in &replies[i..] {
+                if let Reply::Stream(ticket) = later {
+                    cancel_and_drain(ticket);
+                }
+            }
+            return false;
+        }
+    }
+    keep
+}
+
+/// Stream one ticket's token events as chunked NDJSON.  Returns
+/// `false` when the client socket died mid-stream (the caller cancels
+/// the affected sessions).
+fn stream_ticket(stream: &mut TcpStream, ticket: &Ticket, close: bool) -> bool {
+    if write_stream_head(stream, close).is_err() {
+        return false;
     }
     let mut wrote_terminal = false;
     while let Some(ev) = ticket.recv() {
         let terminal = ev.result().is_some();
         let mut line = event_json(&ev).to_string();
         line.push('\n');
-        if write_chunk(&mut stream, line.as_bytes()).is_err() {
-            // The client went away mid-stream: stop paying for tokens
-            // nobody reads.  The lane retires the session (Cancelled,
-            // KV slot freed) at the next round boundary.
-            cancel_and_drain(&ticket);
-            return;
+        if write_chunk(stream, line.as_bytes()).is_err() {
+            return false;
         }
         if terminal {
             wrote_terminal = true;
@@ -325,13 +443,13 @@ fn handle_generate<B: Backend>(
         // serving lane died mid-session).  The response contract is
         // one terminal line per stream, so emit the same synthesized
         // `Failed` result `Ticket::join` reports for this case.
-        let mut line = event_json(&TokenEvent::Failed(ticket.join())).to_string();
+        let mut line = event_json(&TokenEvent::Failed(ticket.closed_result())).to_string();
         line.push('\n');
-        if write_chunk(&mut stream, line.as_bytes()).is_err() {
-            return;
+        if write_chunk(stream, line.as_bytes()).is_err() {
+            return false;
         }
     }
-    let _ = write_last_chunk(&mut stream);
+    write_last_chunk(stream).is_ok()
 }
 
 /// Cancel a session whose client disconnected and drain its stream so
@@ -446,18 +564,14 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Read and parse one request (line, headers, `Content-Length` body).
-fn read_request(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<HttpRequest> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut tmp = [0u8; 4096];
-    let head_end = loop {
-        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
-            break i + 4;
-        }
+/// Try to parse one complete request from the front of `buf` without
+/// consuming it.  `Ok(None)` means more bytes are needed;
+/// `Ok(Some((request, used)))` means `buf[..used]` held one full
+/// request (the caller drains those bytes).
+fn parse_buffered(buf: &[u8], cfg: &HttpConfig) -> Result<Option<(HttpRequest, usize)>> {
+    let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4) else {
         crate::ensure!(buf.len() <= cfg.max_head_bytes, "request head too large");
-        let n = stream.read(&mut tmp)?;
-        crate::ensure!(n > 0, "connection closed before the request head ended");
-        buf.extend_from_slice(&tmp[..n]);
+        return Ok(None);
     };
     let head = std::str::from_utf8(&buf[..head_end])
         .map_err(|_| crate::err!("request head is not UTF-8"))?;
@@ -466,10 +580,11 @@ fn read_request(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<HttpRequest>
     let mut parts = request_line.split_whitespace();
     let method = parts.next().context("missing method in request line")?.to_string();
     let target = parts.next().context("missing path in request line")?;
-    crate::ensure!(
-        parts.next().is_some_and(|v| v.starts_with("HTTP/1.")),
-        "not an HTTP/1.x request"
-    );
+    let version = parts.next().unwrap_or("");
+    crate::ensure!(version.starts_with("HTTP/1."), "not an HTTP/1.x request");
+    // HTTP/1.1 keeps the connection open by default, HTTP/1.0 closes;
+    // an explicit `Connection:` header wins either way.
+    let mut keep_alive = version != "HTTP/1.0";
     // Route on the path only; a query string is accepted and ignored.
     let path = target.split('?').next().unwrap_or(target).to_string();
     let mut content_length = 0usize;
@@ -480,6 +595,13 @@ fn read_request(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<HttpRequest>
                     .trim()
                     .parse()
                     .map_err(|_| crate::err!("bad Content-Length {value:?}"))?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                let value = value.trim();
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -488,26 +610,66 @@ fn read_request(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<HttpRequest>
         "body of {content_length} bytes exceeds the {} byte cap",
         cfg.max_body_bytes
     );
-    let mut body = buf[head_end..].to_vec();
-    while body.len() < content_length {
-        let n = stream.read(&mut tmp)?;
-        crate::ensure!(n > 0, "connection closed before the body ended");
-        body.extend_from_slice(&tmp[..n]);
+    let total = head_end + content_length;
+    if buf.len() < total {
+        return Ok(None);
     }
-    body.truncate(content_length);
-    Ok(HttpRequest { method, path, body })
+    let body = buf[head_end..total].to_vec();
+    Ok(Some((HttpRequest { method, path, body, keep_alive }, total)))
 }
 
-/// One complete fixed-length response (status + body), then done.
+/// Read one request off the connection, consuming it from the
+/// carry-over buffer (`buf` keeps any pipelined bytes read past the
+/// request for the next call).  `Ok(None)` is a clean close between
+/// requests; EOF mid-request is an error.
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    cfg: &HttpConfig,
+) -> Result<Option<HttpRequest>> {
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some((request, used)) = parse_buffered(buf, cfg)? {
+            buf.drain(..used);
+            return Ok(Some(request));
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            crate::ensure!(buf.is_empty(), "connection closed mid-request");
+            return Ok(None);
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Pop the next request off the carry-over buffer *only if* it is
+/// already complete and is another `POST /v1/generate`.  Anything else
+/// — incomplete bytes, a different route, a framing error — stays
+/// buffered for the connection loop to handle after the current
+/// response group.
+fn take_buffered_generate(buf: &mut Vec<u8>, cfg: &HttpConfig) -> Option<HttpRequest> {
+    match parse_buffered(buf, cfg) {
+        Ok(Some((request, used))) if request.method == "POST" && request.path == "/v1/generate" => {
+            buf.drain(..used);
+            Some(request)
+        }
+        _ => None,
+    }
+}
+
+/// One complete fixed-length response (status + body).  `close` says
+/// whether this is the connection's last response.
 fn write_response(
     stream: &mut TcpStream,
     code: u16,
     content_type: &str,
     body: &str,
+    close: bool,
 ) -> std::io::Result<()> {
+    let conn = if close { "close" } else { "keep-alive" };
     let head = format!(
         "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n",
+         Connection: {conn}\r\n\r\n",
         status_text(code),
         body.len()
     );
@@ -516,11 +678,13 @@ fn write_response(
     stream.flush()
 }
 
-/// Response head of the chunked NDJSON token stream.
-fn write_stream_head(stream: &mut TcpStream) -> std::io::Result<()> {
+/// Response head of the chunked NDJSON token stream.  The zero-length
+/// chunk delimits the response, so a keep-alive connection survives it.
+fn write_stream_head(stream: &mut TcpStream, close: bool) -> std::io::Result<()> {
+    let conn = if close { "close" } else { "keep-alive" };
     let head = format!(
         "HTTP/1.1 200 OK\r\nContent-Type: {NDJSON}\r\nTransfer-Encoding: chunked\r\n\
-         Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+         Cache-Control: no-cache\r\nConnection: {conn}\r\n\r\n"
     );
     stream.write_all(head.as_bytes())?;
     stream.flush()
@@ -596,6 +760,56 @@ mod tests {
         assert_eq!(parsed.get("finish").and_then(Json::as_str), Some("stop"));
         assert_eq!(parsed.get("tokens").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
         assert_eq!(parsed.get("error"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn buffered_parse_handles_keepalive_and_pipelining() {
+        let cfg = HttpConfig::default();
+        let wire: &[u8] = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 3\r\n\r\nabc\
+                            GET /healthz HTTP/1.0\r\n\r\n";
+        let (first, used) = parse_buffered(wire, &cfg).unwrap().expect("complete request");
+        assert_eq!(first.method, "POST");
+        assert_eq!(first.path, "/v1/generate");
+        assert_eq!(first.body, b"abc");
+        assert!(first.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        let rest = &wire[used..];
+        let (second, used2) = parse_buffered(rest, &cfg).unwrap().expect("second request");
+        assert_eq!(second.path, "/healthz");
+        assert!(!second.keep_alive, "HTTP/1.0 defaults to close");
+        assert_eq!(used2, rest.len());
+
+        assert!(
+            parse_buffered(&wire[..10], &cfg).unwrap().is_none(),
+            "incomplete head needs more bytes"
+        );
+        assert!(
+            parse_buffered(&wire[..used - 1], &cfg).unwrap().is_none(),
+            "complete head with an incomplete body needs more bytes"
+        );
+    }
+
+    #[test]
+    fn connection_header_overrides_the_version_default() {
+        let cfg = HttpConfig::default();
+        let close11: &[u8] = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!parse_buffered(close11, &cfg).unwrap().unwrap().0.keep_alive);
+        let keep10: &[u8] = b"GET /healthz HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n";
+        assert!(parse_buffered(keep10, &cfg).unwrap().unwrap().0.keep_alive);
+    }
+
+    #[test]
+    fn take_buffered_generate_only_pops_complete_generates() {
+        let cfg = HttpConfig::default();
+        let mut buf = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}\
+                        GET /healthz HTTP/1.1\r\n\r\n"
+            .to_vec();
+        let popped = take_buffered_generate(&mut buf, &cfg).expect("complete generate pops");
+        assert_eq!(popped.body, b"{}");
+        assert!(
+            take_buffered_generate(&mut buf, &cfg).is_none(),
+            "a non-generate request stays for the connection loop"
+        );
+        assert!(buf.starts_with(b"GET /healthz"), "non-generate bytes are untouched");
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! * a slot is never handed to two live sequences,
 //! * free/allocate round-trips restore capacity,
 //! * double-free and foreign-slot free are rejected.
+//!
+//! A retiring sequence's `release` immediately re-arms `allocate` for
+//! the lane's next pull from the admission queue — the slot recycle is
+//! what triggers a mid-flight join under continuous batching, and it
+//! never touches the slots of sequences still decoding.
 
 use std::collections::BTreeSet;
 
@@ -71,6 +76,24 @@ mod tests {
         assert_eq!(p.available(), 1);
         let c = p.allocate().unwrap();
         assert_eq!(c, a); // LIFO reuse
+    }
+
+    #[test]
+    fn midflight_recycle_never_touches_live_slots() {
+        let mut p = KvSlotPool::new(3);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        let c = p.allocate().unwrap();
+        // One sequence retires mid-flight; the joiner that replaces it
+        // gets exactly the recycled slot while the others stay live.
+        p.release(b).unwrap();
+        assert_eq!(p.available(), 1);
+        assert_eq!(p.live_count(), 2);
+        let joiner = p.allocate().unwrap();
+        assert_eq!(joiner, b);
+        assert_ne!(joiner, a);
+        assert_ne!(joiner, c);
+        assert_eq!(p.live_count(), 3);
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! One worker lane of the sharded serving engine (DESIGN.md §3).
+//! One worker lane of the continuous-batching serving engine
+//! (DESIGN.md §3).
 //!
-//! A lane owns a shard of the admitted sequences: its own continuous
-//! batcher, KV-slot pool, and **virtual clock**.  Per iteration it
-//! admits pending requests (prefill), runs one *batched* decode round
-//! over its active set through [`Backend::decode_batch`], and retires
-//! finished sequences — freeing slots immediately, vLLM-style.
+//! A lane owns its own batcher, KV-slot pool, and **virtual clock**,
+//! but no longer a static shard: per iteration it **pulls** as many
+//! requests from the shared [`super::scheduler::Scheduler`] as it has
+//! free batch+KV slots (joining them into the running batch mid-flight
+//! whenever a retire freed a slot — continuous batching), admits them
+//! (prefill), runs one *batched* decode round over its active set
+//! through [`Backend::decode_batch`], and retires finished sequences —
+//! freeing slots immediately, vLLM-style.  An idle lane steals
+//! queued-but-unassigned requests from overloaded siblings through the
+//! same pull (the scheduler's work-stealing deque layer); once a
+//! request is pulled it executes on this lane to completion — a
+//! sequence never migrates lanes mid-generation, so the per-sequence
+//! `pos == cache.len()` KV contract is untouched by scheduling.
 //!
 //! Streaming: every step emits a [`TokenEvent`] on the request's ticket
 //! channel as it lands (`Prefilled` after the prefill step, `Token` per
@@ -36,7 +45,7 @@
 //! output) instead of taking down its whole round.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use crate::runtime::{Backend, BatchItem, Step};
@@ -46,6 +55,7 @@ use super::batcher::Batcher;
 use super::kvpool::{KvSlotPool, SlotId};
 use super::metrics::{LaneStats, RequestRecord};
 use super::request::{FinishReason, Request, RequestId, RequestResult, TokenEvent};
+use super::scheduler::{LaneParkGuard, Pull, Scheduler};
 use super::serve::ServerConfig;
 
 /// An active sequence's decode state, generic over the backend's KV
@@ -60,6 +70,9 @@ struct Active<C> {
     decode_s: f64,
     /// Lane-clock reading at admission (simulated backends).
     admit_clock: f64,
+    /// The sequence was admitted into a batch that had already run
+    /// decode rounds (a mid-flight continuous-batching join).
+    joined: bool,
     /// Terminal condition, once known (stop token, budget, KV window,
     /// backend failure).  Cancellation/deadline are decided at round
     /// boundaries, not stored here.
@@ -142,6 +155,7 @@ fn finish_request(
     req: &Request,
     res: RequestResult,
     lane_id: usize,
+    joined: bool,
     plan: &Option<String>,
     tx: &Sender<RequestResult>,
     sink: &Option<Sender<RequestRecord>>,
@@ -167,12 +181,16 @@ fn finish_request(
         let _ = sink.send(RequestRecord {
             id: res.id,
             lane: Some(lane_id),
+            executed_lane: Some(lane_id),
             queue_s: res.queue_s,
+            queue_wait_s: req.queue_wait_s.unwrap_or(res.queue_s),
             prefill_s: res.prefill_s,
             decode_s: res.decode_s,
             total_s: res.total_s,
             tokens: res.tokens.len(),
             finish: res.finish,
+            stolen: req.stolen,
+            joined_midflight: joined,
             plan: plan.clone(),
         });
     }
@@ -181,59 +199,60 @@ fn finish_request(
     results.push(res);
 }
 
-/// Drain `rx` on lane `lane_id`, pushing completions into `tx` (and
-/// per-request records into `sink`, when attached) until the shard
-/// channel closes and all admitted work retires.
+/// Pull requests for lane `lane_id` from the shared scheduler, pushing
+/// completions into `tx` (and per-request records into `sink`, when
+/// attached) until admission closes and all pulled work retires.
 pub(crate) fn lane_loop<B: Backend>(
     backend: &B,
     cfg: &ServerConfig,
     lane_id: usize,
-    rx: Receiver<Request>,
+    sched: &Scheduler,
     tx: Sender<RequestResult>,
     sink: Option<Sender<RequestRecord>>,
 ) -> Result<LaneOutcome> {
+    // Leave the ordered pull rotation even on panic or early `?` exit,
+    // so sibling lanes never wait on this lane's stale clock.
+    let _park = LaneParkGuard::new(sched, lane_id);
     let plan = backend.plan_summary();
     let mut batcher = Batcher::new(cfg.max_batch);
     let mut pool = KvSlotPool::new(cfg.kv_slots);
     let mut active: HashMap<RequestId, (Active<B::Cache>, SlotId)> = HashMap::new();
     let mut results: Vec<RequestResult> = Vec::new();
     let mut stats = LaneStats::new(lane_id, cfg.max_batch);
-    let mut open = true;
     // Lane-local clock: sum of backend-reported simulated step costs,
     // or of measured busy wall seconds for backends that execute for
     // real.  Either way it is *busy* time only — an idle lane stays at
     // zero and never pollutes the merged timeline.
     let mut clock = 0.0f64;
     let mut sim_timed = false;
+    // The current batch has run at least one decode round: any further
+    // admission before it drains is a mid-flight join.
+    let mut batch_running = false;
 
-    while open || batcher.has_work() {
-        // Pull newly arrived requests (non-blocking unless idle).
-        loop {
-            if !open {
-                break;
+    loop {
+        // Pull from the shared admission queue: exactly as many
+        // requests as this lane can admit right now (free batch + KV
+        // slots), so every pulled request joins the batch this
+        // iteration and the scheduler keeps the rest visible to
+        // sibling lanes (stealable).  Blocks only when idle.
+        let want = cfg
+            .max_batch
+            .saturating_sub(batcher.active_len() + batcher.pending_len())
+            .min(pool.available());
+        match sched.pull(lane_id, want, batcher.has_work()) {
+            Pull::Batch(reqs) => {
+                for req in reqs {
+                    if req.stolen {
+                        stats.steals += 1;
+                    }
+                    batcher.submit(req);
+                }
             }
-            let msg = if batcher.has_work() {
-                match rx.try_recv() {
-                    Ok(r) => Some(r),
-                    Err(TryRecvError::Empty) => None,
-                    Err(TryRecvError::Disconnected) => {
-                        open = false;
-                        None
-                    }
+            Pull::Pending => {}
+            Pull::Closed => {
+                if !batcher.has_work() {
+                    break;
                 }
-            } else {
-                // Idle: block for the next request or shutdown.
-                match rx.recv() {
-                    Ok(r) => Some(r),
-                    Err(_) => {
-                        open = false;
-                        None
-                    }
-                }
-            };
-            match msg {
-                Some(r) => batcher.submit(r),
-                None => break,
             }
         }
 
@@ -263,7 +282,7 @@ pub(crate) fn lane_loop<B: Backend>(
                     total_s: queue_s,
                 };
                 finish_request(
-                    &req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats,
+                    &req, res, lane_id, false, &plan, &tx, &sink, &mut results, &mut stats,
                 );
                 continue;
             }
@@ -293,7 +312,8 @@ pub(crate) fn lane_loop<B: Backend>(
                         total_s: queue_s,
                     };
                     finish_request(
-                        &req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats,
+                        &req, res, lane_id, false, &plan, &tx, &sink, &mut results,
+                        &mut stats,
                     );
                     continue;
                 }
@@ -307,6 +327,13 @@ pub(crate) fn lane_loop<B: Backend>(
             };
             clock += prefill_s;
             req.emit(TokenEvent::Prefilled { token: out.next_token });
+            // Continuous batching: an admission into a batch that has
+            // already decoded is a mid-flight join (a retire freed the
+            // slot this sequence takes, without a batch boundary).
+            let joined = batch_running;
+            if joined {
+                stats.joins += 1;
+            }
             let mut seq = Active {
                 pos: plen as i32,
                 tokens: vec![out.next_token],
@@ -316,6 +343,7 @@ pub(crate) fn lane_loop<B: Backend>(
                 prefill_s,
                 decode_s: 0.0,
                 admit_clock,
+                joined,
                 finish: None,
                 error: None,
             };
@@ -349,6 +377,7 @@ pub(crate) fn lane_loop<B: Backend>(
         }
 
         if !ready.is_empty() {
+            batch_running = true;
             let width = ready.len();
             let t0 = Instant::now();
             let round = {
@@ -434,7 +463,8 @@ pub(crate) fn lane_loop<B: Backend>(
             } else {
                 seq.req.arrival.elapsed().as_secs_f64()
             };
-            let Active { req, tokens, queue_s, prefill_s, decode_s, finish, error, .. } = seq;
+            let Active { req, tokens, queue_s, prefill_s, decode_s, finish, error, joined, .. } =
+                seq;
             let res = RequestResult {
                 id,
                 tokens,
@@ -445,8 +475,19 @@ pub(crate) fn lane_loop<B: Backend>(
                 decode_s,
                 total_s,
             };
-            finish_request(&req, res, lane_id, &plan, &tx, &sink, &mut results, &mut stats);
+            finish_request(
+                &req, res, lane_id, joined, &plan, &tx, &sink, &mut results, &mut stats,
+            );
         }
+        if active.is_empty() {
+            // The batch drained: the next admissions form a fresh
+            // batch, not a mid-flight join.
+            batch_running = false;
+        }
+
+        // Publish the lane clock: in ordered (preloaded) mode this
+        // hands the pull turn to the next lane in virtual-time order.
+        sched.update_clock(lane_id, clock);
     }
 
     stats.clock_s = clock;

@@ -1,5 +1,6 @@
 //! Serving metrics: latency percentiles, throughput aggregation,
-//! per-lane breakdowns of the sharded engine, and the streaming
+//! per-lane breakdowns of the continuous-batching engine (including
+//! work-steal and mid-flight-join counts), and the streaming
 //! request-record channel a scrape endpoint can sit on.
 
 use crate::util::stats::{geomean, max, mean, percentile};
@@ -47,9 +48,18 @@ impl LatencyStats {
 pub struct RequestRecord {
     pub id: RequestId,
     /// Worker lane that served the request; `None` for submissions
-    /// rejected at admission, which never reached a lane.
+    /// rejected at admission, which never reached a lane.  Legacy
+    /// alias of `executed_lane`, kept for exporter-schema stability.
     pub lane: Option<usize>,
+    /// Lane the scheduler's pull landed the request on (it executes
+    /// there to completion — sequences never migrate mid-generation);
+    /// `None` for admission rejections/sheds, which never executed.
+    pub executed_lane: Option<usize>,
     pub queue_s: f64,
+    /// Seconds between arrival and the scheduler pull that assigned
+    /// the request its executing lane (the admission-queue wait the
+    /// `tsar_queue_wait_seconds` histogram observes).
+    pub queue_wait_s: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
@@ -58,6 +68,11 @@ pub struct RequestRecord {
     /// How the request left the engine (completed / cancelled /
     /// failed).
     pub finish: FinishReason,
+    /// The executing lane stole this request off a sibling's deque.
+    pub stolen: bool,
+    /// The request was admitted into a batch that had already run
+    /// decode rounds (a continuous-batching mid-flight join).
+    pub joined_midflight: bool,
     /// The backend's chosen §III-D kernel plan, `None` for backends
     /// that don't model one (PJRT).
     pub plan: Option<String>,
@@ -78,6 +93,11 @@ pub struct LaneStats {
     /// `width_hist[w]` counts decode rounds that stepped exactly `w`
     /// sequences (index 0 unused).
     pub width_hist: Vec<usize>,
+    /// Requests this lane stole off a sibling's deque (work stealing).
+    pub steals: usize,
+    /// Admissions that joined a batch already running decode rounds
+    /// (continuous-batching mid-flight joins).
+    pub joins: usize,
     /// `clock_s` / merged wall time — filled in by the clock merge at
     /// report time.
     pub utilization: f64,
@@ -91,6 +111,8 @@ impl LaneStats {
             rounds: 0,
             clock_s: 0.0,
             width_hist: vec![0; max_width + 1],
+            steals: 0,
+            joins: 0,
             utilization: 0.0,
         }
     }
@@ -142,6 +164,15 @@ pub struct ServeReport {
     pub cancelled: usize,
     /// Requests rejected at admission or failed in the backend.
     pub failed: usize,
+    /// The subset of `failed` shed at submit time (admission-queue
+    /// overflow or validation) — they never executed on a lane.  The
+    /// same count `tsar_rejections_total` reports, so the shutdown
+    /// report and the Prometheus surface always agree.
+    pub rejected: usize,
+    /// Σ per-lane work-stealing pulls over the run.
+    pub steals: usize,
+    /// Σ per-lane continuous-batching mid-flight joins over the run.
+    pub midflight_joins: usize,
     pub total_tokens: usize,
     /// Merged timeline: max over the lanes' virtual clocks (the lanes
     /// run concurrently, so the simulated makespan is the slowest
@@ -234,6 +265,8 @@ impl ServeReport {
             .collect();
         lanes.sort_by_key(|l| l.lane);
         let lane_clock_sum_s: f64 = lanes.iter().map(|l| l.clock_s).sum();
+        let steals: usize = lanes.iter().map(|l| l.steals).sum();
+        let midflight_joins: usize = lanes.iter().map(|l| l.joins).sum();
         for l in &mut lanes {
             l.utilization = if wall_s > 0.0 { l.clock_s / wall_s } else { 0.0 };
         }
@@ -242,6 +275,11 @@ impl ServeReport {
             completed,
             cancelled,
             failed,
+            // Rejections carry no lane; the engine's merge overwrites
+            // this with its authoritative shed count.
+            rejected: 0,
+            steals,
+            midflight_joins,
             total_tokens,
             wall_s,
             prefill: LatencyStats::from(&prefill)?,
@@ -271,6 +309,12 @@ impl ServeReport {
             for e in &self.lane_errors {
                 println!("  ! {e}");
             }
+        }
+        if self.steals > 0 || self.midflight_joins > 0 || self.rejected > 0 {
+            println!(
+                "scheduler       : {} steals  {} mid-flight joins  {} shed at admission",
+                self.steals, self.midflight_joins, self.rejected
+            );
         }
         println!("generated tokens: {}", self.total_tokens);
         println!("wall time       : {:.2} s", self.wall_s);
@@ -376,6 +420,20 @@ mod tests {
         assert!((rep.lanes[0].utilization - 1.0).abs() < 1e-12);
         assert!((rep.lanes[1].mean_width() - 7.0 / 3.0).abs() < 1e-12);
         assert_eq!(rep.lanes[1].width_hist[3], 2);
+    }
+
+    #[test]
+    fn scheduler_counters_aggregate_across_lanes() {
+        let rs = vec![result(0.1, 1.0, 4)];
+        let mut a = LaneStats::new(0, 2);
+        a.steals = 2;
+        a.joins = 1;
+        let mut b = LaneStats::new(1, 2);
+        b.steals = 1;
+        let rep = ServeReport::from_lanes(&rs, 1.0, vec![a, b]).unwrap();
+        assert_eq!(rep.steals, 3);
+        assert_eq!(rep.midflight_joins, 1);
+        assert_eq!(rep.rejected, 0, "from_lanes never counts sheds on its own");
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! The paper's system contribution is the kernel/ISA layer, so the
 //! coordinator is the serving harness a deployment wraps around it
 //! (DESIGN.md §3): a session-based streaming **engine**
-//! ([`Engine::start`] → [`EngineHandle::submit`] → [`Ticket`]) that
-//! shards sequences across worker lanes, each lane a continuous
+//! ([`Engine::start`] → [`EngineHandle::submit`] → [`Ticket`]) whose
+//! worker lanes *pull* sequences from a shared admission queue between
+//! decode rounds (continuous batching with cross-lane work stealing —
+//! see the `scheduler` module), each lane a continuous
 //! batcher + KV-slot pool driving *batched* decode rounds against any
 //! [`crate::runtime::Backend`] (the simulator-costed `SimBackend` by
 //! default, PJRT behind the `pjrt` feature), and the paper's §III-D
@@ -36,6 +38,7 @@ mod lane;
 pub mod metrics;
 pub mod prom;
 pub mod request;
+mod scheduler;
 pub mod selector;
 pub mod serve;
 

@@ -18,6 +18,14 @@
 //! | `tsar_tokens_emitted_total` | counter | tokens emitted by retired requests (prefill token included) |
 //! | `tsar_lane_busy_seconds_total` | counter | busy seconds accumulated by the lanes (Σ prefill + decode over retired requests — simulated seconds for modeled backends, measured for real ones) |
 //! | `tsar_queue_depth` | gauge | sessions submitted (via [`PromCounters::note_submitted`]) and not yet retired |
+//! | `tsar_steals_total` | counter | retired requests that executed on a lane which stole them off a sibling's deque |
+//! | `tsar_joins_midflight_total` | counter | retired requests admitted into a batch already running decode rounds (continuous-batching joins) |
+//! | `tsar_rejections_total` | counter | submissions shed at admission (validation or queue backpressure) — they never executed on a lane; the same count `ServeReport::rejected` carries, so gauge and shutdown report stay consistent |
+//! | `tsar_queue_wait_seconds` | histogram | admission-queue wait (arrival → scheduler pull) of executed requests |
+//!
+//! Rejections *do* count as retired (the request's lifecycle is over),
+//! so `tsar_queue_depth` returns to zero after a shed instead of
+//! leaking a phantom in-flight session.
 //!
 //! Counters are relaxed atomics: scrapes race retirements by at most
 //! one in-flight record, which Prometheus' pull model tolerates by
@@ -52,7 +60,22 @@ pub struct PromCounters {
     /// Σ (prefill_s + decode_s) over retired requests, in microseconds
     /// (an integer so it can live in an atomic; rendered as seconds).
     busy_us: AtomicU64,
+    /// Retired requests that were stolen onto their executing lane.
+    steals: AtomicU64,
+    /// Retired requests that joined a running batch mid-flight.
+    joins: AtomicU64,
+    /// Submissions shed at admission (no executing lane).
+    rejections: AtomicU64,
+    /// Σ queue wait of executed requests, in microseconds.
+    qw_sum_us: AtomicU64,
+    /// Non-cumulative queue-wait histogram counts: one bucket per
+    /// [`QUEUE_WAIT_BUCKETS`] bound plus a final `+Inf` overflow bin
+    /// (cumulated at render time, as the exposition format requires).
+    qw_buckets: [AtomicU64; QUEUE_WAIT_BUCKETS.len() + 1],
 }
+
+/// Upper bounds (seconds) of the `tsar_queue_wait_seconds` buckets.
+const QUEUE_WAIT_BUCKETS: [f64; 7] = [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0];
 
 impl PromCounters {
     pub fn new() -> PromCounters {
@@ -71,6 +94,26 @@ impl PromCounters {
         self.tokens.fetch_add(rec.tokens as u64, Ordering::Relaxed);
         let busy_us = ((rec.prefill_s + rec.decode_s) * 1e6).max(0.0) as u64;
         self.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+        if rec.executed_lane.is_some() {
+            // Scheduler provenance only exists for requests a lane
+            // actually executed.
+            if rec.stolen {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            if rec.joined_midflight {
+                self.joins.fetch_add(1, Ordering::Relaxed);
+            }
+            let wait = rec.queue_wait_s.max(0.0);
+            self.qw_sum_us.fetch_add((wait * 1e6) as u64, Ordering::Relaxed);
+            let bin = QUEUE_WAIT_BUCKETS
+                .iter()
+                .position(|&le| wait <= le)
+                .unwrap_or(QUEUE_WAIT_BUCKETS.len());
+            self.qw_buckets[bin].fetch_add(1, Ordering::Relaxed);
+        } else if rec.finish == FinishReason::Failed {
+            // Shed at admission: consistent with ServeReport::rejected.
+            self.rejections.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     fn by_reason(&self, finish: FinishReason) -> &AtomicU64 {
@@ -106,6 +149,22 @@ impl PromCounters {
     /// Busy seconds accumulated by the lanes so far.
     pub fn busy_seconds(&self) -> f64 {
         self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Retired requests that were stolen onto their executing lane.
+    pub fn steals_total(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Retired requests that joined a running batch mid-flight.
+    pub fn joins_total(&self) -> u64 {
+        self.joins.load(Ordering::Relaxed)
+    }
+
+    /// Submissions shed at admission (validation or queue
+    /// backpressure); always equals the shutdown report's `rejected`.
+    pub fn rejections_total(&self) -> u64 {
+        self.rejections.load(Ordering::Relaxed)
     }
 
     /// Render the Prometheus text exposition (format version 0.0.4):
@@ -144,6 +203,41 @@ impl PromCounters {
         out.push_str("# HELP tsar_queue_depth Sessions submitted and not yet retired.\n");
         out.push_str("# TYPE tsar_queue_depth gauge\n");
         out.push_str(&format!("tsar_queue_depth {}\n", self.queue_depth()));
+        out.push_str(
+            "# HELP tsar_steals_total Retired requests stolen onto their executing lane \
+             (work stealing).\n",
+        );
+        out.push_str("# TYPE tsar_steals_total counter\n");
+        out.push_str(&format!("tsar_steals_total {}\n", self.steals_total()));
+        out.push_str(
+            "# HELP tsar_joins_midflight_total Retired requests that joined a running \
+             batch mid-flight (continuous batching).\n",
+        );
+        out.push_str("# TYPE tsar_joins_midflight_total counter\n");
+        out.push_str(&format!("tsar_joins_midflight_total {}\n", self.joins_total()));
+        out.push_str(
+            "# HELP tsar_rejections_total Submissions shed at admission (validation or \
+             queue backpressure), never executed on a lane.\n",
+        );
+        out.push_str("# TYPE tsar_rejections_total counter\n");
+        out.push_str(&format!("tsar_rejections_total {}\n", self.rejections_total()));
+        out.push_str(
+            "# HELP tsar_queue_wait_seconds Admission-queue wait (arrival to scheduler \
+             pull) of executed requests.\n",
+        );
+        out.push_str("# TYPE tsar_queue_wait_seconds histogram\n");
+        let mut cumulative = 0u64;
+        for (i, le) in QUEUE_WAIT_BUCKETS.iter().enumerate() {
+            cumulative += self.qw_buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!("tsar_queue_wait_seconds_bucket{{le=\"{le}\"}} {cumulative}\n"));
+        }
+        cumulative += self.qw_buckets[QUEUE_WAIT_BUCKETS.len()].load(Ordering::Relaxed);
+        out.push_str(&format!("tsar_queue_wait_seconds_bucket{{le=\"+Inf\"}} {cumulative}\n"));
+        out.push_str(&format!(
+            "tsar_queue_wait_seconds_sum {:.6}\n",
+            self.qw_sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        ));
+        out.push_str(&format!("tsar_queue_wait_seconds_count {cumulative}\n"));
         out
     }
 }
@@ -200,12 +294,34 @@ mod tests {
         RequestRecord {
             id: 0,
             lane: Some(0),
+            executed_lane: Some(0),
             queue_s: 0.05,
+            queue_wait_s: 0.05,
             prefill_s: 0.25,
             decode_s: 0.75,
             total_s: 1.05,
             tokens,
             finish,
+            stolen: false,
+            joined_midflight: false,
+            plan: None,
+        }
+    }
+
+    fn rejection() -> RequestRecord {
+        RequestRecord {
+            id: 9,
+            lane: None,
+            executed_lane: None,
+            queue_s: 0.0,
+            queue_wait_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            total_s: 0.0,
+            tokens: 0,
+            finish: FinishReason::Failed,
+            stolen: false,
+            joined_midflight: false,
             plan: None,
         }
     }
@@ -232,6 +348,55 @@ mod tests {
         assert!(text.contains("tsar_lane_busy_seconds_total 2.000000"));
         assert!(text.contains("# TYPE tsar_queue_depth gauge"));
         assert!(text.contains("tsar_queue_depth 1"));
+    }
+
+    #[test]
+    fn scheduler_series_render_and_rejections_retire() {
+        let c = PromCounters::new();
+        c.note_submitted();
+        c.note_submitted();
+        let mut stolen = record(FinishReason::Length, 4);
+        stolen.stolen = true;
+        stolen.joined_midflight = true;
+        stolen.queue_wait_s = 0.003; // lands in the le="0.005" bucket
+        c.observe(&stolen);
+        c.observe(&rejection());
+
+        assert_eq!(c.steals_total(), 1);
+        assert_eq!(c.joins_total(), 1);
+        assert_eq!(c.rejections_total(), 1, "shed counted once, not as scheduler work");
+        // The fix under test: a rejection retires its session, so the
+        // gauge returns to zero instead of leaking a phantom in-flight
+        // request (consistent with ServeReport::rejected).
+        assert_eq!(c.queue_depth(), 0);
+
+        let text = c.render();
+        assert!(text.contains("# TYPE tsar_steals_total counter"));
+        assert!(text.contains("tsar_steals_total 1"), "got:\n{text}");
+        assert!(text.contains("tsar_joins_midflight_total 1"));
+        assert!(text.contains("tsar_rejections_total 1"));
+        assert!(text.contains("# TYPE tsar_queue_wait_seconds histogram"));
+        // Cumulative buckets: nothing under 1 ms, everything from 5 ms up.
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"0.001\"} 0"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"0.005\"} 1"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"10\"} 1"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("tsar_queue_wait_seconds_sum 0.003000"));
+        assert!(text.contains("tsar_queue_wait_seconds_count 1"));
+        // The rejection contributes no histogram sample (it never
+        // waited on an executing lane's behalf).
+    }
+
+    #[test]
+    fn queue_wait_overflow_lands_in_the_inf_bucket() {
+        let c = PromCounters::new();
+        let mut slow = record(FinishReason::Length, 1);
+        slow.queue_wait_s = 99.0;
+        c.observe(&slow);
+        let text = c.render();
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"10\"} 0"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("tsar_queue_wait_seconds_count 1"));
     }
 
     #[test]

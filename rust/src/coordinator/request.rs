@@ -4,10 +4,11 @@
 //! ([`TokenEvent`]), and the completed-request record
 //! ([`RequestResult`]).
 //!
-//! [`Request`] is the *internal* envelope the dispatcher shards to the
-//! lanes: a [`GenerationRequest`] plus the engine-assigned id, arrival
-//! timestamp, the ticket's event sender, and the shared cancellation
-//! flag.  Legacy callers build it directly with [`Request::new`]
+//! [`Request`] is the *internal* envelope the admission queue carries
+//! to the lanes: a [`GenerationRequest`] plus the engine-assigned id,
+//! arrival timestamp, the ticket's event sender, and the shared
+//! cancellation flag (the scheduler stamps queue-wait and steal
+//! provenance at pull time).  Legacy callers build it directly with [`Request::new`]
 //! (defaulted params, no event stream) — the pre-Engine batch surface.
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -159,6 +160,14 @@ pub struct Request {
     /// boundary".  `None` for legacy batch submissions (never
     /// cancellable).
     pub(crate) cancel: Option<Arc<AtomicBool>>,
+    /// Stamped by the scheduler at pull time: seconds spent on the
+    /// admission queue before a lane took the request.  `None` until
+    /// pulled.
+    pub(crate) queue_wait_s: Option<f64>,
+    /// Stamped by the scheduler: the request was stolen off another
+    /// lane's deque rather than pulled from the thief's own assignment
+    /// or the shared injector.
+    pub(crate) stolen: bool,
 }
 
 impl Request {
@@ -175,6 +184,8 @@ impl Request {
             arrival: Instant::now(),
             events: None,
             cancel: None,
+            queue_wait_s: None,
+            stolen: false,
         }
     }
 
@@ -192,6 +203,8 @@ impl Request {
             arrival: Instant::now(),
             events: Some(events),
             cancel: Some(cancel),
+            queue_wait_s: None,
+            stolen: false,
         }
     }
 

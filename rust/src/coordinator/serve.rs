@@ -6,22 +6,28 @@
 //!
 //! Topology per run (all inside the engine):
 //!
-//!   1. requests are sharded round-robin across `workers` lanes,
-//!   2. each **lane** (background thread) runs admission → prefill →
-//!      batched decode rounds → retire over its shard (the `lane`
-//!      module), sharing the backend through an `Arc` — every
+//!   1. requests land on the engine's **shared admission queue**
+//!      (preloaded runs pre-assign round-robin onto per-lane steal
+//!      deques for determinism),
+//!   2. each **lane** (background thread) runs pull → join → prefill →
+//!      batched decode rounds → retire (the `lane` module), pulling
+//!      from the queue between rounds — joining sequences mid-flight
+//!      when KV slots free, stealing from overloaded siblings when
+//!      idle — and sharing the backend through an `Arc` — every
 //!      [`Backend`] method takes `&self`, so `B: Sync` is all that is
 //!      required,
-//!   3. on shutdown the lanes drain and exit, and the
+//!   3. on shutdown the lanes drain the queue and exit, and the
 //!      **merge-at-retire** step reconciles the per-lane virtual
 //!      clocks into one global simulated timeline for the
 //!      [`ServeReport`].
 //!
-//! Clock-merge rule: lanes run concurrently over disjoint shards, so
-//! the merged makespan is the *slowest lane's* clock (`max` over
-//! lanes), while Σ lane clocks is aggregate busy time — both are
-//! reported.  Backends that really execute report no step costs and
-//! the engine falls back to wall-clock timing.  Tokens and clocks are
+//! Clock-merge rule: lanes run concurrently (a sequence executes on
+//! exactly one lane), so the merged makespan is the *slowest lane's*
+//! clock (`max` over lanes), while Σ lane clocks is aggregate busy
+//! time — both are reported.  A queued request spends real queue wait
+//! before its pull and virtual residency after; `total_s` adds the two
+//! (DESIGN.md §3).  Backends that really execute report no step costs
+//! and the engine falls back to wall-clock timing.  Tokens are
 //! bit-identical to serving the same workload through the streaming
 //! API: the wrappers add no model work and no virtual time.
 
@@ -43,13 +49,19 @@ pub struct ServerConfig {
     /// KV slots per lane (>= max_batch; extra slots admit prefills
     /// early).
     pub kv_slots: usize,
-    /// Worker lanes the admitted sequences are sharded across.
+    /// Worker lanes pulling from the shared admission queue.
     pub workers: usize,
+    /// Admission backpressure: max queued-but-unassigned requests
+    /// before [`super::EngineHandle::submit`] sheds (`Failed` ticket,
+    /// counted in `ServeReport::rejected` / `tsar_rejections_total`).
+    /// `None` = unbounded.  Live submissions only — preloaded lists
+    /// bypass the cap.
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 4, kv_slots: 4, workers: 1 }
+        ServerConfig { max_batch: 4, kv_slots: 4, workers: 1, queue_cap: None }
     }
 }
 
@@ -74,6 +86,9 @@ impl<B: Backend> Server<B> {
             cfg.kv_slots,
             cfg.max_batch
         );
+        if let Some(cap) = cfg.queue_cap {
+            crate::ensure!(cap >= 1, "queue_cap must be >= 1 when set");
+        }
         Ok(Server { backend: Arc::new(backend), cfg, record_tx: None })
     }
 
@@ -130,11 +145,12 @@ impl<B: Backend + Send + Sync + 'static> Server<B> {
         handle.shutdown()
     }
 
-    /// Serve a fixed request list: the whole list is sharded
-    /// round-robin across the lanes before any lane starts (the engine
-    /// holds its lanes at a start gate), so the schedule (lane
-    /// assignment, batched round widths, virtual clocks) is a pure
-    /// function of the list — the mode batch jobs and integration
+    /// Serve a fixed request list: the whole list is pre-assigned
+    /// round-robin onto the lanes' steal deques before any lane starts
+    /// (the engine holds its lanes at a start gate), and the scheduler
+    /// orders pulls by lane virtual clock, so the schedule (lane
+    /// assignment, steals, batched round widths, virtual clocks) is a
+    /// pure function of the list — the mode batch jobs and integration
     /// tests want.
     pub fn run_preloaded(
         &self,

@@ -476,7 +476,7 @@ fn drive<B: Backend + Send + Sync + 'static>(
         cfg.prefill_len, cfg.max_seq, cfg.vocab
     );
 
-    let scfg = ServerConfig { max_batch: batch, kv_slots: batch, workers };
+    let scfg = ServerConfig { max_batch: batch, kv_slots: batch, workers, queue_cap: None };
 
     if let Some(addr) = opts.http.as_deref() {
         // HTTP mode: no synthetic workload — network clients drive the

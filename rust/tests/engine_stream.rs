@@ -24,7 +24,7 @@ fn backend() -> SimBackend {
 }
 
 fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
-    ServerConfig { max_batch, kv_slots, workers }
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
 }
 
 /// A backend that spends real wall time per step (on top of the

@@ -1,0 +1,338 @@
+//! Integration tests of HTTP/1.1 keep-alive multiplexing on the
+//! zero-dependency front-end (`coordinator::http`, DESIGN.md §3):
+//! sequential requests on one connection, pipelined generate streams
+//! capped per connection (excess shed with `503`), and mid-stream
+//! disconnects cancelling only the affected session.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{
+    Engine, EngineHandle, HttpConfig, HttpServer, PromAggregator, ServeReport, ServerConfig,
+};
+use tsar::runtime::{
+    Backend, BatchItem, ModelConfig, SimBackend, SimBackendConfig, SimKvCache, Step,
+};
+use tsar::util::error::Result;
+use tsar::util::json::Json;
+
+fn backend() -> SimBackend {
+    SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
+    )
+    .expect("zoo model")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
+}
+
+/// Engine + aggregator + HTTP front-end on an ephemeral port, with the
+/// caller's [`HttpConfig`] (the keep-alive tests tune the stream cap).
+fn start_http<B: Backend + Send + Sync + 'static>(
+    backend: B,
+    scfg: ServerConfig,
+    hcfg: HttpConfig,
+) -> (Arc<EngineHandle<B>>, HttpServer, PromAggregator) {
+    let (rec_tx, rec_rx) = channel();
+    let aggregator = PromAggregator::spawn(rec_rx);
+    let handle = Arc::new(Engine::start_with_sink(backend, scfg, Some(rec_tx)).unwrap());
+    let http = HttpServer::start(
+        "127.0.0.1:0",
+        Arc::clone(&handle),
+        aggregator.counters(),
+        hcfg,
+    )
+    .unwrap();
+    (handle, http, aggregator)
+}
+
+/// Stop the front-end and shut the engine down for the merged report.
+fn finish<B: Backend>(handle: Arc<EngineHandle<B>>, http: HttpServer) -> Result<ServeReport> {
+    http.stop();
+    let handle = Arc::try_unwrap(handle).ok().expect("HTTP workers joined");
+    handle.shutdown()
+}
+
+/// Write one request on an already-open connection.  `connection` is
+/// the optional `Connection:` header value — `None` leaves HTTP/1.1's
+/// keep-alive default in force.
+fn send(stream: &mut TcpStream, method: &str, path: &str, body: &str, connection: Option<&str>) {
+    let conn_header =
+        connection.map(|c| format!("Connection: {c}\r\n")).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n{conn_header}\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    stream.flush().expect("flush request");
+}
+
+fn gen_body(prompt: &[i32], max_new: usize) -> String {
+    format!("{{\"prompt\":{prompt:?},\"max_new_tokens\":{max_new}}}")
+}
+
+/// Read one response head off the connection: (status line, raw head).
+fn read_head(reader: &mut BufReader<TcpStream>) -> (String, String) {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read header line");
+        assert!(n > 0, "connection closed while reading headers:\n{head}");
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, head)
+}
+
+/// Does the head carry `name: value` (case-insensitive)?
+fn head_has(head: &str, name: &str, value: &str) -> bool {
+    head.lines().any(|l| {
+        l.split_once(':').is_some_and(|(n, v)| {
+            n.eq_ignore_ascii_case(name) && v.trim().eq_ignore_ascii_case(value)
+        })
+    })
+}
+
+/// Read a chunked body through its zero-length delimiter chunk — the
+/// framing that lets a keep-alive connection survive a stream.
+fn read_chunked(reader: &mut BufReader<TcpStream>) -> String {
+    let mut out = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("chunk size line");
+        let size = usize::from_str_radix(line.trim(), 16).expect("hex chunk size");
+        let mut chunk = vec![0u8; size + 2]; // payload + trailing CRLF
+        reader.read_exact(&mut chunk).expect("chunk payload");
+        if size == 0 {
+            break;
+        }
+        out.push_str(std::str::from_utf8(&chunk[..size]).expect("UTF-8 chunk"));
+    }
+    out
+}
+
+/// Read a fixed-length body using the head's `Content-Length`.
+fn read_sized(reader: &mut BufReader<TcpStream>, head: &str) -> String {
+    let length: usize = head
+        .lines()
+        .find_map(|l| {
+            let (name, value) = l.split_once(':')?;
+            name.eq_ignore_ascii_case("content-length")
+                .then(|| value.trim().parse().expect("Content-Length value"))
+        })
+        .expect("Content-Length header");
+    let mut body = vec![0u8; length];
+    reader.read_exact(&mut body).expect("sized body");
+    String::from_utf8(body).expect("UTF-8 body")
+}
+
+/// The terminal `retired` line's tokens of a streamed NDJSON body.
+fn last_tokens(body: &str) -> Vec<i32> {
+    let last =
+        Json::parse(body.lines().last().expect("terminal line")).expect("valid NDJSON line");
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("retired"), "got {body}");
+    last.get("tokens")
+        .and_then(Json::as_arr)
+        .expect("terminal carries tokens")
+        .iter()
+        .map(|t| t.as_f64().expect("token is a number") as i32)
+        .collect()
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let (handle, http, aggregator) = start_http(backend(), cfg(2, 2, 1), HttpConfig::default());
+    let addr = http.local_addr();
+    let reference = backend();
+
+    let conn = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(conn);
+
+    // First generate: no Connection header, so HTTP/1.1 keep-alive
+    // holds the socket open past the chunked stream.
+    send(reader.get_mut(), "POST", "/v1/generate", &gen_body(&[3, 1, 4], 5), None);
+    let (status, head) = read_head(&mut reader);
+    assert!(status.contains("200"), "got {status}");
+    assert!(head_has(&head, "connection", "keep-alive"), "head: {head}");
+    assert!(head_has(&head, "transfer-encoding", "chunked"), "head: {head}");
+    let body = read_chunked(&mut reader);
+    assert_eq!(last_tokens(&body), reference.generate(&[3, 1, 4], 5).unwrap());
+
+    // A metadata route between the generates, on the same socket.
+    send(reader.get_mut(), "GET", "/healthz", "", None);
+    let (status, head) = read_head(&mut reader);
+    assert!(status.contains("200"), "got {status}");
+    assert_eq!(read_sized(&mut reader, &head), "ok\n");
+
+    // Second generate closes the connection explicitly.
+    send(reader.get_mut(), "POST", "/v1/generate", &gen_body(&[9, 2], 4), Some("close"));
+    let (status, head) = read_head(&mut reader);
+    assert!(status.contains("200"), "got {status}");
+    assert!(head_has(&head, "connection", "close"), "head: {head}");
+    let body = read_chunked(&mut reader);
+    assert_eq!(last_tokens(&body), reference.generate(&[9, 2], 4).unwrap());
+    let mut probe = [0u8; 1];
+    let n = reader.read(&mut probe).unwrap_or(0);
+    assert_eq!(n, 0, "server must close after Connection: close");
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.completed, 2);
+    assert_eq!(aggregator.finish(), 2);
+}
+
+#[test]
+fn pipelined_generates_past_the_stream_cap_are_shed() {
+    let hcfg = HttpConfig { max_streams_per_conn: 2, ..HttpConfig::default() };
+    let (handle, http, aggregator) = start_http(backend(), cfg(2, 2, 2), hcfg);
+    let addr = http.local_addr();
+    let reference = backend();
+
+    // Three pipelined generates in one write: the first two are
+    // admitted (and run concurrently), the third exceeds the cap.
+    let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5], &[6, 7, 8]];
+    let mut wire = String::new();
+    for prompt in &prompts {
+        let body = gen_body(prompt, 4);
+        wire.push_str(&format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ));
+    }
+    let conn = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(conn);
+    reader.get_mut().write_all(wire.as_bytes()).expect("pipelined write");
+    reader.get_mut().flush().expect("flush");
+
+    // Responses come back strictly in request order: two streams...
+    for prompt in &prompts[..2] {
+        let (status, head) = read_head(&mut reader);
+        assert!(status.contains("200"), "got {status}");
+        assert!(head_has(&head, "transfer-encoding", "chunked"), "head: {head}");
+        let body = read_chunked(&mut reader);
+        assert_eq!(last_tokens(&body), reference.generate(prompt, 4).unwrap());
+    }
+    // ...then the shed response, which keeps the connection alive.
+    let (status, head) = read_head(&mut reader);
+    assert!(status.contains("503"), "got {status}");
+    assert!(head_has(&head, "connection", "keep-alive"), "head: {head}");
+    let body = read_sized(&mut reader, &head);
+    assert!(body.contains("too many concurrent streams"), "got {body}");
+
+    // The connection is still usable after the shed.
+    send(reader.get_mut(), "GET", "/healthz", "", Some("close"));
+    let (status, head) = read_head(&mut reader);
+    assert!(status.contains("200"), "got {status}");
+    assert_eq!(read_sized(&mut reader, &head), "ok\n");
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 2, "the shed generate never reached the engine");
+    assert_eq!(report.completed, 2);
+    assert_eq!(aggregator.finish(), 2);
+}
+
+/// A backend that spends real wall time per step so a client can
+/// abandon a generation mid-stream.
+struct SlowBackend {
+    inner: SimBackend,
+    step: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_only_the_affected_session() {
+    let slow = SlowBackend { inner: backend(), step: Duration::from_millis(10) };
+    let (handle, http, aggregator) = start_http(slow, cfg(2, 2, 1), HttpConfig::default());
+    let addr = http.local_addr();
+
+    // Session A: a keep-alive streaming client that reads a few token
+    // lines, then drops the socket mid-generation.
+    {
+        let conn = TcpStream::connect(addr).expect("connect A");
+        let mut reader = BufReader::new(conn);
+        send(reader.get_mut(), "POST", "/v1/generate", &gen_body(&[2, 3, 4], 55), None);
+        let (status, _head) = read_head(&mut reader);
+        assert!(status.contains("200"), "got {status}");
+        let mut token_lines = 0;
+        while token_lines < 4 {
+            let mut line = String::new();
+            if reader.read_line(&mut line).expect("stream line") == 0 {
+                break;
+            }
+            if line.contains("\"event\":\"prefilled\"") || line.contains("\"event\":\"token\"")
+            {
+                token_lines += 1;
+            }
+        }
+        assert!(token_lines >= 1, "never saw a streamed token");
+    } // A's socket drops here, mid-stream.
+
+    // Session B on its own connection completes untouched while A's
+    // cancellation lands (both share the single two-wide lane).
+    let conn = TcpStream::connect(addr).expect("connect B");
+    let mut reader = BufReader::new(conn);
+    send(reader.get_mut(), "POST", "/v1/generate", &gen_body(&[8, 9], 5), Some("close"));
+    let (status, _head) = read_head(&mut reader);
+    assert!(status.contains("200"), "got {status}");
+    let body = read_chunked(&mut reader);
+    assert_eq!(last_tokens(&body), backend().generate(&[8, 9], 5).unwrap());
+
+    // Wait for A's retirement record so the report below is complete.
+    let counters = aggregator.counters();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while counters.queue_depth() != 0 {
+        assert!(Instant::now() < deadline, "disconnect cancellation never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.cancelled, 1, "only the disconnected session is cancelled");
+    assert_eq!(report.completed, 1, "the surviving session is untouched");
+    assert!(
+        report.total_tokens < 55 + 5,
+        "A was cancelled early, yet {} tokens were generated",
+        report.total_tokens
+    );
+    assert_eq!(aggregator.finish(), 2);
+}

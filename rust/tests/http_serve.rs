@@ -31,7 +31,7 @@ fn backend() -> SimBackend {
 }
 
 fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
-    ServerConfig { max_batch, kv_slots, workers }
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
 }
 
 /// A backend that spends real wall time per step so a client can
@@ -442,8 +442,25 @@ fn healthz_metrics_and_error_routes() {
     let error = last.get("error").and_then(Json::as_str).expect("failure reason");
     assert!(error.contains("KV capacity"), "got {error}");
 
+    // The rejection is visible on the scrape — counted in
+    // `tsar_rejections_total` *and* retired out of `tsar_queue_depth`,
+    // so shed requests never read as forever-queued.  (Poll: the
+    // rejection record races the scrape by microseconds.)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let scrape = loop {
+        let (status, _head, scrape) = http_request(addr, "GET", "/metrics", "");
+        assert!(status.contains("200"), "got {status}");
+        if scrape.contains("tsar_rejections_total 1") {
+            break scrape;
+        }
+        assert!(Instant::now() < deadline, "rejection never hit the scrape:\n{scrape}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(scrape.contains("tsar_queue_depth 0"), "scrape:\n{scrape}");
+
     let report = finish(handle, http).unwrap();
     assert_eq!(report.requests, 1, "only the rejected session was submitted");
     assert_eq!(report.failed, 1);
+    assert_eq!(report.rejected, 1, "the shutdown report agrees with tsar_rejections_total");
     assert_eq!(aggregator.finish(), 1, "rejections stream a record too");
 }

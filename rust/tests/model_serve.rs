@@ -44,7 +44,7 @@ fn backend() -> ModelBackend {
 }
 
 fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
-    ServerConfig { max_batch, kv_slots, workers }
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
 }
 
 /// The model backend with real wall time added per step, so tests can

@@ -123,7 +123,7 @@ static TINY: ModelSpec = ModelSpec {
 fn serve_tokens<B: Backend + Send + Sync + 'static>(backend: B) -> Vec<(u64, Vec<i32>)> {
     let server = Server::new(
         backend,
-        ServerConfig { max_batch: 2, kv_slots: 2, workers: 1 },
+        ServerConfig { max_batch: 2, kv_slots: 2, workers: 1, queue_cap: None },
     )
     .unwrap();
     let requests: Vec<Request> = (0..3u64)

@@ -88,8 +88,9 @@ fn server_serves_batched_requests() {
     let dir = require_artifacts!();
     let rt = ModelRuntime::load(&dir, "ref").unwrap();
     let vocab = rt.manifest.config.vocab as i32;
-    let server = Server::new(rt, ServerConfig { max_batch: 3, kv_slots: 3, workers: 1 })
-        .expect("server config");
+    let server =
+        Server::new(rt, ServerConfig { max_batch: 3, kv_slots: 3, workers: 1, queue_cap: None })
+            .expect("server config");
     let requests: Vec<Request> = (0..6u64)
         .map(|id| {
             Request::new(
@@ -116,8 +117,9 @@ fn server_interleaves_under_tight_batch() {
     // complete with the same token counts.
     let dir = require_artifacts!();
     let rt = ModelRuntime::load(&dir, "ref").unwrap();
-    let server = Server::new(rt, ServerConfig { max_batch: 1, kv_slots: 1, workers: 1 })
-        .expect("server config");
+    let server =
+        Server::new(rt, ServerConfig { max_batch: 1, kv_slots: 1, workers: 1, queue_cap: None })
+            .expect("server config");
     let requests: Vec<Request> =
         (0..3u64).map(|id| Request::new(id, vec![2, 4, 6], 4)).collect();
     let report = serve_all(&server, requests).expect("serve");

@@ -1,0 +1,310 @@
+//! Integration tests of the shared-admission-queue scheduler
+//! (`coordinator::scheduler`, DESIGN.md §3): cross-lane work stealing
+//! beats the old static round-robin sharding on skewed workloads,
+//! continuous-batching mid-flight joins preserve the `pos ==
+//! cache.len()` KV contract and per-request tokens, preloaded runs are
+//! deterministic across repetitions, and admission backpressure sheds
+//! with accounting that matches the Prometheus surface.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use tsar::config::platforms::Platform;
+use tsar::coordinator::{
+    Engine, FinishReason, GenerationRequest, PromAggregator, Request, RequestRecord,
+    RequestResult, Server, ServerConfig, TokenEvent,
+};
+use tsar::runtime::{
+    Backend, BatchItem, ModelConfig, SimBackend, SimBackendConfig, SimKvCache, Step,
+};
+use tsar::util::error::Result;
+
+fn backend() -> SimBackend {
+    SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
+    )
+    .expect("zoo model")
+}
+
+fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
+}
+
+/// Drain the legacy result channel into an id → tokens map.
+fn tokens_by_id(results: &[RequestResult]) -> BTreeMap<u64, Vec<i32>> {
+    results.iter().map(|r| (r.id, r.tokens.clone())).collect()
+}
+
+/// The skewed workload: submission order interleaves one long request
+/// (ids 0, 4, 8, 12) with three short ones, so the old shard-at-submit
+/// engine's round-robin pins *all four* long requests onto lane 0 of a
+/// four-lane server while lanes 1–3 finish their shorts and idle.
+fn skewed_requests() -> Vec<Request> {
+    (0..16u64)
+        .map(|i| {
+            let prompt = vec![1 + (i % 7) as i32, 2 + (i % 5) as i32, 3];
+            let max_new = if i % 4 == 0 { 24 } else { 4 };
+            Request::new(i, prompt, max_new)
+        })
+        .collect()
+}
+
+#[test]
+fn skewed_workload_steals_beat_static_sharding() {
+    let server = Server::new(backend(), cfg(1, 1, 4)).expect("server config");
+    let (tx, rx) = channel();
+    let report = server.run_preloaded(skewed_requests(), tx).expect("preloaded run");
+    let results: Vec<RequestResult> = rx.iter().collect();
+    let stolen = tokens_by_id(&results);
+
+    // Analytic makespan of the retired shard-at-submit engine on this
+    // workload: round-robin assignment puts every long request on lane
+    // 0, which then serves them strictly serially (max_batch 1) — four
+    // prefills plus 4 × 23 decode rounds — while the other lanes idle.
+    let b = backend();
+    let prefill = b.prefill_plan().pass_seconds();
+    let round = b.decode_round_plan(1).pass_seconds();
+    let static_makespan = 4.0 * (prefill + 23.0 * round);
+
+    assert!(report.steals >= 1, "idle lanes must steal the queued longs");
+    assert!(
+        report.wall_s < static_makespan * 0.95,
+        "stealing must beat static sharding: wall {} vs static {}",
+        report.wall_s,
+        static_makespan
+    );
+    assert_eq!(report.lanes.len(), 4);
+    for lane in &report.lanes {
+        assert!(lane.requests >= 1, "lane {} idled through a non-empty queue", lane.lane);
+        assert!(lane.clock_s > 0.0, "lane {} never ran", lane.lane);
+    }
+    // Steals are the only way work leaves lane 0's deque, so its
+    // retirement count plus the steal count must cover its assignment.
+    assert_eq!(
+        report.lanes[0].requests + report.steals,
+        4,
+        "every long either ran on lane 0 or was stolen off it"
+    );
+
+    // Tokens are schedule-independent: the stolen four-lane run must be
+    // bit-identical, per request, to a serial one-lane run.
+    let serial_server = Server::new(backend(), cfg(1, 1, 1)).expect("server config");
+    let (tx1, rx1) = channel();
+    let serial_report =
+        serial_server.run_preloaded(skewed_requests(), tx1).expect("serial run");
+    let serial_results: Vec<RequestResult> = rx1.iter().collect();
+    assert_eq!(serial_report.steals, 0, "one lane has nobody to steal from");
+    assert_eq!(stolen, tokens_by_id(&serial_results), "stealing changed a token stream");
+}
+
+/// A pass-through backend that panics (killing its serving lane, which
+/// the report surfaces as a lane error) if a decode step ever runs with
+/// a position out of step with its KV cache — the invariant mid-flight
+/// joins must not perturb.
+struct KvGuardBackend {
+    inner: SimBackend,
+}
+
+impl Backend for KvGuardBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("kv-guard({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        assert_eq!(pos as usize, cache.len(), "decode pos drifted from the KV cache");
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        for r in reqs {
+            assert_eq!(
+                r.pos as usize,
+                r.cache.len(),
+                "batched decode pos drifted from the KV cache"
+            );
+        }
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn midflight_joins_preserve_kv_contract_and_tokens() {
+    // One lane, batch width 3, staggered budgets: ids 0–2 prefill
+    // together, then every later admission joins a batch that already
+    // ran decode rounds (id 0 spans the whole run, so the active set
+    // never drains in between).
+    let budgets = [16usize, 3, 5, 9, 4, 7];
+    let requests: Vec<Request> = budgets
+        .iter()
+        .enumerate()
+        .map(|(i, &max_new)| Request::new(i as u64, vec![2 + i as i32, 5, 9], max_new))
+        .collect();
+    let server =
+        Server::new(KvGuardBackend { inner: backend() }, cfg(3, 3, 1)).expect("server config");
+    let (tx, rx) = channel();
+    let report = server.run_preloaded(requests, tx).expect("preloaded run");
+    let results: Vec<RequestResult> = rx.iter().collect();
+
+    assert!(report.lane_errors.is_empty(), "a join perturbed pos == cache.len()");
+    assert_eq!(report.completed, 6);
+    assert!(
+        report.midflight_joins >= 2,
+        "staggered retirements must produce mid-flight joins, got {}",
+        report.midflight_joins
+    );
+    assert_eq!(report.lanes[0].joins, report.midflight_joins);
+
+    // Joining mid-flight must not change a single token: every request
+    // matches the direct batch-1 reference generation.
+    let reference = backend();
+    let tokens = tokens_by_id(&results);
+    for (i, &max_new) in budgets.iter().enumerate() {
+        let expect = reference.generate(&[2 + i as i32, 5, 9], max_new).expect("reference");
+        assert_eq!(tokens[&(i as u64)], expect, "request {i} tokens diverged");
+    }
+}
+
+/// One run's schedule, reduced to its deterministic (virtual-clock)
+/// fields: wall bits, per-lane accounting, and per-request placement.
+/// Real-time fields (queue waits) are deliberately excluded.
+type Fingerprint =
+    (u64, Vec<(usize, usize, usize, u64, usize, usize, Vec<usize>)>, BTreeMap<u64, Placement>);
+type Placement = (Option<usize>, bool, bool, usize);
+
+fn run_fingerprinted(requests: Vec<Request>, scfg: ServerConfig) -> Fingerprint {
+    let (rec_tx, rec_rx) = channel::<RequestRecord>();
+    let server =
+        Server::new(backend(), scfg).expect("server config").with_metrics_sink(rec_tx);
+    let (tx, rx) = channel();
+    let report = server.run_preloaded(requests, tx).expect("preloaded run");
+    drop(rx);
+    let lanes = report
+        .lanes
+        .iter()
+        .map(|l| {
+            (l.lane, l.requests, l.rounds, l.clock_s.to_bits(), l.steals, l.joins,
+             l.width_hist.clone())
+        })
+        .collect();
+    let placements = rec_rx
+        .try_iter()
+        .map(|r| (r.id, (r.executed_lane, r.stolen, r.joined_midflight, r.tokens)))
+        .collect();
+    (report.wall_s.to_bits(), lanes, placements)
+}
+
+#[test]
+fn preloaded_schedule_is_deterministic_across_runs() {
+    let budgets = [5usize, 9, 3, 12, 4, 8, 6, 10, 2, 7];
+    let requests = || -> Vec<Request> {
+        budgets
+            .iter()
+            .enumerate()
+            .map(|(i, &max_new)| Request::new(i as u64, vec![1 + i as i32, 4], max_new))
+            .collect()
+    };
+    let first = run_fingerprinted(requests(), cfg(2, 2, 3));
+    for run in 0..2 {
+        let again = run_fingerprinted(requests(), cfg(2, 2, 3));
+        assert_eq!(
+            first, again,
+            "run {run}: preloaded schedule must be a pure function of the request list"
+        );
+    }
+    // The fingerprint actually covers placements (one per request, all
+    // executed on a lane — preloaded runs never shed).
+    assert_eq!(first.2.len(), budgets.len());
+    assert!(first.2.values().all(|(lane, ..)| lane.is_some()));
+}
+
+/// A backend that spends real wall time per step, so the test can hold
+/// a request in the admission queue while another decodes.
+struct SlowBackend {
+    inner: SimBackend,
+    step: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+}
+
+#[test]
+fn queue_cap_sheds_with_consistent_accounting() {
+    let slow = SlowBackend { inner: backend(), step: Duration::from_millis(20) };
+    let (rec_tx, rec_rx) = channel();
+    let aggregator = PromAggregator::spawn(rec_rx);
+    let counters = aggregator.counters();
+    let scfg = ServerConfig { max_batch: 1, kv_slots: 1, workers: 1, queue_cap: Some(1) };
+    let handle = Engine::start_with_sink(slow, scfg, Some(rec_tx)).expect("engine start");
+
+    // A occupies the lane (wait for its prefill so it has left the
+    // admission queue), B fills the queue to its cap, C is shed.
+    let ticket_a = handle.submit(GenerationRequest::new(vec![1, 2, 3], 50));
+    match ticket_a.recv() {
+        Some(TokenEvent::Prefilled { .. }) => {}
+        other => panic!("expected A's prefill event, got {other:?}"),
+    }
+    let ticket_b = handle.submit(GenerationRequest::new(vec![4, 5], 3));
+    let ticket_c = handle.submit(GenerationRequest::new(vec![6, 7], 3));
+    let shed = ticket_c.join();
+    assert_eq!(shed.finish, FinishReason::Failed);
+    let error = shed.error.as_deref().expect("shed result carries the reason");
+    assert!(error.contains("admission queue full"), "got {error:?}");
+
+    ticket_a.cancel();
+    let report = handle.shutdown().expect("merged report");
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.completed, 1, "B completes after A's cancellation frees the lane");
+    assert_eq!(report.cancelled, 1);
+    assert_eq!(report.failed, 1);
+    assert_eq!(report.rejected, 1, "the shed submission is a rejection, not a lane failure");
+    drop(ticket_b);
+
+    // The Prometheus surface agrees with the shutdown report: one
+    // rejection, and all three submissions streamed a record.
+    assert_eq!(aggregator.finish(), 3, "A, B, and the shed C each stream a record");
+    assert_eq!(counters.rejections_total(), 1);
+    assert_eq!(counters.steals_total(), 0, "a single lane has nobody to steal from");
+}

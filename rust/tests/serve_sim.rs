@@ -23,7 +23,7 @@ fn backend() -> SimBackend {
 }
 
 fn cfg(max_batch: usize, kv_slots: usize, workers: usize) -> ServerConfig {
-    ServerConfig { max_batch, kv_slots, workers }
+    ServerConfig { max_batch, kv_slots, workers, queue_cap: None }
 }
 
 #[test]
@@ -336,6 +336,11 @@ fn metrics_sink_streams_one_record_per_request() {
     for (i, rec) in records.iter().enumerate() {
         assert_eq!(rec.id, i as u64);
         assert!(rec.lane.is_some_and(|l| l < 2), "served records carry their lane");
+        assert_eq!(
+            rec.executed_lane, rec.lane,
+            "preloaded runs never migrate a request off its assigned lane"
+        );
+        assert!(rec.queue_wait_s >= 0.0, "queue wait is stamped at pull time");
         assert_eq!(rec.tokens, 3);
         assert_eq!(rec.finish, FinishReason::Length);
         assert!(rec.prefill_s > 0.0 && rec.decode_s > 0.0);
