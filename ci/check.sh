@@ -63,6 +63,22 @@ cargo test -q --test scheduler --test http_keepalive
 TSAR_NATIVE_FORCE_SCALAR=1 cargo test -q --test scheduler --test http_keepalive
 
 echo
+echo "== load generation: open-loop bench-serve smoke + artifact schema check =="
+# Regenerates BENCH_serve.json with a measured smoke-sized run (bursty
+# arrivals into a deliberately small engine, so shedding/cancel paths
+# are exercised) and re-validates it against the serve v1 schema.  The
+# run itself hard-fails unless the client-side outcome counts match the
+# engine's /metrics scrape exactly.  Full profile: `tsar-cli
+# bench-serve` (no --smoke).
+cargo run --release --bin tsar-cli -- bench-serve --smoke --out "$PWD/BENCH_serve.json"
+cargo run --release --bin tsar-cli -- bench-serve --validate "$PWD/BENCH_serve.json"
+# The same smoke on the forced-scalar kernel path: the serving stack and
+# its Prometheus accounting must reconcile on the portable fallback too.
+TSAR_NATIVE_FORCE_SCALAR=1 cargo run --release --bin tsar-cli -- \
+  bench-serve --smoke --out /tmp/BENCH_serve_scalar.json
+cargo run --release --bin tsar-cli -- bench-serve --validate /tmp/BENCH_serve_scalar.json
+
+echo
 echo "== clippy (required) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

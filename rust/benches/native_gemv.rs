@@ -33,6 +33,7 @@ use std::collections::BTreeMap;
 use tsar::config::IsaConfig;
 use tsar::kernels::native::{NativeGemv, GEMM_ROW_BLOCK};
 use tsar::sim::GemmShape;
+use tsar::util::artifact::validate_native_gemm as validate;
 use tsar::util::json::Json;
 use tsar::util::rng::Rng;
 use tsar::util::stats::time_it;
@@ -43,56 +44,6 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
-}
-
-/// Schema contract for `BENCH_native_gemm.json` — shared by the writer
-/// below and the `--validate` CI step, so a drifting artifact fails
-/// loudly instead of silently changing shape.
-fn validate(text: &str) -> tsar::Result<usize> {
-    let v = Json::parse(text).map_err(|e| tsar::err!("artifact is not JSON: {e}"))?;
-    tsar::ensure!(
-        v.req("bench")?.as_str() == Some("native_gemm"),
-        "bench name must be \"native_gemm\""
-    );
-    tsar::ensure!(
-        v.req("schema_version")?.as_f64() == Some(1.0),
-        "unknown schema_version (writer speaks v1)"
-    );
-    let measured = v.req("measured")? == &Json::Bool(true);
-    v.req("smoke")?;
-    tsar::ensure!(v.req("path")?.as_str().is_some(), "path must be a string");
-    tsar::ensure!(
-        v.req("threads")?.as_usize().is_some_and(|t| t >= 1),
-        "threads must be >= 1"
-    );
-    tsar::ensure!(
-        v.req("row_block")?.as_usize().is_some_and(|r| r >= 1),
-        "row_block must be >= 1"
-    );
-    let Some(entries) = v.req("entries")?.as_arr() else {
-        tsar::bail!("entries must be an array");
-    };
-    tsar::ensure!(!entries.is_empty(), "entries must be non-empty");
-    const ENTRY_NUM_KEYS: [&str; 5] =
-        ["pool_min_s", "scoped_min_s", "amortization_ratio", "eff_weights_gb_s", "mac_per_s"];
-    for (i, e) in entries.iter().enumerate() {
-        for key in ["n", "k", "m"] {
-            tsar::ensure!(
-                e.req(key)?.as_usize().is_some_and(|x| x >= 1),
-                "entry {i}: {key} must be a positive integer"
-            );
-        }
-        tsar::ensure!(e.req("isa")?.as_str().is_some(), "entry {i}: isa must be a string");
-        for key in ENTRY_NUM_KEYS {
-            let x = e
-                .req(key)?
-                .as_f64()
-                .ok_or_else(|| tsar::err!("entry {i}: {key} must be a number"))?;
-            tsar::ensure!(x.is_finite() && x >= 0.0, "entry {i}: {key} must be finite and >= 0");
-            tsar::ensure!(!measured || x > 0.0, "entry {i}: measured artifact has zero {key}");
-        }
-    }
-    Ok(entries.len())
 }
 
 fn main() -> tsar::Result<()> {

@@ -197,6 +197,18 @@ impl<B: Backend> EngineHandle<B> {
     /// the ticket to a `Failed` terminal event instead of reaching a
     /// lane.
     pub fn submit(&self, req: GenerationRequest) -> Ticket {
+        self.submit_classified(req).0
+    }
+
+    /// [`EngineHandle::submit`] that additionally *classifies* an
+    /// admission failure, so callers can distinguish backpressure
+    /// shedding ([`SubmitError::QueueFull`] — the HTTP front-end maps
+    /// it to `429 Too Many Requests`) from a request that can never
+    /// succeed ([`SubmitError::Invalid`]).  Either way the ticket has
+    /// already resolved to a `Failed` terminal event and the rejection
+    /// is fully booked (shutdown report `failed` + `rejected`,
+    /// `tsar_rejections_total`); the classification is advisory.
+    pub fn submit_classified(&self, req: GenerationRequest) -> (Ticket, Option<SubmitError>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (ev_tx, ev_rx) = channel::<TokenEvent>();
         let cancel = Arc::new(AtomicBool::new(false));
@@ -207,15 +219,16 @@ impl<B: Backend> EngineHandle<B> {
             terminal: RefCell::new(None),
         };
         if let Err(reason) = self.admit_check(&req) {
-            self.reject(id, &ev_tx, reason);
-            return ticket;
+            self.reject(id, &ev_tx, reason.clone());
+            return (ticket, Some(SubmitError::Invalid(reason)));
         }
         let request = Request::with_plumbing(id, req, ev_tx.clone(), cancel);
         if !self.dispatch(request, self.cfg.queue_cap) {
             let cap = self.cfg.queue_cap.unwrap_or(0);
             self.reject(id, &ev_tx, format!("admission queue full (queue_cap {cap})"));
+            return (ticket, Some(SubmitError::QueueFull { cap }));
         }
-        ticket
+        (ticket, None)
     }
 
     /// Legacy escape hatch: queue a pre-built [`Request`] (caller-owned
@@ -401,6 +414,41 @@ pub(crate) fn merge_outcomes(
     }
 }
 
+/// How a submission was refused at admission, as reported by
+/// [`EngineHandle::submit_classified`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at [`ServerConfig::queue_cap`]:
+    /// backpressure shedding — retrying later may succeed.  The HTTP
+    /// front-end surfaces this as `429 Too Many Requests`.
+    QueueFull {
+        /// The configured queue cap that was hit.
+        cap: usize,
+    },
+    /// Admission-time validation failed: the request can never succeed
+    /// as submitted (empty or oversized prompt, token budget past the
+    /// KV window).  Carries the validation error text.
+    Invalid(String),
+}
+
+/// A `Send + Sync` cancellation handle split off a [`Ticket`] via
+/// [`Ticket::cancel_handle`].  It raises the same flag as
+/// [`Ticket::cancel`] but can cross threads — the ticket itself is not
+/// `Sync` (its terminal cache is a `RefCell`).  The HTTP front-end's
+/// `POST /v1/cancel` route keeps one per in-flight stream.
+#[derive(Debug, Clone)]
+pub struct CancelHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelHandle {
+    /// Request cancellation at the next round boundary (idempotent; a
+    /// no-op if the request already retired).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+}
+
 /// One submitted session: a live event stream plus cancellation and a
 /// blocking join.
 pub struct Ticket {
@@ -459,6 +507,12 @@ impl Ticket {
     /// Idempotent; a no-op if the request already retired.
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Split off a thread-safe [`CancelHandle`] sharing this ticket's
+    /// cancellation flag.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        CancelHandle { flag: Arc::clone(&self.cancel) }
     }
 
     /// Block until the request leaves the engine and return its final

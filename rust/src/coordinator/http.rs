@@ -8,13 +8,26 @@
 //!
 //! * `POST /v1/generate` — JSON body `{"prompt": [i32...],
 //!   "max_new_tokens": N, "stop_tokens": [i32...]?, "deadline_ms": M?}`
-//!   is submitted through [`EngineHandle::submit`]; the response
-//!   streams **one JSON line per [`TokenEvent`]** (NDJSON over chunked
-//!   transfer-encoding) as decode rounds land, ending with the terminal
-//!   event (`retired` / `cancelled` / `failed`, carrying the full
-//!   [`super::RequestResult`] fields).  A client that disconnects
-//!   mid-stream cancels its session ([`Ticket::cancel`]) at the next
-//!   round boundary, freeing the KV/batch slot for the next request.
+//!   is submitted through [`EngineHandle::submit_classified`]; the
+//!   response streams **one JSON line per [`TokenEvent`]** (NDJSON over
+//!   chunked transfer-encoding) as decode rounds land — every line
+//!   carries the engine-assigned `id` (the first line is how a client
+//!   learns it, e.g. to target `POST /v1/cancel`) — ending with the
+//!   terminal event (`retired` / `cancelled` / `failed`, carrying the
+//!   full [`super::RequestResult`] fields).  Backpressure shedding
+//!   (the bounded admission queue at [`super::ServerConfig::queue_cap`])
+//!   is answered `429 Too Many Requests` instead of a stream, so
+//!   open-loop clients can tell shed from failure; admission
+//!   *validation* failures still stream their single `failed` terminal
+//!   line (HTTP 200 — the request was understood, the engine refused
+//!   it).  A client that disconnects mid-stream cancels its session
+//!   ([`Ticket::cancel`]) at the next round boundary, freeing the
+//!   KV/batch slot for the next request.
+//! * `POST /v1/cancel` — JSON body `{"id": N}` cancels the in-flight
+//!   generation stream with that engine id (on *any* connection) at
+//!   the next round boundary: `200` if the stream was live, `404` if
+//!   the id is unknown or already retired.  The cancelled stream itself
+//!   ends with its `cancelled` terminal line as usual.
 //! * `GET /metrics` — the Prometheus text exposition rendered from the
 //!   shared [`PromCounters`] (see [`super::prom`] for the schema).
 //! * `GET /healthz` — liveness probe (`200 ok`).
@@ -41,7 +54,7 @@
 //! the scrape counters and the report agree on outcome counts by
 //! construction (both fold the same retirement stream).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -54,9 +67,16 @@ use crate::runtime::Backend;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
-use super::engine::{EngineHandle, Ticket};
+use super::engine::{CancelHandle, EngineHandle, SubmitError, Ticket};
 use super::prom::PromCounters;
-use super::request::{GenParams, GenerationRequest, TokenEvent};
+use super::request::{GenParams, GenerationRequest, RequestId, TokenEvent};
+
+/// In-flight generation streams by engine request id, shared across
+/// the connection workers so `POST /v1/cancel` can reach a stream
+/// started on any connection.  Entries are inserted at admission and
+/// removed as streams end, so a hit means the request may still be
+/// cancellable (the engine treats a late cancel as a no-op anyway).
+type CancelRegistry = Mutex<HashMap<RequestId, CancelHandle>>;
 
 /// Tunables of the HTTP front-end.
 #[derive(Debug, Clone)]
@@ -126,13 +146,17 @@ impl HttpServer {
         let stop = Arc::new(AtomicBool::new(false));
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
         let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let cancels: Arc<CancelRegistry> = Arc::new(Mutex::new(HashMap::new()));
         let workers = (0..cfg.threads.max(1))
             .map(|_| {
                 let conn_rx = Arc::clone(&conn_rx);
                 let engine = Arc::clone(&engine);
                 let counters = Arc::clone(&counters);
+                let cancels = Arc::clone(&cancels);
                 let cfg = cfg.clone();
-                std::thread::spawn(move || worker_loop(&conn_rx, &engine, &counters, &cfg))
+                std::thread::spawn(move || {
+                    worker_loop(&conn_rx, &engine, &counters, &cancels, &cfg)
+                })
             })
             .collect();
         let acceptor = {
@@ -241,6 +265,7 @@ fn worker_loop<B: Backend>(
     conn_rx: &Mutex<Receiver<TcpStream>>,
     engine: &EngineHandle<B>,
     counters: &PromCounters,
+    cancels: &CancelRegistry,
     cfg: &HttpConfig,
 ) {
     loop {
@@ -249,7 +274,7 @@ fn worker_loop<B: Backend>(
             queue.recv()
         };
         match conn {
-            Ok(stream) => handle_connection(stream, engine, counters, cfg),
+            Ok(stream) => handle_connection(stream, engine, counters, cancels, cfg),
             Err(_) => break, // acceptor gone: server is stopping
         }
     }
@@ -275,6 +300,7 @@ fn handle_connection<B: Backend>(
     mut stream: TcpStream,
     engine: &EngineHandle<B>,
     counters: &PromCounters,
+    cancels: &CancelRegistry,
     cfg: &HttpConfig,
 ) {
     let _ = stream.set_nodelay(true);
@@ -306,7 +332,7 @@ fn handle_connection<B: Backend>(
         if request.method == "POST" && request.path == "/v1/generate" {
             // The generate handler owns the request (and may pull more
             // pipelined generates out of `buf`).
-            if !handle_generate(&mut stream, engine, counters, request, &mut buf, cfg) {
+            if !handle_generate(&mut stream, engine, counters, cancels, request, &mut buf, cfg) {
                 return;
             }
             served += 1;
@@ -319,10 +345,29 @@ fn handle_connection<B: Backend>(
             ("GET", "/metrics") => {
                 let _ = write_response(&mut stream, 200, PROM_TEXT, &counters.render(), !keep);
             }
+            ("POST", "/v1/cancel") => {
+                let (code, body) = match parse_cancel(&request.body) {
+                    Ok(id) => {
+                        let handle = {
+                            let live = cancels.lock().expect("cancel registry poisoned");
+                            live.get(&id).cloned()
+                        };
+                        match handle {
+                            Some(handle) => {
+                                handle.cancel();
+                                (200, format!("cancelling {id}\n"))
+                            }
+                            None => (404, format!("unknown or already retired id {id}\n")),
+                        }
+                    }
+                    Err(e) => (400, format!("bad request: {e}\n")),
+                };
+                let _ = write_response(&mut stream, code, TEXT_PLAIN, &body, !keep);
+            }
             (_, "/healthz") | (_, "/metrics") => {
                 let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use GET\n", !keep);
             }
-            (_, "/v1/generate") => {
+            (_, "/v1/generate") | (_, "/v1/cancel") => {
                 let _ = write_response(&mut stream, 405, TEXT_PLAIN, "use POST\n", !keep);
             }
             _ => {
@@ -342,6 +387,10 @@ enum Reply {
     BadBody(String),
     /// Pipelined past [`HttpConfig::max_streams_per_conn`]: `503`.
     Shed,
+    /// Shed by the engine's bounded admission queue
+    /// ([`SubmitError::QueueFull`]): `429` so clients distinguish
+    /// backpressure from failure.
+    QueueFull { cap: usize },
     /// An admitted session streaming its token events.
     Stream(Ticket),
 }
@@ -357,6 +406,7 @@ fn handle_generate<B: Backend>(
     stream: &mut TcpStream,
     engine: &EngineHandle<B>,
     counters: &PromCounters,
+    cancels: &CancelRegistry,
     first: HttpRequest,
     buf: &mut Vec<u8>,
     cfg: &HttpConfig,
@@ -381,12 +431,27 @@ fn handle_generate<B: Backend>(
             Ok(gen) if admitted < cap => {
                 admitted += 1;
                 counters.note_submitted();
-                Reply::Stream(engine.submit(gen))
+                let (ticket, refused) = engine.submit_classified(gen);
+                if let Some(SubmitError::QueueFull { cap }) = refused {
+                    // The engine already booked the shed (report
+                    // `rejected`, `tsar_rejections_total`); dropping
+                    // the resolved ticket is safe.  Answer 429 so the
+                    // client can retry instead of reading a stream.
+                    Reply::QueueFull { cap }
+                } else {
+                    // Admitted — or Invalid, which keeps today's
+                    // contract: an HTTP 200 stream whose single line
+                    // is the `failed` terminal event.
+                    let mut live = cancels.lock().expect("cancel registry poisoned");
+                    live.insert(ticket.id(), ticket.cancel_handle());
+                    Reply::Stream(ticket)
+                }
             }
             Ok(_) => Reply::Shed,
             Err(e) => Reply::BadBody(e.to_string()),
         })
         .collect();
+    let mut all_ok = true;
     for (i, reply) in replies.iter().enumerate() {
         // Only the connection's very last response announces the close.
         let close = !keep && i + 1 == replies.len();
@@ -399,7 +464,15 @@ fn handle_generate<B: Backend>(
                 write_response(stream, 503, TEXT_PLAIN, "too many concurrent streams\n", close)
                     .is_ok()
             }
-            Reply::Stream(ticket) => stream_ticket(stream, ticket, close),
+            Reply::QueueFull { cap } => {
+                let body = format!("queue full (queue_cap {cap})\n");
+                write_response(stream, 429, TEXT_PLAIN, &body, close).is_ok()
+            }
+            Reply::Stream(ticket) => {
+                let ok = stream_ticket(stream, ticket, close);
+                cancels.lock().expect("cancel registry poisoned").remove(&ticket.id());
+                ok
+            }
         };
         if !ok {
             // The client went away: stop paying for tokens nobody
@@ -410,12 +483,14 @@ fn handle_generate<B: Backend>(
             for later in &replies[i..] {
                 if let Reply::Stream(ticket) = later {
                     cancel_and_drain(ticket);
+                    cancels.lock().expect("cancel registry poisoned").remove(&ticket.id());
                 }
             }
-            return false;
+            all_ok = false;
+            break;
         }
     }
-    keep
+    keep && all_ok
 }
 
 /// Stream one ticket's token events as chunked NDJSON.  Returns
@@ -428,7 +503,7 @@ fn stream_ticket(stream: &mut TcpStream, ticket: &Ticket, close: bool) -> bool {
     let mut wrote_terminal = false;
     while let Some(ev) = ticket.recv() {
         let terminal = ev.result().is_some();
-        let mut line = event_json(&ev).to_string();
+        let mut line = event_json(ticket.id(), &ev).to_string();
         line.push('\n');
         if write_chunk(stream, line.as_bytes()).is_err() {
             return false;
@@ -443,7 +518,8 @@ fn stream_ticket(stream: &mut TcpStream, ticket: &Ticket, close: bool) -> bool {
         // serving lane died mid-session).  The response contract is
         // one terminal line per stream, so emit the same synthesized
         // `Failed` result `Ticket::join` reports for this case.
-        let mut line = event_json(&TokenEvent::Failed(ticket.closed_result())).to_string();
+        let ev = TokenEvent::Failed(ticket.closed_result());
+        let mut line = event_json(ticket.id(), &ev).to_string();
         line.push('\n');
         if write_chunk(stream, line.as_bytes()).is_err() {
             return false;
@@ -501,11 +577,24 @@ fn parse_generate(body: &[u8]) -> Result<GenerationRequest> {
     Ok(GenerationRequest::with_params(prompt, params))
 }
 
+/// Parse the `POST /v1/cancel` body (`{"id": N}`) into the engine
+/// request id to cancel.
+fn parse_cancel(body: &[u8]) -> Result<RequestId> {
+    let text = std::str::from_utf8(body).map_err(|_| crate::err!("body is not UTF-8"))?;
+    let json = Json::parse(text).map_err(|e| crate::err!("body is not valid JSON: {e}"))?;
+    let id = json.req("id")?.as_f64().context("\"id\" must be a number")?;
+    crate::ensure!(id >= 0.0 && id.fract() == 0.0, "\"id\" must be a non-negative integer");
+    Ok(id as RequestId)
+}
+
 /// One [`TokenEvent`] as a flat JSON object (one NDJSON line of the
-/// streaming response).  Token events carry `event`/`token`/`index`;
-/// the terminal event adds the full result fields.
-fn event_json(ev: &TokenEvent) -> Json {
+/// streaming response).  Every line carries the engine-assigned `id`
+/// (how a client learns the id to target `POST /v1/cancel` with);
+/// token events add `event`/`token`/`index`, the terminal event the
+/// full result fields.
+fn event_json(id: RequestId, ev: &TokenEvent) -> Json {
     let mut obj = BTreeMap::new();
+    obj.insert("id".into(), Json::Num(id as f64));
     match ev {
         TokenEvent::Prefilled { token } => {
             obj.insert("event".into(), Json::Str("prefilled".into()));
@@ -524,7 +613,6 @@ fn event_json(ev: &TokenEvent) -> Json {
                 _ => "failed",
             };
             obj.insert("event".into(), Json::Str(kind.into()));
-            obj.insert("id".into(), Json::Num(res.id as f64));
             obj.insert("finish".into(), Json::Str(res.finish.label().into()));
             obj.insert(
                 "tokens".into(),
@@ -559,6 +647,7 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
@@ -737,12 +826,13 @@ mod tests {
     }
 
     #[test]
-    fn event_lines_are_valid_json() {
-        let line = event_json(&TokenEvent::Token { token: 42, index: 3 }).to_string();
+    fn event_lines_are_valid_json_and_carry_the_id() {
+        let line = event_json(5, &TokenEvent::Token { token: 42, index: 3 }).to_string();
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("event").and_then(Json::as_str), Some("token"));
         assert_eq!(parsed.get("token").and_then(Json::as_usize), Some(42));
         assert_eq!(parsed.get("index").and_then(Json::as_usize), Some(3));
+        assert_eq!(parsed.get("id").and_then(Json::as_usize), Some(5), "every line carries id");
 
         let res = RequestResult {
             id: 5,
@@ -754,12 +844,22 @@ mod tests {
             decode_s: 0.2,
             total_s: 0.3,
         };
-        let line = event_json(&TokenEvent::Retired(res)).to_string();
+        let line = event_json(5, &TokenEvent::Retired(res)).to_string();
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("event").and_then(Json::as_str), Some("retired"));
+        assert_eq!(parsed.get("id").and_then(Json::as_usize), Some(5));
         assert_eq!(parsed.get("finish").and_then(Json::as_str), Some("stop"));
         assert_eq!(parsed.get("tokens").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
         assert_eq!(parsed.get("error"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn cancel_body_parses_the_id() {
+        assert_eq!(parse_cancel(br#"{"id": 7}"#).unwrap(), 7);
+        assert!(parse_cancel(br#"{}"#).is_err(), "id is required");
+        assert!(parse_cancel(br#"{"id": -1}"#).is_err(), "negative id rejected");
+        assert!(parse_cancel(br#"{"id": 1.5}"#).is_err(), "fractional id rejected");
+        assert!(parse_cancel(b"{not json").is_err());
     }
 
     #[test]
@@ -817,6 +917,7 @@ mod tests {
         assert_eq!(status_text(200), "OK");
         assert_eq!(status_text(404), "Not Found");
         assert_eq!(status_text(405), "Method Not Allowed");
+        assert_eq!(status_text(429), "Too Many Requests");
         assert_eq!(status_text(503), "Service Unavailable");
         assert_eq!(status_text(500), "Internal Server Error");
     }

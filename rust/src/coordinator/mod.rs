@@ -43,7 +43,7 @@ pub mod selector;
 pub mod serve;
 
 pub use batcher::Batcher;
-pub use engine::{Engine, EngineHandle, Ticket};
+pub use engine::{CancelHandle, Engine, EngineHandle, SubmitError, Ticket};
 pub use export::{tee_records, Exporter};
 pub use http::{HttpConfig, HttpServer};
 pub use kvpool::KvSlotPool;

@@ -420,4 +420,80 @@ mod tests {
         assert_eq!(counters.retired(), 2);
         assert_eq!(counters.tokens_emitted(), 3);
     }
+
+    /// Pull the rendered `tsar_queue_wait_seconds_bucket` values, in
+    /// exposition order (`le` ascending, `+Inf` last).
+    fn bucket_values(text: &str) -> Vec<u64> {
+        text.lines()
+            .filter(|l| l.starts_with("tsar_queue_wait_seconds_bucket{"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect()
+    }
+
+    fn series_value(text: &str, name: &str) -> u64 {
+        text.lines()
+            .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+            .and_then(|l| l.rsplit(' ').next())
+            .unwrap_or_else(|| panic!("series {name} missing"))
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn rendered_buckets_cumulate_monotonically_and_inf_equals_count() {
+        // One sample per bin boundary region, plus an overflow, so the
+        // cumulation logic is exercised across every window.
+        let c = PromCounters::new();
+        for wait in [0.0005, 0.003, 0.02, 0.08, 0.4, 2.0, 9.0, 50.0] {
+            let mut r = record(FinishReason::Length, 1);
+            r.queue_wait_s = wait;
+            c.observe(&r);
+        }
+        let text = c.render();
+        let buckets = bucket_values(&text);
+        // Seven finite bounds plus +Inf.
+        assert_eq!(buckets.len(), QUEUE_WAIT_BUCKETS.len() + 1, "got:\n{text}");
+        for w in buckets.windows(2) {
+            assert!(w[0] <= w[1], "buckets must be cumulative: {buckets:?}");
+        }
+        // Every observation lands somewhere: +Inf is the total, and the
+        // histogram's _count agrees with it exactly.
+        assert_eq!(*buckets.last().unwrap(), 8);
+        assert_eq!(series_value(&text, "tsar_queue_wait_seconds_count"), 8);
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_sum_count_and_buckets_consistent() {
+        // Four writer threads race 100 observations each into the shared
+        // counters.  The waits are binary-exact fractions so the µs sum
+        // accumulates without rounding: the final render must balance to
+        // the closed-form totals regardless of interleaving.
+        let c = PromCounters::new();
+        let waits = [0.25, 0.5, 2.0, 8.0];
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for i in 0..100 {
+                        let mut r = record(FinishReason::Length, 1);
+                        r.queue_wait_s = waits[i % waits.len()];
+                        c.observe(&r);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.retired(), 400);
+        assert_eq!(c.tokens_emitted(), 400);
+
+        let text = c.render();
+        // 0.25 and 0.5 share the le="0.5" window; 2.0 lands in le="2.5";
+        // 8.0 in le="10".  Σ wait = 100 × (0.25 + 0.5 + 2 + 8) = 1075 s.
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"0.1\"} 0"), "got:\n{text}");
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"0.5\"} 200"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"2.5\"} 300"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"10\"} 400"));
+        assert!(text.contains("tsar_queue_wait_seconds_bucket{le=\"+Inf\"} 400"));
+        assert!(text.contains("tsar_queue_wait_seconds_sum 1075.000000"));
+        assert!(text.contains("tsar_queue_wait_seconds_count 400"));
+        assert!(text.contains("tsar_requests_total{finish=\"length\"} 400"));
+    }
 }

@@ -35,6 +35,12 @@
 //!   params, JSONL metrics exporter), continuous batcher, prefill/decode
 //!   scheduler, KV-slot manager and the paper's adaptive AP/OP kernel
 //!   selector (§III-D).
+//! * [`loadgen`] — the open-loop load-generation subsystem behind
+//!   `tsar-cli bench-serve`: deterministic seeded traffic (Poisson and
+//!   bursty arrivals, mixed lengths, cancels, deadlines) driven over
+//!   keep-alive HTTP connections, with per-request timelines reconciled
+//!   against the engine's Prometheus counters into the
+//!   `BENCH_serve.json` artifact.
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`util`] — in-tree errors, JSON, PRNG, statistics (offline
@@ -46,6 +52,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod hw;
 pub mod kernels;
+pub mod loadgen;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -1,0 +1,377 @@
+//! Aggregation and the Prometheus cross-check.
+//!
+//! The client-side timelines ([`RequestTimeline`]) are one view of the
+//! run; the engine's `/metrics` exposition is an independent second
+//! view.  This module reduces the timelines to summary statistics for
+//! the bench artifact *and* reconciles the two views outcome-by-outcome
+//! (`cross_check`): a `BENCH_serve.json` with `metrics_agree: true`
+//! certifies that every request the client dispatched is accounted for
+//! by the engine's own counters — nothing double-counted, nothing
+//! leaked.
+//!
+//! The reconciliation equations mirror the engine's accounting rules
+//! (see `coordinator::prom`):
+//!
+//! * `finish="length"` + `finish="stop"` retirements ↔ client
+//!   completions;
+//! * `finish="cancelled"` + `finish="deadline"` ↔ client-observed
+//!   cancellations (a deadline expiry streams a `cancelled` terminal);
+//! * `finish="failed"` ↔ client failures **plus** 429 queue sheds —
+//!   the engine books a shed as a failed retirement *and* a rejection;
+//! * `tsar_tokens_emitted_total` ↔ tokens carried by terminal lines;
+//! * when no genuine stream failures occurred, `tsar_rejections_total`
+//!   must equal the 429 count exactly and the queue-wait histogram
+//!   must hold one sample per *executed* request (completed +
+//!   cancelled).  With stream failures present those two series also
+//!   absorb engine-internal validation rejects, so they are only
+//!   bounds, not equalities, and are skipped.
+//!
+//! HTTP-layer sheds (503s) never reach the engine and are excluded
+//! from every equation.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::recorder::{Outcome, RequestTimeline};
+
+/// One parsed `/metrics` exposition: rendered series name (including
+/// its label set) → value.
+#[derive(Debug, Clone, Default)]
+pub struct Scrape {
+    pub series: BTreeMap<String, f64>,
+}
+
+impl Scrape {
+    /// Parse the exposition text, skipping comments and blank lines.
+    pub fn parse(text: &str) -> Scrape {
+        let mut series = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((name, value)) = line.rsplit_once(' ') {
+                if let Ok(v) = value.parse::<f64>() {
+                    series.insert(name.to_string(), v);
+                }
+            }
+        }
+        Scrape { series }
+    }
+
+    /// Value of one fully-labelled series; absent series read as zero
+    /// (counters start unrendered until first incremented).
+    pub fn value(&self, series: &str) -> f64 {
+        self.series.get(series).copied().unwrap_or(0.0)
+    }
+
+    /// Sum over every series whose rendered name starts with `prefix`.
+    pub fn sum_prefix(&self, prefix: &str) -> f64 {
+        self.series.iter().filter(|(k, _)| k.starts_with(prefix)).map(|(_, v)| v).sum()
+    }
+}
+
+/// Fetch and parse the `/metrics` exposition from a running server.
+pub fn scrape_metrics(addr: &str) -> Result<Scrape> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("cannot connect to {addr} for a /metrics scrape"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let request = "GET /metrics HTTP/1.1\r\nHost: loadgen\r\nConnection: close\r\n\r\n";
+    stream.write_all(request.as_bytes()).context("metrics scrape write failed")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("metrics scrape read failed")?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) =
+        text.split_once("\r\n\r\n").ok_or_else(|| crate::err!("malformed /metrics response"))?;
+    crate::ensure!(head.contains(" 200 "), "/metrics scrape failed: {:?}", head.lines().next());
+    Ok(Scrape::parse(body))
+}
+
+/// Client-side outcome totals reduced from the raw timelines.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    pub completed: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub http_shed: u64,
+    /// Tokens carried by every terminal line (partial streams count).
+    pub tokens_total: u64,
+    /// Tokens carried by `retired` terminal lines only (goodput).
+    pub tokens_completed: u64,
+}
+
+impl OutcomeCounts {
+    /// Every planned request, however it ended.
+    pub fn requests(&self) -> u64 {
+        self.engine_requests() + self.http_shed
+    }
+
+    /// Requests that reached the engine (everything but HTTP sheds).
+    pub fn engine_requests(&self) -> u64 {
+        self.completed + self.cancelled + self.rejected + self.failed
+    }
+}
+
+/// Reduce raw timelines to outcome totals.
+pub fn tally(timelines: &[RequestTimeline]) -> OutcomeCounts {
+    let mut counts = OutcomeCounts::default();
+    for tl in timelines {
+        match tl.outcome {
+            Outcome::Completed => counts.completed += 1,
+            Outcome::Cancelled => counts.cancelled += 1,
+            Outcome::Rejected => counts.rejected += 1,
+            Outcome::Failed => counts.failed += 1,
+            Outcome::HttpShed => counts.http_shed += 1,
+        }
+        counts.tokens_total += tl.tokens as u64;
+        if tl.outcome == Outcome::Completed {
+            counts.tokens_completed += tl.tokens as u64;
+        }
+    }
+    counts
+}
+
+/// Reconcile the client's view against the engine's `/metrics` deltas.
+/// Returns `(agree, mismatches)`; every violated equation contributes
+/// one human-readable mismatch line.
+pub fn cross_check(before: &Scrape, after: &Scrape, counts: &OutcomeCounts) -> (bool, Vec<String>) {
+    let mut mismatches = Vec::new();
+    let length = delta(before, after, &finish_series("length"));
+    let stop = delta(before, after, &finish_series("stop"));
+    let cancelled = delta(before, after, &finish_series("cancelled"));
+    let deadline = delta(before, after, &finish_series("deadline"));
+    let failed = delta(before, after, &finish_series("failed"));
+    let tokens = delta(before, after, "tsar_tokens_emitted_total");
+    let rejections = delta(before, after, "tsar_rejections_total");
+    let qw_count = delta(before, after, "tsar_queue_wait_seconds_count");
+    let total = length + stop + cancelled + deadline + failed;
+
+    expect(&mut mismatches, "completed retirements", length + stop, counts.completed);
+    expect(&mut mismatches, "cancelled retirements", cancelled + deadline, counts.cancelled);
+    expect(&mut mismatches, "failed retirements", failed, counts.failed + counts.rejected);
+    expect(&mut mismatches, "total retirements", total, counts.engine_requests());
+    expect(&mut mismatches, "tokens emitted", tokens, counts.tokens_total);
+    if counts.failed == 0 {
+        expect(&mut mismatches, "queue-cap rejections", rejections, counts.rejected);
+        expect(&mut mismatches, "queue-wait count", qw_count, counts.completed + counts.cancelled);
+    }
+    (mismatches.is_empty(), mismatches)
+}
+
+/// Rendered series name of one `tsar_requests_total` finish label.
+fn finish_series(label: &str) -> String {
+    format!("tsar_requests_total{{finish=\"{label}\"}}")
+}
+
+fn delta(before: &Scrape, after: &Scrape, series: &str) -> f64 {
+    after.value(series) - before.value(series)
+}
+
+fn expect(mismatches: &mut Vec<String>, name: &str, got: f64, want: u64) {
+    if (got - want as f64).abs() > 0.5 {
+        mismatches.push(format!("{name}: /metrics say {got}, the client saw {want}"));
+    }
+}
+
+/// Poll `/metrics` until the engine has retired `expected` requests
+/// beyond the `before` scrape (terminal lines reach the client ahead
+/// of the aggregator draining its channel) or the timeout passes;
+/// either way the last scrape is returned and `cross_check` renders
+/// the verdict.
+pub fn await_retirements(
+    addr: &str,
+    before: &Scrape,
+    expected: u64,
+    timeout: Duration,
+) -> Result<Scrape> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let after = scrape_metrics(addr)?;
+        let retired =
+            after.sum_prefix("tsar_requests_total{") - before.sum_prefix("tsar_requests_total{");
+        if retired + 0.5 >= expected as f64 || Instant::now() >= deadline {
+            return Ok(after);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Summarize one latency sample set as the artifact's five stable keys
+/// (`LATENCY_STAT_KEYS`); an empty set reads as all zeros so smoke
+/// runs with no completions still validate.
+pub fn latency_json(samples: &[f64]) -> Json {
+    let values: [(&str, f64); 5] = if samples.is_empty() {
+        [("p50", 0.0), ("p95", 0.0), ("p99", 0.0), ("mean", 0.0), ("max", 0.0)]
+    } else {
+        [
+            ("p50", stats::percentile(samples, 50.0)),
+            ("p95", stats::percentile(samples, 95.0)),
+            ("p99", stats::percentile(samples, 99.0)),
+            ("mean", stats::mean(samples)),
+            ("max", stats::max(samples)),
+        ]
+    };
+    let mut obj = BTreeMap::new();
+    for (key, value) in values {
+        obj.insert(key.to_string(), Json::Num(value));
+    }
+    Json::Obj(obj)
+}
+
+/// TTFT samples: every request that saw at least one streamed line.
+pub fn ttft_samples(timelines: &[RequestTimeline]) -> Vec<f64> {
+    timelines.iter().filter_map(RequestTimeline::ttft_s).collect()
+}
+
+/// TPOT samples: every gap between consecutive streamed lines.
+pub fn tpot_samples(timelines: &[RequestTimeline]) -> Vec<f64> {
+    timelines.iter().flat_map(RequestTimeline::tpot_samples).collect()
+}
+
+/// End-to-end samples for requests that actually ran a stream; sheds
+/// turn around in microseconds and would poison the distribution.
+pub fn e2e_samples(timelines: &[RequestTimeline]) -> Vec<f64> {
+    timelines.iter().filter(|tl| ran_a_stream(tl)).map(RequestTimeline::e2e_s).collect()
+}
+
+fn ran_a_stream(tl: &RequestTimeline) -> bool {
+    matches!(tl.outcome, Outcome::Completed | Outcome::Cancelled | Outcome::Failed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl(outcome: Outcome, tokens: usize, events: &[f64]) -> RequestTimeline {
+        RequestTimeline {
+            index: 0,
+            id: None,
+            submit_s: 1.0,
+            event_s: events.to_vec(),
+            done_s: 2.0,
+            outcome,
+            finish: None,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn scrapes_parse_the_exposition_format() {
+        let scrape = Scrape::parse(
+            "# HELP tsar_requests_total retired requests\n\
+             # TYPE tsar_requests_total counter\n\
+             tsar_requests_total{finish=\"length\"} 4\n\
+             tsar_requests_total{finish=\"stop\"} 2\n\
+             tsar_tokens_emitted_total 31\n\
+             tsar_queue_wait_seconds_sum 0.123456\n\n",
+        );
+        assert_eq!(scrape.value("tsar_requests_total{finish=\"length\"}"), 4.0);
+        assert_eq!(scrape.value("tsar_tokens_emitted_total"), 31.0);
+        assert_eq!(scrape.value("tsar_requests_total{finish=\"cancelled\"}"), 0.0);
+        assert_eq!(scrape.sum_prefix("tsar_requests_total{"), 6.0);
+        assert!((scrape.value("tsar_queue_wait_seconds_sum") - 0.123456).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tally_reduces_timelines_to_outcome_totals() {
+        let timelines = vec![
+            tl(Outcome::Completed, 5, &[1.2, 1.3]),
+            tl(Outcome::Completed, 3, &[1.1]),
+            tl(Outcome::Cancelled, 2, &[1.4]),
+            tl(Outcome::Rejected, 0, &[]),
+            tl(Outcome::HttpShed, 0, &[]),
+        ];
+        let counts = tally(&timelines);
+        assert_eq!(counts.completed, 2);
+        assert_eq!(counts.cancelled, 1);
+        assert_eq!(counts.rejected, 1);
+        assert_eq!(counts.failed, 0);
+        assert_eq!(counts.http_shed, 1);
+        assert_eq!(counts.tokens_total, 10);
+        assert_eq!(counts.tokens_completed, 8);
+        assert_eq!(counts.requests(), 5);
+        assert_eq!(counts.engine_requests(), 4);
+    }
+
+    fn exposition(tokens: u64) -> String {
+        format!(
+            "tsar_requests_total{{finish=\"length\"}} 2\n\
+             tsar_requests_total{{finish=\"stop\"}} 1\n\
+             tsar_requests_total{{finish=\"cancelled\"}} 1\n\
+             tsar_requests_total{{finish=\"deadline\"}} 1\n\
+             tsar_requests_total{{finish=\"failed\"}} 1\n\
+             tsar_tokens_emitted_total {tokens}\n\
+             tsar_rejections_total 1\n\
+             tsar_queue_wait_seconds_count 5\n"
+        )
+    }
+
+    #[test]
+    fn cross_check_accepts_a_consistent_run() {
+        let counts = OutcomeCounts {
+            completed: 3,
+            cancelled: 2,
+            rejected: 1,
+            failed: 0,
+            http_shed: 1,
+            tokens_total: 10,
+            tokens_completed: 8,
+        };
+        let before = Scrape::parse("tsar_tokens_emitted_total 5\n");
+        let after = Scrape::parse(&exposition(15)); // delta = 10
+        let (agree, mismatches) = cross_check(&before, &after, &counts);
+        assert!(agree, "unexpected mismatches: {mismatches:?}");
+        assert!(mismatches.is_empty());
+    }
+
+    #[test]
+    fn cross_check_flags_a_leaked_token_count() {
+        let counts = OutcomeCounts {
+            completed: 3,
+            cancelled: 2,
+            rejected: 1,
+            failed: 0,
+            http_shed: 0,
+            tokens_total: 10,
+            tokens_completed: 8,
+        };
+        let before = Scrape::default();
+        let after = Scrape::parse(&exposition(9));
+        let (agree, mismatches) = cross_check(&before, &after, &counts);
+        assert!(!agree);
+        assert!(mismatches.iter().any(|m| m.contains("tokens emitted")), "{mismatches:?}");
+    }
+
+    #[test]
+    fn latency_summaries_use_the_schema_keys() {
+        let json = latency_json(&[0.1, 0.2, 0.3, 0.4]);
+        let keys: Vec<&str> = json.as_obj().unwrap().keys().map(String::as_str).collect();
+        let mut want = crate::util::artifact::LATENCY_STAT_KEYS.to_vec();
+        want.sort_unstable();
+        assert_eq!(keys, want, "artifact keys must match (sorted by BTreeMap)");
+        assert!((json.get("max").and_then(Json::as_f64).unwrap() - 0.4).abs() < 1e-12);
+        assert!((json.get("mean").and_then(Json::as_f64).unwrap() - 0.25).abs() < 1e-12);
+
+        let empty = latency_json(&[]);
+        assert_eq!(empty.get("p99").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn sample_collectors_partition_by_outcome() {
+        let timelines = vec![
+            tl(Outcome::Completed, 3, &[1.25, 1.5, 1.75]),
+            tl(Outcome::Rejected, 0, &[]),
+            tl(Outcome::Cancelled, 1, &[1.4]),
+        ];
+        assert_eq!(ttft_samples(&timelines).len(), 2);
+        assert_eq!(tpot_samples(&timelines).len(), 2);
+        assert_eq!(e2e_samples(&timelines).len(), 2, "the shed is excluded");
+    }
+}

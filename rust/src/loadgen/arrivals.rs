@@ -1,0 +1,144 @@
+//! Arrival-time processes of the open-loop load generator.
+//!
+//! Open-loop means the generator dispatches each request at its
+//! pre-scheduled arrival time regardless of how many earlier requests
+//! are still in flight — the load does not slow down when the server
+//! saturates, which is exactly the regime where queueing, shedding and
+//! tail latency show up.  Two processes are modeled:
+//!
+//! * **Poisson** — i.i.d. exponential inter-arrival times at a fixed
+//!   rate, the classic memoryless baseline.
+//! * **Bursty** — an on/off Markov-modulated Poisson process: the
+//!   source alternates between exponentially-held ON periods (arrivals
+//!   at an elevated rate) and OFF periods (silence).  The ON rate is
+//!   scaled by the duty cycle so the *long-run* average rate equals
+//!   the requested `rate_rps`, making Poisson and bursty runs at the
+//!   same nominal rate directly comparable.
+//!
+//! Schedules are drawn from the deterministic in-tree PRNG
+//! ([`crate::util::rng::Rng`]), so a fixed seed reproduces the exact
+//! same arrival trace on every platform.
+
+use crate::util::rng::Rng;
+
+/// The arrival process shaping the request trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_rps` requests per second.
+    Poisson { rate_rps: f64 },
+    /// On/off modulated arrivals averaging `rate_rps` over the long
+    /// run: ON periods (mean `on_s` seconds) emit at the elevated rate
+    /// `rate_rps / duty`, OFF periods (mean `off_s` seconds) are
+    /// silent.
+    Bursty { rate_rps: f64, on_s: f64, off_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Stable name used in the bench artifact (`workload.arrivals`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// The nominal long-run arrival rate in requests per second.
+    pub fn rate_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } | ArrivalProcess::Bursty { rate_rps, .. } => {
+                *rate_rps
+            }
+        }
+    }
+
+    /// Draw `n` absolute arrival times (seconds from the run start,
+    /// strictly increasing).  Deterministic given the PRNG state.
+    pub fn schedule(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                assert!(rate_rps > 0.0, "poisson rate must be positive");
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(rate_rps);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { rate_rps, on_s, off_s } => {
+                assert!(rate_rps > 0.0, "bursty rate must be positive");
+                assert!(on_s > 0.0 && off_s > 0.0, "on/off holding times must be positive");
+                let duty = on_s / (on_s + off_s);
+                let rate_on = rate_rps / duty;
+                let mut out = Vec::with_capacity(n);
+                let mut t = 0.0;
+                // The source starts a fresh ON period at t = 0; holding
+                // times are exponential with the configured means.
+                let mut on_until = rng.exp(1.0 / on_s);
+                while out.len() < n {
+                    let dt = rng.exp(rate_on);
+                    if t + dt <= on_until {
+                        t += dt;
+                        out.push(t);
+                    } else {
+                        // The ON period expired before the next arrival
+                        // landed: jump over an OFF period and start the
+                        // next burst.
+                        t = on_until + rng.exp(1.0 / off_s);
+                        on_until = t + rng.exp(1.0 / on_s);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_increasing() {
+        for process in [
+            ArrivalProcess::Poisson { rate_rps: 80.0 },
+            ArrivalProcess::Bursty { rate_rps: 80.0, on_s: 0.2, off_s: 0.3 },
+        ] {
+            let a = process.schedule(&mut Rng::new(7), 200);
+            let b = process.schedule(&mut Rng::new(7), 200);
+            assert_eq!(a, b, "{} schedule must be seed-deterministic", process.name());
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "arrival times must increase");
+            assert!(a[0] > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_hits_the_nominal_rate() {
+        let process = ArrivalProcess::Poisson { rate_rps: 200.0 };
+        let times = process.schedule(&mut Rng::new(11), 4000);
+        let rate = times.len() as f64 / times.last().unwrap();
+        assert!((rate - 200.0).abs() / 200.0 < 0.1, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn bursty_hits_the_nominal_rate_with_gaps() {
+        let process = ArrivalProcess::Bursty { rate_rps: 100.0, on_s: 0.5, off_s: 0.5 };
+        let times = process.schedule(&mut Rng::new(13), 4000);
+        let rate = times.len() as f64 / times.last().unwrap();
+        assert!((rate - 100.0).abs() / 100.0 < 0.2, "long-run rate {rate}");
+        // The trace must actually be bursty: OFF periods leave gaps far
+        // beyond the ON-rate mean inter-arrival time (1/200 s).
+        let max_gap = times.windows(2).map(|w| w[1] - w[0]).fold(0.0f64, f64::max);
+        assert!(max_gap > 0.05, "no OFF-period gap in the trace (max gap {max_gap})");
+    }
+
+    #[test]
+    fn names_and_rates_round_trip() {
+        let p = ArrivalProcess::Poisson { rate_rps: 3.5 };
+        assert_eq!(p.name(), "poisson");
+        assert_eq!(p.rate_rps(), 3.5);
+        let b = ArrivalProcess::Bursty { rate_rps: 9.0, on_s: 1.0, off_s: 2.0 };
+        assert_eq!(b.name(), "bursty");
+        assert_eq!(b.rate_rps(), 9.0);
+    }
+}

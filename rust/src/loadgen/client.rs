@@ -1,0 +1,519 @@
+//! The open-loop HTTP client: keep-alive multiplexed connections
+//! driving the planned trace against a `tsar-cli serve --http` style
+//! front-end.
+//!
+//! One writer thread per planned connection dispatches its requests at
+//! their scheduled arrival times (open loop — see
+//! [`super::arrivals`]); a paired reader thread drains the pipelined
+//! responses strictly in request order (the front-end's contract) and
+//! stamps every byte-level milestone into a
+//! [`RequestTimeline`].  The writer caps in-flight streams per
+//! connection at [`MAX_INFLIGHT_PER_CONN`] — matching the front-end's
+//! `max_streams_per_conn` default — so a well-formed run never trips
+//! the 503 concurrent-stream shed and the Prometheus cross-check stays
+//! exact.  Responses are classified by status: a 200 chunked stream is
+//! read to its terminal NDJSON line, 429 is a queue-cap shed
+//! ([`Outcome::Rejected`]), anything else is an HTTP-layer shed
+//! ([`Outcome::HttpShed`]).
+//!
+//! Scheduled cancellations replay real client behavior: once the
+//! stream's engine id is known (every NDJSON line carries it) and the
+//! planned number of events has arrived, a detached helper posts
+//! `POST /v1/cancel {"id": N}` over a fresh connection, and the
+//! original stream ends with its `cancelled` terminal line.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::recorder::{Outcome, RequestTimeline};
+use super::workload::{PlannedRequest, Workload};
+
+/// In-flight streams one connection multiplexes; matches the HTTP
+/// front-end's `max_streams_per_conn` default so pipelined generates
+/// are never shed with 503.
+pub const MAX_INFLIGHT_PER_CONN: usize = 4;
+
+/// A stream that stalls longer than this is treated as a dead server.
+const READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Drive the whole planned trace against `addr` and return one
+/// timeline per planned request (sorted by trace index).  `t0` is the
+/// shared run clock every timeline is stamped against.
+pub fn run_workload(addr: &str, workload: &Workload, t0: Instant) -> Result<Vec<RequestTimeline>> {
+    let conns = workload.requests.iter().map(|r| r.conn).max().map_or(0, |c| c + 1);
+    let mut handles = Vec::new();
+    for conn in 0..conns {
+        let mine: Vec<PlannedRequest> =
+            workload.requests.iter().filter(|r| r.conn == conn).cloned().collect();
+        if mine.is_empty() {
+            continue;
+        }
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || drive_connection(&addr, t0, &mine)));
+    }
+    let mut timelines = Vec::new();
+    for handle in handles {
+        let joined = handle.join().map_err(|_| crate::err!("load thread panicked"))?;
+        timelines.extend(joined?);
+    }
+    timelines.sort_by_key(|t| t.index);
+    Ok(timelines)
+}
+
+/// One pipelined request the reader still owes a response for.
+struct Pending {
+    index: usize,
+    submit_s: f64,
+    cancel_after: Option<usize>,
+}
+
+/// Counting semaphore bounding in-flight streams per connection.
+struct Permits {
+    inflight: Mutex<usize>,
+    freed: Condvar,
+    cap: usize,
+}
+
+impl Permits {
+    fn new(cap: usize) -> Permits {
+        Permits { inflight: Mutex::new(0), freed: Condvar::new(), cap: cap.max(1) }
+    }
+
+    fn acquire(&self) {
+        let mut inflight = self.inflight.lock().expect("permit lock poisoned");
+        while *inflight >= self.cap {
+            inflight = self.freed.wait(inflight).expect("permit lock poisoned");
+        }
+        *inflight += 1;
+    }
+
+    fn release(&self) {
+        let mut inflight = self.inflight.lock().expect("permit lock poisoned");
+        *inflight = inflight.saturating_sub(1);
+        self.freed.notify_one();
+    }
+}
+
+/// The writer half of one connection: dispatch each request at its
+/// arrival time, handing the reader a [`Pending`] entry per request.
+fn drive_connection(
+    addr: &str,
+    t0: Instant,
+    requests: &[PlannedRequest],
+) -> Result<Vec<RequestTimeline>> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("cannot connect load connection to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let reader_stream = stream.try_clone().context("cannot clone the load connection")?;
+    let permits = Arc::new(Permits::new(MAX_INFLIGHT_PER_CONN));
+    let (pending_tx, pending_rx) = channel::<Pending>();
+    let reader = {
+        let permits = Arc::clone(&permits);
+        let addr = addr.to_string();
+        std::thread::spawn(move || read_responses(reader_stream, t0, &pending_rx, &permits, &addr))
+    };
+    for (i, req) in requests.iter().enumerate() {
+        let due = Duration::from_secs_f64(req.arrival_s.max(0.0));
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        permits.acquire();
+        let last = i + 1 == requests.len();
+        let wire = request_bytes(req, !last);
+        let submit_s = t0.elapsed().as_secs_f64();
+        // The reader learns about the request before any response byte
+        // can be attributed to it.
+        let pending =
+            Pending { index: req.index, submit_s, cancel_after: req.cancel_after_events };
+        pending_tx.send(pending).ok();
+        stream.write_all(&wire).context("load connection write failed")?;
+    }
+    drop(pending_tx); // the reader drains what is owed, then exits
+    reader.join().map_err(|_| crate::err!("load reader thread panicked"))?
+}
+
+/// Serialize one planned request as a `POST /v1/generate` exchange.
+/// The connection's last request announces `Connection: close`.
+fn request_bytes(req: &PlannedRequest, keep_alive: bool) -> Vec<u8> {
+    let mut body = BTreeMap::new();
+    body.insert(
+        "prompt".to_string(),
+        Json::Arr(req.prompt.iter().map(|&t| Json::Num(f64::from(t))).collect()),
+    );
+    body.insert("max_new_tokens".to_string(), Json::Num(req.max_new_tokens as f64));
+    if let Some(ms) = req.deadline_ms {
+        body.insert("deadline_ms".to_string(), Json::Num(ms as f64));
+    }
+    let body = Json::Obj(body).to_string();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// The reader half: one response per [`Pending`] entry, in order.
+fn read_responses(
+    stream: TcpStream,
+    t0: Instant,
+    pending_rx: &Receiver<Pending>,
+    permits: &Permits,
+    addr: &str,
+) -> Result<Vec<RequestTimeline>> {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut wire = Wire::new(stream);
+    let mut timelines = Vec::new();
+    let mut cancellers: Vec<JoinHandle<()>> = Vec::new();
+    for pending in pending_rx.iter() {
+        let timeline = read_one_response(&mut wire, t0, &pending, addr, &mut cancellers);
+        permits.release();
+        timelines.push(timeline?);
+    }
+    for canceller in cancellers {
+        let _ = canceller.join();
+    }
+    Ok(timelines)
+}
+
+/// Read and classify one HTTP response off the connection.
+fn read_one_response(
+    wire: &mut Wire,
+    t0: Instant,
+    pending: &Pending,
+    addr: &str,
+    cancellers: &mut Vec<JoinHandle<()>>,
+) -> Result<RequestTimeline> {
+    let head = wire.take_until(b"\r\n\r\n")?;
+    let head = std::str::from_utf8(&head).map_err(|_| crate::err!("head not UTF-8"))?;
+    let (status, chunked, content_length) = parse_head(head)?;
+    let mut timeline = RequestTimeline {
+        index: pending.index,
+        id: None,
+        submit_s: pending.submit_s,
+        event_s: Vec::new(),
+        done_s: pending.submit_s,
+        outcome: Outcome::HttpShed,
+        finish: None,
+        tokens: 0,
+    };
+    if status == 200 && chunked {
+        let mut line_buf: Vec<u8> = Vec::new();
+        let mut terminal = false;
+        let mut cancel_sent = false;
+        loop {
+            let size_line = wire.take_until(b"\r\n")?;
+            let size = parse_chunk_size(&size_line)?;
+            if size == 0 {
+                wire.take_exact(2)?; // CRLF closing the chunked body
+                break;
+            }
+            let data = wire.take_exact(size)?;
+            wire.take_exact(2)?; // CRLF closing this chunk
+            let now = t0.elapsed().as_secs_f64();
+            line_buf.extend_from_slice(&data);
+            while let Some(pos) = line_buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = line_buf.drain(..=pos).collect();
+                let is_terminal = process_line(
+                    &mut timeline,
+                    &line,
+                    now,
+                    pending,
+                    addr,
+                    cancellers,
+                    &mut cancel_sent,
+                )?;
+                terminal |= is_terminal;
+            }
+        }
+        crate::ensure!(
+            terminal,
+            "stream for request {} ended without a terminal event",
+            pending.index
+        );
+    } else {
+        // Fixed-length error response: drain the body to stay aligned
+        // on the keep-alive connection, then classify by status.
+        let _ = wire.take_exact(content_length)?;
+        timeline.done_s = t0.elapsed().as_secs_f64();
+        timeline.outcome = if status == 429 { Outcome::Rejected } else { Outcome::HttpShed };
+    }
+    Ok(timeline)
+}
+
+/// Fold one NDJSON event line into the timeline; returns whether the
+/// line was the stream's terminal event.
+fn process_line(
+    timeline: &mut RequestTimeline,
+    line: &[u8],
+    now: f64,
+    pending: &Pending,
+    addr: &str,
+    cancellers: &mut Vec<JoinHandle<()>>,
+    cancel_sent: &mut bool,
+) -> Result<bool> {
+    let text = std::str::from_utf8(line).map_err(|_| crate::err!("event line not UTF-8"))?.trim();
+    if text.is_empty() {
+        return Ok(false);
+    }
+    let json = Json::parse(text).map_err(|e| crate::err!("bad event line {text:?}: {e}"))?;
+    if timeline.id.is_none() {
+        timeline.id = json.get("id").and_then(Json::as_f64).map(|v| v as u64);
+    }
+    match json.get("event").and_then(Json::as_str) {
+        Some("prefilled") | Some("token") => {
+            timeline.event_s.push(now);
+            if let (Some(after), Some(id)) = (pending.cancel_after, timeline.id) {
+                if !*cancel_sent && timeline.event_s.len() >= after {
+                    *cancel_sent = true;
+                    let addr = addr.to_string();
+                    cancellers.push(std::thread::spawn(move || post_cancel(&addr, id)));
+                }
+            }
+            Ok(false)
+        }
+        Some("retired") => {
+            finish_terminal(timeline, &json, now, Outcome::Completed);
+            Ok(true)
+        }
+        Some("cancelled") => {
+            finish_terminal(timeline, &json, now, Outcome::Cancelled);
+            Ok(true)
+        }
+        Some("failed") => {
+            finish_terminal(timeline, &json, now, Outcome::Failed);
+            Ok(true)
+        }
+        _ => crate::bail!("unknown event line {text:?}"),
+    }
+}
+
+fn finish_terminal(timeline: &mut RequestTimeline, json: &Json, now: f64, outcome: Outcome) {
+    timeline.outcome = outcome;
+    timeline.done_s = now;
+    timeline.finish = json.get("finish").and_then(Json::as_str).map(str::to_string);
+    timeline.tokens = json.get("tokens").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+}
+
+/// `POST /v1/cancel {"id": N}` over a fresh short-lived connection.
+/// Best effort by design: a request that retired before the cancel
+/// landed answers 404, which is a legitimate race, not an error.
+fn post_cancel(addr: &str, id: u64) {
+    let Ok(mut stream) = TcpStream::connect(addr) else {
+        return;
+    };
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let body = format!("{{\"id\": {id}}}");
+    let request = format!(
+        "POST /v1/cancel HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    if stream.write_all(request.as_bytes()).is_err() {
+        return;
+    }
+    let mut sink = Vec::new();
+    let _ = stream.read_to_end(&mut sink);
+}
+
+/// Parse a response head into (status, chunked, content_length).
+fn parse_head(head: &str) -> Result<(u16, bool, usize)> {
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| crate::err!("bad status line {status_line:?}"))?;
+    let mut chunked = false;
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = value.eq_ignore_ascii_case("chunked");
+            } else if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.parse().map_err(|_| crate::err!("bad Content-Length {value:?}"))?;
+            }
+        }
+    }
+    Ok((status, chunked, content_length))
+}
+
+/// Parse one chunk-size line (hex, CRLF-terminated).
+fn parse_chunk_size(line: &[u8]) -> Result<usize> {
+    let text = std::str::from_utf8(line).map_err(|_| crate::err!("size not UTF-8"))?.trim();
+    usize::from_str_radix(text, 16).map_err(|_| crate::err!("bad chunk size {text:?}"))
+}
+
+/// Buffered byte reader over the response half of the connection.
+struct Wire {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Wire {
+    fn new(stream: TcpStream) -> Wire {
+        Wire { stream, buf: Vec::new() }
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        let mut tmp = [0u8; 4096];
+        let n = self.stream.read(&mut tmp).context("load connection read failed")?;
+        crate::ensure!(n > 0, "server closed the connection mid-response");
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(())
+    }
+
+    /// Take bytes up to and including `delim`.
+    fn take_until(&mut self, delim: &[u8]) -> Result<Vec<u8>> {
+        loop {
+            if let Some(pos) = self.buf.windows(delim.len()).position(|w| w == delim) {
+                return Ok(self.buf.drain(..pos + delim.len()).collect());
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Take exactly `n` bytes.
+    fn take_exact(&mut self, n: usize) -> Result<Vec<u8>> {
+        while self.buf.len() < n {
+            self.fill()?;
+        }
+        Ok(self.buf.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planned(deadline_ms: Option<u64>) -> PlannedRequest {
+        PlannedRequest {
+            index: 3,
+            arrival_s: 0.1,
+            prompt: vec![5, 6, 7],
+            max_new_tokens: 4,
+            deadline_ms,
+            cancel_after_events: None,
+            conn: 0,
+        }
+    }
+
+    #[test]
+    fn request_bytes_round_trip_through_the_server_grammar() {
+        let wire = request_bytes(&planned(Some(25)), true);
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("POST /v1/generate HTTP/1.1\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        let stated: usize = text
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap();
+        assert_eq!(stated, body.len(), "Content-Length matches the body");
+        let json = Json::parse(body).unwrap();
+        assert_eq!(json.get("prompt").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+        assert_eq!(json.get("max_new_tokens").and_then(Json::as_usize), Some(4));
+        assert_eq!(json.get("deadline_ms").and_then(Json::as_usize), Some(25));
+
+        let last = String::from_utf8(request_bytes(&planned(None), false)).unwrap();
+        assert!(last.contains("Connection: close\r\n"));
+        assert!(!last.contains("deadline_ms"));
+    }
+
+    #[test]
+    fn response_heads_parse_status_and_framing() {
+        let (status, chunked, len) = parse_head(
+            "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+             Transfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(chunked);
+        assert_eq!(len, 0);
+
+        let (status, chunked, len) =
+            parse_head("HTTP/1.1 429 Too Many Requests\r\nContent-Length: 24\r\n\r\n").unwrap();
+        assert_eq!(status, 429);
+        assert!(!chunked);
+        assert_eq!(len, 24);
+
+        assert!(parse_head("garbage").is_err());
+    }
+
+    #[test]
+    fn chunk_sizes_parse_as_hex() {
+        assert_eq!(parse_chunk_size(b"1a\r\n").unwrap(), 26);
+        assert_eq!(parse_chunk_size(b"0\r\n").unwrap(), 0);
+        assert!(parse_chunk_size(b"zz\r\n").is_err());
+    }
+
+    #[test]
+    fn event_lines_drive_the_timeline() {
+        let pending = Pending { index: 9, submit_s: 1.0, cancel_after: None };
+        let mut timeline = RequestTimeline {
+            index: 9,
+            id: None,
+            submit_s: 1.0,
+            event_s: Vec::new(),
+            done_s: 1.0,
+            outcome: Outcome::HttpShed,
+            finish: None,
+            tokens: 0,
+        };
+        let mut cancellers = Vec::new();
+        let mut cancel_sent = false;
+        let terminal = process_line(
+            &mut timeline,
+            br#"{"event":"prefilled","id":12,"index":0,"token":3}"#,
+            1.2,
+            &pending,
+            "unused",
+            &mut cancellers,
+            &mut cancel_sent,
+        )
+        .unwrap();
+        assert!(!terminal);
+        assert_eq!(timeline.id, Some(12));
+        let terminal = process_line(
+            &mut timeline,
+            br#"{"event":"retired","finish":"length","id":12,"tokens":[3,4],"error":null}"#,
+            1.5,
+            &pending,
+            "unused",
+            &mut cancellers,
+            &mut cancel_sent,
+        )
+        .unwrap();
+        assert!(terminal);
+        assert_eq!(timeline.outcome, Outcome::Completed);
+        assert_eq!(timeline.finish.as_deref(), Some("length"));
+        assert_eq!(timeline.tokens, 2);
+        assert!((timeline.done_s - 1.5).abs() < 1e-12);
+        assert!(cancellers.is_empty(), "no cancel was scheduled");
+
+        let bad = process_line(
+            &mut timeline,
+            b"{not json",
+            1.6,
+            &pending,
+            "unused",
+            &mut cancellers,
+            &mut cancel_sent,
+        );
+        assert!(bad.is_err());
+    }
+}

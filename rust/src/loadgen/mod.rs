@@ -1,0 +1,362 @@
+//! Open-loop load generation for the serving stack
+//! (`tsar-cli bench-serve`).
+//!
+//! The subsystem answers one question with a machine-checkable
+//! artifact: *what does the serving stack do under load it does not
+//! control?*  A seeded [`WorkloadSpec`] is expanded into a
+//! deterministic trace (arrivals, prompts, budgets, deadlines,
+//! cancellation points — see [`workload`]), an open-loop client
+//! dispatches it over keep-alive HTTP connections ([`client`]), every
+//! request's byte-level timeline is recorded ([`recorder`]), and the
+//! aggregation layer reduces the timelines to tail-latency statistics
+//! while reconciling every outcome against the engine's own
+//! Prometheus counters ([`aggregate`]).  The result is the
+//! schema-versioned `BENCH_serve.json` artifact
+//! (`util::artifact::validate_serve`), whose `cross_check` block
+//! certifies the two independent views of the run agree.
+//!
+//! The driver ([`run`]) either spins up the full in-process stack —
+//! `SimBackend` → `Engine` → `HttpServer` with the Prometheus
+//! aggregator attached — or targets an already-running front-end via
+//! [`BenchConfig::addr`], in which case the configured serving window
+//! must match the remote model's or admission validation will shed
+//! the trace.
+
+pub mod aggregate;
+pub mod arrivals;
+pub mod client;
+pub mod recorder;
+pub mod workload;
+
+pub use aggregate::{cross_check, scrape_metrics, tally, OutcomeCounts, Scrape};
+pub use arrivals::ArrivalProcess;
+pub use recorder::{Outcome, RequestTimeline};
+pub use workload::{PlannedRequest, Workload, WorkloadSpec};
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::platforms::{Platform, PlatformKind};
+use crate::coordinator::{Engine, HttpConfig, HttpServer, PromAggregator, ServerConfig};
+use crate::runtime::{Backend, SimBackend, SimBackendConfig};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Prompt-token vocabulary assumed when benching an external server
+/// (the in-process path reads the real vocab off the backend).
+const EXTERNAL_VOCAB: usize = 1000;
+
+/// How long the driver waits for the engine's metrics aggregator to
+/// observe every retirement before running the cross-check.
+const RETIREMENT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Everything `bench-serve` needs to run: the workload shape, the
+/// in-process serving stack shape, and the artifact flags.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Trace seed; fixed seed ⇒ byte-identical workload.
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Nominal long-run arrival rate.
+    pub rate_rps: f64,
+    /// Use the bursty on/off arrival process instead of Poisson.
+    pub bursty: bool,
+    /// Mean ON-period seconds (bursty only).
+    pub on_s: f64,
+    /// Mean OFF-period seconds (bursty only).
+    pub off_s: f64,
+    /// Keep-alive client connections.
+    pub conns: usize,
+    /// Fraction of requests scheduling a mid-stream cancel.
+    pub cancel_rate: f64,
+    /// Fraction of requests carrying a `deadline_ms` budget.
+    pub deadline_frac: f64,
+    /// Target an external front-end instead of the in-process stack.
+    pub addr: Option<String>,
+    /// Model zoo name for the in-process `SimBackend`.
+    pub model: String,
+    /// Engine worker lanes (in-process stack).
+    pub workers: usize,
+    /// Engine `max_batch` (= KV slots per lane here).
+    pub max_batch: usize,
+    /// Admission queue cap; `None` = unbounded (no 429s).
+    pub queue_cap: Option<usize>,
+    /// Serving window the workload is clamped to.
+    pub prefill_len: usize,
+    /// KV capacity the workload is clamped to.
+    pub max_seq: usize,
+    /// Recorded in the artifact so CI smoke runs are recognizable.
+    pub smoke: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            seed: 0x54A7,
+            requests: 64,
+            rate_rps: 40.0,
+            bursty: false,
+            on_s: 0.25,
+            off_s: 0.25,
+            conns: 2,
+            cancel_rate: 0.1,
+            deadline_frac: 0.1,
+            addr: None,
+            model: "BitNet-2B-4T".to_string(),
+            workers: 2,
+            max_batch: 2,
+            queue_cap: None,
+            prefill_len: 16,
+            max_seq: 64,
+            smoke: false,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// The CI profile: small, fast, and deliberately hostile — bursty
+    /// arrivals over a tiny capped queue with cancels and deadlines in
+    /// the mix, so every outcome class and every cross-check equation
+    /// gets exercised in a second or two.
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            requests: 24,
+            rate_rps: 120.0,
+            bursty: true,
+            workers: 1,
+            max_batch: 1,
+            queue_cap: Some(2),
+            cancel_rate: 0.2,
+            deadline_frac: 0.2,
+            smoke: true,
+            ..BenchConfig::default()
+        }
+    }
+
+    /// The configured arrival process.
+    pub fn arrivals(&self) -> ArrivalProcess {
+        if self.bursty {
+            ArrivalProcess::Bursty { rate_rps: self.rate_rps, on_s: self.on_s, off_s: self.off_s }
+        } else {
+            ArrivalProcess::Poisson { rate_rps: self.rate_rps }
+        }
+    }
+
+    /// The workload spec this config expands to (exposed so tests can
+    /// reproduce the exact trace the bench will run).
+    pub fn workload_spec(&self, vocab: usize) -> WorkloadSpec {
+        let mut spec = WorkloadSpec::for_window(self.prefill_len, self.max_seq, vocab);
+        spec.seed = self.seed;
+        spec.requests = self.requests;
+        spec.conns = self.conns;
+        spec.cancel_rate = self.cancel_rate;
+        spec.deadline_frac = self.deadline_frac;
+        spec.arrivals = self.arrivals();
+        spec
+    }
+}
+
+/// Everything a caller needs beyond the artifact itself.
+#[derive(Debug, Clone)]
+pub struct BenchOutput {
+    /// The full `BENCH_serve.json` document.
+    pub artifact: Json,
+    /// Did the client's view reconcile against `/metrics`?
+    pub agree: bool,
+    /// Human-readable cross-check violations (empty when `agree`).
+    pub mismatches: Vec<String>,
+    /// Client-side outcome totals.
+    pub counts: OutcomeCounts,
+    /// Wall-clock seconds from first dispatch to last terminal.
+    pub wall_s: f64,
+}
+
+/// Run the configured bench: against an external front-end when
+/// `cfg.addr` is set, otherwise against a freshly-started in-process
+/// `SimBackend` serving stack.
+pub fn run(cfg: &BenchConfig) -> Result<BenchOutput> {
+    if let Some(addr) = &cfg.addr {
+        let label = format!("external:{addr}");
+        return drive(cfg, addr, &label, EXTERNAL_VOCAB);
+    }
+    let platform = Platform::by_kind(PlatformKind::Workstation);
+    let sim_cfg = SimBackendConfig {
+        prefill_len: cfg.prefill_len,
+        max_seq: cfg.max_seq,
+        threads: 0,
+        seed: cfg.seed ^ 0x51AB,
+    };
+    let backend = SimBackend::by_name(&cfg.model, platform, sim_cfg)?;
+    let label = format!("sim:{}", cfg.model);
+    run_with_backend(cfg, backend, &label)
+}
+
+/// [`run`] with a caller-supplied backend — the injection point the
+/// integration tests use to pin slow backends under the stack and
+/// deterministically force queue-cap sheds.
+pub fn run_with_backend<B>(cfg: &BenchConfig, backend: B, label: &str) -> Result<BenchOutput>
+where
+    B: Backend + Send + Sync + 'static,
+{
+    let vocab = backend.config().vocab;
+    let (agg_tx, agg_rx) = channel();
+    let aggregator = PromAggregator::spawn(agg_rx);
+    let counters = aggregator.counters();
+    let scfg = ServerConfig {
+        max_batch: cfg.max_batch,
+        kv_slots: cfg.max_batch,
+        workers: cfg.workers,
+        queue_cap: cfg.queue_cap,
+    };
+    let handle = Arc::new(Engine::start_with_sink(backend, scfg, Some(agg_tx))?);
+    // Keep-alive load connections pin HTTP workers for their whole
+    // lifetime; the extra threads keep cancel POSTs and /metrics
+    // scrapes responsive while every connection is streaming.
+    let http_cfg = HttpConfig { threads: cfg.conns + 2, ..HttpConfig::default() };
+    let http = HttpServer::start("127.0.0.1:0", Arc::clone(&handle), counters, http_cfg)?;
+    let addr = http.local_addr().to_string();
+
+    let result = drive(cfg, &addr, label, vocab);
+
+    http.stop();
+    let handle = Arc::try_unwrap(handle)
+        .map_err(|_| crate::err!("HTTP workers still hold the engine handle"))?;
+    let _ = handle.shutdown();
+    aggregator.finish();
+    result
+}
+
+/// The measurement core, front-end-agnostic: plan, scrape, dispatch,
+/// re-scrape, reconcile, build the artifact.
+fn drive(cfg: &BenchConfig, addr: &str, label: &str, vocab: usize) -> Result<BenchOutput> {
+    let workload = cfg.workload_spec(vocab).build()?;
+    let before = aggregate::scrape_metrics(addr)?;
+    let t0 = Instant::now();
+    let timelines = client::run_workload(addr, &workload, t0)?;
+    let wall_s = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+    let counts = aggregate::tally(&timelines);
+    let after =
+        aggregate::await_retirements(addr, &before, counts.engine_requests(), RETIREMENT_TIMEOUT)?;
+    let (agree, mismatches) = aggregate::cross_check(&before, &after, &counts);
+    let artifact =
+        artifact_json(cfg, label, &workload, &timelines, &counts, agree, &mismatches, wall_s);
+    if agree {
+        // A reconciled artifact must also satisfy its own schema; a
+        // divergent one is still written by the CLI for post-mortems,
+        // so it skips the check (`metrics_agree: false` fails it by
+        // design for measured artifacts).
+        crate::util::artifact::validate_serve(&artifact.to_string())?;
+    }
+    Ok(BenchOutput { artifact, agree, mismatches, counts, wall_s })
+}
+
+fn artifact_json(
+    cfg: &BenchConfig,
+    label: &str,
+    workload: &Workload,
+    timelines: &[RequestTimeline],
+    counts: &OutcomeCounts,
+    agree: bool,
+    mismatches: &[String],
+    wall_s: f64,
+) -> Json {
+    let queue_cap = cfg.queue_cap.map_or(Json::Null, |c| Json::Num(c as f64));
+    let config = obj(vec![
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("max_batch", Json::Num(cfg.max_batch as f64)),
+        ("conns", Json::Num(cfg.conns as f64)),
+        ("queue_cap", queue_cap),
+    ]);
+    let workload_block = obj(vec![
+        ("requests", Json::Num(cfg.requests as f64)),
+        ("arrivals", Json::Str(cfg.arrivals().name().to_string())),
+        ("rate_rps", Json::Num(cfg.rate_rps)),
+        ("trace_fingerprint", Json::Str(workload.fingerprint_hex())),
+    ]);
+    let outcomes = obj(vec![
+        ("completed", Json::Num(counts.completed as f64)),
+        ("cancelled", Json::Num(counts.cancelled as f64)),
+        ("rejected", Json::Num(counts.rejected as f64)),
+        ("failed", Json::Num(counts.failed as f64)),
+        ("http_shed", Json::Num(counts.http_shed as f64)),
+    ]);
+    let tokens = obj(vec![
+        ("completed", Json::Num(counts.tokens_completed as f64)),
+        ("total", Json::Num(counts.tokens_total as f64)),
+    ]);
+    let latency = obj(vec![
+        ("ttft_s", aggregate::latency_json(&aggregate::ttft_samples(timelines))),
+        ("tpot_s", aggregate::latency_json(&aggregate::tpot_samples(timelines))),
+        ("e2e_s", aggregate::latency_json(&aggregate::e2e_samples(timelines))),
+    ]);
+    let cross = obj(vec![
+        ("metrics_agree", Json::Bool(agree)),
+        ("mismatches", Json::Arr(mismatches.iter().map(|m| Json::Str(m.clone())).collect())),
+    ]);
+    let shed = (counts.rejected + counts.http_shed) as f64 / counts.requests().max(1) as f64;
+    obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("schema_version", Json::Num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("smoke", Json::Bool(cfg.smoke)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("backend", Json::Str(label.to_string())),
+        ("config", config),
+        ("workload", workload_block),
+        ("outcomes", outcomes),
+        ("tokens", tokens),
+        ("latency", latency),
+        ("goodput_tok_per_s", Json::Num(counts.tokens_completed as f64 / wall_s)),
+        ("shed_rate", Json::Num(shed)),
+        ("wall_s", Json::Num(wall_s)),
+        ("cross_check", cross),
+    ])
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_profile_is_hostile_on_purpose() {
+        let smoke = BenchConfig::smoke();
+        assert!(smoke.smoke);
+        assert!(smoke.bursty);
+        assert_eq!(smoke.queue_cap, Some(2));
+        assert!(smoke.cancel_rate > 0.0 && smoke.deadline_frac > 0.0);
+        assert_eq!(smoke.arrivals().name(), "bursty");
+        assert_eq!(BenchConfig::default().arrivals().name(), "poisson");
+    }
+
+    #[test]
+    fn workload_spec_mirrors_the_config() {
+        let cfg = BenchConfig { seed: 99, requests: 7, conns: 3, ..BenchConfig::default() };
+        let spec = cfg.workload_spec(500);
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.requests, 7);
+        assert_eq!(spec.conns, 3);
+        assert_eq!(spec.vocab, 500);
+        assert_eq!(spec.arrivals.rate_rps(), cfg.rate_rps);
+        // The same config expands to the same fingerprint, twice.
+        let a = cfg.workload_spec(500).build().unwrap();
+        let b = cfg.workload_spec(500).build().unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn artifacts_satisfy_their_own_schema() {
+        let cfg = BenchConfig::default();
+        let workload = cfg.workload_spec(100).build().unwrap();
+        let counts = OutcomeCounts { completed: 64, tokens_total: 10, ..Default::default() };
+        let json = artifact_json(&cfg, "sim:test", &workload, &[], &counts, true, &[], 1.5);
+        assert_eq!(json.get("measured"), Some(&Json::Bool(true)));
+        assert_eq!(json.get("bench").and_then(Json::as_str), Some("serve"));
+        crate::util::artifact::validate_serve(&json.to_string()).unwrap();
+    }
+}

@@ -1,0 +1,141 @@
+//! Per-request timelines recorded by the load-generation client.
+//!
+//! The client stamps every observable point of a request's life against
+//! one shared run clock: submission (the instant the request bytes hit
+//! the socket), each streamed event line (the prefill line and every
+//! decode token), and the terminal line.  The aggregation layer
+//! ([`super::aggregate`]) derives the serving metrics from these raw
+//! timelines — TTFT (submit → first event line), TPOT (gaps between
+//! consecutive event lines) and end-to-end latency — instead of the
+//! client keeping running statistics, so the artifact can always be
+//! recomputed from first principles.
+
+/// Terminal classification of one planned request, from the client's
+/// point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// HTTP 200 stream ending in a `retired` terminal line.
+    Completed,
+    /// HTTP 200 stream ending in a `cancelled` terminal line
+    /// (mid-stream cancel or deadline expiry).
+    Cancelled,
+    /// HTTP 429: shed by the engine's bounded admission queue.  The
+    /// engine books these as `failed` retirements *and* rejections.
+    Rejected,
+    /// HTTP 200 stream ending in a `failed` terminal line.
+    Failed,
+    /// Shed by the HTTP layer itself (e.g. 503); the request never
+    /// reached the engine, so it is excluded from the engine-facing
+    /// cross-check equations.
+    HttpShed,
+}
+
+impl Outcome {
+    /// Stable label used by the `outcomes` block of the artifact.
+    pub fn label(self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Rejected => "rejected",
+            Outcome::Failed => "failed",
+            Outcome::HttpShed => "http_shed",
+        }
+    }
+}
+
+/// Raw observable timeline of one request; all times are seconds on
+/// the shared run clock.
+#[derive(Debug, Clone)]
+pub struct RequestTimeline {
+    /// Trace position ([`super::workload::PlannedRequest::index`]).
+    pub index: usize,
+    /// Engine-assigned request id, learned from the first NDJSON line
+    /// (`None` for requests shed before a stream started).
+    pub id: Option<u64>,
+    /// When the request bytes were written to the socket.
+    pub submit_s: f64,
+    /// Arrival time of every streamed event line (prefill + tokens).
+    pub event_s: Vec<f64>,
+    /// Arrival time of the terminal line (or the error response).
+    pub done_s: f64,
+    /// Terminal classification.
+    pub outcome: Outcome,
+    /// The terminal line's `finish` label, when a stream ran.
+    pub finish: Option<String>,
+    /// Tokens carried by the terminal line.
+    pub tokens: usize,
+}
+
+impl RequestTimeline {
+    /// Time to first token: submit → first streamed event line.
+    pub fn ttft_s(&self) -> Option<f64> {
+        self.event_s.first().map(|&t| t - self.submit_s)
+    }
+
+    /// Per-token gaps between consecutive streamed event lines.
+    pub fn tpot_samples(&self) -> Vec<f64> {
+        self.event_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// End-to-end latency: submit → terminal.
+    pub fn e2e_s(&self) -> f64 {
+        self.done_s - self.submit_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_derivations() {
+        let tl = RequestTimeline {
+            index: 0,
+            id: Some(4),
+            submit_s: 1.0,
+            event_s: vec![1.25, 1.35, 1.50],
+            done_s: 1.6,
+            outcome: Outcome::Completed,
+            finish: Some("length".into()),
+            tokens: 3,
+        };
+        assert!((tl.ttft_s().unwrap() - 0.25).abs() < 1e-12);
+        let tpot = tl.tpot_samples();
+        assert_eq!(tpot.len(), 2);
+        assert!((tpot[0] - 0.10).abs() < 1e-12);
+        assert!((tpot[1] - 0.15).abs() < 1e-12);
+        assert!((tl.e2e_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_requests_have_no_first_token() {
+        let tl = RequestTimeline {
+            index: 1,
+            id: None,
+            submit_s: 0.5,
+            event_s: Vec::new(),
+            done_s: 0.51,
+            outcome: Outcome::Rejected,
+            finish: None,
+            tokens: 0,
+        };
+        assert!(tl.ttft_s().is_none());
+        assert!(tl.tpot_samples().is_empty());
+        assert!(tl.e2e_s() > 0.0);
+    }
+
+    #[test]
+    fn labels_match_the_artifact_schema() {
+        let labels: Vec<&str> = [
+            Outcome::Completed,
+            Outcome::Cancelled,
+            Outcome::Rejected,
+            Outcome::Failed,
+            Outcome::HttpShed,
+        ]
+        .iter()
+        .map(|o| o.label())
+        .collect();
+        assert_eq!(labels, crate::util::artifact::SERVE_OUTCOME_KEYS);
+    }
+}

@@ -1,0 +1,303 @@
+//! Deterministic workload planning: expand a seeded [`WorkloadSpec`]
+//! into the full per-request trace ([`PlannedRequest`] list) before any
+//! traffic flows.
+//!
+//! Planning everything up front — arrival times, prompt tokens, token
+//! budgets, deadlines, cancellation points, connection assignment —
+//! makes the workload a pure function of the spec: the same seed
+//! replays the byte-identical trace, and the FNV-1a fingerprint over
+//! the expanded plan ([`Workload::fingerprint`]) gives runs a stable
+//! identity the bench artifact records (`workload.trace_fingerprint`).
+//!
+//! Prompt and output lengths are clamped to the serving window
+//! ([`WorkloadSpec::for_window`]): every planned request satisfies
+//! `prompt_len <= prefill_len` and `prompt_len + max_new <= max_seq`,
+//! so admission *validation* never rejects — the only engine-side
+//! rejections left are queue-cap sheds, which keeps the Prometheus
+//! cross-check equations exact (see [`super::aggregate`]).
+
+use crate::util::rng::Rng;
+
+use super::arrivals::ArrivalProcess;
+
+/// Everything the generator needs to know to plan a run.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// PRNG seed; the whole trace is a pure function of the spec.
+    pub seed: u64,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Arrival-time process (see [`ArrivalProcess`]).
+    pub arrivals: ArrivalProcess,
+    /// Keep-alive client connections the trace is striped across.
+    pub conns: usize,
+    /// Short-prompt length range, inclusive.
+    pub prompt_short: (usize, usize),
+    /// Long-prompt length range, inclusive.
+    pub prompt_long: (usize, usize),
+    /// Fraction of requests drawing from the long-prompt range.
+    pub long_frac: f64,
+    /// `max_new_tokens` range, inclusive.
+    pub max_new: (usize, usize),
+    /// Fraction of requests that schedule a mid-stream cancellation.
+    pub cancel_rate: f64,
+    /// Events (prefill + decode tokens) observed before the scheduled
+    /// cancel fires, inclusive range.
+    pub cancel_after: (usize, usize),
+    /// Fraction of requests carrying a `deadline_ms` budget.
+    pub deadline_frac: f64,
+    /// Deadline range in milliseconds, inclusive.
+    pub deadline_ms: (u64, u64),
+    /// Vocabulary size prompt tokens are drawn from.
+    pub vocab: usize,
+}
+
+impl WorkloadSpec {
+    /// Defaults clamped to a serving window: prompts never exceed
+    /// `prefill_len` and `prompt + max_new` never exceeds `max_seq`,
+    /// so the engine's admission validation accepts every request.
+    pub fn for_window(prefill_len: usize, max_seq: usize, vocab: usize) -> WorkloadSpec {
+        assert!(max_seq > prefill_len, "max_seq must exceed the prefill window");
+        let short_hi = (prefill_len / 4).max(1);
+        let long_lo = (prefill_len / 2).max(1);
+        WorkloadSpec {
+            seed: 0,
+            requests: 32,
+            arrivals: ArrivalProcess::Poisson { rate_rps: 50.0 },
+            conns: 2,
+            prompt_short: (1, short_hi),
+            prompt_long: (long_lo, prefill_len),
+            long_frac: 0.3,
+            max_new: (1, (max_seq - prefill_len).max(1)),
+            cancel_rate: 0.0,
+            cancel_after: (2, 6),
+            deadline_frac: 0.0,
+            deadline_ms: (5, 50),
+            vocab,
+        }
+    }
+
+    /// Expand the spec into the full deterministic trace.
+    pub fn build(&self) -> crate::Result<Workload> {
+        crate::ensure!(self.requests >= 1, "workload needs at least one request");
+        crate::ensure!(self.conns >= 1, "workload needs at least one connection");
+        crate::ensure!(self.vocab >= 1, "vocab must be at least 1");
+        for (name, (lo, hi)) in [
+            ("prompt_short", self.prompt_short),
+            ("prompt_long", self.prompt_long),
+            ("max_new", self.max_new),
+            ("cancel_after", self.cancel_after),
+        ] {
+            crate::ensure!(1 <= lo && lo <= hi, "bad {name} range [{lo}, {hi}]");
+        }
+        crate::ensure!(self.deadline_ms.0 <= self.deadline_ms.1, "bad deadline_ms range");
+        for (name, frac) in [
+            ("long_frac", self.long_frac),
+            ("cancel_rate", self.cancel_rate),
+            ("deadline_frac", self.deadline_frac),
+        ] {
+            crate::ensure!((0.0..=1.0).contains(&frac), "{name} must be in [0, 1], got {frac}");
+        }
+
+        let mut rng = Rng::new(self.seed);
+        let arrivals = self.arrivals.schedule(&mut rng, self.requests);
+        let requests: Vec<PlannedRequest> = arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(index, arrival_s)| {
+                let (lo, hi) = if rng.f64() < self.long_frac {
+                    self.prompt_long
+                } else {
+                    self.prompt_short
+                };
+                let plen = rng.range_i64(lo as i64, hi as i64) as usize;
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| rng.below(self.vocab as u64) as i32).collect();
+                let max_new_tokens =
+                    rng.range_i64(self.max_new.0 as i64, self.max_new.1 as i64) as usize;
+                let cancel_after_events = if rng.f64() < self.cancel_rate {
+                    let (lo, hi) = self.cancel_after;
+                    Some(rng.range_i64(lo as i64, hi as i64) as usize)
+                } else {
+                    None
+                };
+                let deadline_ms = if rng.f64() < self.deadline_frac {
+                    let (lo, hi) = self.deadline_ms;
+                    Some(rng.range_i64(lo as i64, hi as i64) as u64)
+                } else {
+                    None
+                };
+                PlannedRequest {
+                    index,
+                    arrival_s,
+                    prompt,
+                    max_new_tokens,
+                    deadline_ms,
+                    cancel_after_events,
+                    conn: index % self.conns,
+                }
+            })
+            .collect();
+        let fingerprint = fingerprint(self.seed, &requests);
+        Ok(Workload { requests, fingerprint })
+    }
+}
+
+/// One fully-planned request of the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedRequest {
+    /// Position in the trace (stable across the whole run).
+    pub index: usize,
+    /// Scheduled dispatch time, seconds from the run start.
+    pub arrival_s: f64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Token budget sent as `max_new_tokens`.
+    pub max_new_tokens: usize,
+    /// Optional `deadline_ms` budget attached to the request body.
+    pub deadline_ms: Option<u64>,
+    /// Cancel via `POST /v1/cancel` after observing this many stream
+    /// events (the prefill line counts as the first).
+    pub cancel_after_events: Option<usize>,
+    /// Keep-alive connection this request is dispatched on.
+    pub conn: usize,
+}
+
+/// The expanded trace plus its identity fingerprint.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub requests: Vec<PlannedRequest>,
+    /// FNV-1a over every planned field; equal specs produce equal
+    /// fingerprints on every platform.
+    pub fingerprint: u64,
+}
+
+impl Workload {
+    /// The fingerprint as the artifact's `trace_fingerprint` string.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("0x{:016x}", self.fingerprint)
+    }
+}
+
+/// FNV-1a (64-bit) folded over one little-endian u64.
+fn fold(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// Fold an optional value as a presence flag plus payload, so
+/// `Some(0)` and `None` hash differently.
+fn fold_opt(h: u64, v: Option<u64>) -> u64 {
+    match v {
+        Some(x) => fold(fold(h, 1), x),
+        None => fold(h, 0),
+    }
+}
+
+fn fingerprint(seed: u64, requests: &[PlannedRequest]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    h = fold(h, seed);
+    h = fold(h, requests.len() as u64);
+    for r in requests {
+        h = fold(h, r.arrival_s.to_bits());
+        h = fold(h, r.prompt.len() as u64);
+        for &t in &r.prompt {
+            h = fold(h, t as u64);
+        }
+        h = fold(h, r.max_new_tokens as u64);
+        h = fold_opt(h, r.deadline_ms);
+        h = fold_opt(h, r.cancel_after_events.map(|c| c as u64));
+        h = fold(h, r.conn as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        let mut spec = WorkloadSpec::for_window(16, 64, 1000);
+        spec.seed = 0x5EED;
+        spec.requests = 64;
+        spec.conns = 3;
+        spec.cancel_rate = 0.25;
+        spec.deadline_frac = 0.25;
+        spec
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_exact_trace() {
+        let a = spec().build().unwrap();
+        let b = spec().build().unwrap();
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert!(a.fingerprint_hex().starts_with("0x"));
+        assert_eq!(a.fingerprint_hex().len(), 18);
+    }
+
+    #[test]
+    fn different_seeds_change_the_fingerprint() {
+        let a = spec().build().unwrap();
+        let mut other = spec();
+        other.seed ^= 1;
+        let b = other.build().unwrap();
+        assert_ne!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn window_clamping_means_validation_never_rejects() {
+        let (prefill_len, max_seq) = (16, 64);
+        let workload = spec().build().unwrap();
+        for r in &workload.requests {
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt.len() <= prefill_len, "prompt overflows the prefill window");
+            assert!(
+                r.prompt.len() + r.max_new_tokens <= max_seq,
+                "prompt + budget overflows KV capacity"
+            );
+            assert!(r.prompt.iter().all(|&t| (0..1000).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn connections_are_striped_round_robin() {
+        let workload = spec().build().unwrap();
+        for r in &workload.requests {
+            assert_eq!(r.conn, r.index % 3);
+        }
+    }
+
+    #[test]
+    fn rate_fractions_pin_the_optional_fields() {
+        let mut all = spec();
+        all.cancel_rate = 1.0;
+        all.deadline_frac = 1.0;
+        let workload = all.build().unwrap();
+        assert!(workload.requests.iter().all(|r| r.cancel_after_events.is_some()));
+        assert!(workload.requests.iter().all(|r| r.deadline_ms.is_some()));
+
+        let mut none = spec();
+        none.cancel_rate = 0.0;
+        none.deadline_frac = 0.0;
+        let workload = none.build().unwrap();
+        assert!(workload.requests.iter().all(|r| r.cancel_after_events.is_none()));
+        assert!(workload.requests.iter().all(|r| r.deadline_ms.is_none()));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut zero = spec();
+        zero.requests = 0;
+        assert!(zero.build().is_err());
+        let mut frac = spec();
+        frac.cancel_rate = 1.5;
+        assert!(frac.build().is_err());
+        let mut range = spec();
+        range.max_new = (5, 2);
+        assert!(range.build().is_err());
+    }
+}

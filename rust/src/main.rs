@@ -17,6 +17,7 @@ use tsar::coordinator::{
     PromAggregator, Request, RequestRecord, Server, ServerConfig, Ticket, TokenEvent,
 };
 use tsar::kernels::all_kernels;
+use tsar::loadgen::BenchConfig;
 use tsar::model::zoo;
 use tsar::model::{Checkpoint, LinearEngine, SamplerConfig, TransformerConfig};
 use tsar::runtime::{
@@ -35,12 +36,17 @@ USAGE:
   tsar-cli plan --model <name> [--platform P] [--n N]
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
-                 [--backend sim|native|model] [--isa c2|c4]
+                 [--backend sim|native|model] [--isa c2|c4] [--queue-cap N]
                  [--metrics <path|->] [--stream] [--http ADDR]
                  [--ckpt PATH] [--model-seed S] [--engine native|modeled]
                  [--temperature T] [--top-k K]
                  [--layers N] [--dim D] [--heads H] [--kv-heads H] [--ffn F] [--vocab V]
                  [--artifacts DIR] [--variant tsar|ref]   (PJRT; needs --features pjrt)
+  tsar-cli bench-serve [--smoke] [--seed S] [--requests R] [--rate RPS]
+                       [--arrivals poisson|bursty] [--on S] [--off S] [--conns C]
+                       [--cancel-rate F] [--deadline-frac F] [--workers W] [--batch B]
+                       [--queue-cap N] [--model <name>] [--addr HOST:PORT]
+                       [--out PATH] [--validate PATH]
   tsar-cli models
   tsar-cli help
 
@@ -52,11 +58,29 @@ of the blocking batch surface: tokens print as their decode rounds
 land, per ticket.
 `serve --http ADDR` (e.g. 127.0.0.1:8080) serves network clients
 instead of a synthetic workload: POST /v1/generate streams one JSON
-line per token event (chunked NDJSON; disconnecting cancels the
-session), GET /metrics exposes Prometheus counters, GET /healthz is the
-liveness probe.  Composable with --backend/--threads/--workers/--batch
-and --metrics; press Enter (or close stdin) to stop and print the
-merged serve report.
+line per token event (chunked NDJSON, every line carrying the session
+id; disconnecting cancels the session), POST /v1/cancel {\"id\": N}
+cancels a live stream from any connection, GET /metrics exposes
+Prometheus counters, GET /healthz is the liveness probe.  With
+--queue-cap N a full admission queue sheds new submissions with a 429.
+Composable with --backend/--threads/--workers/--batch and --metrics;
+press Enter (or close stdin) to stop and print the merged serve
+report.
+
+`bench-serve` runs the open-loop load-generation subsystem: a seeded
+deterministic workload (fixed --seed replays the byte-identical trace;
+its fingerprint lands in the artifact) is dispatched over --conns
+keep-alive connections at the scheduled --rate, with mixed prompt
+lengths, scheduled mid-stream cancels (--cancel-rate) and per-request
+deadlines (--deadline-frac).  By default the full serving stack is
+spun up in-process on the simulator backend; --addr targets an
+already-running `serve --http` front-end instead.  Per-request
+timelines (TTFT, per-token gaps, end-to-end) are aggregated into the
+schema-versioned BENCH_serve.json artifact (--out), every outcome
+count is reconciled against the engine's /metrics deltas, and the run
+fails if the two views disagree.  --smoke is the hostile CI profile
+(bursty arrivals over a capped queue); --validate PATH only re-checks
+an existing artifact against the schema.
 
 `serve --backend native` executes every decode step's BitLinear GEMVs
 through the host AVX2 pshufb kernels (scalar fallback elsewhere) and
@@ -93,6 +117,7 @@ fn main() -> Result<()> {
         Some("simulate") => simulate_cmd(&args[1..]),
         Some("plan") => plan_cmd(&args[1..]),
         Some("serve") => serve_cmd(&args[1..]),
+        Some("bench-serve") => bench_serve_cmd(&args[1..]),
         Some("models") => {
             for m in zoo::MODEL_ZOO {
                 println!(
@@ -256,10 +281,20 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     tsar::ensure!(max_new >= 1, "--max-new must be >= 1");
     tsar::ensure!(batch >= 1, "--batch must be >= 1");
     tsar::ensure!(workers >= 1, "--workers must be >= 1");
+    let queue_cap = match flag(args, "--queue-cap") {
+        Some(cap) => {
+            let cap: usize =
+                cap.parse().map_err(|_| tsar::err!("--queue-cap expects a number"))?;
+            tsar::ensure!(cap >= 1, "--queue-cap must be >= 1");
+            Some(cap)
+        }
+        None => None,
+    };
     let opts = ServeOpts {
         metrics: flag(args, "--metrics"),
         stream: args.iter().any(|a| a == "--stream"),
         http: flag(args, "--http"),
+        queue_cap,
     };
     // Both --stream token output and `--metrics -` write stdout; the
     // interleaving would corrupt the JSONL stream.
@@ -451,6 +486,9 @@ struct ServeOpts {
     /// `--http ADDR`: serve network clients over the HTTP front-end
     /// instead of a synthetic workload.
     http: Option<String>,
+    /// `--queue-cap N`: bound the admission queue — submissions that
+    /// find it full are shed (HTTP clients get a `429`).
+    queue_cap: Option<usize>,
 }
 
 /// Drive any backend through the coordinator with a synthetic request
@@ -476,7 +514,8 @@ fn drive<B: Backend + Send + Sync + 'static>(
         cfg.prefill_len, cfg.max_seq, cfg.vocab
     );
 
-    let scfg = ServerConfig { max_batch: batch, kv_slots: batch, workers, queue_cap: None };
+    let scfg =
+        ServerConfig { max_batch: batch, kv_slots: batch, workers, queue_cap: opts.queue_cap };
 
     if let Some(addr) = opts.http.as_deref() {
         // HTTP mode: no synthetic workload — network clients drive the
@@ -612,5 +651,84 @@ fn drive_http<B: Backend + Send + Sync + 'static>(
         let n = exporter.finish()?;
         println!("metrics: {n} JSONL record(s) exported to {}", metrics.unwrap_or("-"));
     }
+    Ok(())
+}
+
+/// `bench-serve`: run the open-loop load generator against the
+/// in-process serving stack (or an external front-end via `--addr`)
+/// and write the cross-checked `BENCH_serve.json` artifact.  The run
+/// fails when the client's outcome counts disagree with the engine's
+/// `/metrics` deltas — the artifact is still written for post-mortems.
+fn bench_serve_cmd(args: &[String]) -> Result<()> {
+    if let Some(path) = flag(args, "--validate") {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("cannot read {path}"))?;
+        let n = tsar::util::artifact::validate_serve(&text)?;
+        println!("[bench-serve] {path}: serve schema v1 OK ({n} requests)");
+        return Ok(());
+    }
+    let mut cfg = if args.iter().any(|a| a == "--smoke") {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig::default()
+    };
+    cfg.seed = parse_flag(args, "--seed", cfg.seed)?;
+    cfg.requests = parse_flag(args, "--requests", cfg.requests)?;
+    cfg.rate_rps = parse_flag(args, "--rate", cfg.rate_rps)?;
+    cfg.bursty = match flag(args, "--arrivals").as_deref() {
+        Some("poisson") => false,
+        Some("bursty") => true,
+        Some(other) => tsar::bail!("--arrivals expects poisson|bursty, got {other:?}"),
+        None => cfg.bursty,
+    };
+    cfg.on_s = parse_flag(args, "--on", cfg.on_s)?;
+    cfg.off_s = parse_flag(args, "--off", cfg.off_s)?;
+    cfg.conns = parse_flag(args, "--conns", cfg.conns)?;
+    cfg.cancel_rate = parse_flag(args, "--cancel-rate", cfg.cancel_rate)?;
+    cfg.deadline_frac = parse_flag(args, "--deadline-frac", cfg.deadline_frac)?;
+    cfg.workers = parse_flag(args, "--workers", cfg.workers)?;
+    cfg.max_batch = parse_flag(args, "--batch", cfg.max_batch)?;
+    if let Some(cap) = flag(args, "--queue-cap") {
+        let cap = cap.parse().map_err(|_| tsar::err!("--queue-cap expects a number"))?;
+        cfg.queue_cap = Some(cap);
+    }
+    if let Some(model) = flag(args, "--model") {
+        cfg.model = model;
+    }
+    cfg.addr = flag(args, "--addr");
+    let out = flag(args, "--out")
+        .unwrap_or_else(|| format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR")));
+
+    let output = tsar::loadgen::run(&cfg)?;
+    std::fs::write(&out, output.artifact.to_string() + "\n")
+        .with_context(|| format!("cannot write {out}"))?;
+    let c = &output.counts;
+    println!(
+        "[bench-serve] {} requests ({} arrivals @ {:.0} rps, {} conns) in {:.2} s",
+        cfg.requests,
+        cfg.arrivals().name(),
+        cfg.rate_rps,
+        cfg.conns,
+        output.wall_s
+    );
+    println!(
+        "[bench-serve] outcomes: {} completed / {} cancelled / {} rejected / {} failed / \
+         {} http-shed",
+        c.completed, c.cancelled, c.rejected, c.failed, c.http_shed
+    );
+    println!(
+        "[bench-serve] goodput {:.1} tok/s ({} of {} tokens on completed streams), \
+         artifact -> {out}",
+        c.tokens_completed as f64 / output.wall_s.max(f64::MIN_POSITIVE),
+        c.tokens_completed,
+        c.tokens_total
+    );
+    if !output.agree {
+        for m in &output.mismatches {
+            eprintln!("[bench-serve] cross-check mismatch: {m}");
+        }
+        tsar::bail!("client-side counts disagree with the /metrics scrape");
+    }
+    println!("[bench-serve] cross-check: client outcome counts match /metrics exactly");
     Ok(())
 }

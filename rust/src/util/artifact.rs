@@ -1,0 +1,284 @@
+//! Schema validation for the repo-root `BENCH_*.json` perf artifacts.
+//!
+//! Every bench harness that emits a machine-readable artifact
+//! (`BENCH_native_gemm.json` from `benches/native_gemv.rs`,
+//! `BENCH_serve.json` from `tsar-cli bench-serve`) validates its own
+//! output through this module, and `ci/check.sh` re-validates the
+//! checked-in files — so a drifting artifact fails CI with a *named*
+//! field error instead of silently changing shape.
+//!
+//! Both schemas share the same conventions: a `bench` discriminator, a
+//! numeric `schema_version` (the validators here speak v1), a
+//! `measured` flag (placeholder artifacts are checked in with
+//! `measured: false` and all-zero timings; a measured artifact must
+//! carry strictly positive timings), and a `smoke` flag marking
+//! CI-sized runs.
+
+use crate::util::json::Json;
+
+/// Percentile keys every latency block in `BENCH_serve.json` carries.
+pub const LATENCY_STAT_KEYS: [&str; 5] = ["p50", "p95", "p99", "mean", "max"];
+
+/// Outcome classes `BENCH_serve.json` counts (client-side view).
+pub const SERVE_OUTCOME_KEYS: [&str; 5] =
+    ["completed", "cancelled", "rejected", "failed", "http_shed"];
+
+/// Validate any repo bench artifact, dispatching on its `bench` field.
+/// Returns a one-line human summary for the CLI/CI log.
+pub fn validate_any(text: &str) -> crate::Result<String> {
+    let v = parse(text)?;
+    match v.req("bench")?.as_str() {
+        Some("native_gemm") => {
+            let n = check_native_gemm(&v)?;
+            Ok(format!("native_gemm schema v1 OK ({n} entries)"))
+        }
+        Some("serve") => {
+            let n = check_serve(&v)?;
+            Ok(format!("serve schema v1 OK ({n} requests)"))
+        }
+        Some(other) => crate::bail!("unknown bench artifact kind {other:?}"),
+        None => crate::bail!("bench must be a string"),
+    }
+}
+
+/// Schema contract for `BENCH_native_gemm.json`; returns the entry
+/// count.
+pub fn validate_native_gemm(text: &str) -> crate::Result<usize> {
+    check_native_gemm(&parse(text)?)
+}
+
+/// Schema contract for `BENCH_serve.json`; returns the request count.
+pub fn validate_serve(text: &str) -> crate::Result<usize> {
+    check_serve(&parse(text)?)
+}
+
+fn parse(text: &str) -> crate::Result<Json> {
+    Json::parse(text).map_err(|e| crate::err!("artifact is not JSON: {e}"))
+}
+
+fn check_native_gemm(v: &Json) -> crate::Result<usize> {
+    crate::ensure!(
+        v.req("bench")?.as_str() == Some("native_gemm"),
+        "bench name must be \"native_gemm\""
+    );
+    crate::ensure!(
+        v.req("schema_version")?.as_f64() == Some(1.0),
+        "unknown schema_version (validator speaks v1)"
+    );
+    let measured = v.req("measured")? == &Json::Bool(true);
+    v.req("smoke")?;
+    crate::ensure!(v.req("path")?.as_str().is_some(), "path must be a string");
+    crate::ensure!(v.req("threads")?.as_usize().is_some_and(|t| t >= 1), "threads must be >= 1");
+    crate::ensure!(
+        v.req("row_block")?.as_usize().is_some_and(|r| r >= 1),
+        "row_block must be >= 1"
+    );
+    let Some(entries) = v.req("entries")?.as_arr() else {
+        crate::bail!("entries must be an array");
+    };
+    crate::ensure!(!entries.is_empty(), "entries must be non-empty");
+    const ENTRY_NUM_KEYS: [&str; 5] =
+        ["pool_min_s", "scoped_min_s", "amortization_ratio", "eff_weights_gb_s", "mac_per_s"];
+    for (i, e) in entries.iter().enumerate() {
+        for key in ["n", "k", "m"] {
+            crate::ensure!(
+                e.req(key)?.as_usize().is_some_and(|x| x >= 1),
+                "entry {i}: {key} must be a positive integer"
+            );
+        }
+        crate::ensure!(e.req("isa")?.as_str().is_some(), "entry {i}: isa must be a string");
+        for key in ENTRY_NUM_KEYS {
+            let x = e
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| crate::err!("entry {i}: {key} must be a number"))?;
+            crate::ensure!(x.is_finite() && x >= 0.0, "entry {i}: {key} must be finite and >= 0");
+            crate::ensure!(!measured || x > 0.0, "entry {i}: measured artifact has zero {key}");
+        }
+    }
+    Ok(entries.len())
+}
+
+fn check_serve(v: &Json) -> crate::Result<usize> {
+    crate::ensure!(v.req("bench")?.as_str() == Some("serve"), "bench name must be \"serve\"");
+    crate::ensure!(
+        v.req("schema_version")?.as_f64() == Some(1.0),
+        "unknown schema_version (validator speaks v1)"
+    );
+    let measured = v.req("measured")? == &Json::Bool(true);
+    v.req("smoke")?;
+    crate::ensure!(v.req("seed")?.as_f64().is_some(), "seed must be a number");
+    crate::ensure!(v.req("backend")?.as_str().is_some(), "backend must be a string");
+
+    let cfg = v.req("config")?;
+    for key in ["workers", "max_batch", "conns"] {
+        crate::ensure!(
+            cfg.req(key)?.as_usize().is_some_and(|x| x >= 1),
+            "config.{key} must be >= 1"
+        );
+    }
+    let queue_cap = cfg.req("queue_cap")?;
+    crate::ensure!(
+        queue_cap == &Json::Null || queue_cap.as_usize().is_some_and(|x| x >= 1),
+        "config.queue_cap must be null or >= 1"
+    );
+
+    let w = v.req("workload")?;
+    let requests = w
+        .req("requests")?
+        .as_usize()
+        .filter(|&r| r >= 1)
+        .ok_or_else(|| crate::err!("workload.requests must be >= 1"))?;
+    crate::ensure!(w.req("arrivals")?.as_str().is_some(), "workload.arrivals must be a string");
+    crate::ensure!(
+        w.req("rate_rps")?.as_f64().is_some_and(|r| r.is_finite() && r > 0.0),
+        "workload.rate_rps must be finite and > 0"
+    );
+    crate::ensure!(
+        w.req("trace_fingerprint")?.as_str().is_some_and(|f| f.starts_with("0x")),
+        "workload.trace_fingerprint must be a 0x-prefixed hex string"
+    );
+
+    let outcomes = v.req("outcomes")?;
+    let mut outcome_sum = 0usize;
+    for key in SERVE_OUTCOME_KEYS {
+        let x = outcomes
+            .req(key)?
+            .as_usize()
+            .ok_or_else(|| crate::err!("outcomes.{key} must be a non-negative integer"))?;
+        outcome_sum += x;
+    }
+    crate::ensure!(
+        outcome_sum == requests,
+        "outcomes must sum to workload.requests ({outcome_sum} != {requests})"
+    );
+
+    let tokens = v.req("tokens")?;
+    let total = tokens
+        .req("total")?
+        .as_usize()
+        .ok_or_else(|| crate::err!("tokens.total must be a non-negative integer"))?;
+    let completed = tokens
+        .req("completed")?
+        .as_usize()
+        .ok_or_else(|| crate::err!("tokens.completed must be a non-negative integer"))?;
+    crate::ensure!(completed <= total, "tokens.completed must be <= tokens.total");
+
+    let latency = v.req("latency")?;
+    for block in ["ttft_s", "tpot_s", "e2e_s"] {
+        let b = latency.req(block)?;
+        for key in LATENCY_STAT_KEYS {
+            let x = b
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| crate::err!("latency.{block}.{key} must be a number"))?;
+            crate::ensure!(
+                x.is_finite() && x >= 0.0,
+                "latency.{block}.{key} must be finite and >= 0"
+            );
+        }
+    }
+
+    crate::ensure!(
+        v.req("goodput_tok_per_s")?.as_f64().is_some_and(|g| g.is_finite() && g >= 0.0),
+        "goodput_tok_per_s must be finite and >= 0"
+    );
+    crate::ensure!(
+        v.req("shed_rate")?.as_f64().is_some_and(|s| (0.0..=1.0).contains(&s)),
+        "shed_rate must be within [0, 1]"
+    );
+    let wall = v
+        .req("wall_s")?
+        .as_f64()
+        .filter(|w| w.is_finite() && *w >= 0.0)
+        .ok_or_else(|| crate::err!("wall_s must be finite and >= 0"))?;
+    crate::ensure!(!measured || wall > 0.0, "measured artifact has zero wall_s");
+
+    let cross = v.req("cross_check")?;
+    let agree = match cross.req("metrics_agree")? {
+        Json::Bool(b) => *b,
+        _ => crate::bail!("cross_check.metrics_agree must be a bool"),
+    };
+    crate::ensure!(
+        !measured || agree,
+        "measured artifact failed its Prometheus cross-check (cross_check.metrics_agree is false)"
+    );
+    Ok(requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_doc() -> String {
+        let stats = r#"{"p50":0.01,"p95":0.02,"p99":0.03,"mean":0.015,"max":0.04}"#;
+        format!(
+            concat!(
+                r#"{{"bench":"serve","schema_version":1,"measured":true,"smoke":true,"#,
+                r#""seed":7,"backend":"sim","#,
+                r#""config":{{"workers":2,"max_batch":4,"queue_cap":null,"conns":2}},"#,
+                r#""workload":{{"requests":10,"arrivals":"poisson","rate_rps":50,"#,
+                r#""trace_fingerprint":"0xdeadbeefdeadbeef"}},"#,
+                r#""outcomes":{{"completed":7,"cancelled":1,"rejected":2,"failed":0,"http_shed":0}},"#,
+                r#""tokens":{{"total":60,"completed":56}},"#,
+                r#""latency":{{"ttft_s":{s},"tpot_s":{s},"e2e_s":{s}}},"#,
+                r#""goodput_tok_per_s":120.5,"shed_rate":0.2,"wall_s":0.5,"#,
+                r#""cross_check":{{"metrics_agree":true}}}}"#,
+            ),
+            s = stats
+        )
+    }
+
+    #[test]
+    fn serve_schema_accepts_a_complete_artifact() {
+        assert_eq!(validate_serve(&serve_doc()).unwrap(), 10);
+        assert!(validate_any(&serve_doc()).unwrap().contains("serve schema v1 OK"));
+    }
+
+    #[test]
+    fn serve_schema_names_the_missing_field() {
+        let doc = serve_doc().replace(r#""shed_rate":0.2,"#, "");
+        let err = validate_serve(&doc).unwrap_err().to_string();
+        assert!(err.contains("shed_rate"), "got {err:?}");
+    }
+
+    #[test]
+    fn serve_schema_rejects_outcome_sum_mismatch() {
+        let doc = serve_doc().replace(r#""completed":7"#, r#""completed":8"#);
+        let err = validate_serve(&doc).unwrap_err().to_string();
+        assert!(err.contains("sum to workload.requests"), "got {err:?}");
+    }
+
+    #[test]
+    fn serve_schema_rejects_failed_cross_check_when_measured() {
+        let doc = serve_doc().replace(r#""metrics_agree":true"#, r#""metrics_agree":false"#);
+        let err = validate_serve(&doc).unwrap_err().to_string();
+        assert!(err.contains("metrics_agree"), "got {err:?}");
+        // A placeholder (measured: false) may carry an unchecked cross-check.
+        let placeholder = doc
+            .replace(r#""measured":true"#, r#""measured":false"#)
+            .replace(r#""wall_s":0.5"#, r#""wall_s":0"#);
+        validate_serve(&placeholder).unwrap();
+    }
+
+    #[test]
+    fn native_gemm_schema_accepts_the_checked_in_placeholder_shape() {
+        let doc = concat!(
+            r#"{"bench":"native_gemm","schema_version":1,"measured":false,"smoke":true,"#,
+            r#""path":"scalar","threads":2,"row_block":4,"entries":[{"isa":"C2","n":1,"#,
+            r#""k":256,"m":256,"pool_min_s":0,"scoped_min_s":0,"amortization_ratio":0,"#,
+            r#""eff_weights_gb_s":0,"mac_per_s":0}]}"#
+        );
+        assert_eq!(validate_native_gemm(doc).unwrap(), 1);
+        // The same timings with measured:true must fail, field-named.
+        let measured = doc.replace(r#""measured":false"#, r#""measured":true"#);
+        let err = validate_native_gemm(&measured).unwrap_err().to_string();
+        assert!(err.contains("zero pool_min_s"), "got {err:?}");
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_kinds() {
+        let err = validate_any(r#"{"bench":"nope"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown bench artifact kind"), "got {err:?}");
+    }
+}

@@ -1,10 +1,11 @@
 //! Small self-contained utilities: errors, JSON, PRNG, statistics,
-//! table printing.
+//! table printing, bench-artifact schema validation.
 //!
 //! The build environment is offline with a minimal crate cache (no serde,
 //! rand, criterion, anyhow), so these are in-tree. Each is deliberately
 //! tiny and fully unit-tested.
 
+pub mod artifact;
 pub mod error;
 pub mod json;
 pub mod rng;

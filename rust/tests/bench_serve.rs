@@ -1,0 +1,151 @@
+//! Integration tests of the open-loop load-generation subsystem
+//! (`loadgen`, DESIGN.md §5): full bench runs against the in-process
+//! serving stack, seeded reproducibility of the recorded trace
+//! identity, and deterministic queue-cap shedding under a deliberately
+//! slow backend — with every run's client-side counts reconciled
+//! against the engine's `/metrics` scrape.
+
+use std::time::Duration;
+
+use tsar::config::platforms::Platform;
+use tsar::loadgen::{self, BenchConfig, BenchOutput};
+use tsar::runtime::{
+    Backend, BatchItem, ModelConfig, SimBackend, SimBackendConfig, SimKvCache, Step,
+};
+use tsar::util::error::Result;
+use tsar::util::json::Json;
+
+fn sim() -> SimBackend {
+    SimBackend::by_name(
+        "BitNet-2B-4T",
+        Platform::workstation(),
+        SimBackendConfig { prefill_len: 16, max_seq: 64, threads: 0, seed: 3 },
+    )
+    .expect("zoo model")
+}
+
+/// A backend that spends real wall time per step, so the admission
+/// queue actually backs up and the cap sheds deterministically.
+struct SlowBackend {
+    inner: SimBackend,
+    step: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Cache = SimKvCache;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+
+    fn prefill(&self, tokens: &[i32], prompt_len: i32) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.prefill(tokens, prompt_len)
+    }
+
+    fn decode(&self, token: i32, pos: i32, cache: &SimKvCache) -> Result<Step<SimKvCache>> {
+        std::thread::sleep(self.step);
+        self.inner.decode(token, pos, cache)
+    }
+
+    fn decode_batch(
+        &self,
+        reqs: &[BatchItem<'_, SimKvCache>],
+    ) -> Result<Vec<Step<SimKvCache>>> {
+        std::thread::sleep(self.step);
+        self.inner.decode_batch(reqs)
+    }
+}
+
+fn recorded_fingerprint(out: &BenchOutput) -> String {
+    out.artifact
+        .get("workload")
+        .and_then(|w| w.get("trace_fingerprint"))
+        .and_then(Json::as_str)
+        .expect("artifact records the trace fingerprint")
+        .to_string()
+}
+
+#[test]
+fn fixed_seed_reproduces_the_workload_trace() {
+    let cfg = BenchConfig { requests: 8, ..BenchConfig::smoke() };
+
+    // The planned trace is a pure function of the spec.  (The bench
+    // itself draws prompt tokens from the zoo model's real vocab.)
+    let vocab = sim().config().vocab;
+    let a = cfg.workload_spec(vocab).build().unwrap();
+    let b = cfg.workload_spec(vocab).build().unwrap();
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.requests, b.requests);
+
+    // Two full measured runs at the same seed replay the identical
+    // workload and record the same trace identity in their artifacts.
+    let run1 = loadgen::run(&cfg).unwrap();
+    let run2 = loadgen::run(&cfg).unwrap();
+    assert!(run1.agree, "run1 cross-check mismatches: {:?}", run1.mismatches);
+    assert!(run2.agree, "run2 cross-check mismatches: {:?}", run2.mismatches);
+    assert_eq!(recorded_fingerprint(&run1), recorded_fingerprint(&run2));
+    assert_eq!(recorded_fingerprint(&run1), a.fingerprint_hex());
+}
+
+#[test]
+fn smoke_run_cross_checks_against_the_scrape() {
+    let cfg = BenchConfig { requests: 12, ..BenchConfig::smoke() };
+    let out = loadgen::run(&cfg).unwrap();
+
+    // The acceptance bar: every outcome the client observed is matched
+    // by the engine's own /metrics deltas, exactly.
+    assert!(out.agree, "cross-check mismatches: {:?}", out.mismatches);
+    assert!(out.mismatches.is_empty());
+
+    // The artifact satisfies its schema and mirrors the client tally.
+    let n = tsar::util::artifact::validate_serve(&out.artifact.to_string()).unwrap();
+    assert_eq!(n, 12);
+    let outcomes = out.artifact.get("outcomes").expect("outcomes block");
+    for (key, want) in [
+        ("completed", out.counts.completed),
+        ("cancelled", out.counts.cancelled),
+        ("rejected", out.counts.rejected),
+        ("failed", out.counts.failed),
+        ("http_shed", out.counts.http_shed),
+    ] {
+        assert_eq!(outcomes.get(key).and_then(Json::as_f64), Some(want as f64), "{key}");
+    }
+    let tokens = out.artifact.get("tokens").expect("tokens block");
+    assert_eq!(tokens.get("total").and_then(Json::as_f64), Some(out.counts.tokens_total as f64));
+    assert_eq!(out.artifact.get("smoke"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn a_capped_queue_under_slow_service_sheds_with_429() {
+    // Twelve near-simultaneous arrivals over three connections into a
+    // single slow lane with one queue slot: most submissions must find
+    // the queue full and come back as HTTP 429 — and the engine's
+    // failed/rejection counters must account for every one of them.
+    let cfg = BenchConfig {
+        requests: 12,
+        rate_rps: 10_000.0,
+        bursty: false,
+        conns: 3,
+        workers: 1,
+        max_batch: 1,
+        queue_cap: Some(1),
+        cancel_rate: 0.5,
+        deadline_frac: 0.5,
+        smoke: true,
+        ..BenchConfig::default()
+    };
+    let slow = SlowBackend { inner: sim(), step: Duration::from_millis(20) };
+    let out = loadgen::run_with_backend(&cfg, slow, "slow:BitNet-2B-4T").unwrap();
+
+    assert!(out.counts.rejected > 0, "no 429 sheds under a full queue: {:?}", out.counts);
+    assert_eq!(out.counts.http_shed, 0, "503s would mean the client overran the stream cap");
+    assert!(out.agree, "cross-check mismatches: {:?}", out.mismatches);
+    tsar::util::artifact::validate_serve(&out.artifact.to_string()).unwrap();
+    let shed = out.artifact.get("shed_rate").and_then(Json::as_f64).unwrap();
+    assert!(shed > 0.0 && shed <= 1.0, "shed_rate {shed}");
+}

@@ -144,6 +144,41 @@ fn dechunk(payload: &str) -> String {
     out
 }
 
+/// Open a streaming generate request and hand back the raw socket
+/// (the caller reads the chunked NDJSON off it).
+fn open_stream(addr: SocketAddr, body: &str) -> TcpStream {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    conn
+}
+
+/// Read raw lines until the first NDJSON event line and return it
+/// (chunk framing and header lines never contain `"event":`).
+fn read_until_event(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("stream read");
+        assert!(n > 0, "stream closed before any event line");
+        if line.contains("\"event\":") {
+            return line;
+        }
+    }
+}
+
+/// The engine request id carried by every NDJSON event line.
+fn extract_id(line: &str) -> u64 {
+    let json = Json::parse(line.trim()).expect("event line is JSON");
+    json.get("id").and_then(Json::as_f64).expect("event line carries the id") as u64
+}
+
 /// The terminal event's `tokens` array, as i32.
 fn terminal_tokens(line: &Json) -> Vec<i32> {
     line.get("tokens")
@@ -408,6 +443,99 @@ fn lane_death_mid_stream_still_ends_with_a_terminal_line() {
     let err = handle.shutdown().unwrap_err();
     assert!(err.to_string().contains("injected decode panic"), "got {err}");
     assert_eq!(aggregator.finish(), 0, "the dead lane never retired the session");
+}
+
+#[test]
+fn queue_cap_sheds_with_429_and_books_a_rejection() {
+    // One slow lane, one KV slot, one queue slot: the first stream
+    // occupies the lane, the second parks in the queue, and the third
+    // submission must be shed with HTTP 429 — booked engine-side as a
+    // failed retirement *and* a rejection.
+    let slow = SlowBackend { inner: backend(), step: Duration::from_millis(100) };
+    let scfg = ServerConfig { max_batch: 1, kv_slots: 1, workers: 1, queue_cap: Some(1) };
+    let (handle, http, aggregator) = start_http(slow, scfg);
+    let addr = http.local_addr();
+
+    // Wait for the first stream's prefill line, so it is off the queue
+    // and holding the only lane.
+    let s1 = open_stream(addr, r#"{"prompt":[1,2,3],"max_new_tokens":40}"#);
+    let mut r1 = BufReader::new(s1);
+    read_until_event(&mut r1);
+
+    // The second stream fills the single queue slot.
+    let s2 = open_stream(addr, r#"{"prompt":[4,5,6],"max_new_tokens":40}"#);
+    std::thread::sleep(Duration::from_millis(300));
+
+    let (status, _head, body) =
+        http_request(addr, "POST", "/v1/generate", r#"{"prompt":[7,8],"max_new_tokens":4}"#);
+    assert!(status.contains("429"), "got {status}");
+    assert!(body.contains("queue full (queue_cap 1)"), "got {body}");
+
+    // Dropping both live streams disconnect-cancels them; wait until
+    // the rejection and both cancellations land on the scrape.
+    drop(r1);
+    drop(s2);
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let (status, _head, scrape) = http_request(addr, "GET", "/metrics", "");
+        assert!(status.contains("200"), "got {status}");
+        if scrape.contains("tsar_rejections_total 1") && scrape.contains("tsar_queue_depth 0") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "shed never hit the scrape:\n{scrape}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.rejected, 1, "the full queue shed exactly one submission");
+    assert_eq!(report.failed, 1, "the shed books as a failed retirement");
+    assert_eq!(report.cancelled, 2, "both dropped streams disconnect-cancelled");
+    assert_eq!(aggregator.finish(), 3);
+}
+
+#[test]
+fn cancel_route_cancels_a_live_stream() {
+    let slow = SlowBackend { inner: backend(), step: Duration::from_millis(100) };
+    let (handle, http, aggregator) = start_http(slow, cfg(1, 1, 1));
+    let addr = http.local_addr();
+
+    // Start a long stream and learn its engine id from the first event
+    // line (every NDJSON line carries it).
+    let s = open_stream(addr, r#"{"prompt":[5,6,7],"max_new_tokens":40}"#);
+    let mut reader = BufReader::new(s);
+    let first = read_until_event(&mut reader);
+    let id = extract_id(&first);
+
+    // Unknown ids answer 404 without touching the live session.
+    let (status, _head, _body) = http_request(addr, "POST", "/v1/cancel", r#"{"id": 999999}"#);
+    assert!(status.contains("404"), "got {status}");
+
+    // Cancelling the real id over a *different* connection acks 200
+    // and the original stream ends with a cancelled terminal line.
+    let body = format!("{{\"id\": {id}}}");
+    let (status, _head, reply) = http_request(addr, "POST", "/v1/cancel", &body);
+    assert!(status.contains("200"), "got {status}");
+    assert_eq!(reply, format!("cancelling {id}\n"));
+
+    let mut line = String::new();
+    let saw_cancelled = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("stream read") == 0 {
+            break false;
+        }
+        if line.contains("\"event\":\"cancelled\"") {
+            break true;
+        }
+    };
+    assert!(saw_cancelled, "stream never delivered the cancelled terminal");
+
+    drop(reader);
+    let report = finish(handle, http).unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.cancelled, 1, "the cancel route retired the session as cancelled");
+    assert!(report.total_tokens < 40, "cancel must land well before the token budget");
+    assert_eq!(aggregator.finish(), 1);
 }
 
 #[test]
