@@ -79,6 +79,27 @@ TSAR_NATIVE_FORCE_SCALAR=1 cargo run --release --bin tsar-cli -- \
 cargo run --release --bin tsar-cli -- bench-serve --validate /tmp/BENCH_serve_scalar.json
 
 echo
+echo "== calibrate: offline fixture fit + profile artifact schema check =="
+# The measure->model loop without the measuring: --emit-fixture writes
+# synthetic measurements generated from a *known* perturbed profile,
+# --fixture fits the platform constants back from them and hard-fails
+# unless every embedded truth constant is recovered within tolerance
+# (and held-out predictions stay bounded).  The written
+# PLATFORM_*.json must validate against the profile schema, and a
+# simulator run must accept it as --platform input.
+cargo run --release --bin tsar-cli -- calibrate --emit-fixture /tmp/tsar_calib_fixture.json
+cargo run --release --bin tsar-cli -- calibrate --fixture /tmp/tsar_calib_fixture.json \
+  --out /tmp/PLATFORM_ci.json
+cargo run --release --bin tsar-cli -- calibrate --validate /tmp/PLATFORM_ci.json
+cargo run --release --bin tsar-cli -- simulate --shape 1x2560x6912 \
+  --platform /tmp/PLATFORM_ci.json
+# The fixture path is model-pure (no native kernels, no wall-clock), so
+# the forced-scalar run must produce a byte-identical profile.
+TSAR_NATIVE_FORCE_SCALAR=1 cargo run --release --bin tsar-cli -- \
+  calibrate --fixture /tmp/tsar_calib_fixture.json --out /tmp/PLATFORM_ci_scalar.json
+cmp /tmp/PLATFORM_ci.json /tmp/PLATFORM_ci_scalar.json
+
+echo
 echo "== clippy (required) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

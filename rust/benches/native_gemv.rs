@@ -33,7 +33,7 @@ use std::collections::BTreeMap;
 use tsar::config::IsaConfig;
 use tsar::kernels::native::{NativeGemv, GEMM_ROW_BLOCK};
 use tsar::sim::GemmShape;
-use tsar::util::artifact::validate_native_gemm as validate;
+use tsar::util::artifact::validate_any;
 use tsar::util::json::Json;
 use tsar::util::rng::Rng;
 use tsar::util::stats::time_it;
@@ -51,8 +51,8 @@ fn main() -> tsar::Result<()> {
     if let Some(path) = flag_value(&args, "--validate") {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| tsar::err!("cannot read {path}: {e}"))?;
-        let n = validate(&text)?;
-        println!("[native] {path}: schema v1 OK ({n} entries)");
+        let summary = validate_any(&text)?;
+        println!("[native] {path}: {summary}");
         return Ok(());
     }
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -142,7 +142,7 @@ fn main() -> tsar::Result<()> {
         ("entries", Json::Arr(entries)),
     ]);
     let text = artifact.to_string();
-    validate(&text)?; // the writer must satisfy its own schema
+    tsar::util::artifact::validate_native_gemm(&text)?; // the writer must satisfy its own schema
     std::fs::write(&out_path, text + "\n").map_err(|e| tsar::err!("cannot write {out_path}: {e}"))?;
     println!("[native] wrote {out_path}");
     println!("[native] harness wall time: {:.2}s", t0.elapsed().as_secs_f64());

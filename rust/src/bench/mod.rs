@@ -160,7 +160,7 @@ pub fn fig2d() -> Result<f64> {
 
 pub struct Fig8Row {
     pub model: String,
-    pub platform: &'static str,
+    pub platform: String,
     pub prefill_tsar_s: f64,
     pub prefill_tl2_s: f64,
     pub decode_tsar_tps: f64,
@@ -201,14 +201,19 @@ pub fn fig8() -> Vec<Fig8Row> {
             ]);
             rows.push(Fig8Row {
                 model: spec.name.to_string(),
-                platform: plat.kind.name(),
+                platform: plat.name.clone(),
                 prefill_tsar_s: pre_tsar,
                 prefill_tl2_s: pre_tl2,
                 decode_tsar_tps: dec_tsar,
                 decode_tl2_tps: dec_tl2,
             });
         }
-        println!("-- {} ({} threads) --", plat.kind.name(), plat.threads);
+        println!(
+            "-- {} [{}] ({} threads) --",
+            plat.name,
+            plat.provenance_label(),
+            plat.threads
+        );
         t.print();
         println!(
             "geomean prefill speedup {:.1}x | geomean decode speedup {:.1}x\n",
@@ -263,7 +268,7 @@ pub fn fig9() -> Vec<Fig9Row> {
 // ---------------------------------------------------------------------------
 
 pub struct Fig10Point {
-    pub platform: &'static str,
+    pub platform: String,
     pub shape: GemmShape,
     pub threads: usize,
     pub tsar_s: f64,
@@ -316,7 +321,7 @@ pub fn fig10() -> Vec<Fig10Point> {
                     format!("{:.2}x", base_tsar / tsar.seconds),
                 ]);
                 out.push(Fig10Point {
-                    platform: plat.kind.name(),
+                    platform: plat.name.clone(),
                     shape,
                     threads: tn,
                     tsar_s: tsar.seconds,
@@ -324,8 +329,9 @@ pub fn fig10() -> Vec<Fig10Point> {
                 });
             }
             println!(
-                "-- {} {}x{}x{} --",
-                plat.kind.name(),
+                "-- {} [{}] {}x{}x{} --",
+                plat.name,
+                plat.provenance_label(),
                 shape.n,
                 shape.k,
                 shape.m
@@ -348,8 +354,8 @@ pub fn table1() {
     for kind in ALL_PLATFORMS {
         let p = Platform::by_kind(kind);
         t.row(vec![
-            p.kind.name().to_string(),
-            p.cpu_model.to_string(),
+            p.name.clone(),
+            p.cpu_model.clone(),
             p.cores.to_string(),
             format!("{:.1} GHz", p.freq_ghz),
             fmt_bytes(p.l1d.size_bytes as f64),
@@ -389,6 +395,14 @@ pub fn table2() {
 
 pub fn table3() -> Result<()> {
     println!("== Table III: cross-platform decode throughput & energy ==");
+    let profiles: Vec<String> = ALL_PLATFORMS
+        .iter()
+        .map(|&kind| {
+            let p = Platform::by_kind(kind);
+            format!("{} [{}]", p.name, p.provenance_label())
+        })
+        .collect();
+    println!("platform profiles: {}", profiles.join(", "));
     for name in ["Llama-b1.58-8B", "Falcon3-b1.58-10B"] {
         let spec = crate::model::zoo::by_name(name)
             .with_context(|| format!("Table III requested unknown model {name:?}"))?;
@@ -465,7 +479,7 @@ pub fn llc_report() {
         let (k, _) = select_tsar_kernel(shape, &plat, plat.threads);
         let tsar = simulate(&k.profile(shape, &plat, plat.threads), &plat, plat.threads);
         t.row(vec![
-            plat.kind.name().to_string(),
+            plat.name.clone(),
             format!("{}x{}x{}", shape.n, shape.k, shape.m),
             format!("{:.0}%", tl2.llc_hit_rate * 100.0),
             format!("{:.0}%", tsar.llc_hit_rate * 100.0),
@@ -537,7 +551,7 @@ mod tests {
     fn row(platform: &str, tps: f64, jpt: f64) -> energy::CrossPlatformRow {
         energy::CrossPlatformRow {
             platform: platform.to_string(),
-            node: "test",
+            node: "test".into(),
             tokens_per_s: tps,
             joules_per_token: jpt,
         }

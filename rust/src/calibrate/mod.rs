@@ -1,0 +1,623 @@
+//! The measure → model loop: fit a [`Platform`] profile's free
+//! constants to wall-clock measured on *this* host.
+//!
+//! The simulator's platform constants come from the paper's Table I.
+//! On any other machine they are a guess.  `tsar-cli calibrate` closes
+//! the loop: it times the native ternary GEMM kernels across a
+//! shape × thread grid ([`grid`]), then fits the four free constants of
+//! the timing model — sustained DRAM efficiency plus the
+//! [`ModelConstants`] triple (SIMD issue scale, latency scale,
+//! per-thread DRAM contention) — by coordinate descent on the mean
+//! squared *log* error between predicted and measured seconds.  A
+//! quarter of the grid is held out of the fit; the worst held-out
+//! relative error ships inside the written profile's provenance, so a
+//! calibrated `PLATFORM_host.json` records how much to trust itself.
+//!
+//! The fitter itself is deterministic and model-pure: given the same
+//! measurement list it always returns the same constants, with no
+//! wall-clock or RNG dependence.  That makes it testable offline — a
+//! [`Fixture`] is a JSON document of synthetic measurements generated
+//! from a *known* perturbed profile ([`synthesize`]), and the in-tree
+//! round-trip test (plus `calibrate --fixture` in CI) asserts the fit
+//! recovers each embedded truth constant within [`check_recovery`]'s
+//! tolerances.
+//!
+//! Grid regimes matter for identifiability: n = 1 tall-K shapes are
+//! DRAM-streaming-bound (pin `dram.efficiency`), large-n shapes are
+//! compute-bound (pin `issue_scale`), small working sets exercise the
+//! cache-latency terms (`latency_scale`), and the single- vs
+//! many-thread columns separate bandwidth from `thread_contention`.
+
+use crate::config::{FitProvenance, IsaConfig, ModelConstants, Platform, Provenance};
+use crate::kernels::native::NativeGemv;
+use crate::kernels::select_tsar_kernel;
+use crate::sim::GemmShape;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::time_it;
+use crate::Result;
+
+/// Relative tolerance on recovered DRAM efficiency.
+pub const TOL_EFF_REL: f64 = 0.10;
+/// Relative tolerance on recovered SIMD issue scale.
+pub const TOL_ISSUE_REL: f64 = 0.10;
+/// Relative tolerance on recovered latency scale (weakly identified —
+/// latency terms are a minor fraction of streaming-kernel time).
+pub const TOL_LATENCY_REL: f64 = 0.35;
+/// Absolute tolerance on recovered thread contention.
+pub const TOL_CONTENTION_ABS: f64 = 0.08;
+/// Bound on the worst held-out relative prediction error for a fit
+/// from model-consistent (fixture) measurements.
+pub const TOL_HOLDOUT_REL: f64 = 0.10;
+
+/// One wall-clock observation: the native GEMM at `shape` on
+/// `threads` pool lanes took `seconds` (min over repeats).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub shape: GemmShape,
+    pub threads: usize,
+    pub seconds: f64,
+}
+
+/// The shape × thread calibration grid.  `smoke` shrinks it to
+/// CI-sized shapes; `max_threads` clamps the thread column to the
+/// host (or modeled platform) core count.
+pub fn grid(smoke: bool, max_threads: usize) -> Vec<(GemmShape, usize)> {
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(1, 2560, 2560), (1, 2560, 6912), (16, 1024, 1024)]
+    } else {
+        &[
+            (1, 8192, 32768),  // DRAM-streaming-bound decode GEMV
+            (1, 2560, 6912),   // BitNet-2B up-projection
+            (1, 6912, 2560),   // BitNet-2B down-projection
+            (64, 4096, 4096),  // compute-bound batched GEMM
+            (256, 2048, 2048), // prefill-class GEMM
+            (1, 2560, 2560),   // cache-resident small GEMV
+        ]
+    };
+    let mut threads: Vec<usize> =
+        if smoke { vec![1, 2] } else { vec![1, 4, 16] };
+    for t in &mut threads {
+        *t = (*t).clamp(1, max_threads.max(1));
+    }
+    threads.dedup();
+    let mut g = Vec::new();
+    for &(n, k, m) in shapes {
+        for &t in &threads {
+            g.push((GemmShape::new(n, k, m), t));
+        }
+    }
+    g
+}
+
+/// One-line grid description for provenance records.
+pub fn grid_desc(g: &[(GemmShape, usize)], smoke: bool) -> String {
+    format!(
+        "{} shape/thread points ({})",
+        g.len(),
+        if smoke { "smoke" } else { "full" }
+    )
+}
+
+/// Model-predicted seconds for one grid point under a candidate
+/// profile — the same selector + simulator path every report uses.
+pub fn predict(prof: &Platform, shape: GemmShape, threads: usize) -> f64 {
+    let (_, r) = select_tsar_kernel(shape, prof, threads);
+    r.seconds
+}
+
+/// Time the native GEMM kernel over the grid.  Weights are generated
+/// and packed once per shape (packing is thread-independent); each
+/// grid point reports the min over repeats.  Returns the measurements
+/// plus the executed kernel path name ("avx2" / "scalar") for the
+/// host fingerprint.
+pub fn measure(
+    isa: IsaConfig,
+    grid: &[(GemmShape, usize)],
+    min_runs: usize,
+    min_secs: f64,
+) -> Result<(Vec<Measurement>, &'static str)> {
+    let mut by_shape: Vec<(GemmShape, Vec<usize>)> = Vec::new();
+    for &(s, t) in grid {
+        match by_shape.iter_mut().find(|(s2, _)| *s2 == s) {
+            Some(e) => e.1.push(t),
+            None => by_shape.push((s, vec![t])),
+        }
+    }
+    let mut rng = Rng::new(0xCA11B7A7E);
+    let mut meas = Vec::new();
+    let mut path_name = "scalar";
+    for (shape, thread_list) in by_shape {
+        let w = rng.ternary_matrix(shape.m, shape.k, 1.0 / 3.0);
+        let acts = rng.int8_acts(shape.n * shape.k);
+        let packed = NativeGemv::new(isa)?.pack(&w, shape.m, shape.k)?;
+        drop(w);
+        let mut out = vec![0i32; shape.n * shape.m];
+        for threads in thread_list {
+            let gemv = NativeGemv::new(isa)?.with_threads(threads)?;
+            path_name = gemv.path().name();
+            let (_, min_s, _) = time_it(
+                || gemv.gemm(&acts, &packed, shape.n, &mut out).expect("gemm"),
+                min_runs,
+                min_secs,
+            );
+            meas.push(Measurement { shape, threads, seconds: min_s });
+        }
+    }
+    Ok((meas, path_name))
+}
+
+// -- Fitting ---------------------------------------------------------------
+
+/// Free-parameter vector: [dram_efficiency, issue_scale,
+/// latency_scale, thread_contention].
+#[derive(Debug, Clone, Copy)]
+struct Params([f64; 4]);
+
+/// Search box per parameter (efficiency capped at the physical 1.0).
+const RANGES: [(f64, f64); 4] =
+    [(0.05, 1.0), (0.25, 4.0), (0.25, 6.0), (0.0, 1.0)];
+
+impl Params {
+    fn of(prof: &Platform) -> Params {
+        Params([
+            prof.dram_efficiency,
+            prof.model.issue_scale,
+            prof.model.latency_scale,
+            prof.model.thread_contention,
+        ])
+    }
+
+    fn apply(&self, base: &Platform) -> Platform {
+        let mut p = base.clone();
+        p.dram_efficiency = self.0[0];
+        p.model = ModelConstants {
+            issue_scale: self.0[1],
+            latency_scale: self.0[2],
+            thread_contention: self.0[3],
+        };
+        p
+    }
+}
+
+fn loss(base: &Platform, p: Params, train: &[Measurement]) -> f64 {
+    let prof = p.apply(base);
+    let sum: f64 = train
+        .iter()
+        .map(|m| {
+            let e = (predict(&prof, m.shape, m.threads) / m.seconds).ln();
+            e * e
+        })
+        .sum();
+    sum / train.len() as f64
+}
+
+/// Coordinate descent: per round, scan each parameter over a bracket
+/// centred on the incumbent, halving the bracket each round.  Round 1
+/// brackets span the whole range, so the start point only matters for
+/// tie-breaking; later rounds refine.  Deterministic.
+fn descend(
+    base: &Platform,
+    train: &[Measurement],
+    start: Params,
+    width_frac: f64,
+) -> (Params, f64) {
+    let mut p = start;
+    let mut best = loss(base, p, train);
+    let mut width: [f64; 4] = std::array::from_fn(|c| {
+        (RANGES[c].1 - RANGES[c].0) * width_frac
+    });
+    for round in 0..12 {
+        let mut improved = false;
+        for c in 0..4 {
+            let lo = (p.0[c] - width[c] / 2.0).max(RANGES[c].0);
+            let hi = (p.0[c] + width[c] / 2.0).min(RANGES[c].1);
+            const STEPS: usize = 12;
+            let mut cand = p;
+            for i in 0..=STEPS {
+                cand.0[c] = lo + (hi - lo) * i as f64 / STEPS as f64;
+                let l = loss(base, cand, train);
+                if l + 1e-15 < best {
+                    best = l;
+                    p.0[c] = cand.0[c];
+                    improved = true;
+                }
+            }
+            width[c] /= 2.0;
+        }
+        if best < 1e-16 || (!improved && round >= 4) {
+            break;
+        }
+    }
+    (p, best)
+}
+
+/// A completed fit: the calibrated profile (provenance filled in) and
+/// its residuals.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub profile: Platform,
+    pub train_rmse_log: f64,
+    pub holdout_max_rel_err: f64,
+}
+
+/// Fit the free constants to `meas`, holding out every fourth
+/// measurement for validation.  `host` is the fingerprint recorded in
+/// the calibrated provenance; `grid_label` describes the grid.
+pub fn fit(
+    base: &Platform,
+    meas: &[Measurement],
+    host: &str,
+    grid_label: &str,
+) -> Result<FitReport> {
+    crate::ensure!(!meas.is_empty(), "calibrate: no measurements to fit");
+    for m in meas {
+        crate::ensure!(
+            m.seconds.is_finite() && m.seconds > 0.0,
+            "calibrate: non-positive measurement for {}x{}x{} @ {} threads",
+            m.shape.n,
+            m.shape.k,
+            m.shape.m,
+            m.threads
+        );
+    }
+    let (train, holdout): (Vec<Measurement>, Vec<Measurement>) = if meas.len() >= 8 {
+        let train: Vec<_> =
+            meas.iter().enumerate().filter(|(i, _)| i % 4 != 3).map(|(_, m)| *m).collect();
+        let holdout: Vec<_> =
+            meas.iter().enumerate().filter(|(i, _)| i % 4 == 3).map(|(_, m)| *m).collect();
+        (train, holdout)
+    } else {
+        // Too few points to spare any: validate on the training set.
+        (meas.to_vec(), meas.to_vec())
+    };
+
+    // Multi-start: the base profile's own constants and a neutral
+    // mid-box point, each descended over the full range, then the
+    // winner polished with a narrow restart.
+    let starts = [Params::of(base), Params([0.5, 1.0, 1.0, 0.1])];
+    let mut best: Option<(Params, f64)> = None;
+    for s in starts {
+        let (p, l) = descend(base, &train, s, 1.0);
+        if best.map(|(_, bl)| l < bl).unwrap_or(true) {
+            best = Some((p, l));
+        }
+    }
+    let (p0, l0) = best.expect("at least one start");
+    let (p, l) = descend(base, &train, p0, 0.25);
+    let (p, l) = if l < l0 { (p, l) } else { (p0, l0) };
+
+    let fitted = p.apply(base);
+    let holdout_max_rel_err = holdout
+        .iter()
+        .map(|m| (predict(&fitted, m.shape, m.threads) / m.seconds - 1.0).abs())
+        .fold(0.0, f64::max);
+    let train_rmse_log = l.sqrt();
+
+    let mut profile = fitted;
+    profile.provenance = Provenance {
+        source: "calibrated".into(),
+        host: Some(host.to_string()),
+        fit: Some(FitProvenance {
+            train_rmse_log,
+            holdout_max_rel_err,
+            grid: grid_label.to_string(),
+            measurements: meas.len(),
+        }),
+    };
+    profile.validate()?;
+    Ok(FitReport { profile, train_rmse_log, holdout_max_rel_err })
+}
+
+// -- Fixtures --------------------------------------------------------------
+
+/// Ground-truth constants a synthetic fixture embeds so the fit can be
+/// cross-checked.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Truth {
+    pub dram_efficiency: f64,
+    pub model: ModelConstants,
+}
+
+impl Truth {
+    /// The perturbation the CI fixture uses: every free constant moved
+    /// well off its Table I/identity value, all inside the fitter's
+    /// search ranges.
+    pub fn example() -> Truth {
+        Truth {
+            dram_efficiency: 0.70,
+            model: ModelConstants {
+                issue_scale: 0.8,
+                latency_scale: 1.5,
+                thread_contention: 0.12,
+            },
+        }
+    }
+}
+
+/// An offline calibration input: measurements (synthetic or replayed)
+/// plus the base platform they perturb and, for synthetic fixtures,
+/// the embedded truth constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fixture {
+    /// Base profile name (`workstation` / `laptop` / `mobile`).
+    pub base: String,
+    pub truth: Option<Truth>,
+    pub measurements: Vec<Measurement>,
+}
+
+/// Generate a deterministic synthetic fixture: full grid, seconds
+/// predicted by the model itself under `truth` constants — no timing,
+/// no RNG, so the fit's global optimum is exactly `truth`.
+pub fn synthesize(base: &Platform, truth: &Truth) -> Fixture {
+    let prof = Params([
+        truth.dram_efficiency,
+        truth.model.issue_scale,
+        truth.model.latency_scale,
+        truth.model.thread_contention,
+    ])
+    .apply(base);
+    let g = grid(false, base.cores);
+    let measurements = g
+        .iter()
+        .map(|&(shape, threads)| Measurement {
+            shape,
+            threads,
+            seconds: predict(&prof, shape, threads),
+        })
+        .collect();
+    Fixture {
+        base: base.name.to_lowercase(),
+        truth: Some(*truth),
+        measurements,
+    }
+}
+
+/// Assert the fitted constants match the fixture's embedded truth
+/// within the documented tolerances, and that held-out predictions
+/// stay bounded.  Errors name the violated constant.
+pub fn check_recovery(report: &FitReport, truth: &Truth) -> Result<()> {
+    let p = &report.profile;
+    let rel = |fitted: f64, t: f64| (fitted / t - 1.0).abs();
+    crate::ensure!(
+        rel(p.dram_efficiency, truth.dram_efficiency) <= TOL_EFF_REL,
+        "calibrate: dram efficiency {:.4} missed truth {:.4} (> {:.0}% rel)",
+        p.dram_efficiency,
+        truth.dram_efficiency,
+        TOL_EFF_REL * 100.0
+    );
+    crate::ensure!(
+        rel(p.model.issue_scale, truth.model.issue_scale) <= TOL_ISSUE_REL,
+        "calibrate: issue scale {:.4} missed truth {:.4} (> {:.0}% rel)",
+        p.model.issue_scale,
+        truth.model.issue_scale,
+        TOL_ISSUE_REL * 100.0
+    );
+    crate::ensure!(
+        rel(p.model.latency_scale, truth.model.latency_scale) <= TOL_LATENCY_REL,
+        "calibrate: latency scale {:.4} missed truth {:.4} (> {:.0}% rel)",
+        p.model.latency_scale,
+        truth.model.latency_scale,
+        TOL_LATENCY_REL * 100.0
+    );
+    crate::ensure!(
+        (p.model.thread_contention - truth.model.thread_contention).abs()
+            <= TOL_CONTENTION_ABS,
+        "calibrate: thread contention {:.4} missed truth {:.4} (> {:.2} abs)",
+        p.model.thread_contention,
+        truth.model.thread_contention,
+        TOL_CONTENTION_ABS
+    );
+    crate::ensure!(
+        report.holdout_max_rel_err <= TOL_HOLDOUT_REL,
+        "calibrate: held-out prediction error {:.4} exceeds {:.2}",
+        report.holdout_max_rel_err,
+        TOL_HOLDOUT_REL
+    );
+    Ok(())
+}
+
+impl Fixture {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("fixture".into(), Json::Str("tsar_calibration".into())),
+            ("schema_version".into(), Json::Num(1.0)),
+            ("base".into(), Json::Str(self.base.clone())),
+            (
+                "truth".into(),
+                match &self.truth {
+                    Some(t) => Json::Obj(
+                        [
+                            ("dram_efficiency".to_string(), Json::Num(t.dram_efficiency)),
+                            ("issue_scale".to_string(), Json::Num(t.model.issue_scale)),
+                            ("latency_scale".to_string(), Json::Num(t.model.latency_scale)),
+                            (
+                                "thread_contention".to_string(),
+                                Json::Num(t.model.thread_contention),
+                            ),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    ),
+                    None => Json::Null,
+                },
+            ),
+        ];
+        let meas: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                Json::Obj(
+                    [
+                        ("n".to_string(), Json::Num(m.shape.n as f64)),
+                        ("k".to_string(), Json::Num(m.shape.k as f64)),
+                        ("m".to_string(), Json::Num(m.shape.m as f64)),
+                        ("threads".to_string(), Json::Num(m.threads as f64)),
+                        ("seconds".to_string(), Json::Num(m.seconds)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        pairs.push(("measurements".into(), Json::Arr(meas)));
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    pub fn parse(text: &str) -> Result<Fixture> {
+        let v = Json::parse(text)
+            .map_err(|e| crate::err!("calibration fixture: {e}"))?;
+        crate::ensure!(
+            v.get("fixture").and_then(Json::as_str) == Some("tsar_calibration"),
+            "calibration fixture: missing \"fixture\": \"tsar_calibration\" discriminator"
+        );
+        crate::ensure!(
+            v.req("schema_version")?.as_f64() == Some(1.0),
+            "calibration fixture: unsupported schema_version"
+        );
+        let base = v
+            .req("base")?
+            .as_str()
+            .ok_or_else(|| crate::err!("calibration fixture: base must be a string"))?
+            .to_string();
+        let truth = match v.req("truth")? {
+            Json::Null => None,
+            t => Some(Truth {
+                dram_efficiency: req_num(t, "dram_efficiency")?,
+                model: ModelConstants {
+                    issue_scale: req_num(t, "issue_scale")?,
+                    latency_scale: req_num(t, "latency_scale")?,
+                    thread_contention: req_num(t, "thread_contention")?,
+                },
+            }),
+        };
+        let Some(arr) = v.req("measurements")?.as_arr() else {
+            crate::bail!("calibration fixture: measurements must be an array");
+        };
+        crate::ensure!(!arr.is_empty(), "calibration fixture: measurements must be non-empty");
+        let mut measurements = Vec::with_capacity(arr.len());
+        for m in arr {
+            let dim = |key: &str| -> Result<usize> {
+                m.req(key)?
+                    .as_usize()
+                    .filter(|&x| x >= 1)
+                    .ok_or_else(|| crate::err!("calibration fixture: {key} must be >= 1"))
+            };
+            measurements.push(Measurement {
+                shape: GemmShape::new(dim("n")?, dim("k")?, dim("m")?),
+                threads: dim("threads")?,
+                seconds: req_num(m, "seconds")?,
+            });
+        }
+        Ok(Fixture { base, truth, measurements })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| crate::err!("write calibration fixture {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<Fixture> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("read calibration fixture {path}: {e}"))?;
+        Fixture::parse(&text).map_err(|e| crate::err!("{path}: {e}"))
+    }
+}
+
+fn req_num(v: &Json, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| crate::err!("calibration fixture: {key} must be a finite number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_identifying_regimes() {
+        let g = grid(false, 16);
+        assert_eq!(g.len(), 18);
+        // A DRAM-streaming GEMV at one thread pins dram.efficiency …
+        assert!(g.iter().any(|(s, t)| s.n == 1 && s.k * s.m >= 1 << 28 && *t == 1));
+        // … a fat batched GEMM pins issue_scale …
+        assert!(g.iter().any(|(s, _)| s.n >= 64));
+        // … and the same shapes at >1 threads separate contention.
+        assert!(g.iter().any(|(_, t)| *t > 1));
+        // Thread clamping on small hosts keeps the grid valid.
+        let g2 = grid(true, 1);
+        assert!(g2.iter().all(|(_, t)| *t == 1));
+        assert!(g2.len() < g.len());
+    }
+
+    #[test]
+    fn fixture_json_round_trips() {
+        let fx = synthesize(&Platform::workstation(), &Truth::example());
+        let back = Fixture::parse(&fx.to_json().to_string()).unwrap();
+        assert_eq!(back, fx);
+        assert_eq!(back.base, "workstation");
+        assert_eq!(back.measurements.len(), 18);
+    }
+
+    #[test]
+    fn fixture_parse_rejects_bad_documents() {
+        let good = synthesize(&Platform::workstation(), &Truth::example())
+            .to_json()
+            .to_string();
+        assert!(Fixture::parse(&good.replace("tsar_calibration", "nope")).is_err());
+        assert!(Fixture::parse(
+            &good.replace("\"schema_version\":1", "\"schema_version\":3")
+        )
+        .is_err());
+        assert!(Fixture::parse("not json").is_err());
+    }
+
+    #[test]
+    fn fit_recovers_known_constants_from_a_synthetic_fixture() {
+        // The acceptance round-trip: synthesize measurements from a
+        // known perturbed profile, fit from scratch, and require every
+        // free constant back within tolerance — no wall-clock, no RNG.
+        let base = Platform::workstation();
+        let truth = Truth::example();
+        let fx = synthesize(&base, &truth);
+        let report =
+            fit(&base, &fx.measurements, "test-host", "full grid").unwrap();
+        check_recovery(&report, &truth).unwrap();
+        assert!(report.train_rmse_log < 0.05, "rmse {}", report.train_rmse_log);
+
+        // The calibrated profile is a valid, lossless artifact.
+        let prof = &report.profile;
+        assert_eq!(prof.provenance.source, "calibrated");
+        assert!(prof.provenance_label().starts_with("calibrated@test-host"));
+        let back = Platform::parse(&prof.to_json().to_string()).unwrap();
+        assert_eq!(&back, prof);
+    }
+
+    #[test]
+    fn check_recovery_names_the_missed_constant() {
+        let base = Platform::workstation();
+        let truth = Truth::example();
+        let fx = synthesize(&base, &truth);
+        let report =
+            fit(&base, &fx.measurements, "test-host", "full grid").unwrap();
+        let mut wrong = truth;
+        wrong.dram_efficiency = 0.95;
+        let err = check_recovery(&report, &wrong).unwrap_err().to_string();
+        assert!(err.contains("dram efficiency"), "got {err:?}");
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_measurements() {
+        let base = Platform::workstation();
+        assert!(fit(&base, &[], "h", "g").is_err());
+        let bad = [Measurement {
+            shape: GemmShape::new(1, 256, 256),
+            threads: 1,
+            seconds: 0.0,
+        }];
+        assert!(fit(&base, &bad, "h", "g").is_err());
+    }
+}

@@ -3,9 +3,11 @@
 
 pub mod isa_family;
 pub mod platforms;
+pub mod profile;
 
 pub use isa_family::{IsaFamily, ALL_FAMILIES};
 pub use platforms::{CacheLevel, Platform, PlatformKind, ALL_PLATFORMS};
+pub use profile::{FitProvenance, ModelConstants, PlatformProfile, Provenance};
 
 /// Parameterization of the T-SAR instruction pair (paper §III-B):
 /// `TLUT_c×s` builds `s` LUT pairs over blocks of `c` activations;

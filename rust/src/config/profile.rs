@@ -1,0 +1,649 @@
+//! Platform profiles: Table I rows as *data*, not code.
+//!
+//! A [`PlatformProfile`] is a versioned JSON document describing one
+//! evaluation platform — cache geometry, DRAM bandwidth/latency, SIMD
+//! issue width — plus the free constants of the timing model
+//! ([`ModelConstants`]) and a provenance record saying where the
+//! numbers came from (`table1` for the paper-faithful in-tree rows,
+//! `calibrated` for a profile fitted from measured wall-clock by
+//! `tsar-cli calibrate`).
+//!
+//! The three Table I rows ship in-tree under `profiles/` and are
+//! embedded into the binary, so `PlatformProfile::by_kind` keeps
+//! working offline with zero I/O.  The in-tree documents carry
+//! *identity* model constants, which the simulator applies as exact
+//! IEEE no-ops (`x * 1.0 == x`, `x + 0.0 == x`): loading them
+//! reproduces the hardcoded Table I numbers bit-identically.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use super::platforms::{CacheLevel, PlatformKind};
+use crate::util::json::Json;
+use crate::Result;
+
+const WORKSTATION_JSON: &str = include_str!("../../../profiles/workstation.json");
+const LAPTOP_JSON: &str = include_str!("../../../profiles/laptop.json");
+const MOBILE_JSON: &str = include_str!("../../../profiles/mobile.json");
+
+/// Free constants of the timing model, fitted by `tsar-cli calibrate`.
+///
+/// The defaults are exact identities: with them, the simulator's
+/// arithmetic is bit-identical to the pre-calibration model, so the
+/// in-tree Table I profiles reproduce the paper's numbers unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConstants {
+    /// Multiplier on every modeled cache/DRAM latency (identity 1.0).
+    pub latency_scale: f64,
+    /// Multiplier on the SIMD issue width `simd_ports` (identity 1.0).
+    pub issue_scale: f64,
+    /// Per-extra-thread DRAM contention: effective DRAM transfer time
+    /// scales by `1 + thread_contention * (threads - 1)` (identity 0.0).
+    pub thread_contention: f64,
+}
+
+impl Default for ModelConstants {
+    fn default() -> Self {
+        ModelConstants {
+            latency_scale: 1.0,
+            issue_scale: 1.0,
+            thread_contention: 0.0,
+        }
+    }
+}
+
+impl ModelConstants {
+    pub fn is_identity(&self) -> bool {
+        *self == ModelConstants::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.latency_scale.is_finite() && self.latency_scale > 0.0,
+            "profile: model.latency_scale must be finite and positive"
+        );
+        crate::ensure!(
+            self.issue_scale.is_finite() && self.issue_scale > 0.0,
+            "profile: model.issue_scale must be finite and positive"
+        );
+        crate::ensure!(
+            self.thread_contention.is_finite() && self.thread_contention >= 0.0,
+            "profile: model.thread_contention must be finite and non-negative"
+        );
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<ModelConstants> {
+        Ok(ModelConstants {
+            latency_scale: num(v, "latency_scale")?,
+            issue_scale: num(v, "issue_scale")?,
+            thread_contention: num(v, "thread_contention")?,
+        })
+    }
+
+    fn to_json(self) -> Json {
+        obj(&[
+            ("latency_scale", Json::Num(self.latency_scale)),
+            ("issue_scale", Json::Num(self.issue_scale)),
+            ("thread_contention", Json::Num(self.thread_contention)),
+        ])
+    }
+}
+
+/// Fit-quality record attached to a calibrated profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitProvenance {
+    /// RMS of `ln(predicted) - ln(measured)` over the training split.
+    pub train_rmse_log: f64,
+    /// Worst relative error over the held-out measurements.
+    pub holdout_max_rel_err: f64,
+    /// Human-readable description of the shape x thread grid.
+    pub grid: String,
+    /// Number of measurements the fit consumed (train + held-out).
+    pub measurements: usize,
+}
+
+impl FitProvenance {
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.train_rmse_log.is_finite() && self.train_rmse_log >= 0.0,
+            "profile: fit.train_rmse_log must be finite and non-negative"
+        );
+        crate::ensure!(
+            self.holdout_max_rel_err.is_finite() && self.holdout_max_rel_err >= 0.0,
+            "profile: fit.holdout_max_rel_err must be finite and non-negative"
+        );
+        crate::ensure!(!self.grid.is_empty(), "profile: fit.grid must describe the grid");
+        crate::ensure!(self.measurements >= 1, "profile: fit.measurements must be >= 1");
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<FitProvenance> {
+        Ok(FitProvenance {
+            train_rmse_log: num(v, "train_rmse_log")?,
+            holdout_max_rel_err: num(v, "holdout_max_rel_err")?,
+            grid: text(v, "grid")?,
+            measurements: int(v, "measurements")?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(&[
+            ("train_rmse_log", Json::Num(self.train_rmse_log)),
+            ("holdout_max_rel_err", Json::Num(self.holdout_max_rel_err)),
+            ("grid", Json::Str(self.grid.clone())),
+            ("measurements", Json::Num(self.measurements as f64)),
+        ])
+    }
+}
+
+/// Where a profile's constants came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// `"table1"` (paper-faithful) or `"calibrated"` (fitted).
+    pub source: String,
+    /// Fingerprint of the host the fit ran on (calibrated profiles).
+    pub host: Option<String>,
+    /// Fit residuals and grid description (calibrated profiles).
+    pub fit: Option<FitProvenance>,
+}
+
+impl Provenance {
+    /// Provenance of the in-tree paper-faithful rows.
+    pub fn table1() -> Provenance {
+        Provenance { source: "table1".into(), host: None, fit: None }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.source.as_str() {
+            "table1" => {}
+            "calibrated" => {
+                crate::ensure!(
+                    self.host.is_some(),
+                    "profile: calibrated provenance requires a host fingerprint"
+                );
+                crate::ensure!(
+                    self.fit.is_some(),
+                    "profile: calibrated provenance requires a fit record"
+                );
+            }
+            other => {
+                crate::bail!("profile: provenance source must be \"table1\" or \"calibrated\", got {other:?}")
+            }
+        }
+        if let Some(fit) = &self.fit {
+            fit.validate()?;
+        }
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<Provenance> {
+        let host = match v.req("host")? {
+            Json::Null => None,
+            Json::Str(s) => Some(s.clone()),
+            _ => crate::bail!("profile: provenance.host must be a string or null"),
+        };
+        let fit = match v.req("fit")? {
+            Json::Null => None,
+            f => Some(FitProvenance::from_json(f)?),
+        };
+        Ok(Provenance { source: text(v, "source")?, host, fit })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(&[
+            ("source", Json::Str(self.source.clone())),
+            (
+                "host",
+                match &self.host {
+                    Some(h) => Json::Str(h.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "fit",
+                match &self.fit {
+                    Some(f) => f.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// A modeled evaluation platform (one row of Table I, or a calibrated
+/// profile of the machine `tsar-cli calibrate` ran on).
+///
+/// This type is re-exported as `config::Platform` — the historic name
+/// every simulator/selector/bench call site uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformProfile {
+    /// Display name ("Workstation", "Laptop", "Mobile", or a host tag).
+    pub name: String,
+    pub cpu_model: String,
+    pub cores: usize,
+    pub freq_ghz: f64,
+    pub l1d: CacheLevel,
+    pub l2: CacheLevel,
+    pub l3: CacheLevel,
+    /// Peak DRAM bandwidth, GB/s.
+    pub dram_bw_gbps: f64,
+    /// Fraction of peak bandwidth sustained by streaming reads (STREAM-
+    /// class efficiency of the platform's memory controller; E-core
+    /// single-channel parts sustain far less than peak).
+    pub dram_efficiency: f64,
+    /// DRAM access latency, ns.
+    pub dram_lat_ns: f64,
+    /// SIMD issue width: 256-bit ALU µ-ops issued per cycle per core
+    /// (AVX2 cores have two 256-bit vector ALU ports; the efficiency
+    /// cores of the N250 have one effective port).
+    pub simd_ports: f64,
+    /// Default thread count used by the paper's protocol ({16, 8, 4}).
+    pub threads: usize,
+    /// Package power running the LUT-kernel decode workload, watts —
+    /// used by the Table III energy model (TDP-class constants; the
+    /// paper measures TL-2 package power on real silicon).
+    pub pkg_power_w: f64,
+    /// Process node, for the Table III annotations.
+    pub node: String,
+    /// Free timing-model constants (identity unless calibrated).
+    pub model: ModelConstants,
+    /// Where these numbers came from.
+    pub provenance: Provenance,
+}
+
+static WORKSTATION: OnceLock<PlatformProfile> = OnceLock::new();
+static LAPTOP: OnceLock<PlatformProfile> = OnceLock::new();
+static MOBILE: OnceLock<PlatformProfile> = OnceLock::new();
+
+fn embedded(
+    slot: &OnceLock<PlatformProfile>,
+    json: &str,
+    which: &str,
+) -> PlatformProfile {
+    slot.get_or_init(|| {
+        PlatformProfile::parse(json)
+            .unwrap_or_else(|e| panic!("embedded {which} profile: {e}"))
+    })
+    .clone()
+}
+
+impl PlatformProfile {
+    /// Table I Workstation row (AMD Ryzen 9950X), from the embedded
+    /// `profiles/workstation.json`.
+    pub fn workstation() -> PlatformProfile {
+        embedded(&WORKSTATION, WORKSTATION_JSON, "workstation")
+    }
+
+    /// Table I Laptop row (AMD Ryzen 7840U).
+    pub fn laptop() -> PlatformProfile {
+        embedded(&LAPTOP, LAPTOP_JSON, "laptop")
+    }
+
+    /// Table I Mobile row (Intel Processor N250).
+    pub fn mobile() -> PlatformProfile {
+        embedded(&MOBILE, MOBILE_JSON, "mobile")
+    }
+
+    pub fn by_kind(kind: PlatformKind) -> PlatformProfile {
+        match kind {
+            PlatformKind::Workstation => PlatformProfile::workstation(),
+            PlatformKind::Laptop => PlatformProfile::laptop(),
+            PlatformKind::Mobile => PlatformProfile::mobile(),
+        }
+    }
+
+    /// Cycles per nanosecond.
+    pub fn cycles_per_ns(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    /// Sustained DRAM bandwidth in bytes/cycle (whole package).
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bw_gbps * self.dram_efficiency / self.freq_ghz
+    }
+
+    /// Short provenance tag for reports: `table1`, or
+    /// `calibrated@<host>` for a fitted profile.
+    pub fn provenance_label(&self) -> String {
+        match (&self.provenance.source, &self.provenance.host) {
+            (s, Some(h)) if s == "calibrated" => format!("{s}@{h}"),
+            (s, _) => s.clone(),
+        }
+    }
+
+    /// Parse and schema-validate a profile document.
+    pub fn parse(json: &str) -> Result<PlatformProfile> {
+        let v = Json::parse(json).map_err(|e| crate::err!("platform profile: {e}"))?;
+        PlatformProfile::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlatformProfile> {
+        crate::ensure!(
+            v.get("profile").and_then(Json::as_str) == Some("tsar_platform"),
+            "platform profile: missing \"profile\": \"tsar_platform\" discriminator"
+        );
+        let version = num(v, "schema_version")?;
+        crate::ensure!(
+            version == 1.0,
+            "platform profile: unsupported schema_version {version}"
+        );
+        let caches = v.req("caches")?;
+        let dram = v.req("dram")?;
+        let p = PlatformProfile {
+            name: text(v, "name")?,
+            cpu_model: text(v, "cpu_model")?,
+            cores: int(v, "cores")?,
+            freq_ghz: num(v, "freq_ghz")?,
+            l1d: cache_from_json(caches, "l1d")?,
+            l2: cache_from_json(caches, "l2")?,
+            l3: cache_from_json(caches, "l3")?,
+            dram_bw_gbps: num(dram, "bw_gbps")?,
+            dram_efficiency: num(dram, "efficiency")?,
+            dram_lat_ns: num(dram, "lat_ns")?,
+            simd_ports: num(v, "simd_ports")?,
+            threads: int(v, "threads")?,
+            pkg_power_w: num(v, "pkg_power_w")?,
+            node: text(v, "node")?,
+            model: ModelConstants::from_json(v.req("model")?)?,
+            provenance: Provenance::from_json(v.req("provenance")?)?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Schema-level sanity checks shared by `parse` and the artifact
+    /// validator.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.name.is_empty(), "profile: name must not be empty");
+        crate::ensure!(self.cores >= 1, "profile: cores must be >= 1");
+        crate::ensure!(self.threads >= 1, "profile: threads must be >= 1");
+        crate::ensure!(
+            self.freq_ghz.is_finite() && self.freq_ghz > 0.0,
+            "profile: freq_ghz must be finite and positive"
+        );
+        crate::ensure!(
+            self.simd_ports.is_finite() && self.simd_ports > 0.0,
+            "profile: simd_ports must be finite and positive"
+        );
+        crate::ensure!(
+            self.pkg_power_w.is_finite() && self.pkg_power_w > 0.0,
+            "profile: pkg_power_w must be finite and positive"
+        );
+        for (label, c) in [("l1d", &self.l1d), ("l2", &self.l2), ("l3", &self.l3)] {
+            crate::ensure!(
+                c.line_bytes.is_power_of_two(),
+                "profile: {label}.line_bytes must be a power of two"
+            );
+            crate::ensure!(
+                c.assoc >= 1 && c.sets() >= 1 && c.sets().is_power_of_two(),
+                "profile: {label} geometry must give a power-of-two set count"
+            );
+            crate::ensure!(
+                c.latency_cycles.is_finite() && c.latency_cycles > 0.0,
+                "profile: {label}.latency_cycles must be finite and positive"
+            );
+        }
+        crate::ensure!(
+            self.dram_bw_gbps.is_finite() && self.dram_bw_gbps > 0.0,
+            "profile: dram.bw_gbps must be finite and positive"
+        );
+        crate::ensure!(
+            self.dram_efficiency > 0.0 && self.dram_efficiency <= 1.0,
+            "profile: dram.efficiency must be in (0, 1]"
+        );
+        crate::ensure!(
+            self.dram_lat_ns.is_finite() && self.dram_lat_ns > 0.0,
+            "profile: dram.lat_ns must be finite and positive"
+        );
+        self.model.validate()?;
+        self.provenance.validate()?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("profile", Json::Str("tsar_platform".into())),
+            ("schema_version", Json::Num(1.0)),
+            ("name", Json::Str(self.name.clone())),
+            ("cpu_model", Json::Str(self.cpu_model.clone())),
+            ("node", Json::Str(self.node.clone())),
+            ("cores", Json::Num(self.cores as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("freq_ghz", Json::Num(self.freq_ghz)),
+            ("simd_ports", Json::Num(self.simd_ports)),
+            ("pkg_power_w", Json::Num(self.pkg_power_w)),
+            (
+                "caches",
+                obj(&[
+                    ("l1d", cache_to_json(&self.l1d)),
+                    ("l2", cache_to_json(&self.l2)),
+                    ("l3", cache_to_json(&self.l3)),
+                ]),
+            ),
+            (
+                "dram",
+                obj(&[
+                    ("bw_gbps", Json::Num(self.dram_bw_gbps)),
+                    ("efficiency", Json::Num(self.dram_efficiency)),
+                    ("lat_ns", Json::Num(self.dram_lat_ns)),
+                ]),
+            ),
+            ("model", self.model.to_json()),
+            ("provenance", self.provenance.to_json()),
+        ])
+    }
+
+    /// Load and schema-validate a profile from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<PlatformProfile> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("read platform profile {}: {e}", path.display()))?;
+        PlatformProfile::parse(&text)
+            .map_err(|e| crate::err!("{}: {e}", path.display()))
+    }
+
+    /// Serialize the profile to a JSON file (one compact line).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| crate::err!("write platform profile {}: {e}", path.display()))
+    }
+}
+
+// -- JSON field helpers ----------------------------------------------------
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(
+        pairs
+            .iter()
+            .map(|(k, v)| ((*k).to_string(), v.clone()))
+            .collect(),
+    )
+}
+
+fn num(v: &Json, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| crate::err!("profile: {key:?} must be a number"))
+}
+
+fn int(v: &Json, key: &str) -> Result<usize> {
+    let n = num(v, key)?;
+    crate::ensure!(
+        n.fract() == 0.0 && n >= 0.0,
+        "profile: {key:?} must be a non-negative integer"
+    );
+    Ok(n as usize)
+}
+
+fn text(v: &Json, key: &str) -> Result<String> {
+    Ok(v.req(key)?
+        .as_str()
+        .ok_or_else(|| crate::err!("profile: {key:?} must be a string"))?
+        .to_string())
+}
+
+fn boolean(v: &Json, key: &str) -> Result<bool> {
+    match v.req(key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => crate::bail!("profile: {key:?} must be a boolean"),
+    }
+}
+
+fn cache_from_json(caches: &Json, which: &str) -> Result<CacheLevel> {
+    let v = caches.req(which)?;
+    Ok(CacheLevel {
+        size_bytes: int(v, "size_bytes")?,
+        assoc: int(v, "assoc")?,
+        line_bytes: int(v, "line_bytes")?,
+        latency_cycles: num(v, "latency_cycles")?,
+        shared: boolean(v, "shared")?,
+    })
+}
+
+fn cache_to_json(c: &CacheLevel) -> Json {
+    obj(&[
+        ("size_bytes", Json::Num(c.size_bytes as f64)),
+        ("assoc", Json::Num(c.assoc as f64)),
+        ("line_bytes", Json::Num(c.line_bytes as f64)),
+        ("latency_cycles", Json::Num(c.latency_cycles)),
+        ("shared", Json::Bool(c.shared)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ALL_PLATFORMS;
+
+    #[test]
+    fn embedded_profiles_reproduce_table1_constants() {
+        // Exact f64 equality on every constant the simulator consumes:
+        // the JSON profiles must be *bit-identical* to the historic
+        // hardcoded Table I rows (correctly-rounded decimal parsing
+        // guarantees "102.4" == 102.4).
+        let w = PlatformProfile::workstation();
+        assert_eq!(w.name, "Workstation");
+        assert_eq!(w.cpu_model, "AMD Ryzen 9950X");
+        assert_eq!((w.cores, w.threads), (16, 16));
+        assert_eq!(w.freq_ghz, 5.7);
+        assert_eq!(w.simd_ports, 2.0);
+        assert_eq!(w.pkg_power_w, 79.4);
+        assert_eq!(
+            w.l1d,
+            CacheLevel {
+                size_bytes: 48 * 1024,
+                assoc: 12,
+                line_bytes: 64,
+                latency_cycles: 4.0,
+                shared: false,
+            }
+        );
+        assert_eq!(w.l2.size_bytes, 1024 * 1024);
+        assert_eq!(w.l3.size_bytes, 64 * 1024 * 1024);
+        assert_eq!(w.l3.latency_cycles, 50.0);
+        assert_eq!(
+            (w.dram_bw_gbps, w.dram_efficiency, w.dram_lat_ns),
+            (102.4, 0.85, 75.0)
+        );
+        assert_eq!(w.node, "4nm");
+
+        let l = PlatformProfile::laptop();
+        assert_eq!(l.name, "Laptop");
+        assert_eq!((l.cores, l.freq_ghz), (8, 5.1));
+        assert_eq!(l.l3.size_bytes, 16 * 1024 * 1024);
+        assert_eq!(l.l3.latency_cycles, 47.0);
+        assert_eq!(
+            (l.dram_bw_gbps, l.dram_efficiency, l.dram_lat_ns),
+            (70.4, 0.80, 85.0)
+        );
+        assert_eq!(l.pkg_power_w, 24.7);
+
+        let m = PlatformProfile::mobile();
+        assert_eq!(m.name, "Mobile");
+        assert_eq!((m.cores, m.freq_ghz), (4, 3.8));
+        assert_eq!(m.simd_ports, 1.0);
+        assert!(m.l2.shared);
+        assert_eq!(m.l2.size_bytes, 2 * 1024 * 1024);
+        assert_eq!(
+            (m.dram_bw_gbps, m.dram_efficiency, m.dram_lat_ns),
+            (35.2, 0.55, 100.0)
+        );
+        assert_eq!(m.node, "10nm");
+    }
+
+    #[test]
+    fn embedded_profiles_carry_identity_model_constants() {
+        for kind in ALL_PLATFORMS {
+            let p = PlatformProfile::by_kind(kind);
+            assert!(p.model.is_identity(), "{}: non-identity constants", p.name);
+            assert_eq!(p.provenance, Provenance::table1());
+            assert_eq!(p.provenance_label(), "table1");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        for kind in ALL_PLATFORMS {
+            let p = PlatformProfile::by_kind(kind);
+            let back = PlatformProfile::parse(&p.to_json().to_string()).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn calibrated_round_trip_keeps_provenance() {
+        let mut p = PlatformProfile::workstation();
+        p.name = "host".into();
+        p.model = ModelConstants {
+            latency_scale: 1.5,
+            issue_scale: 0.8,
+            thread_contention: 0.12,
+        };
+        p.provenance = Provenance {
+            source: "calibrated".into(),
+            host: Some("x86_64/avx2/16t".into()),
+            fit: Some(FitProvenance {
+                train_rmse_log: 0.01,
+                holdout_max_rel_err: 0.03,
+                grid: "6 shapes x 3 thread counts".into(),
+                measurements: 18,
+            }),
+        };
+        let back = PlatformProfile::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.provenance_label(), "calibrated@x86_64/avx2/16t");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = PlatformProfile::laptop();
+        let path = std::env::temp_dir().join("tsar_profile_save_load_test.json");
+        p.save(&path).unwrap();
+        let back = PlatformProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn parse_rejects_bad_documents() {
+        let good = PlatformProfile::workstation().to_json().to_string();
+        // Wrong discriminator.
+        let bad = good.replace("tsar_platform", "not_a_profile");
+        assert!(PlatformProfile::parse(&bad).is_err());
+        // Unsupported schema version.
+        let bad = good.replace("\"schema_version\":1", "\"schema_version\":2");
+        assert!(PlatformProfile::parse(&bad).is_err());
+        // Out-of-range DRAM efficiency.
+        let bad = good.replace("\"efficiency\":0.85", "\"efficiency\":1.5");
+        assert!(PlatformProfile::parse(&bad).is_err());
+        // Calibrated provenance without host fingerprint or fit record.
+        let bad = good.replace("\"source\":\"table1\"", "\"source\":\"calibrated\"");
+        assert!(PlatformProfile::parse(&bad).is_err());
+        // Not JSON at all.
+        assert!(PlatformProfile::parse("nope").is_err());
+    }
+}

@@ -90,7 +90,7 @@ pub fn cpu_decode_tokens_per_second(
 #[derive(Debug, Clone)]
 pub struct CrossPlatformRow {
     pub platform: String,
-    pub node: &'static str,
+    pub node: String,
     pub tokens_per_s: f64,
     pub joules_per_token: f64,
 }
@@ -105,8 +105,8 @@ pub fn table3_rows(spec: &'static ModelSpec) -> Vec<CrossPlatformRow> {
         // P_TSAR = 1.032 · P_TL2 (package boundary).
         let p = plat.pkg_power_w * hw::tsar_power_scale();
         rows.push(CrossPlatformRow {
-            platform: format!("{} CPU ({}, T-SAR)", plat.kind.name(), plat.cpu_model),
-            node: plat.node,
+            platform: format!("{} CPU ({}, T-SAR)", plat.name, plat.cpu_model),
+            node: plat.node.clone(),
             tokens_per_s: tps,
             joules_per_token: p / tps,
         });
@@ -114,7 +114,7 @@ pub fn table3_rows(spec: &'static ModelSpec) -> Vec<CrossPlatformRow> {
     let jetson = JetsonModel::default();
     rows.push(CrossPlatformRow {
         platform: "Jetson AGX Orin GPU (llama.cpp)".into(),
-        node: "8nm",
+        node: "8nm".into(),
         tokens_per_s: jetson.tokens_per_second(spec),
         joules_per_token: jetson.joules_per_token(spec),
     });

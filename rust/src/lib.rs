@@ -47,6 +47,7 @@
 //!   environment: no anyhow/serde/rand/criterion available).
 
 pub mod bench;
+pub mod calibrate;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

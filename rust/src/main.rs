@@ -10,7 +10,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use tsar::bench;
-use tsar::config::platforms::{Platform, PlatformKind};
+use tsar::config::platforms::Platform;
 use tsar::config::IsaConfig;
 use tsar::coordinator::{
     select_plan, tee_records, Engine, Exporter, GenerationRequest, HttpConfig, HttpServer,
@@ -32,8 +32,10 @@ tsar-cli — T-SAR reproduction driver
 
 USAGE:
   tsar-cli report <fig1a|fig1c|fig2c|fig2d|fig8|fig9|fig10|table1|table2|table3|llc|ablations|all>
-  tsar-cli simulate --shape NxKxM [--platform workstation|laptop|mobile] [--threads T]
+  tsar-cli simulate --shape NxKxM [--platform P] [--threads T]
   tsar-cli plan --model <name> [--platform P] [--n N]
+  tsar-cli calibrate [--smoke] [--isa c2|c4] [--threads T] [--base P] [--out PATH]
+                     [--fixture PATH] [--emit-fixture PATH] [--validate PATH]
   tsar-cli serve [--model <name>] [--platform P] [--threads T] [--prefill-len L]
                  [--requests R] [--max-new T] [--batch B] [--workers W]
                  [--backend sim|native|model] [--isa c2|c4] [--queue-cap N]
@@ -49,6 +51,27 @@ USAGE:
                        [--out PATH] [--validate PATH]
   tsar-cli models
   tsar-cli help
+
+Everywhere `--platform P` appears, P is one of the embedded Table I
+profiles (workstation|laptop|mobile, default workstation) or a path to
+a platform-profile JSON document — e.g. the PLATFORM_host.json written
+by `tsar-cli calibrate`.  Every backend names the active profile and
+its provenance (table1 vs calibrated@host) in its plan summary, so
+serve metrics records carry it too.
+
+`calibrate` closes the measure → model loop: it times the native
+ternary GEMM kernels across a shape × thread grid on *this* host, fits
+the platform profile's free constants (sustained DRAM efficiency, SIMD
+issue scale, latency scale, per-thread DRAM contention) to the
+measured wall-clock, reports the held-out prediction error, and writes
+the fitted profile (default PLATFORM_host.json) with calibrated
+provenance.  --base picks the profile the fit starts from; --smoke
+shrinks the grid to CI size.  --emit-fixture PATH writes a synthetic
+measurement set generated from a known perturbed profile (no timing);
+--fixture PATH fits from such a file instead of measuring —
+deterministic and offline — and cross-checks the recovered constants
+against the embedded truth.  --validate PATH re-checks an existing
+profile artifact against the schema and exits.
 
 `serve --metrics <path|->` attaches the request-level metrics exporter:
 one JSON line per retired request (queue/prefill/decode seconds, lane,
@@ -118,6 +141,7 @@ fn main() -> Result<()> {
         Some("plan") => plan_cmd(&args[1..]),
         Some("serve") => serve_cmd(&args[1..]),
         Some("bench-serve") => bench_serve_cmd(&args[1..]),
+        Some("calibrate") => calibrate_cmd(&args[1..]),
         Some("models") => {
             for m in zoo::MODEL_ZOO {
                 println!(
@@ -208,12 +232,19 @@ fn parse_isa(args: &[String]) -> Result<IsaConfig> {
     }
 }
 
-fn parse_platform(args: &[String]) -> Platform {
-    match flag(args, "--platform").as_deref() {
-        Some("laptop") => Platform::by_kind(PlatformKind::Laptop),
-        Some("mobile") => Platform::by_kind(PlatformKind::Mobile),
-        _ => Platform::by_kind(PlatformKind::Workstation),
+/// Resolve a profile name: one of the embedded Table I rows, or a path
+/// to a platform-profile JSON document (schema-validated on load).
+fn profile_by_name(name: Option<&str>) -> Result<Platform> {
+    match name {
+        None | Some("workstation") => Ok(Platform::workstation()),
+        Some("laptop") => Ok(Platform::laptop()),
+        Some("mobile") => Ok(Platform::mobile()),
+        Some(path) => Platform::load(path),
     }
+}
+
+fn parse_platform(args: &[String]) -> Result<Platform> {
+    profile_by_name(flag(args, "--platform").as_deref())
 }
 
 fn simulate_cmd(args: &[String]) -> Result<()> {
@@ -224,14 +255,19 @@ fn simulate_cmd(args: &[String]) -> Result<()> {
         .collect::<Result<_>>()?;
     tsar::ensure!(dims.len() == 3, "--shape must be NxKxM");
     let shape = GemmShape::new(dims[0], dims[1], dims[2]);
-    let plat = parse_platform(args);
+    let plat = parse_platform(args)?;
     let threads = flag(args, "--threads")
         .map(|t| t.parse::<usize>().unwrap_or(plat.threads))
         .unwrap_or(plat.threads);
 
     println!(
-        "simulating {}x{}x{} on {} with {} threads",
-        shape.n, shape.k, shape.m, plat.kind.name(), threads
+        "simulating {}x{}x{} on {} [{}] with {} threads",
+        shape.n,
+        shape.k,
+        shape.m,
+        plat.name,
+        plat.provenance_label(),
+        threads
     );
     let mut t = tsar::util::table::Table::new(vec![
         "kernel", "time (ms)", "req vol (MB)", "DRAM (MB)", "LLC hit", "mem-bound",
@@ -255,11 +291,15 @@ fn plan_cmd(args: &[String]) -> Result<()> {
     let model = flag(args, "--model").unwrap_or_else(|| "BitNet-2B-4T".into());
     let spec = zoo::by_name(&model)
         .with_context(|| format!("unknown model {model:?} (see `tsar-cli models`)"))?;
-    let plat = parse_platform(args);
+    let plat = parse_platform(args)?;
     let n = flag(args, "--n").map(|v| v.parse().unwrap_or(1)).unwrap_or(1);
     println!(
-        "adaptive kernel plan: {} on {} (N={}, {} threads)",
-        spec.name, plat.kind.name(), n, plat.threads
+        "adaptive kernel plan: {} on {} [{}] (N={}, {} threads)",
+        spec.name,
+        plat.name,
+        plat.provenance_label(),
+        n,
+        plat.threads
     );
     let plan = select_plan(spec, &plat, n, plat.threads);
     for l in &plan.layers {
@@ -320,7 +360,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     }
 
     let model = flag(args, "--model");
-    let plat = parse_platform(args);
+    let plat = parse_platform(args)?;
     let threads: usize = parse_flag(args, "--threads", 0)?;
     let prefill_len: usize = parse_flag(args, "--prefill-len", 32)?;
     tsar::ensure!(prefill_len >= 1, "--prefill-len must be >= 1");
@@ -350,18 +390,14 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 println!("(no --model given: native backend defaults to BitNet-125M)");
                 "BitNet-125M".into()
             });
-            // The native path executes on the host CPU; the simulator's
-            // platform knob does not apply (--threads does: it chunks
-            // every GEMM's output tiles across persistent pool lanes).
-            if flag(args, "--platform").is_some() {
-                eprintln!(
-                    "warning: --platform models the simulator and is ignored by \
-                     --backend native (runs on this host)"
-                );
-            }
+            // The native path executes on the host CPU; the profile
+            // named by --platform labels the plan summary and every
+            // metrics record with the *modeled* platform it stands in
+            // for (--threads chunks every GEMM's output tiles across
+            // persistent pool lanes).
             let isa = parse_isa(args)?;
             println!("packing {model} for native execution ({}) ...", isa.name());
-            let backend = NativeBackend::by_name(&model, isa, bcfg)?;
+            let backend = NativeBackend::by_name(&model, isa, bcfg)?.with_profile(plat);
             println!(
                 "native path: {} ({:.1} MB packed weights)",
                 backend.path().name(),
@@ -377,12 +413,6 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 eprintln!(
                     "warning: --model names simulator zoo specs and is ignored by \
                      --backend model (use --ckpt or the --layers/--dim/... flags)"
-                );
-            }
-            if flag(args, "--platform").is_some() {
-                eprintln!(
-                    "warning: --platform models the simulator and is ignored by \
-                     --backend model (runs on this host)"
                 );
             }
             let isa = parse_isa(args)?;
@@ -428,7 +458,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                     max_seq: prefill_len + max_new + 8,
                     sampler,
                 },
-            )?;
+            )?
+            .with_profile(plat);
             println!(
                 "loaded {} parameters ({:.1} KB packed BitLinear weights)",
                 ckpt.param_count(),
@@ -663,8 +694,8 @@ fn bench_serve_cmd(args: &[String]) -> Result<()> {
     if let Some(path) = flag(args, "--validate") {
         let text =
             std::fs::read_to_string(&path).with_context(|| format!("cannot read {path}"))?;
-        let n = tsar::util::artifact::validate_serve(&text)?;
-        println!("[bench-serve] {path}: serve schema v1 OK ({n} requests)");
+        let summary = tsar::util::artifact::validate_any(&text)?;
+        println!("[bench-serve] {path}: {summary}");
         return Ok(());
     }
     let mut cfg = if args.iter().any(|a| a == "--smoke") {
@@ -730,5 +761,88 @@ fn bench_serve_cmd(args: &[String]) -> Result<()> {
         tsar::bail!("client-side counts disagree with the /metrics scrape");
     }
     println!("[bench-serve] cross-check: client outcome counts match /metrics exactly");
+    Ok(())
+}
+
+/// `calibrate`: measure the native GEMM kernels over a shape × thread
+/// grid (or replay a fixture), fit the platform profile's free
+/// constants, and write the calibrated `PLATFORM_host.json`.
+fn calibrate_cmd(args: &[String]) -> Result<()> {
+    use tsar::calibrate;
+
+    if let Some(path) = flag(args, "--validate") {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("cannot read {path}"))?;
+        let summary = tsar::util::artifact::validate_any(&text)?;
+        println!("[calibrate] {path}: {summary}");
+        return Ok(());
+    }
+
+    let base = profile_by_name(flag(args, "--base").as_deref())?;
+    let out = flag(args, "--out")
+        .unwrap_or_else(|| format!("{}/../PLATFORM_host.json", env!("CARGO_MANIFEST_DIR")));
+
+    if let Some(path) = flag(args, "--emit-fixture") {
+        let truth = calibrate::Truth::example();
+        let fx = calibrate::synthesize(&base, &truth);
+        fx.save(&path)?;
+        println!(
+            "[calibrate] synthetic fixture: {} measurements from perturbed {} -> {path}",
+            fx.measurements.len(),
+            base.name
+        );
+        return Ok(());
+    }
+
+    let report;
+    let grid_label;
+    if let Some(path) = flag(args, "--fixture") {
+        let fx = calibrate::Fixture::load(&path)?;
+        let fx_base = profile_by_name(Some(fx.base.as_str()))?;
+        grid_label = format!("fixture {path} ({} measurements)", fx.measurements.len());
+        println!(
+            "[calibrate] fitting {} offline measurements against base {}",
+            fx.measurements.len(),
+            fx_base.name
+        );
+        report = calibrate::fit(&fx_base, &fx.measurements, "fixture", &grid_label)?;
+        if let Some(truth) = &fx.truth {
+            calibrate::check_recovery(&report, truth)?;
+            println!("[calibrate] recovered every embedded truth constant within tolerance");
+        }
+    } else {
+        let smoke = args.iter().any(|a| a == "--smoke");
+        let isa = parse_isa(args)?;
+        let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let max_threads: usize = parse_flag(args, "--threads", host_threads)?;
+        tsar::ensure!(max_threads >= 1, "--threads must be >= 1");
+        let grid = calibrate::grid(smoke, max_threads);
+        grid_label = calibrate::grid_desc(&grid, smoke);
+        let (min_runs, min_secs) = if smoke { (3, 0.02) } else { (5, 0.2) };
+        println!(
+            "[calibrate] measuring native {} GEMM over {} ...",
+            isa.name(),
+            grid_label
+        );
+        let (meas, path_name) = calibrate::measure(isa, &grid, min_runs, min_secs)?;
+        let host = format!("{}/{}/{}t", std::env::consts::ARCH, path_name, max_threads);
+        report = calibrate::fit(&base, &meas, &host, &grid_label)?;
+    }
+
+    let p = &report.profile;
+    println!(
+        "[calibrate] fitted constants: dram.efficiency={:.3} issue_scale={:.3} \
+         latency_scale={:.3} thread_contention={:.3}",
+        p.dram_efficiency,
+        p.model.issue_scale,
+        p.model.latency_scale,
+        p.model.thread_contention
+    );
+    println!(
+        "[calibrate] residuals: train rmse(log)={:.4}, held-out max rel err={:.4}",
+        report.train_rmse_log, report.holdout_max_rel_err
+    );
+    p.save(&out)?;
+    println!("[calibrate] calibrated profile [{}] -> {out}", p.provenance_label());
     Ok(())
 }

@@ -19,6 +19,7 @@
 //!   BitLinear site) and produces per-sequence tokens *and KV state*
 //!   bit-identical to the serialized default path.
 
+use crate::config::Platform;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::sample::{sample_token, SamplerConfig};
 use crate::model::transformer::{LinearEngine, ModelKv, TernaryTransformer};
@@ -73,6 +74,10 @@ pub struct ModelBackend {
     config: ModelConfig,
     sampler: SamplerConfig,
     ckpt_seed: u64,
+    /// Platform profile attached for labeling (`serve --platform`):
+    /// execution is on this host, but reports name the profile and its
+    /// provenance.
+    profile: Platform,
 }
 
 impl ModelBackend {
@@ -99,7 +104,21 @@ impl ModelBackend {
             max_seq: cfg.max_seq,
             prefill_len: cfg.prefill_len,
         };
-        Ok(ModelBackend { model, config, sampler: cfg.sampler, ckpt_seed: ckpt.seed })
+        Ok(ModelBackend {
+            model,
+            config,
+            sampler: cfg.sampler,
+            ckpt_seed: ckpt.seed,
+            profile: Platform::workstation(),
+        })
+    }
+
+    /// Attach the platform profile named by `serve --platform`: surfaces
+    /// its name and provenance in `plan_summary` and the per-request
+    /// records (the forward pass still runs on this host).
+    pub fn with_profile(mut self, profile: Platform) -> ModelBackend {
+        self.profile = profile;
+        self
     }
 
     pub fn model(&self) -> &TernaryTransformer {
@@ -254,7 +273,11 @@ impl Backend for ModelBackend {
                 .collect();
             summary = format!("{summary} | pool threads={} {}", g.threads(), sites.join(" "));
         }
-        Some(summary)
+        Some(format!(
+            "{summary} | profile={} source={}",
+            self.profile.name,
+            self.profile.provenance_label()
+        ))
     }
 }
 
@@ -349,6 +372,22 @@ mod tests {
         }
         assert!(b.weight_bytes() > 0);
         assert!(b.describe().contains("model:ckpt"));
+    }
+
+    #[test]
+    fn plan_summary_names_profile_and_provenance() {
+        let b = backend();
+        let summary = b.plan_summary().unwrap();
+        assert!(
+            summary.contains("profile=Workstation source=table1"),
+            "default profile tag missing: {summary:?}"
+        );
+        let b = b.with_profile(Platform::laptop());
+        let summary = b.plan_summary().unwrap();
+        assert!(
+            summary.contains("profile=Laptop source=table1"),
+            "with_profile not reflected: {summary:?}"
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use std::cell::RefCell;
 
-use crate::config::IsaConfig;
+use crate::config::{IsaConfig, Platform};
 use crate::kernels::native::{NativeGemv, NativePath, Workspace};
 use crate::model::zoo::{self, ModelSpec};
 use crate::model::Workload;
@@ -53,6 +53,10 @@ pub struct NativeBackend {
     seed: u64,
     gemv: NativeGemv,
     layers: Vec<NativeLayer>,
+    /// Platform profile attached for labeling: the native backend runs
+    /// on this host, but reports name the profile the serve was asked
+    /// to model (`serve --platform`), provenance included.
+    profile: Platform,
 }
 
 impl NativeBackend {
@@ -94,7 +98,22 @@ impl NativeBackend {
             max_seq: cfg.max_seq,
             prefill_len: cfg.prefill_len,
         };
-        Ok(NativeBackend { spec, config, seed: cfg.seed, gemv, layers })
+        Ok(NativeBackend {
+            spec,
+            config,
+            seed: cfg.seed,
+            gemv,
+            layers,
+            profile: Platform::workstation(),
+        })
+    }
+
+    /// Attach the platform profile named by `serve --platform`: surfaces
+    /// its name and provenance in `plan_summary` and the per-request
+    /// records (the kernels still run on this host).
+    pub fn with_profile(mut self, profile: Platform) -> NativeBackend {
+        self.profile = profile;
+        self
     }
 
     /// Look up `name` in the model zoo and load it natively.
@@ -228,14 +247,18 @@ impl Backend for NativeBackend {
                 )
             })
             .collect();
-        Some(sites.join(" "))
+        Some(format!(
+            "{} | profile={} source={}",
+            sites.join(" "),
+            self.profile.name,
+            self.profile.provenance_label()
+        ))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::platforms::Platform;
     use crate::runtime::SimBackend;
 
     /// Tiny synthetic architecture: real native execution stays cheap
@@ -299,6 +322,22 @@ mod tests {
         }
         assert!(summary.contains("native-"));
         assert!(native.packed_bytes() > 0);
+    }
+
+    #[test]
+    fn plan_summary_names_profile_and_provenance() {
+        let native = NativeBackend::new(&TINY, IsaConfig::C2, cfg()).unwrap();
+        let summary = native.plan_summary().unwrap();
+        assert!(
+            summary.contains("profile=Workstation source=table1"),
+            "default profile tag missing: {summary:?}"
+        );
+        let native = native.with_profile(Platform::mobile());
+        let summary = native.plan_summary().unwrap();
+        assert!(
+            summary.contains("profile=Mobile source=table1"),
+            "with_profile not reflected: {summary:?}"
+        );
     }
 
     #[test]

@@ -184,9 +184,10 @@ impl Backend for SimBackend {
 
     fn describe(&self) -> String {
         format!(
-            "sim:{} on {} ({} threads)",
+            "sim:{} on {} [{}] ({} threads)",
             self.spec.name,
-            self.platform.kind.name(),
+            self.platform.name,
+            self.platform.provenance_label(),
             self.threads
         )
     }
@@ -262,7 +263,12 @@ impl Backend for SimBackend {
             .iter()
             .map(|l| format!("{}:{}", l.site, l.kernel.name()))
             .collect();
-        Some(sites.join(" "))
+        Some(format!(
+            "{} | profile={} source={}",
+            sites.join(" "),
+            self.platform.name,
+            self.platform.provenance_label()
+        ))
     }
 }
 
@@ -392,6 +398,11 @@ mod tests {
         for site in ["wqkv", "wo", "ffn-gate-up", "ffn-down", "lm-head"] {
             assert!(summary.contains(site), "{site} missing from {summary:?}");
         }
+        assert!(
+            summary.contains("profile=Workstation source=table1"),
+            "profile tag missing: {summary:?}"
+        );
+        assert!(b.describe().contains("[table1]"), "{}", b.describe());
     }
 
     #[test]

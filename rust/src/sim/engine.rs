@@ -17,6 +17,12 @@
 //!
 //! Validated against the trace-driven [`super::cache`] hierarchy on small
 //! shapes in `rust/tests/integration.rs`.
+//!
+//! The platform's [`crate::config::ModelConstants`] scale the model's
+//! free terms (issue width, latencies, thread-shared DRAM contention).
+//! Identity constants — what every in-tree Table I profile carries —
+//! are exact IEEE no-ops, so calibration support changes nothing for
+//! paper-faithful profiles.
 
 use crate::config::platforms::Platform;
 
@@ -135,8 +141,11 @@ pub fn simulate(profile: &KernelProfile, plat: &Platform, threads: usize) -> Sim
     }
 
     // ---- compute time ------------------------------------------------------
-    let compute_cycles = profile.simd_uops / (plat.simd_ports * t)
-        + profile.scalar_uops / (SCALAR_IPC * t);
+    // Calibration scales the effective SIMD issue width; identity (1.0)
+    // leaves `simd_ports` bit-identical.
+    let ports = plat.simd_ports * plat.model.issue_scale;
+    let compute_cycles =
+        profile.simd_uops / (ports * t) + profile.scalar_uops / (SCALAR_IPC * t);
 
     // ---- memory time -------------------------------------------------------
     let line = plat.l1d.line_bytes as f64;
@@ -144,7 +153,8 @@ pub fn simulate(profile: &KernelProfile, plat: &Platform, threads: usize) -> Sim
     // bandwidth only: the kernels' miss streams are sequential (packed
     // weights, table arrays), so hardware prefetch hides DRAM latency
     // and the channel bandwidth is the binding resource.
-    let lat = [0.0, plat.l2.latency_cycles, plat.l3.latency_cycles, 0.0];
+    let ls = plat.model.latency_scale;
+    let lat = [0.0, plat.l2.latency_cycles * ls, plat.l3.latency_cycles * ls, 0.0];
     let mut latency_cycles = 0.0;
     for lvl in 1..3 {
         let transfers = traffic.bytes[lvl] / line / t;
@@ -155,10 +165,10 @@ pub fn simulate(profile: &KernelProfile, plat: &Platform, threads: usize) -> Sim
     // Dependent (non-prefetchable) accesses stall at their home level's
     // hit latency with MLP_DEP overlap — the baseline TLUT gather wall.
     let dep_lat = [
-        plat.l1d.latency_cycles,
-        plat.l2.latency_cycles,
-        plat.l3.latency_cycles,
-        plat.dram_lat_ns * plat.cycles_per_ns(),
+        plat.l1d.latency_cycles * ls,
+        plat.l2.latency_cycles * ls,
+        plat.l3.latency_cycles * ls,
+        plat.dram_lat_ns * plat.cycles_per_ns() * ls,
     ];
     let mut dependent_cycles = 0.0;
     for (s, &home) in profile.streams.iter().zip(&homes) {
@@ -168,8 +178,11 @@ pub fn simulate(profile: &KernelProfile, plat: &Platform, threads: usize) -> Sim
         }
     }
     // DRAM bandwidth is shared across all threads: a serial resource
-    // (this is the Fig. 10 GEMV-plateau mechanism).
-    let dram_bw_cycles = traffic.bytes[3] / plat.dram_bytes_per_cycle();
+    // (this is the Fig. 10 GEMV-plateau mechanism).  The calibrated
+    // contention term models the sustained-bandwidth loss as more
+    // threads compete for the controller; identity (0.0) is a no-op.
+    let contention = 1.0 + plat.model.thread_contention * (t - 1.0);
+    let dram_bw_cycles = traffic.bytes[3] * contention / plat.dram_bytes_per_cycle();
 
     // Dependent stalls serialize with everything else: the blocked load
     // also stalls the prefetch/miss pipeline behind it, so they add on
@@ -337,6 +350,33 @@ mod tests {
         let p = profile(vec![Stream::read_once("w", 1e6)], 100.0);
         let r = simulate(&p, &plat, 1);
         assert!((0.0..=1.0).contains(&r.llc_hit_rate));
+    }
+
+    #[test]
+    fn calibrated_constants_scale_the_model() {
+        let base = Platform::workstation();
+        let mut cal = base.clone();
+        cal.model.issue_scale = 0.5;
+        cal.model.latency_scale = 2.0;
+        cal.model.thread_contention = 0.2;
+
+        // Compute-bound work slows when the effective issue width halves.
+        let pc = profile(vec![Stream::read_once("w", 1e4)], 1e9);
+        let c0 = simulate(&pc, &base, 8);
+        let c1 = simulate(&pc, &cal, 8);
+        assert!(c1.compute_cycles > 1.5 * c0.compute_cycles);
+
+        // DRAM-bound work slows under the thread-contention term.
+        let pm = profile(vec![Stream::read_once("w", 1e9)], 10.0);
+        let m0 = simulate(&pm, &base, 8);
+        let m1 = simulate(&pm, &cal, 8);
+        assert!(m1.memory_cycles > 2.0 * m0.memory_cycles);
+
+        // Identity constants are an exact no-op (bit-identical).
+        let mut ident = base.clone();
+        ident.model = Default::default();
+        assert_eq!(simulate(&pm, &ident, 8).cycles, m0.cycles);
+        assert_eq!(simulate(&pc, &ident, 8).cycles, c0.cycles);
     }
 
     #[test]

@@ -1,11 +1,12 @@
-//! Schema validation for the repo-root `BENCH_*.json` perf artifacts.
+//! Schema validation for the repo-root machine-readable artifacts.
 //!
-//! Every bench harness that emits a machine-readable artifact
-//! (`BENCH_native_gemm.json` from `benches/native_gemv.rs`,
-//! `BENCH_serve.json` from `tsar-cli bench-serve`) validates its own
-//! output through this module, and `ci/check.sh` re-validates the
-//! checked-in files — so a drifting artifact fails CI with a *named*
-//! field error instead of silently changing shape.
+//! Every harness that emits one (`BENCH_native_gemm.json` from
+//! `benches/native_gemv.rs`, `BENCH_serve.json` from
+//! `tsar-cli bench-serve`, `PLATFORM_host.json` from
+//! `tsar-cli calibrate`) validates its own output through this module,
+//! and `ci/check.sh` re-validates the checked-in files — so a drifting
+//! artifact fails CI with a *named* field error instead of silently
+//! changing shape.
 //!
 //! Both schemas share the same conventions: a `bench` discriminator, a
 //! numeric `schema_version` (the validators here speak v1), a
@@ -23,10 +24,15 @@ pub const LATENCY_STAT_KEYS: [&str; 5] = ["p50", "p95", "p99", "mean", "max"];
 pub const SERVE_OUTCOME_KEYS: [&str; 5] =
     ["completed", "cancelled", "rejected", "failed", "http_shed"];
 
-/// Validate any repo bench artifact, dispatching on its `bench` field.
+/// Validate any repo artifact, dispatching on its discriminator field
+/// (`bench` for the perf artifacts, `profile` for platform profiles).
 /// Returns a one-line human summary for the CLI/CI log.
 pub fn validate_any(text: &str) -> crate::Result<String> {
     let v = parse(text)?;
+    if v.get("bench").is_none() && v.get("profile").is_some() {
+        let label = validate_platform_profile(text)?;
+        return Ok(format!("platform profile schema v1 OK ({label})"));
+    }
     match v.req("bench")?.as_str() {
         Some("native_gemm") => {
             let n = check_native_gemm(&v)?;
@@ -52,21 +58,35 @@ pub fn validate_serve(text: &str) -> crate::Result<usize> {
     check_serve(&parse(text)?)
 }
 
+/// Schema contract for platform-profile documents (`profiles/*.json`,
+/// `PLATFORM_host.json` from `tsar-cli calibrate`): the full
+/// [`crate::config::PlatformProfile`] field/provenance validation.
+/// Returns `"<name> [<provenance>]"`.
+pub fn validate_platform_profile(text: &str) -> crate::Result<String> {
+    let prof = crate::config::PlatformProfile::parse(text)?;
+    Ok(format!("{} [{}]", prof.name, prof.provenance_label()))
+}
+
 fn parse(text: &str) -> crate::Result<Json> {
     Json::parse(text).map_err(|e| crate::err!("artifact is not JSON: {e}"))
 }
 
-fn check_native_gemm(v: &Json) -> crate::Result<usize> {
-    crate::ensure!(
-        v.req("bench")?.as_str() == Some("native_gemm"),
-        "bench name must be \"native_gemm\""
-    );
+/// The header every `BENCH_*` artifact shares: a `bench` discriminator,
+/// a v1 `schema_version`, and the `measured`/`smoke` run flags.
+/// Returns the `measured` flag.
+fn check_bench_header(v: &Json, kind: &str) -> crate::Result<bool> {
+    crate::ensure!(v.req("bench")?.as_str() == Some(kind), "bench name must be {kind:?}");
     crate::ensure!(
         v.req("schema_version")?.as_f64() == Some(1.0),
         "unknown schema_version (validator speaks v1)"
     );
     let measured = v.req("measured")? == &Json::Bool(true);
     v.req("smoke")?;
+    Ok(measured)
+}
+
+fn check_native_gemm(v: &Json) -> crate::Result<usize> {
+    let measured = check_bench_header(v, "native_gemm")?;
     crate::ensure!(v.req("path")?.as_str().is_some(), "path must be a string");
     crate::ensure!(v.req("threads")?.as_usize().is_some_and(|t| t >= 1), "threads must be >= 1");
     crate::ensure!(
@@ -100,13 +120,7 @@ fn check_native_gemm(v: &Json) -> crate::Result<usize> {
 }
 
 fn check_serve(v: &Json) -> crate::Result<usize> {
-    crate::ensure!(v.req("bench")?.as_str() == Some("serve"), "bench name must be \"serve\"");
-    crate::ensure!(
-        v.req("schema_version")?.as_f64() == Some(1.0),
-        "unknown schema_version (validator speaks v1)"
-    );
-    let measured = v.req("measured")? == &Json::Bool(true);
-    v.req("smoke")?;
+    let measured = check_bench_header(v, "serve")?;
     crate::ensure!(v.req("seed")?.as_f64().is_some(), "seed must be a number");
     crate::ensure!(v.req("backend")?.as_str().is_some(), "backend must be a string");
 
@@ -280,5 +294,23 @@ mod tests {
     fn dispatch_rejects_unknown_kinds() {
         let err = validate_any(r#"{"bench":"nope"}"#).unwrap_err().to_string();
         assert!(err.contains("unknown bench artifact kind"), "got {err:?}");
+    }
+
+    #[test]
+    fn dispatch_recognises_platform_profiles() {
+        let doc = crate::config::PlatformProfile::workstation().to_json().to_string();
+        let summary = validate_any(&doc).unwrap();
+        assert!(summary.contains("platform profile schema v1 OK"), "got {summary:?}");
+        assert!(summary.contains("Workstation [table1]"), "got {summary:?}");
+        assert_eq!(validate_platform_profile(&doc).unwrap(), "Workstation [table1]");
+    }
+
+    #[test]
+    fn platform_profile_validation_names_the_broken_field() {
+        let doc = crate::config::PlatformProfile::mobile().to_json().to_string();
+        let bad = doc.replace(r#""efficiency":0.55"#, r#""efficiency":1.55"#);
+        assert_ne!(bad, doc, "replacement must hit the serialized document");
+        let err = validate_platform_profile(&bad).unwrap_err().to_string();
+        assert!(err.contains("efficiency"), "got {err:?}");
     }
 }
